@@ -1,0 +1,91 @@
+//! CIFAR10-proxy workload (paper Tables 3/6): a residual CNN trained on
+//! synthetic Gaussian-mixture images by 4 simulated workers, comparing
+//! SGD against PowerSGD ranks 1/2/4 on accuracy and communication, and
+//! printing the paper-scale timing simulation for the real ResNet18.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example cifar_resnet
+//! ```
+
+use anyhow::Result;
+use powersgd::compress::PowerSgd;
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::Classification;
+use powersgd::net::NCCL;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd};
+use powersgd::profiles::resnet18;
+use powersgd::runtime::Runtime;
+use powersgd::simulate::{data_per_epoch_mb, simulate_step, Scheme};
+use powersgd::util::Table;
+
+const STEPS: usize = 250;
+const WORKERS: usize = 4;
+
+fn run(opt: Box<dyn DistOptimizer>) -> Result<(f64, u64)> {
+    let mut rt = Runtime::cpu("artifacts")?;
+    let train = rt.load("convnet_train")?;
+    let eval = rt.load("convnet_eval")?;
+    let cfg = TrainerConfig {
+        workers: WORKERS,
+        eval_kind: EvalKind::Accuracy,
+        ..Default::default()
+    };
+    let mut data = Classification::new(3 * 16 * 16, 10, 32, WORKERS, 42);
+    let mut trainer = Trainer::new(train, Some(eval), opt, cfg)?;
+    trainer.train(&mut data, STEPS)?;
+    let acc = trainer.evaluate(&mut data)?;
+    Ok((acc, trainer.metrics.total_bytes() / STEPS as u64))
+}
+
+fn main() -> Result<()> {
+    let lr = LrSchedule::constant(0.02);
+    let mut table = Table::new(
+        "ConvNet / CIFAR-proxy — 4 workers, 250 steps (cf. paper Table 3)",
+        &["Algorithm", "Test accuracy", "Bytes/step", "Compression"],
+    );
+    let cases: Vec<(String, Box<dyn DistOptimizer>)> = vec![
+        ("SGD".into(), Box::new(Sgd::new(lr.clone(), 0.9))),
+        ("Rank 1".into(), Box::new(EfSgd::new(Box::new(PowerSgd::new(1, 1)), lr.clone(), 0.9))),
+        ("Rank 2".into(), Box::new(EfSgd::new(Box::new(PowerSgd::new(2, 1)), lr.clone(), 0.9))),
+        ("Rank 4".into(), Box::new(EfSgd::new(Box::new(PowerSgd::new(4, 1)), lr.clone(), 0.9))),
+    ];
+    let mut full_bytes = 0u64;
+    for (name, opt) in cases {
+        let (acc, bytes) = run(opt)?;
+        if name == "SGD" {
+            full_bytes = bytes;
+        }
+        table.row(&[
+            name,
+            format!("{acc:.1}%"),
+            format!("{bytes}"),
+            format!("{:.0}x", full_bytes as f64 / bytes as f64),
+        ]);
+    }
+    table.print();
+
+    // Paper-scale timing: the exact ResNet18 shape profile over the
+    // calibrated 16-worker NCCL model (regenerates Table 3's right side).
+    let p = resnet18();
+    let mut sim = Table::new(
+        "Simulated paper-scale ResNet18/CIFAR10 — 16 workers, NCCL",
+        &["Algorithm", "Data/epoch", "Time/batch", "vs SGD"],
+    );
+    let sgd_total = simulate_step(&p, Scheme::Sgd, 16, &NCCL).total();
+    for scheme in [
+        Scheme::Sgd,
+        Scheme::PowerSgd { rank: 1 },
+        Scheme::PowerSgd { rank: 2 },
+        Scheme::PowerSgd { rank: 4 },
+    ] {
+        let b = simulate_step(&p, scheme, 16, &NCCL);
+        sim.row(&[
+            scheme.name(),
+            format!("{:.0} MB", data_per_epoch_mb(&p, scheme)),
+            format!("{:.0} ms", b.total() * 1e3),
+            format!("{:+.0}%", (b.total() / sgd_total - 1.0) * 100.0),
+        ]);
+    }
+    sim.print();
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! WikiText-proxy language modeling (paper Table 7): an LSTM LM over a
+//! Zipf corpus on 4 simulated workers — SGD vs Signum vs rank-4
+//! PowerSGD, reporting perplexity and communication volume, plus the
+//! paper-scale LSTM timing simulation.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example lstm_wikitext
+//! ```
+
+use anyhow::Result;
+use powersgd::compress::PowerSgd;
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::LmCorpus;
+use powersgd::net::NCCL;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd, SignumOpt};
+use powersgd::profiles::lstm_wikitext2;
+use powersgd::runtime::Runtime;
+use powersgd::simulate::{data_per_epoch_mb, simulate_step, Scheme};
+use powersgd::util::Table;
+
+const STEPS: usize = 150;
+const WORKERS: usize = 4;
+
+fn run(opt: Box<dyn DistOptimizer>) -> Result<(f64, u64)> {
+    let mut rt = Runtime::cpu("artifacts")?;
+    let train = rt.load("lstm_train")?;
+    let eval = rt.load("lstm_eval")?;
+    let cfg = TrainerConfig {
+        workers: WORKERS,
+        eval_kind: EvalKind::Perplexity,
+        ..Default::default()
+    };
+    let mut data = LmCorpus::new(1000, 8, 32, WORKERS, 42);
+    let mut trainer = Trainer::new(train, Some(eval), opt, cfg)?;
+    trainer.train(&mut data, STEPS)?;
+    let ppl = trainer.evaluate(&mut data)?;
+    Ok((ppl, trainer.metrics.total_bytes() / STEPS as u64))
+}
+
+fn main() -> Result<()> {
+    let mut table = Table::new(
+        "LSTM / WikiText-proxy — 4 workers, 150 steps (cf. paper Table 7)",
+        &["Algorithm", "Test perplexity", "Bytes/step", "Compression"],
+    );
+    // Signum needs its own (much smaller) LR — paper Appendix I.
+    let cases: Vec<(String, Box<dyn DistOptimizer>)> = vec![
+        ("SGD".into(), Box::new(Sgd::new(LrSchedule::constant(0.5), 0.9))),
+        ("Signum".into(), Box::new(SignumOpt::new(LrSchedule::constant(0.005), 0.9))),
+        (
+            "Rank 4".into(),
+            Box::new(EfSgd::new(Box::new(PowerSgd::new(4, 1)), LrSchedule::constant(0.5), 0.9)),
+        ),
+    ];
+    let mut full_bytes = 0u64;
+    for (name, opt) in cases {
+        let (ppl, bytes) = run(opt)?;
+        if name == "SGD" {
+            full_bytes = bytes;
+        }
+        table.row(&[
+            name,
+            format!("{ppl:.1}"),
+            format!("{bytes}"),
+            format!("{:.0}x", full_bytes as f64 / bytes as f64),
+        ]);
+    }
+    table.print();
+
+    // Paper-scale timing over the exact Table 11 shapes.
+    let p = lstm_wikitext2();
+    let mut sim = Table::new(
+        "Simulated paper-scale LSTM/WikiText-2 — 16 workers, NCCL",
+        &["Algorithm", "Data/epoch", "Time/batch", "vs SGD"],
+    );
+    let sgd_total = simulate_step(&p, Scheme::Sgd, 16, &NCCL).total();
+    for scheme in [Scheme::Sgd, Scheme::Signum, Scheme::PowerSgd { rank: 4 }] {
+        let b = simulate_step(&p, scheme, 16, &NCCL);
+        sim.row(&[
+            scheme.name(),
+            format!("{:.0} MB", data_per_epoch_mb(&p, scheme)),
+            format!("{:.0} ms", b.total() * 1e3),
+            format!("{:+.0}%", (b.total() / sgd_total - 1.0) * 100.0),
+        ]);
+    }
+    sim.print();
+    Ok(())
+}

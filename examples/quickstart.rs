@@ -1,0 +1,48 @@
+//! Quickstart: train a small classifier on 2 simulated workers with
+//! rank-2 PowerSGD and compare the bytes on the wire against plain SGD.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use powersgd::compress::PowerSgd;
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::Classification;
+use powersgd::optim::{EfSgd, LrSchedule};
+use powersgd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT-compiled model (lowered once by `make artifacts`;
+    //    no Python anywhere in this process).
+    let mut rt = Runtime::cpu("artifacts")?;
+    let train = rt.load("mlp_train")?;
+    let eval = rt.load("mlp_eval")?;
+
+    // 2. PowerSGD rank-2 compression inside error-feedback SGD
+    //    (Algorithms 1 + 2 of the paper).
+    let compressor = Box::new(PowerSgd::new(2, /*seed=*/ 1));
+    let opt = Box::new(EfSgd::new(compressor, LrSchedule::constant(0.05), 0.9));
+
+    // 3. Two simulated workers, NCCL-like network model.
+    let cfg = TrainerConfig {
+        workers: 2,
+        eval_every: 50,
+        eval_kind: EvalKind::Accuracy,
+        log_every: 25,
+        ..Default::default()
+    };
+    let mut data = Classification::new(64, 10, 32, 2, 42);
+    let mut trainer = Trainer::new(train, Some(eval), opt, cfg)?;
+
+    trainer.train(&mut data, 200)?;
+
+    let full = trainer.registry().total_bytes();
+    let sent = trainer.metrics.total_bytes() / 200;
+    println!("\n--- quickstart summary ---");
+    println!("test accuracy:        {:.1}%", trainer.evaluate(&mut data)?);
+    println!("gradient size:        {full} bytes/step");
+    println!("transmitted:          {sent} bytes/step ({:.0}x compression)", full as f64 / sent as f64);
+    println!("loss (mean last 10):  {:.4}", trainer.metrics.mean_loss_last(10));
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! End-to-end validation driver (DESIGN.md §8): train a decoder-only
+//! transformer LM for a few hundred steps over simulated workers with
+//! PowerSGD, log the loss curve, and report the full time/byte breakdown.
+//!
+//! ```text
+//! # build the artifact for the chosen preset first, e.g.:
+//! cd python && python -m compile.aot --out-dir ../artifacts --models transformer_small
+//! cargo run --release --example train_transformer -- --preset small --steps 300
+//! # paper-scale config (slow on CPU — lower step count accordingly):
+//! cargo run --release --example train_transformer -- --preset 100m --steps 20
+//! ```
+//!
+//! The recorded run for EXPERIMENTS.md §E2E uses `--preset small
+//! --steps 300 --workers 4` and compares PowerSGD rank 4 vs SGD.
+
+use anyhow::{Context, Result};
+use powersgd::compress::PowerSgd;
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::LmCorpus;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd};
+use powersgd::runtime::Runtime;
+use powersgd::util::{Args, Table};
+
+struct PresetCfg {
+    vocab: usize,
+    batch: usize,
+    seq: usize,
+}
+
+fn preset_cfg(name: &str) -> PresetCfg {
+    match name {
+        "tiny" => PresetCfg { vocab: 2000, batch: 8, seq: 64 },
+        "small" => PresetCfg { vocab: 4000, batch: 8, seq: 128 },
+        "25m" => PresetCfg { vocab: 8000, batch: 4, seq: 128 },
+        "100m" => PresetCfg { vocab: 16000, batch: 2, seq: 256 },
+        other => panic!("unknown preset {other:?} (tiny|small|25m|100m)"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let preset = args.get_or("preset", "small").to_string();
+    let steps = args.get_parsed_or("steps", 300usize);
+    let workers = args.get_parsed_or("workers", 4usize);
+    let rank = args.get_parsed_or("rank", 4usize);
+    let lr = args.get_parsed_or("lr", 0.05f64);
+    let seed = args.get_parsed_or("seed", 42u64);
+    let compare_sgd = !args.flag("skip-sgd");
+    let pc = preset_cfg(&preset);
+    let model = format!("transformer_{preset}");
+
+    let mut rt = Runtime::cpu("artifacts")?;
+    let train = rt
+        .load(&format!("{model}_train"))
+        .with_context(|| format!("artifact for preset {preset} missing — run `cd python && python -m compile.aot --out-dir ../artifacts --models {model}`"))?;
+    let eval = rt.load(&format!("{model}_eval"))?;
+
+    let run = |name: &str, opt: Box<dyn DistOptimizer>| -> Result<(f64, f64, u64, String)> {
+        let cfg = TrainerConfig {
+            workers,
+            seed,
+            eval_every: (steps / 6).max(1),
+            eval_kind: EvalKind::Perplexity,
+            log_every: (steps / 15).max(1),
+            ..Default::default()
+        };
+        let mut data = LmCorpus::new(pc.vocab, pc.batch, pc.seq, workers, seed);
+        let mut trainer = Trainer::new(train.clone(), Some(eval.clone()), opt, cfg)?;
+        eprintln!(
+            "=== {name}: {} params, {} workers, {} steps ===",
+            trainer.registry().numel(),
+            workers,
+            steps
+        );
+        let t0 = std::time::Instant::now();
+        trainer.train(&mut data, steps)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let ppl = trainer.evaluate(&mut data)?;
+        let bytes = trainer.metrics.total_bytes() / steps as u64;
+        let (grad_s, comp_s) = trainer.metrics.mean_times();
+        eprintln!(
+            "{name}: final ppl {ppl:.1}, {wall:.0}s wall, grad {:.0} ms/worker/step, compress {:.1} ms, sim-comm {:.2} ms",
+            grad_s * 1e3,
+            comp_s * 1e3,
+            trainer.metrics.mean_sim_comm() * 1e3
+        );
+        Ok((ppl, wall, bytes, trainer.metrics.loss_curve_csv((steps / 30).max(1))))
+    };
+
+    let mut table = Table::new(
+        &format!("Transformer ({preset}) — {workers} workers, {steps} steps"),
+        &["Algorithm", "Final ppl", "Bytes/step", "Wall time"],
+    );
+
+    let powersgd = Box::new(EfSgd::new(
+        Box::new(PowerSgd::new(rank, seed)),
+        LrSchedule::constant(lr),
+        0.9,
+    ));
+    let (ppl_p, wall_p, bytes_p, curve) = run(&format!("PowerSGD rank {rank}"), powersgd)?;
+    table.row(&[
+        format!("Rank {rank}"),
+        format!("{ppl_p:.1}"),
+        format!("{bytes_p}"),
+        format!("{wall_p:.0} s"),
+    ]);
+
+    if compare_sgd {
+        let sgd = Box::new(Sgd::new(LrSchedule::constant(lr), 0.9));
+        let (ppl_s, wall_s, bytes_s, _) = run("SGD", sgd)?;
+        table.row(&[
+            "SGD".into(),
+            format!("{ppl_s:.1}"),
+            format!("{bytes_s}"),
+            format!("{wall_s:.0} s"),
+        ]);
+        println!(
+            "\ncompression: {:.0}x less data than SGD",
+            bytes_s as f64 / bytes_p as f64
+        );
+    }
+    table.print();
+    println!("\nloss curve (PowerSGD):\n{curve}");
+    Ok(())
+}

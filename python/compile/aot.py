@@ -1,0 +1,107 @@
+"""AOT lowering driver: JAX → HLO text + manifest, consumed by Rust.
+
+Python runs ONCE here (``make artifacts``); the rust binary is
+self-contained afterwards. The interchange format is HLO *text*, not a
+serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models mlp,convnet,...]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_registry
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(fn, input_specs):
+    """Lower a python function to XLA HLO text with tupled outputs."""
+    shaped = [
+        jax.ShapeDtypeStruct(tuple(shape), DTYPES[dt]) for _, shape, dt in input_specs
+    ]
+    lowered = jax.jit(fn).lower(*shaped)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def manifest_text(spec):
+    """Render the manifest format parsed by rust/src/runtime/manifest.rs."""
+    lines = [f"artifact {spec.name}"]
+    for name, shape, dt in spec.inputs:
+        sh = ",".join(str(d) for d in shape) if shape else "-"
+        lines.append(f"input {name} {dt} {sh}")
+    for name, shape, dt in spec.outputs:
+        sh = ",".join(str(d) for d in shape) if shape else "-"
+        lines.append(f"output {name} {dt} {sh}")
+    for p in spec.params:
+        init = spec.param_inits.get(p, "zero")
+        lines.append(f"param {p} {init}")
+    for k, v in sorted(spec.meta.items()):
+        lines.append(f"meta {k} {v}")
+    return "\n".join(lines) + "\n"
+
+
+def build(spec, out_dir, force=False):
+    hlo_path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{spec.name}.manifest")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path):
+        print(f"  [cached] {spec.name}")
+        return
+    t0 = time.time()
+    text = to_hlo_text(spec.fn, spec.inputs)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(man_path, "w") as f:
+        f.write(manifest_text(spec))
+    print(
+        f"  [built]  {spec.name}: {len(text) / 1e3:.0f} KB HLO in {time.time() - t0:.1f}s"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(model_registry.DEFAULT_MODELS),
+        help="comma-separated registry keys; 'all' for everything",
+    )
+    ap.add_argument("--force", action="store_true", help="rebuild cached artifacts")
+    ap.add_argument("--list", action="store_true", help="list registry keys and exit")
+    args = ap.parse_args(argv)
+
+    reg = model_registry.registry()
+    if args.list:
+        for k in sorted(reg):
+            print(k)
+        return 0
+
+    keys = sorted(reg) if args.models == "all" else args.models.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+    for key in keys:
+        key = key.strip()
+        if key not in reg:
+            print(f"unknown model {key!r}; available: {sorted(reg)}", file=sys.stderr)
+            return 1
+        print(f"{key}:")
+        for spec in reg[key]():
+            build(spec, args.out_dir, force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,213 @@
+"""L1 Pallas kernels for the PowerSGD compression hot-spot.
+
+The paper's insight is that compression must cost no more than a couple
+of *skinny GEMMs* (never an SVD). On TPU that maps to MXU work over
+VMEM-resident tiles (DESIGN.md §Hardware-Adaptation):
+
+- ``matmul_mq``   : P = M·Q.   M is streamed HBM→VMEM in row tiles via
+  BlockSpec; Q (m×r, r ≤ 32 ⇒ ≤ a few hundred KiB) is pinned whole in
+  VMEM for the duration of the kernel.
+- ``matmul_mtp``  : Q = Mᵀ·P̂. Same streaming of M; accumulates the m×r
+  result across row tiles through a VMEM accumulator (sequential grid).
+- ``gram_schmidt``: orthonormalization of the n×r tall-skinny P — VPU
+  work, single VMEM-resident block (n·r·4 ≤ 3.7 MiB for every layer in
+  the paper).
+- ``decompress_ef``: M̂ = P̂·Qᵀ fused with the error-feedback residual
+  Δ − M̂, one pass over the output tile.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the lowering path is interpret-mode
+Pallas → plain HLO → ``artifacts/*.hlo.txt`` → Rust. Correctness is
+pinned against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height for streaming M. 128 matches the MXU systolic dimension
+# and keeps a (128 × m) f32 tile ≤ 2.4 MiB for the paper's widest layer
+# (m = 4608), comfortably inside a 16 MiB VMEM budget together with Q.
+BLOCK_N = 128
+
+
+def _row_grid(n):
+    return (max(1, pl.cdiv(n, BLOCK_N)),)
+
+
+def matmul_mq(m_mat, q):
+    """P = M @ Q with M streamed in row tiles and Q VMEM-resident."""
+    n, m = m_mat.shape
+    m2, r = q.shape
+    assert m == m2, f"inner dim mismatch {m} vs {m2}"
+    bn = min(BLOCK_N, n)
+
+    def kernel(m_ref, q_ref, o_ref):
+        o_ref[...] = m_ref[...] @ q_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=_row_grid(n),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((m2, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), m_mat.dtype),
+        interpret=True,
+    )(m_mat, q)
+
+
+def matmul_mtp(m_mat, p_hat):
+    """Q = Mᵀ @ P̂ without materializing Mᵀ.
+
+    The grid walks row tiles of M sequentially; each step accumulates its
+    (m × r) partial product into the output block (revisited every step —
+    Pallas guarantees sequential grid execution, so the accumulation is
+    well-defined; this is the standard reduction-via-revisiting pattern).
+    """
+    n, m = m_mat.shape
+    n2, r = p_hat.shape
+    assert n == n2, f"inner dim mismatch {n} vs {n2}"
+    bn = min(BLOCK_N, n)
+
+    def kernel(m_ref, p_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # Partial final tiles are padded by Pallas; mask the padded rows
+        # out of the reduction (they would otherwise poison the sum).
+        row = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0) + pl.program_id(0) * bn
+        mask = row < n
+        mseg = jnp.where(mask, m_ref[...], 0.0)
+        pseg = jnp.where(mask, p_ref[...], 0.0)
+        o_ref[...] += mseg.T @ pseg
+
+    return pl.pallas_call(
+        kernel,
+        grid=_row_grid(n),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), m_mat.dtype),
+        interpret=True,
+    )(m_mat, p_hat)
+
+
+def gram_schmidt(p, eps=1e-8):
+    """Modified Gram–Schmidt over the columns of a VMEM-resident block.
+
+    r is static and small (1–32), so the column loop is unrolled at trace
+    time; each iteration is a VPU reduction + broadcast.
+    """
+    n, r = p.shape
+
+    def kernel(p_ref, o_ref):
+        cols = []
+        for c in range(r):
+            v = p_ref[:, c]
+            for u in cols:
+                v = v - jnp.dot(u, v) * u
+            v = v / jnp.maximum(jnp.sqrt(jnp.sum(v * v)), eps)
+            cols.append(v)
+        o_ref[...] = jnp.stack(cols, axis=1)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, r), p.dtype),
+        interpret=True,
+    )(p)
+
+
+def decompress(p_hat, q):
+    """M̂ = P̂ @ Qᵀ, streaming output row tiles (P̂ rows ↔ M̂ rows)."""
+    n, r = p_hat.shape
+    m, r2 = q.shape
+    assert r == r2
+    bn = min(BLOCK_N, n)
+
+    def kernel(p_ref, q_ref, o_ref):
+        o_ref[...] = p_ref[...] @ q_ref[...].T
+
+    return pl.pallas_call(
+        kernel,
+        grid=_row_grid(n),
+        in_specs=[
+            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), p_hat.dtype),
+        interpret=True,
+    )(p_hat, q)
+
+
+def decompress_ef(p_hat, q, delta):
+    """Fused M̂ = P̂Qᵀ and error residual e = Δ − M̂ (one output pass)."""
+    n, r = p_hat.shape
+    m, _ = q.shape
+    bn = min(BLOCK_N, n)
+
+    def kernel(p_ref, q_ref, d_ref, mhat_ref, err_ref):
+        mhat = p_ref[...] @ q_ref[...].T
+        mhat_ref[...] = mhat
+        err_ref[...] = d_ref[...] - mhat
+
+    return pl.pallas_call(
+        kernel,
+        grid=_row_grid(n),
+        in_specs=[
+            pl.BlockSpec((bn, r), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), p_hat.dtype),
+            jax.ShapeDtypeStruct((n, m), p_hat.dtype),
+        ],
+        interpret=True,
+    )(p_hat, q, delta)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def powersgd_stage1(m_mat, q):
+    """Artifact body: P = M·Q (before the P all-reduce)."""
+    return (matmul_mq(m_mat, q),)
+
+
+@jax.jit
+def powersgd_stage2(m_mat, p_mean):
+    """Artifact body: P̂ = GS(P̄); Q = Mᵀ·P̂ (before the Q all-reduce)."""
+    p_hat = gram_schmidt(p_mean)
+    return p_hat, matmul_mtp(m_mat, p_hat)
+
+
+@jax.jit
+def powersgd_decompress(p_hat, q, delta):
+    """Artifact body: M̂ = P̂Qᵀ and EF residual."""
+    m_hat, err = decompress_ef(p_hat, q, delta)
+    return m_hat, err
+
+
+def vmem_footprint_bytes(n, m, r, dtype_bytes=4):
+    """Estimated VMEM footprint of one ``matmul_mq`` grid step on TPU:
+    M row tile + resident Q + output tile (DESIGN.md §Hardware-Adaptation;
+    reported in EXPERIMENTS.md §Perf)."""
+    bn = min(BLOCK_N, n)
+    return dtype_bytes * (bn * m + m * r + bn * r)
+
+
+def mxu_utilization_estimate(r):
+    """Fraction of the 128-wide MXU tile the skinny GEMM keeps busy: the
+    r output columns of a 128×128 systolic tile. Compression is
+    HBM-bandwidth-bound by design, so this is expected to be low."""
+    return min(r, 128) / 128.0

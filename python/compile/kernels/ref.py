@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in `powersgd.py` has an exact counterpart here; the
+pytest suite asserts allclose between the two over a randomized sweep of
+shapes, ranks and dtypes. These references are also what the L2 model
+tests use to validate compression semantics end-to-end.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_mq(m, q):
+    """P = M @ Q  (PowerSGD stage 1: project onto the current subspace)."""
+    return m @ q
+
+
+def matmul_mtp(m, p_hat):
+    """Q = M^T @ P_hat (PowerSGD stage 2: refresh the subspace)."""
+    return m.T @ p_hat
+
+
+def gram_schmidt(p, eps=1e-8):
+    """Orthonormalize the columns of p (modified Gram-Schmidt).
+
+    Matches the paper's ORTHOGONALIZE step. Columns with vanishing
+    residual norm are left normalized-by-eps (the Rust side substitutes a
+    random direction; for test inputs we avoid rank deficiency).
+    """
+    n, r = p.shape
+    cols = []
+    for c in range(r):
+        v = p[:, c]
+        for u in cols:
+            v = v - jnp.dot(u, v) * u
+        v = v / jnp.maximum(jnp.linalg.norm(v), eps)
+        cols.append(v)
+    return jnp.stack(cols, axis=1)
+
+
+def decompress(p_hat, q):
+    """M_hat = P_hat @ Q^T."""
+    return p_hat @ q.T
+
+
+def decompress_ef(p_hat, q, delta):
+    """Reconstruct and compute the error-feedback residual.
+
+    Returns (M_hat, delta - M_hat): the decompressed update and the error
+    memory for the next step (Algorithm 2, line 9).
+    """
+    m_hat = p_hat @ q.T
+    return m_hat, delta - m_hat
+
+
+def powersgd_step(m, q):
+    """One full (single-worker) PowerSGD compression round.
+
+    Returns (m_hat, p_hat, q_new) — used by the differential tests
+    against the Rust native implementation.
+    """
+    p = matmul_mq(m, q)
+    p_hat = gram_schmidt(p)
+    q_new = matmul_mtp(m, p_hat)
+    return decompress(p_hat, q_new), p_hat, q_new

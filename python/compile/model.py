@@ -1,0 +1,158 @@
+"""L2 artifact assembly: turn model definitions into the artifact set
+that `aot.py` lowers and the Rust coordinator loads.
+
+Artifact calling convention (mirrored by `rust/src/runtime/manifest.rs`):
+
+- ``<model>_train``: inputs = params ++ data, outputs = (loss, *grads).
+- ``<model>_eval`` : inputs = params ++ data, outputs = (loss, correct)
+  for classifiers, (loss,) for language models.
+- ``powersgd_*``   : the L1 Pallas compression kernels exported as
+  standalone artifacts for the XLA compression path
+  (`--compress-exec xla`) and the Rust↔JAX differential tests.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import powersgd as pk
+from .models.convnet import ConvNet
+from .models.lstm import LstmLm
+from .models.mlp import Mlp
+from .models.transformer import PRESETS, TransformerLm
+from .models import common
+
+
+class ArtifactSpec:
+    """Everything aot.py needs to lower + describe one artifact."""
+
+    def __init__(self, name, fn, inputs, outputs, params=(), meta=None,
+                 param_inits=None):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs      # list[(name, shape, dtype_str)]
+        self.outputs = outputs    # list[(name, shape, dtype_str)]
+        self.params = list(params)
+        self.param_inits = dict(param_inits or {})
+        self.meta = dict(meta or {})
+
+
+def _param_inputs(model):
+    out = []
+    for name, shape, _init in model.param_specs():
+        out.append((name, shape, "f32"))
+    return out
+
+
+def _param_inits(model):
+    """Concrete per-parameter init directives for the manifest: 'zero',
+    'one', or 'normal:<sigma>'. The Rust trainer replays these exactly."""
+    out = {}
+    for n, _s, i in model.param_specs():
+        out[n] = i if isinstance(i, str) else f"normal:{i:.6g}"
+    return out
+
+
+def model_artifacts(model, kind):
+    """Train + eval artifacts for one model instance.
+
+    kind: 'classifier' (eval → loss+correct) or 'lm' (eval → loss).
+    """
+    pspecs = model.param_specs()
+    n_params = len(pspecs)
+    param_inputs = _param_inputs(model)
+    data_inputs = list(model.data_specs())
+    eval_data_inputs = list(model.data_specs(eval=True))
+    grads_out = [(f"grad.{n}", s, "f32") for n, s, _ in pspecs]
+
+    train = ArtifactSpec(
+        name=f"{model.name}_train",
+        fn=common.train_step_fn(model.loss, n_params),
+        inputs=param_inputs + data_inputs,
+        outputs=[("loss", (), "f32")] + grads_out,
+        params=[n for n, _, _ in pspecs],
+        param_inits=_param_inits(model),
+        meta={"model": model.name},
+    )
+    if kind == "classifier":
+        eval_fn = common.eval_step_fn(model.loss, model.logits, n_params)
+        eval_outputs = [("loss", (), "f32"), ("correct", (), "f32")]
+    else:
+        eval_fn = common.lm_eval_step_fn(model.loss, n_params)
+        eval_outputs = [("loss", (), "f32")]
+    evala = ArtifactSpec(
+        name=f"{model.name}_eval",
+        fn=eval_fn,
+        inputs=param_inputs + eval_data_inputs,
+        outputs=eval_outputs,
+        params=[n for n, _, _ in pspecs],
+        meta={"model": model.name},
+    )
+    return [train, evala]
+
+
+def powersgd_kernel_artifacts(shapes=((64, 576), (512, 4608), (2600, 650)), ranks=(2, 4)):
+    """Standalone compression artifacts over representative layer shapes
+    from the paper's Tables 10/11 (plus a small one for tests)."""
+    arts = []
+    for (n, m) in shapes:
+        for r in ranks:
+            tag = f"{n}x{m}_r{r}"
+            arts.append(
+                ArtifactSpec(
+                    name=f"powersgd_stage1_{tag}",
+                    fn=lambda M, Q: (pk.matmul_mq(M, Q),),
+                    inputs=[("m", (n, m), "f32"), ("q", (m, r), "f32")],
+                    outputs=[("p", (n, r), "f32")],
+                )
+            )
+            arts.append(
+                ArtifactSpec(
+                    name=f"powersgd_stage2_{tag}",
+                    fn=lambda M, P: pk.powersgd_stage2(M, P),
+                    inputs=[("m", (n, m), "f32"), ("p_mean", (n, r), "f32")],
+                    outputs=[("p_hat", (n, r), "f32"), ("q", (m, r), "f32")],
+                )
+            )
+            arts.append(
+                ArtifactSpec(
+                    name=f"powersgd_decompress_{tag}",
+                    fn=lambda P, Q, D: pk.powersgd_decompress(P, Q, D),
+                    inputs=[
+                        ("p_hat", (n, r), "f32"),
+                        ("q", (m, r), "f32"),
+                        ("delta", (n, m), "f32"),
+                    ],
+                    outputs=[("m_hat", (n, m), "f32"), ("error", (n, m), "f32")],
+                )
+            )
+    return arts
+
+
+# ---------------------------------------------------------------------
+# The artifact registry: name → builder. `aot.py --models a,b,c`.
+# ---------------------------------------------------------------------
+
+def registry():
+    reg = {}
+
+    reg["mlp"] = lambda: model_artifacts(Mlp(), "classifier")
+    reg["convnet"] = lambda: model_artifacts(ConvNet(), "classifier")
+    reg["lstm"] = lambda: model_artifacts(LstmLm(), "lm")
+    for preset in PRESETS:
+        reg[f"transformer_{preset}"] = (
+            lambda p=preset: model_artifacts(_named_transformer(p), "lm")
+        )
+    reg["powersgd_kernels"] = powersgd_kernel_artifacts
+    # small-shape kernel artifacts for fast integration tests
+    reg["powersgd_kernels_small"] = lambda: powersgd_kernel_artifacts(
+        shapes=((16, 10),), ranks=(2,)
+    )
+    return reg
+
+
+def _named_transformer(preset):
+    m = TransformerLm.preset(preset)
+    m.name = f"transformer_{preset}"
+    return m
+
+
+DEFAULT_MODELS = ["mlp", "convnet", "lstm", "transformer_tiny", "powersgd_kernels_small"]

@@ -1,0 +1,69 @@
+"""Shared model plumbing for the L2 JAX model zoo.
+
+Every model exposes:
+
+- ``param_specs() -> list[(name, shape, init)]`` — ordered trainable
+  parameters; ``init`` is 'he' (normal, sqrt(2/fan_in)), 'zero', or a
+  float scale for plain normal.
+- ``loss_fn(params: list[jnp.ndarray], *data) -> scalar`` — mean loss.
+- ``data_specs(batch) -> list[(name, shape, dtype)]`` — per-step inputs.
+- optionally ``eval_outputs(params, *data)`` — (loss, correct_count).
+
+``train_step_fn`` wires loss + grads into the artifact calling
+convention consumed by the Rust trainer: inputs = params ++ data,
+outputs = (loss, *grads) in parameter order.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def accuracy_count(logits, labels):
+    """Number of correct argmax predictions, as f32."""
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == labels).astype(jnp.float32))
+
+
+def train_step_fn(loss_fn, n_params):
+    """Build f(*params, *data) -> (loss, *grads)."""
+
+    def step(*args):
+        params = list(args[:n_params])
+        data = args[n_params:]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, *data)
+        )(params)
+        return (loss, *grads)
+
+    return step
+
+
+def eval_step_fn(loss_fn, logits_fn, n_params):
+    """Build f(*params, *data) -> (loss, correct_count)."""
+
+    def step(*args):
+        params = list(args[:n_params])
+        data = args[n_params:]
+        loss = loss_fn(params, *data)
+        logits = logits_fn(params, *data)
+        return (loss, accuracy_count(logits, data[-1].reshape(logits.shape[:-1])))
+
+    return step
+
+
+def lm_eval_step_fn(loss_fn, n_params):
+    """Build f(*params, *data) -> (loss,) for perplexity reporting."""
+
+    def step(*args):
+        params = list(args[:n_params])
+        data = args[n_params:]
+        return (loss_fn(params, *data),)
+
+    return step

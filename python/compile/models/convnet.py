@@ -1,0 +1,93 @@
+"""ResNet-style CNN classifier — the CIFAR10 proxy (paper Tables 1–6).
+
+A scaled-down residual network with the same structural elements as the
+paper's ResNet18 (3×3 convs, identity shortcuts, stride-2 stage
+transitions with 1×1 projection shortcuts, global average pooling), so
+its gradients matricize exactly like Table 10's rows. Sized for CPU
+training on 3×16×16 Gaussian-mixture images.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def conv(x, w, stride=1):
+    """NCHW 3×3/1×1 convolution with SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+class ConvNet:
+    """conv3×3(c) → block(c) → block(2c, stride 2) → pool → linear."""
+
+    name = "convnet"
+
+    def __init__(self, channels=16, classes=10, image=16, batch=32):
+        self.c, self.classes, self.image, self.batch = channels, classes, image, batch
+        self.eval_batch = 256
+
+    def param_specs(self):
+        c = self.c
+
+        def he(shape):
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            return (2.0 / fan_in) ** 0.5
+
+        conv_shapes = {
+            "conv1": (c, 3, 3, 3),
+            "b1.conv1": (c, c, 3, 3),
+            "b1.conv2": (c, c, 3, 3),
+            "b2.conv1": (2 * c, c, 3, 3),
+            "b2.conv2": (2 * c, 2 * c, 3, 3),
+            "b2.shortcut": (2 * c, c, 1, 1),
+        }
+        return [
+            ("conv1", (c, 3, 3, 3), he((c, 3, 3, 3))),
+            # residual block 1 (c → c)
+            ("b1.conv1", (c, c, 3, 3), he((c, c, 3, 3))),
+            ("b1.conv2", (c, c, 3, 3), he((c, c, 3, 3))),
+            # residual block 2 (c → 2c, stride 2, projection shortcut)
+            ("b2.conv1", (2 * c, c, 3, 3), he((2 * c, c, 3, 3))),
+            ("b2.conv2", (2 * c, 2 * c, 3, 3), he((2 * c, 2 * c, 3, 3))),
+            ("b2.shortcut", (2 * c, c, 1, 1), he((2 * c, c, 1, 1))),
+            ("linear", (2 * c, self.classes), (1.0 / (2 * c)) ** 0.5),
+            ("bias", (self.classes,), "zero"),
+        ]
+
+    def data_specs(self, eval=False):
+        b = self.eval_batch if eval else self.batch
+        # Flat image vectors: the Rust data pipeline ships [B, 3·H·W] and
+        # the model restores NCHW internally.
+        return [
+            ("x", (b, 3 * self.image * self.image), "f32"),
+            ("y", (b,), "i32"),
+        ]
+
+    def logits(self, params, x, y=None):
+        x = x.reshape(x.shape[0], 3, self.image, self.image)
+        conv1, b1c1, b1c2, b2c1, b2c2, b2s, lin, bias = params
+        h = jax.nn.relu(conv(x, conv1))
+        # block 1
+        r = jax.nn.relu(conv(h, b1c1))
+        r = conv(r, b1c2)
+        h = jax.nn.relu(h + r)
+        # block 2 (downsample)
+        r = jax.nn.relu(conv(h, b2c1, stride=2))
+        r = conv(r, b2c2)
+        s = conv(h, b2s, stride=2)
+        h = jax.nn.relu(s + r)
+        # global average pool → linear
+        h = jnp.mean(h, axis=(2, 3))
+        return h @ lin + bias
+
+    def loss(self, params, x, y):
+        return common.cross_entropy(self.logits(params, x), y)

@@ -1,0 +1,81 @@
+"""LSTM language model — the WikiText-2 proxy (paper Table 7 / 11).
+
+Mirrors the paper's architecture at reduced width: tied-free embedding,
+stacked LSTM layers via `lax.scan`, linear decoder. The gradient
+matricization produces the same shape family as Table 11 (a huge
+`vocab×embed` encoder matrix dominating the communication volume, plus
+`4h×h`-style recurrent matrices).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+class LstmLm:
+    name = "lstm"
+
+    def __init__(self, vocab=1000, embed=64, hidden=128, layers=2, seq=32, batch=8):
+        self.vocab, self.embed, self.hidden = vocab, embed, hidden
+        self.layers, self.seq, self.batch = layers, seq, batch
+        self.eval_batch = 16
+
+    def param_specs(self):
+        v, e, h = self.vocab, self.embed, self.hidden
+        specs = [("encoder", (v, e), 0.05)]
+        for l in range(self.layers):
+            inp = e if l == 0 else h
+            specs.append((f"rnn-ih-l{l}", (4 * h, inp), (1.0 / inp) ** 0.5))
+            specs.append((f"rnn-hh-l{l}", (4 * h, h), (1.0 / h) ** 0.5))
+            specs.append((f"rnn-b-l{l}", (4 * h,), "zero"))
+        specs.append(("decoder", (h, v), (1.0 / h) ** 0.5))
+        specs.append(("decoder-b", (v,), "zero"))
+        return specs
+
+    def data_specs(self, eval=False):
+        b = self.eval_batch if eval else self.batch
+        return [
+            ("tokens", (b, self.seq), "i32"),
+            ("targets", (b, self.seq), "i32"),
+        ]
+
+    def _unpack(self, params):
+        encoder = params[0]
+        layers = []
+        for l in range(self.layers):
+            layers.append(tuple(params[1 + 3 * l : 4 + 3 * l]))
+        decoder, decoder_b = params[-2], params[-1]
+        return encoder, layers, decoder, decoder_b
+
+    def _lstm_layer(self, wih, whh, b, xs):
+        """xs: [T, B, in] → [T, B, h] via lax.scan."""
+        h = self.hidden
+        b_sz = xs.shape[1]
+        h0 = jnp.zeros((b_sz, h), xs.dtype)
+        c0 = jnp.zeros((b_sz, h), xs.dtype)
+
+        def cell(carry, x_t):
+            h_prev, c_prev = carry
+            gates = x_t @ wih.T + h_prev @ whh.T + b
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+            g = jnp.tanh(g)
+            c = f * c_prev + i * g
+            h_new = o * jnp.tanh(c)
+            return (h_new, c), h_new
+
+        _, ys = jax.lax.scan(cell, (h0, c0), xs)
+        return ys
+
+    def logits(self, params, tokens, targets=None):
+        encoder, layers, decoder, decoder_b = self._unpack(params)
+        x = encoder[tokens]  # [B, T, e]
+        h = jnp.transpose(x, (1, 0, 2))  # [T, B, e]
+        for wih, whh, b in layers:
+            h = self._lstm_layer(wih, whh, b, h)
+        h = jnp.transpose(h, (1, 0, 2))  # [B, T, h]
+        return h @ decoder + decoder_b
+
+    def loss(self, params, tokens, targets):
+        return common.cross_entropy(self.logits(params, tokens), targets)

@@ -1,0 +1,42 @@
+"""Two-layer MLP classifier — the quickstart workload.
+
+Small enough to train in seconds on CPU; used by examples/quickstart.rs
+and the trainer integration tests.
+"""
+
+import jax.numpy as jnp
+
+from . import common
+
+
+class Mlp:
+    """dim → hidden (tanh) → classes."""
+
+    name = "mlp"
+
+    def __init__(self, dim=64, hidden=128, classes=10, batch=32):
+        self.dim, self.hidden, self.classes, self.batch = dim, hidden, classes, batch
+        self.eval_batch = 256
+
+    def param_specs(self):
+        return [
+            ("w1", (self.dim, self.hidden), 1.0 / self.dim**0.5),
+            ("b1", (self.hidden,), "zero"),
+            ("w2", (self.hidden, self.classes), 1.0 / self.hidden**0.5),
+            ("b2", (self.classes,), "zero"),
+        ]
+
+    def data_specs(self, eval=False):
+        b = self.eval_batch if eval else self.batch
+        return [
+            ("x", (b, self.dim), "f32"),
+            ("y", (b,), "i32"),
+        ]
+
+    def logits(self, params, x, y=None):
+        w1, b1, w2, b2 = params
+        h = jnp.tanh(x @ w1 + b1)
+        return h @ w2 + b2
+
+    def loss(self, params, x, y):
+        return common.cross_entropy(self.logits(params, x), y)

@@ -1,0 +1,118 @@
+"""Decoder-only transformer LM — the Appendix-D workload and the
+end-to-end validation driver (examples/train_transformer.rs).
+
+Pre-norm GPT-style blocks: causal multi-head attention + GELU MLP, with
+learned positional embeddings and an untied output projection. Presets
+scale from CPU-friendly smoke sizes up to the ~100M-parameter
+configuration the e2e driver can select with `--preset 100m`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+PRESETS = {
+    # name: (vocab, d_model, heads, layers, ffn_mult, seq, batch/worker)
+    "tiny": dict(vocab=2000, d=128, heads=4, layers=2, ffn=4, seq=64, batch=8),
+    "small": dict(vocab=4000, d=256, heads=8, layers=4, ffn=4, seq=128, batch=8),
+    "25m": dict(vocab=8000, d=512, heads=8, layers=6, ffn=4, seq=128, batch=4),
+    "100m": dict(vocab=16000, d=768, heads=12, layers=12, ffn=4, seq=256, batch=2),
+}
+
+
+class TransformerLm:
+    name = "transformer"
+
+    def __init__(self, vocab=2000, d=128, heads=4, layers=2, ffn=4, seq=64, batch=8):
+        assert d % heads == 0
+        self.vocab, self.d, self.heads = vocab, d, heads
+        self.layers, self.ffn, self.seq, self.batch = layers, ffn, seq, batch
+        self.eval_batch = 16
+
+    @classmethod
+    def preset(cls, name):
+        return cls(**PRESETS[name])
+
+    def n_params(self):
+        d, f = self.d, self.ffn * self.d
+        per_layer = 4 * d * d + 2 * d * f + 2 * d + 2 * d + d + f
+        return self.vocab * d * 2 + self.seq * d + self.layers * per_layer
+
+    def param_specs(self):
+        d, f = self.d, self.ffn * self.d
+        specs = [
+            ("embed", (self.vocab, d), 0.02),
+            ("pos", (self.seq, d), 0.02),
+        ]
+        for l in range(self.layers):
+            specs += [
+                (f"l{l}.ln1", (d,), "one"),
+                (f"l{l}.qkv", (d, 3 * d), (1.0 / d) ** 0.5),
+                (f"l{l}.attn_out", (d, d), (1.0 / d) ** 0.5 / (2.0 * self.layers) ** 0.5),
+                (f"l{l}.ln2", (d,), "one"),
+                (f"l{l}.ffn_w1", (d, f), (2.0 / d) ** 0.5),
+                (f"l{l}.ffn_b1", (f,), "zero"),
+                (f"l{l}.ffn_w2", (f, d), (1.0 / f) ** 0.5 / (2.0 * self.layers) ** 0.5),
+                (f"l{l}.ffn_b2", (d,), "zero"),
+            ]
+        specs += [
+            ("ln_f", (d,), "one"),
+            ("unembed", (d, self.vocab), (1.0 / d) ** 0.5),
+        ]
+        return specs
+
+    def data_specs(self, eval=False):
+        b = self.eval_batch if eval else self.batch
+        return [
+            ("tokens", (b, self.seq), "i32"),
+            ("targets", (b, self.seq), "i32"),
+        ]
+
+    @staticmethod
+    def _layernorm(x, scale):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * scale
+
+    def _block(self, x, p, mask):
+        ln1, qkv, attn_out, ln2, w1, b1, w2, b2 = p
+        b_sz, t, d = x.shape
+        h = self.heads
+        hd = d // h
+        # attention
+        y = self._layernorm(x, ln1)
+        qkv_out = y @ qkv  # [B,T,3d]
+        q, k, v = jnp.split(qkv_out, 3, axis=-1)
+        q = q.reshape(b_sz, t, h, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b_sz, t, h, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b_sz, t, h, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask, att, jnp.float32(-1e9))
+        att = jax.nn.softmax(att, axis=-1)
+        y = (att @ v).transpose(0, 2, 1, 3).reshape(b_sz, t, d)
+        x = x + y @ attn_out
+        # mlp
+        y = self._layernorm(x, ln2)
+        y = jax.nn.gelu(y @ w1 + b1)
+        x = x + (y @ w2 + b2)
+        return x
+
+    def logits(self, params, tokens, targets=None):
+        embed, pos = params[0], params[1]
+        per_layer = 8
+        blocks = [
+            tuple(params[2 + l * per_layer : 2 + (l + 1) * per_layer])
+            for l in range(self.layers)
+        ]
+        ln_f, unembed = params[-2], params[-1]
+        b_sz, t = tokens.shape
+        x = embed[tokens] + pos[None, :t, :]
+        mask = jnp.tril(jnp.ones((t, t), bool))[None, None, :, :]
+        for p in blocks:
+            x = self._block(x, p, mask)
+        x = self._layernorm(x, ln_f)
+        return x @ unembed
+
+    def loss(self, params, tokens, targets):
+        return common.cross_entropy(self.logits(params, tokens), targets)

@@ -1,0 +1,97 @@
+"""AOT pipeline tests: manifest rendering, HLO lowering, registry."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as model_registry
+from compile.model import ArtifactSpec, model_artifacts, powersgd_kernel_artifacts
+from compile.models.mlp import Mlp
+
+
+def test_manifest_text_format():
+    spec = ArtifactSpec(
+        name="demo",
+        fn=lambda x: (x,),
+        inputs=[("x", (2, 3), "f32"), ("y", (4,), "i32"), ("s", (), "f32")],
+        outputs=[("loss", (), "f32")],
+        params=["x"],
+        param_inits={"x": "normal:0.1"},
+        meta={"k": "v"},
+    )
+    text = aot.manifest_text(spec)
+    lines = text.strip().splitlines()
+    assert lines[0] == "artifact demo"
+    assert "input x f32 2,3" in lines
+    assert "input y i32 4" in lines
+    assert "input s f32 -" in lines
+    assert "output loss f32 -" in lines
+    assert "param x normal:0.1" in lines
+    assert "meta k v" in lines
+
+
+def test_model_artifacts_cover_all_params():
+    arts = model_artifacts(Mlp(), "classifier")
+    assert [a.name for a in arts] == ["mlp_train", "mlp_eval"]
+    train = arts[0]
+    # outputs = loss + one grad per param, shapes matching
+    pspecs = Mlp().param_specs()
+    assert len(train.outputs) == 1 + len(pspecs)
+    for (gname, gshape, _), (pname, pshape, _) in zip(train.outputs[1:], pspecs):
+        assert gname == f"grad.{pname}"
+        assert tuple(gshape) == tuple(pshape)
+    # every param has an init directive
+    assert set(train.params) == set(train.param_inits)
+
+
+def test_lowering_produces_hlo_text():
+    arts = model_artifacts(Mlp(), "classifier")
+    text = aot.to_hlo_text(arts[0].fn, arts[0].inputs)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_kernel_artifacts_shapes():
+    arts = powersgd_kernel_artifacts(shapes=((8, 5),), ranks=(2,))
+    names = [a.name for a in arts]
+    assert names == [
+        "powersgd_stage1_8x5_r2",
+        "powersgd_stage2_8x5_r2",
+        "powersgd_decompress_8x5_r2",
+    ]
+    s2 = arts[1]
+    assert s2.outputs[0][1] == (8, 2)   # p_hat
+    assert s2.outputs[1][1] == (5, 2)   # q
+
+
+def test_registry_keys():
+    reg = model_registry.registry()
+    for key in model_registry.DEFAULT_MODELS:
+        assert key in reg
+    assert "transformer_100m" in reg
+
+
+def test_build_writes_and_caches(tmp_path):
+    arts = powersgd_kernel_artifacts(shapes=((4, 3),), ranks=(1,))
+    aot.build(arts[0], str(tmp_path))
+    hlo = tmp_path / f"{arts[0].name}.hlo.txt"
+    man = tmp_path / f"{arts[0].name}.manifest"
+    assert hlo.exists() and man.exists()
+    mtime = os.path.getmtime(hlo)
+    aot.build(arts[0], str(tmp_path))  # cached: no rewrite
+    assert os.path.getmtime(hlo) == mtime
+    aot.build(arts[0], str(tmp_path), force=True)
+    assert os.path.getmtime(hlo) >= mtime
+
+
+def test_default_artifacts_exist_after_make():
+    """If `make artifacts` has run, the default set must be complete."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art_dir):
+        pytest.skip("artifacts/ not built yet")
+    for model in ["mlp", "convnet", "lstm", "transformer_tiny"]:
+        for suffix in ["train", "eval"]:
+            for ext in ["hlo.txt", "manifest"]:
+                path = os.path.join(art_dir, f"{model}_{suffix}.{ext}")
+                assert os.path.exists(path), path

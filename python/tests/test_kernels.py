@@ -1,0 +1,136 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+The shape/rank sweep is randomized but seeded (hypothesis-style property
+coverage without the dependency): shapes include non-divisible-by-block
+sizes, rank-1 edges and the paper's real layer shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import powersgd as K
+from compile.kernels import ref as R
+
+# (n, m) sweep: tiny, non-divisible, block-aligned, paper Table 10/11 rows
+SHAPES = [
+    (1, 1),
+    (3, 7),
+    (16, 10),
+    (64, 576),
+    (128, 64),
+    (300, 200),
+    (513, 131),
+    (2600, 650),
+]
+RANKS = [1, 2, 4, 7]
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("n,m", SHAPES)
+@pytest.mark.parametrize("r", RANKS)
+def test_matmul_mq_matches_ref(n, m, r):
+    if r > min(n, m):
+        pytest.skip("rank exceeds dims")
+    M = _rand((n, m), seed=n * 1000 + m)
+    Q = _rand((m, r), seed=r)
+    np.testing.assert_allclose(
+        K.matmul_mq(M, Q), R.matmul_mq(M, Q), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("n,m", SHAPES)
+@pytest.mark.parametrize("r", RANKS)
+def test_matmul_mtp_matches_ref(n, m, r):
+    if r > min(n, m):
+        pytest.skip("rank exceeds dims")
+    M = _rand((n, m), seed=n + m)
+    P = _rand((n, r), seed=r + 1)
+    np.testing.assert_allclose(
+        K.matmul_mtp(M, P), R.matmul_mtp(M, P), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("n", [4, 33, 128, 513, 2600])
+@pytest.mark.parametrize("r", RANKS)
+def test_gram_schmidt_matches_ref_and_is_orthonormal(n, r):
+    if r > n:
+        pytest.skip("rank exceeds dims")
+    P = _rand((n, r), seed=n * 7 + r)
+    got = K.gram_schmidt(P)
+    np.testing.assert_allclose(got, R.gram_schmidt(P), rtol=2e-4, atol=2e-4)
+    gram = np.asarray(got.T @ got)
+    np.testing.assert_allclose(gram, np.eye(r), atol=2e-4)
+
+
+@pytest.mark.parametrize("n,m", [(16, 10), (300, 200), (513, 131)])
+@pytest.mark.parametrize("r", [1, 2, 4])
+def test_decompress_ef_matches_ref(n, m, r):
+    P = _rand((n, r), seed=1)
+    Q = _rand((m, r), seed=2)
+    D = _rand((n, m), seed=3)
+    mh, err = K.decompress_ef(P, Q, D)
+    rm, re = R.decompress_ef(P, Q, D)
+    np.testing.assert_allclose(mh, rm, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(err, re, rtol=2e-5, atol=2e-5)
+    # EF identity: reconstruction + error == delta
+    np.testing.assert_allclose(np.asarray(mh) + np.asarray(err), D, rtol=1e-4, atol=1e-4)
+
+
+def test_full_powersgd_step_low_rank_and_convergence():
+    """Warm-started repeated steps on a fixed matrix approach the best
+    rank-r approximation (paper Theorem I)."""
+    M = _rand((40, 25), seed=11)
+    r = 2
+    Q = _rand((25, r), seed=12)
+    for _ in range(40):
+        m_hat, p_hat, Q = R.powersgd_step(M, Q)
+    # compare against SVD truncation
+    u, s, vt = np.linalg.svd(np.asarray(M), full_matrices=False)
+    best = (u[:, :r] * s[:r]) @ vt[:r]
+    err_power = np.linalg.norm(np.asarray(M) - np.asarray(m_hat))
+    err_best = np.linalg.norm(np.asarray(M) - best)
+    assert abs(err_power - err_best) / err_best < 0.02
+
+
+def test_kernel_powersgd_step_matches_ref_step():
+    """The Pallas kernels compose to the same step as the jnp reference."""
+    M = _rand((64, 40), seed=21)
+    Q0 = _rand((40, 2), seed=22)
+    p = K.matmul_mq(M, Q0)
+    p_hat = K.gram_schmidt(p)
+    q = K.matmul_mtp(M, p_hat)
+    m_hat, _err = K.decompress_ef(p_hat, q, M)
+    ref_m_hat, _, _ = R.powersgd_step(M, Q0)
+    np.testing.assert_allclose(m_hat, ref_m_hat, rtol=2e-3, atol=2e-3)
+
+
+def test_randomized_property_sweep():
+    """Seeded random shapes (hypothesis-style): M·Q then decompress must
+    equal the rank-r projection of M onto span(Q̂) columns."""
+    rng = np.random.default_rng(99)
+    for _ in range(25):
+        n = int(rng.integers(2, 200))
+        m = int(rng.integers(2, 200))
+        r = int(rng.integers(1, min(n, m, 8) + 1))
+        M = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        Q = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+        np.testing.assert_allclose(
+            K.matmul_mq(M, Q), np.asarray(M) @ np.asarray(Q), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_vmem_and_mxu_estimates():
+    """Hardware-adaptation bookkeeping stays within the TPU budget for
+    every layer shape in the paper (DESIGN.md §Hardware-Adaptation)."""
+    VMEM = 16 * 1024 * 1024
+    for n, m in SHAPES:
+        for r in (1, 2, 4, 32):
+            assert K.vmem_footprint_bytes(n, m, r) < VMEM
+    assert K.mxu_utilization_estimate(4) == 4 / 128
+    assert K.mxu_utilization_estimate(256) == 1.0

@@ -1,0 +1,127 @@
+"""L2 model sanity: shapes, losses, gradients for every model in the zoo."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models.common import train_step_fn, eval_step_fn, cross_entropy
+from compile.models.convnet import ConvNet
+from compile.models.lstm import LstmLm
+from compile.models.mlp import Mlp
+from compile.models.transformer import TransformerLm
+
+INITS = {"zero": lambda s: jnp.zeros(s), "one": lambda s: jnp.ones(s)}
+
+
+def init_params(model, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _name, shape, init in model.param_specs():
+        if isinstance(init, str):
+            out.append(INITS[init](shape))
+        else:
+            out.append(jnp.asarray(rng.normal(size=shape) * init, jnp.float32))
+    return out
+
+
+def make_data(model, seed=0):
+    rng = np.random.default_rng(seed)
+    data = []
+    for _name, shape, dt in model.data_specs():
+        if dt == "f32":
+            data.append(jnp.asarray(rng.normal(size=shape), jnp.float32))
+        else:
+            hi = getattr(model, "vocab", getattr(model, "classes", 2))
+            data.append(jnp.asarray(rng.integers(0, hi, size=shape), jnp.int32))
+    return data
+
+
+MODELS = [
+    Mlp(),
+    ConvNet(),
+    LstmLm(vocab=200, embed=16, hidden=24, layers=1, seq=8, batch=2),
+    TransformerLm(vocab=100, d=32, heads=2, layers=1, seq=8, batch=2),
+]
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: m.name)
+def test_loss_is_finite_and_near_uniform_at_init(model):
+    params = init_params(model)
+    data = make_data(model)
+    loss = model.loss(params, *data)
+    assert np.isfinite(float(loss))
+    n_out = getattr(model, "vocab", getattr(model, "classes", None))
+    # at (near-)random init, loss ≈ ln(n_classes or vocab)
+    assert float(loss) < np.log(n_out) * 2.0 + 1.0
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: m.name)
+def test_train_step_emits_loss_plus_all_grads(model):
+    params = init_params(model)
+    data = make_data(model)
+    step = train_step_fn(model.loss, len(params))
+    outs = step(*params, *data)
+    assert len(outs) == 1 + len(params)
+    for g, p in zip(outs[1:], params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+    # at least one gradient strictly nonzero
+    assert any(float(jnp.abs(g).max()) > 0 for g in outs[1:])
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: m.name)
+def test_sgd_descends(model):
+    params = init_params(model)
+    data = make_data(model)
+    step = train_step_fn(model.loss, len(params))
+    loss0 = float(model.loss(params, *data))
+    lr = 0.1
+    for _ in range(20):
+        outs = step(*params, *data)
+        params = [p - lr * g for p, g in zip(params, outs[1:])]
+    loss1 = float(model.loss(params, *data))
+    assert loss1 < loss0, f"{model.name}: {loss0} -> {loss1}"
+
+
+def test_eval_step_counts_correct():
+    model = Mlp()
+    params = init_params(model)
+    data = make_data(model, seed=1)
+    ev = eval_step_fn(model.loss, model.logits, len(params))
+    loss, correct = ev(*params, *data)
+    b = model.eval_batch
+    assert 0 <= float(correct) <= b
+    assert np.isfinite(float(loss))
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 2.0]])
+    labels = jnp.asarray([0, 0])
+    got = float(cross_entropy(logits, labels))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1.0)
+    want = -(np.log(p0) + np.log(1 - p0)) / 2
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_transformer_causality():
+    """Changing a future token must not affect earlier logits."""
+    model = TransformerLm(vocab=50, d=32, heads=2, layers=1, seq=8, batch=1)
+    params = init_params(model, seed=3)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 50, size=(1, 8))
+    a = np.asarray(model.logits(params, jnp.asarray(toks, jnp.int32)))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 7) % 50
+    b = np.asarray(model.logits(params, jnp.asarray(toks2, jnp.int32)))
+    np.testing.assert_allclose(a[0, :-1], b[0, :-1], atol=1e-5)
+    assert np.abs(a[0, -1] - b[0, -1]).max() > 1e-6
+
+
+def test_transformer_param_count_presets():
+    t = TransformerLm.preset("100m")
+    n = sum(int(np.prod(s)) for _, s, _ in t.param_specs())
+    assert 80e6 < n < 130e6, f"100m preset has {n/1e6:.1f}M params"
+    tiny = TransformerLm.preset("tiny")
+    n = sum(int(np.prod(s)) for _, s, _ in tiny.param_specs())
+    assert n < 2e6

@@ -1,0 +1,67 @@
+//! Shared plumbing for the bench binaries (criterion is unavailable
+//! offline; see rust/src/util/bench.rs for the in-tree harness).
+//!
+//! Each bench regenerates one table or figure of the paper. Training
+//! benches run the *small-scale proxy* (synthetic data, reduced model) —
+//! accuracy columns reproduce orderings, not absolute numbers; byte
+//! columns are exact arithmetic over the paper's real layer shapes; and
+//! timing columns come from the calibrated simulator. See DESIGN.md §7.
+#![allow(dead_code)]
+
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::{Classification, LmCorpus};
+use powersgd::optim::DistOptimizer;
+use powersgd::runtime::Runtime;
+
+pub fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("mlp_train.manifest").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+/// Train the convnet proxy; returns (test accuracy %, bytes/step).
+pub fn run_convnet(
+    dir: &str,
+    opt: Box<dyn DistOptimizer>,
+    workers: usize,
+    steps: usize,
+    seed: u64,
+) -> (f64, u64) {
+    let mut rt = Runtime::cpu(dir).unwrap();
+    let train = rt.load("convnet_train").unwrap();
+    let eval = rt.load("convnet_eval").unwrap();
+    let cfg = TrainerConfig { workers, seed, eval_kind: EvalKind::Accuracy, ..Default::default() };
+    let mut data = Classification::new(3 * 16 * 16, 10, 32, workers, seed);
+    let mut trainer = Trainer::new(train, Some(eval), opt, cfg).unwrap();
+    trainer.train(&mut data, steps).unwrap();
+    let acc = trainer.evaluate(&mut data).unwrap();
+    (acc, trainer.metrics.total_bytes() / steps as u64)
+}
+
+/// Train the LSTM proxy; returns (perplexity, bytes/step).
+pub fn run_lstm(
+    dir: &str,
+    opt: Box<dyn DistOptimizer>,
+    workers: usize,
+    steps: usize,
+    seed: u64,
+) -> (f64, u64) {
+    let mut rt = Runtime::cpu(dir).unwrap();
+    let train = rt.load("lstm_train").unwrap();
+    let eval = rt.load("lstm_eval").unwrap();
+    let cfg = TrainerConfig { workers, seed, eval_kind: EvalKind::Perplexity, ..Default::default() };
+    let mut data = LmCorpus::new(1000, 8, 32, workers, seed);
+    let mut trainer = Trainer::new(train, Some(eval), opt, cfg).unwrap();
+    trainer.train(&mut data, steps).unwrap();
+    let ppl = trainer.evaluate(&mut data).unwrap();
+    (ppl, trainer.metrics.total_bytes() / steps as u64)
+}
+
+/// MiB formatting like the paper's MB columns.
+pub fn mb(bytes: f64) -> String {
+    format!("{:.0} MB", bytes / (1024.0 * 1024.0))
+}

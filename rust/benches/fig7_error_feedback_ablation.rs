@@ -1,0 +1,50 @@
+//! Paper Figure 7 (Appendix E): PowerSGD with and without error
+//! feedback. Without EF the method does not converge to a good
+//! accuracy at all — we regenerate the two convergence curves.
+
+mod common;
+
+use powersgd::compress::PowerSgd;
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::Classification;
+use powersgd::optim::{EfSgd, LrSchedule};
+use powersgd::runtime::Runtime;
+use powersgd::util::Table;
+
+fn curve(dir: &str, ef: bool) -> Vec<(usize, f64)> {
+    let mut rt = Runtime::cpu(dir).unwrap();
+    let train = rt.load("convnet_train").unwrap();
+    let eval = rt.load("convnet_eval").unwrap();
+    let inner = Box::new(PowerSgd::new(2, 1));
+    let mut opt = EfSgd::new(inner, LrSchedule::paper_step(0.01, 4, 0, vec![]), 0.9);
+    if !ef {
+        opt = opt.without_error_feedback();
+    }
+    let cfg = TrainerConfig {
+        workers: 4,
+        eval_every: 30,
+        eval_kind: EvalKind::Accuracy,
+        ..Default::default()
+    };
+    let mut data = Classification::new(3 * 16 * 16, 10, 32, 4, 42);
+    let mut trainer = Trainer::new(train, Some(eval), Box::new(opt), cfg).unwrap();
+    trainer.train(&mut data, 300).unwrap();
+    trainer.metrics.evals.clone()
+}
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let with_ef = curve(&dir, true);
+    let without = curve(&dir, false);
+    let mut table = Table::new(
+        "Figure 7 — rank-2 PowerSGD with/without error feedback (accuracy vs step)",
+        &["Step", "With EF", "Without EF"],
+    );
+    for ((s, a), (_, b)) in with_ef.iter().zip(without.iter()) {
+        table.row(&[format!("{s}"), format!("{a:.1}%"), format!("{b:.1}%")]);
+    }
+    table.print();
+    let final_ef = with_ef.last().unwrap().1;
+    let final_no = without.last().unwrap().1;
+    println!("\nfinal: EF {final_ef:.1}% vs no-EF {final_no:.1}% (paper: no-EF fails to reach target)");
+}

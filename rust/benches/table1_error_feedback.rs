@@ -1,0 +1,70 @@
+//! Paper Table 1: rank-based compression with and without error
+//! feedback — the biased PowerSGD (with EF) must beat the unbiased
+//! linear rank-r compressor on test accuracy, at comparable volume.
+//!
+//! Paper (CIFAR10/ResNet18, 300 epochs):
+//!   SGD 94.3% / 1023 MB  · Rank1 93.6% / 4 MB · Rank2 94.4% / 8 MB
+//!   Unbiased Rank1 71.2% / 3 MB · Unbiased Rank2 75.9% / 4 MB
+//! Ours: convnet proxy, 4 workers, 300 steps — same ordering expected.
+
+mod common;
+
+use powersgd::compress::{PowerSgd, UnbiasedRank};
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd};
+use powersgd::profiles::resnet18;
+use powersgd::util::Table;
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let lr = || LrSchedule::paper_step(0.01, 4, 0, vec![]);
+    // Unbiased variants use a lower LR or they diverge outright; the
+    // paper tuned per-algorithm LRs for non-EF methods (Appendix I).
+    let cases: Vec<(&str, Box<dyn DistOptimizer>)> = vec![
+        ("SGD", Box::new(Sgd::new(lr(), 0.9))),
+        ("Rank-1 PowerSGD", Box::new(EfSgd::new(Box::new(PowerSgd::new(1, 1)), lr(), 0.9))),
+        ("Rank-2 PowerSGD", Box::new(EfSgd::new(Box::new(PowerSgd::new(2, 1)), lr(), 0.9))),
+        (
+            "Unbiased Rank 1",
+            Box::new(EfSgd::new(Box::new(UnbiasedRank::new(1, 1)), LrSchedule::paper_step(0.002, 4, 0, vec![]), 0.0).without_error_feedback()),
+        ),
+        (
+            "Unbiased Rank 2",
+            Box::new(EfSgd::new(Box::new(UnbiasedRank::new(2, 1)), LrSchedule::paper_step(0.002, 4, 0, vec![]), 0.0).without_error_feedback()),
+        ),
+    ];
+
+    // Paper-scale data volumes computed over the real ResNet18 shapes.
+    let prof = resnet18();
+    let epoch_mb = |per_step: u64| {
+        common::mb(per_step as f64 * prof.steps_per_epoch)
+    };
+    let paper_vol: &[(&str, u64)] = &[
+        ("SGD", prof.registry.total_bytes()),
+        ("Rank-1 PowerSGD", prof.registry.total_rank_r_bytes_uncapped(1)),
+        ("Rank-2 PowerSGD", prof.registry.total_rank_r_bytes_uncapped(2)),
+        ("Unbiased Rank 1", prof.registry.total_rank_r_bytes_uncapped(1) / 2),
+        ("Unbiased Rank 2", prof.registry.total_rank_r_bytes_uncapped(2) / 2),
+    ];
+
+    let mut table = Table::new(
+        "Table 1 — rank-based compression with/without error feedback",
+        &["Algorithm", "Test accuracy (proxy)", "Data/epoch (paper shapes)"],
+    );
+    let mut accs = Vec::new();
+    for (name, opt) in cases {
+        let (acc, _bytes) = common::run_convnet(&dir, opt, 4, 300, 42);
+        let vol = paper_vol.iter().find(|(n, _)| *n == name).unwrap().1;
+        table.row(&[name.to_string(), format!("{acc:.1}%"), epoch_mb(vol)]);
+        accs.push((name, acc));
+    }
+    table.print();
+
+    // The paper's qualitative claims:
+    let get = |n: &str| accs.iter().find(|(m, _)| *m == n).unwrap().1;
+    let ok1 = get("Rank-2 PowerSGD") > get("Unbiased Rank 2") + 5.0;
+    let ok2 = get("Rank-1 PowerSGD") > get("Unbiased Rank 1") + 5.0;
+    let ok3 = (get("Rank-2 PowerSGD") - get("SGD")).abs() < 6.0;
+    println!(
+        "\nchecks: biased+EF beats unbiased (rank2): {ok1}; (rank1): {ok2}; rank-2 ~ SGD: {ok3}"
+    );
+}

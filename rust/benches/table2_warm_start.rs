@@ -1,0 +1,65 @@
+//! Paper Table 2: warm start vs cold start vs best rank-2 approximation.
+//!
+//! Paper: best approximation 94.4% · warm start (default) 94.4% ·
+//! without warm start 94.0%. Ours: convnet proxy accuracy ordering plus
+//! the *approximation-quality* mechanism measured directly (relative
+//! Frobenius error tracking a slowly-drifting gradient matrix).
+
+mod common;
+
+use powersgd::collectives::CommLog;
+use powersgd::compress::{BestRankR, Compressor, PowerSgd};
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule};
+use powersgd::tensor::Tensor;
+use powersgd::util::{Rng, Table};
+
+fn approx_error(mut comp: Box<dyn Compressor>, drift: f32, steps: usize) -> f64 {
+    let mut rng = Rng::new(77);
+    let mut base = Tensor::zeros(&[64, 48]);
+    rng.fill_normal(base.data_mut(), 1.0);
+    let mut log = CommLog::default();
+    let mut total = 0.0;
+    for _ in 0..steps {
+        let mut d = Tensor::zeros(&[64, 48]);
+        rng.fill_normal(d.data_mut(), drift);
+        base.axpy(1.0, &d);
+        let out = comp.compress_aggregate(&[vec![base.clone()]], &mut log);
+        total += base.sub(&out.mean[0]).norm() / base.norm();
+    }
+    total / steps as f64
+}
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let lr = || LrSchedule::paper_step(0.01, 4, 0, vec![]);
+    let cases: Vec<(&str, Box<dyn DistOptimizer>)> = vec![
+        (
+            "Best approximation",
+            Box::new(EfSgd::new(Box::new(BestRankR::new(2, 1)), lr(), 0.9)),
+        ),
+        (
+            "Warm start (default)",
+            Box::new(EfSgd::new(Box::new(PowerSgd::new(2, 1)), lr(), 0.9)),
+        ),
+        (
+            "Without warm start",
+            Box::new(EfSgd::new(Box::new(PowerSgd::new(2, 1).without_warm_start()), lr(), 0.9)),
+        ),
+    ];
+    let mut table = Table::new(
+        "Table 2 — best rank-2 approximation vs PowerSGD (proxy accuracy)",
+        &["Algorithm", "Test accuracy", "Rel. approx error (drifting M)"],
+    );
+    for (name, opt) in cases {
+        let (acc, _) = common::run_convnet(&dir, opt, 4, 300, 42);
+        let comp: Box<dyn Compressor> = match name {
+            "Best approximation" => Box::new(BestRankR::new(2, 1)),
+            "Warm start (default)" => Box::new(PowerSgd::new(2, 1)),
+            _ => Box::new(PowerSgd::new(2, 1).without_warm_start()),
+        };
+        let err = approx_error(comp, 0.05, 40);
+        table.row(&[name.to_string(), format!("{acc:.1}%"), format!("{err:.4}")]);
+    }
+    table.print();
+    println!("\nexpected ordering: warm-start error ≈ best-approximation error < cold-start error");
+}

@@ -1,0 +1,116 @@
+//! Paper Table 3: PowerSGD with varying rank, ResNet18/CIFAR10 and
+//! LSTM/WikiText-2 — accuracy (proxy training), data/epoch (exact paper
+//! shapes) and time/batch (calibrated simulator). Also prints the
+//! per-layer compression table (paper Tables 10/11) and writes the
+//! convergence-curve CSV backing Figure 4.
+
+mod common;
+
+use powersgd::compress::PowerSgd;
+use powersgd::net::NCCL;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd};
+use powersgd::profiles::{lstm_wikitext2, resnet18};
+use powersgd::simulate::{data_per_epoch_mb, simulate_step, Scheme};
+use powersgd::util::Table;
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+
+    // ---- image classification side -------------------------------
+    let prof = resnet18();
+    let sgd_total = simulate_step(&prof, Scheme::Sgd, 16, &NCCL).total();
+    let mut table = Table::new(
+        "Table 3a — PowerSGD rank sweep, ResNet18/CIFAR10",
+        &["Algorithm", "Test acc (proxy)", "Data/epoch", "Time/batch", "vs SGD"],
+    );
+    let schemes = [
+        ("SGD", Scheme::Sgd, None),
+        ("Rank 1", Scheme::PowerSgd { rank: 1 }, Some(1)),
+        ("Rank 2", Scheme::PowerSgd { rank: 2 }, Some(2)),
+        ("Rank 4", Scheme::PowerSgd { rank: 4 }, Some(4)),
+    ];
+    for (name, scheme, rank) in schemes {
+        let opt: Box<dyn DistOptimizer> = match rank {
+            None => Box::new(Sgd::new(LrSchedule::paper_step(0.01, 4, 0, vec![]), 0.9)),
+            Some(r) => Box::new(EfSgd::new(
+                Box::new(PowerSgd::new(r, 1)),
+                LrSchedule::paper_step(0.01, 4, 0, vec![]),
+                0.9,
+            )),
+        };
+        let (acc, _) = common::run_convnet(&dir, opt, 4, 300, 42);
+        let b = simulate_step(&prof, scheme, 16, &NCCL);
+        table.row(&[
+            name.to_string(),
+            format!("{acc:.1}%"),
+            format!("{:.0} MB", data_per_epoch_mb(&prof, scheme)),
+            format!("{:.0} ms", b.total() * 1e3),
+            format!("{:+.0}%", (b.total() / sgd_total - 1.0) * 100.0),
+        ]);
+    }
+    table.print();
+
+    // ---- language modeling side -----------------------------------
+    let prof = lstm_wikitext2();
+    let sgd_total = simulate_step(&prof, Scheme::Sgd, 16, &NCCL).total();
+    let mut table = Table::new(
+        "Table 3b — PowerSGD rank sweep, LSTM/WikiText-2",
+        &["Algorithm", "Perplexity (proxy)", "Data/epoch", "Time/batch", "vs SGD"],
+    );
+    for (name, scheme, rank) in [
+        ("SGD", Scheme::Sgd, None),
+        ("Rank 1", Scheme::PowerSgd { rank: 1 }, Some(1usize)),
+        ("Rank 2", Scheme::PowerSgd { rank: 2 }, Some(2)),
+        ("Rank 4", Scheme::PowerSgd { rank: 4 }, Some(4)),
+    ] {
+        let opt: Box<dyn DistOptimizer> = match rank {
+            None => Box::new(Sgd::new(LrSchedule::paper_step(0.125, 4, 0, vec![]), 0.9)),
+            Some(r) => Box::new(EfSgd::new(
+                Box::new(PowerSgd::new(r, 1)),
+                LrSchedule::paper_step(0.125, 4, 0, vec![]),
+                0.9,
+            )),
+        };
+        let (ppl, _) = common::run_lstm(&dir, opt, 4, 200, 42);
+        let b = simulate_step(&prof, scheme, 16, &NCCL);
+        table.row(&[
+            name.to_string(),
+            format!("{ppl:.1}"),
+            format!("{:.0} MB", data_per_epoch_mb(&prof, scheme)),
+            format!("{:.0} ms", b.total() * 1e3),
+            format!("{:+.0}%", (b.total() / sgd_total - 1.0) * 100.0),
+        ]);
+    }
+    table.print();
+
+    // ---- per-layer compression (paper Tables 10 & 11) -------------
+    for prof in [resnet18(), lstm_wikitext2()] {
+        let mut t = Table::new(
+            &format!("Per-tensor compression — {} (cf. Tables 10/11)", prof.name),
+            &["Parameter", "Matrix shape", "Uncompressed", "Compression"],
+        );
+        for spec in &prof.registry.specs {
+            match spec.matrix_dims() {
+                Some((n, m)) => t.row(&[
+                    spec.name.clone(),
+                    format!("{n} x {m}"),
+                    format!("{} KB", spec.bytes() / 1024),
+                    format!("{:.0}/r x", spec.bytes() as f64 / spec.rank_r_bytes_uncapped(1) as f64),
+                ]),
+                None => t.row(&[
+                    spec.name.clone(),
+                    "-".into(),
+                    format!("{} KB", spec.bytes() / 1024),
+                    "None".into(),
+                ]),
+            };
+        }
+        t.row(&[
+            "Total".into(),
+            "".into(),
+            format!("{} MB", prof.registry.total_bytes() / (1024 * 1024)),
+            format!("{:.0}/r x", prof.registry.compression_ratio(1)),
+        ]);
+        t.print();
+    }
+}

@@ -1,0 +1,95 @@
+//! Paper Table 4: comparing compression operators for EF-SGD in a
+//! unified setting, medium (~32×) and high (~128×) compression regimes.
+//!
+//! Accuracy: real proxy training. Sent/epoch + all-reduce capability:
+//! exact. Time/batch: calibrated simulator on the real ResNet18 shapes.
+
+mod common;
+
+use powersgd::compress::*;
+use powersgd::net::NCCL;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd};
+use powersgd::profiles::resnet18;
+use powersgd::simulate::{data_per_epoch_mb, simulate_step, Scheme};
+use powersgd::util::Table;
+
+fn case(name: &str, rank: usize, seed: u64) -> (Box<dyn DistOptimizer>, Scheme, bool) {
+    let lr = LrSchedule::paper_step(0.01, 4, 0, vec![]);
+    match name {
+        "Rank" => (
+            Box::new(EfSgd::new(Box::new(PowerSgd::new(rank, seed)), lr, 0.9)),
+            Scheme::PowerSgd { rank },
+            true,
+        ),
+        "Random Block" => (
+            Box::new(EfSgd::new(Box::new(RandomBlock::new(rank, seed)), lr, 0.9)),
+            Scheme::RandomBlock { rank },
+            true,
+        ),
+        "Random K" => (
+            Box::new(EfSgd::new(Box::new(RandomK::new(rank, seed)), lr, 0.9)),
+            Scheme::RandomK { rank },
+            true,
+        ),
+        "Sign+Norm" => (
+            Box::new(EfSgd::new(Box::new(SignNorm::new()), lr, 0.9)),
+            Scheme::SignNorm,
+            false,
+        ),
+        "Top K" => (
+            Box::new(EfSgd::new(Box::new(TopK::new(rank)), lr, 0.9)),
+            Scheme::TopK { rank },
+            false,
+        ),
+        other => panic!("{other}"),
+    }
+}
+
+fn main() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let prof = resnet18();
+
+    for (regime, rank) in [("Medium (~rank 7 budget)", 7usize), ("High (~rank 2 budget)", 2)] {
+        let mut table = Table::new(
+            &format!("Table 4 — {regime}"),
+            &["Compressor", "Test acc (proxy)", "Sent/epoch", "All-reduce", "Time/batch (sim)"],
+        );
+        // baseline row
+        let (acc, _) = common::run_convnet(
+            &dir,
+            Box::new(Sgd::new(LrSchedule::paper_step(0.01, 4, 0, vec![]), 0.9)),
+            4,
+            300,
+            42,
+        );
+        let b = simulate_step(&prof, Scheme::Sgd, 16, &NCCL);
+        table.row(&[
+            "No compression".into(),
+            format!("{acc:.1}%"),
+            format!("{:.0} MB", data_per_epoch_mb(&prof, Scheme::Sgd)),
+            "yes".into(),
+            format!("{:.0} ms", b.total() * 1e3),
+        ]);
+        for name in ["Rank", "Random Block", "Random K", "Sign+Norm", "Top K"] {
+            if name == "Sign+Norm" && rank != 7 {
+                // sign compression has a fixed ratio (~32×): only in medium
+                continue;
+            }
+            let (opt, scheme, allreduce) = case(name, rank, 1);
+            let (acc, _) = common::run_convnet(&dir, opt, 4, 300, 42);
+            let b = simulate_step(&prof, scheme, 16, &NCCL);
+            let label = if name == "Rank" { format!("Rank {rank}") } else { name.to_string() };
+            table.row(&[
+                label,
+                format!("{acc:.1}%"),
+                format!("{:.0} MB", data_per_epoch_mb(&prof, scheme)),
+                if allreduce { "yes".into() } else { "NO".into() },
+                format!("{:.0} ms", b.total() * 1e3),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+    println!("paper: only PowerSGD and Random Block beat full-precision SGD on time;");
+    println!("at high compression only PowerSGD holds the target accuracy.");
+}

@@ -1,0 +1,50 @@
+//! Paper Table 5: breakdown of time spent in one iteration of ResNet18
+//! training into forward, backward, gradient exchange and coding, as
+//! worker count grows — showing all-reduce decode stays constant while
+//! all-gather decode scales with W.
+
+mod common;
+
+use powersgd::net::NCCL;
+use powersgd::profiles::resnet18;
+use powersgd::simulate::{simulate_step, Scheme};
+use powersgd::util::Table;
+
+fn main() {
+    let prof = resnet18();
+    for scheme in [Scheme::Sgd, Scheme::PowerSgd { rank: 2 }, Scheme::Signum] {
+        let mut table = Table::new(
+            &format!("Table 5 — per-step breakdown, {}", scheme.name()),
+            &["Workers", "fwd", "bwd", "exchange", "encode+decode", "total"],
+        );
+        for w in [2usize, 4, 8, 16] {
+            let b = simulate_step(&prof, scheme, w, &NCCL);
+            table.row(&[
+                format!("{w}"),
+                format!("{:.0} ms", b.fwd * 1e3),
+                format!("{:.0} ms", b.bwd * 1e3),
+                format!("{:.1} ms", b.comm * 1e3),
+                format!("{:.1} ms", (b.encode + b.decode) * 1e3),
+                format!("{:.0} ms", b.total() * 1e3),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+
+    // The two structural claims of Table 5:
+    let p2 = simulate_step(&prof, Scheme::PowerSgd { rank: 2 }, 2, &NCCL);
+    let p16 = simulate_step(&prof, Scheme::PowerSgd { rank: 2 }, 16, &NCCL);
+    let s2 = simulate_step(&prof, Scheme::Signum, 2, &NCCL);
+    let s16 = simulate_step(&prof, Scheme::Signum, 16, &NCCL);
+    println!(
+        "PowerSGD decode constant in W: {:.2} ms -> {:.2} ms (all-reduce pre-aggregates)",
+        p2.decode * 1e3,
+        p16.decode * 1e3
+    );
+    println!(
+        "Signum decode scales with W:   {:.1} ms -> {:.1} ms (all-gather: W messages to vote over)",
+        s2.decode * 1e3,
+        s16.decode * 1e3
+    );
+}

@@ -1,0 +1,228 @@
+//! In-process collective communication over simulated workers.
+//!
+//! The algorithmic semantics are *exact* — ring all-reduce really moves
+//! chunks between per-worker buffers in W−1 reduce-scatter steps plus
+//! W−1 all-gather steps, so associativity/ordering effects and byte
+//! counts are faithful. Only wall-clock *network* time is simulated (the
+//! α–β cost model lives in [`crate::net`]; this module records what was
+//! communicated in a [`CommLog`]).
+//!
+//! Three aggregation strategies from the paper (§3 "Efficient
+//! aggregation"):
+//! - [`all_reduce_mean`] — ring all-reduce; requires *linear* compressors.
+//! - [`all_gather`] — every worker receives every worker's message;
+//!   required by sign/top-K/Atomo (decode cost scales with W, Table 5).
+//! - parameter-server (reduce + broadcast) is priced by the cost model
+//!   for comparison (Appendix B) but all algorithms in the paper's main
+//!   experiments use one of the two above.
+
+/// What kind of collective an operation used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollKind {
+    AllReduce,
+    AllGather,
+    ReduceBroadcast,
+}
+
+/// One logged collective operation. `bytes` is the per-worker message
+/// size (the paper's "data sent per epoch" accounting unit).
+#[derive(Debug, Clone, Copy)]
+pub struct CollOp {
+    pub kind: CollKind,
+    pub bytes: u64,
+}
+
+/// Log of collective traffic for one step (or one epoch).
+#[derive(Debug, Clone, Default)]
+pub struct CommLog {
+    pub ops: Vec<CollOp>,
+}
+
+impl CommLog {
+    pub fn record(&mut self, kind: CollKind, bytes: u64) {
+        self.ops.push(CollOp { kind, bytes });
+    }
+
+    /// Total per-worker bytes sent (paper's data-volume metric).
+    pub fn bytes_sent(&self) -> u64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.ops.clear();
+    }
+}
+
+/// Ring all-reduce (sum) across per-worker buffers, in place: after the
+/// call every worker's buffer holds the elementwise sum.
+///
+/// Implemented as the standard two-phase ring: W−1 reduce-scatter steps
+/// (each worker owns one chunk at the end) followed by W−1 all-gather
+/// steps. Real chunked data movement; O(2·(W−1)/W · N) values moved per
+/// worker — the ring's bandwidth term.
+pub fn ring_all_reduce_sum(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len();
+    assert!(w > 0);
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n), "buffer length mismatch");
+    if w == 1 || n == 0 {
+        return;
+    }
+    // Chunk boundaries: chunk c covers [starts[c], starts[c+1]).
+    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
+
+    // Phase 1: reduce-scatter. In step s, worker i sends chunk
+    // (i - s) mod w to worker (i + 1) mod w, which accumulates it.
+    for s in 0..w - 1 {
+        // Compute all transfers for this step against the pre-step state:
+        // in a real ring these happen concurrently. Buffer the sends.
+        let sends: Vec<(usize, usize, Vec<f32>)> = (0..w)
+            .map(|i| {
+                let c = (i + w - s) % w;
+                let chunk = buffers[i][starts[c]..starts[c + 1]].to_vec();
+                ((i + 1) % w, c, chunk)
+            })
+            .collect();
+        for (dst, c, chunk) in sends {
+            let dstbuf = &mut buffers[dst][starts[c]..starts[c + 1]];
+            for (d, v) in dstbuf.iter_mut().zip(chunk.iter()) {
+                *d += v;
+            }
+        }
+    }
+    // After reduce-scatter, worker i owns the fully-reduced chunk
+    // (i + 1) mod w.
+    // Phase 2: all-gather. In step s, worker i sends its owned-or-received
+    // chunk (i + 1 - s) mod w to worker (i + 1) mod w, which overwrites.
+    for s in 0..w - 1 {
+        let sends: Vec<(usize, usize, Vec<f32>)> = (0..w)
+            .map(|i| {
+                let c = (i + 1 + w - s) % w;
+                let chunk = buffers[i][starts[c]..starts[c + 1]].to_vec();
+                ((i + 1) % w, c, chunk)
+            })
+            .collect();
+        for (dst, c, chunk) in sends {
+            buffers[dst][starts[c]..starts[c + 1]].copy_from_slice(&chunk);
+        }
+    }
+}
+
+/// All-reduce **mean** across per-worker buffers, recording the traffic.
+pub fn all_reduce_mean(buffers: &mut [Vec<f32>], log: &mut CommLog) {
+    let w = buffers.len() as f32;
+    let bytes = (buffers[0].len() * 4) as u64;
+    ring_all_reduce_sum(buffers);
+    for b in buffers.iter_mut() {
+        for v in b.iter_mut() {
+            *v /= w;
+        }
+    }
+    log.record(CollKind::AllReduce, bytes);
+}
+
+/// All-gather: returns, for each worker, a copy of every worker's message
+/// (the flattened list, indexable by source worker).
+pub fn all_gather(messages: &[Vec<f32>], log: &mut CommLog) -> Vec<Vec<Vec<f32>>> {
+    let bytes = (messages.first().map(|m| m.len()).unwrap_or(0) * 4) as u64;
+    log.record(CollKind::AllGather, bytes);
+    let view: Vec<Vec<f32>> = messages.to_vec();
+    messages.iter().map(|_| view.clone()).collect()
+}
+
+/// All-gather for byte-packed messages (sign compression sends bitmaps).
+pub fn all_gather_bytes(messages: &[Vec<u8>], log: &mut CommLog) -> Vec<Vec<Vec<u8>>> {
+    let bytes = messages.first().map(|m| m.len()).unwrap_or(0) as u64;
+    log.record(CollKind::AllGather, bytes);
+    let view: Vec<Vec<u8>> = messages.to_vec();
+    messages.iter().map(|_| view.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_buffers(w: usize, n: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+        (0..w)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ring_matches_naive_sum() {
+        let mut rng = Rng::new(51);
+        for &w in &[1usize, 2, 3, 4, 7, 16] {
+            for &n in &[1usize, 2, 5, 16, 1000, 1003] {
+                let bufs = random_buffers(w, n, &mut rng);
+                let mut expect = vec![0.0f32; n];
+                for b in &bufs {
+                    for (e, v) in expect.iter_mut().zip(b) {
+                        *e += v;
+                    }
+                }
+                let mut got = bufs.clone();
+                ring_all_reduce_sum(&mut got);
+                for b in &got {
+                    for (g, e) in b.iter().zip(&expect) {
+                        assert!(
+                            (g - e).abs() <= 1e-4 * e.abs().max(1.0),
+                            "w={w} n={n}: {g} vs {e}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_workers_identical_after_allreduce() {
+        let mut rng = Rng::new(52);
+        let mut bufs = random_buffers(8, 257, &mut rng);
+        let mut log = CommLog::default();
+        all_reduce_mean(&mut bufs, &mut log);
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+        assert_eq!(log.bytes_sent(), 257 * 4);
+        assert_eq!(log.ops[0].kind, CollKind::AllReduce);
+    }
+
+    #[test]
+    fn mean_is_correct() {
+        let mut bufs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        let mut log = CommLog::default();
+        all_reduce_mean(&mut bufs, &mut log);
+        assert_eq!(bufs[0], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn all_gather_delivers_everything() {
+        let msgs = vec![vec![1.0f32], vec![2.0], vec![3.0]];
+        let mut log = CommLog::default();
+        let got = all_gather(&msgs, &mut log);
+        assert_eq!(got.len(), 3);
+        for per_worker in &got {
+            assert_eq!(per_worker.len(), 3);
+            assert_eq!(per_worker[1], vec![2.0]);
+        }
+        assert_eq!(log.bytes_sent(), 4);
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let mut bufs = vec![vec![5.0f32, -1.0]];
+        ring_all_reduce_sum(&mut bufs);
+        assert_eq!(bufs[0], vec![5.0, -1.0]);
+    }
+
+    #[test]
+    fn commlog_accumulates() {
+        let mut log = CommLog::default();
+        log.record(CollKind::AllReduce, 100);
+        log.record(CollKind::AllGather, 50);
+        assert_eq!(log.bytes_sent(), 150);
+        log.clear();
+        assert_eq!(log.bytes_sent(), 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Adaptive-rank PowerSGD — an extension in the paper's future-work
+//! direction (§6: compression quality vs cost trade-off varies by task;
+//! Appendix D shows the transformer needs rank 32 where the LSTM needs
+//! rank 4).
+//!
+//! After every step we know exactly what compression discarded: the
+//! relative EF residual `‖Δ − P̂Qᵀ‖ / ‖Δ‖`. This controller keeps that
+//! residual inside a target band by adjusting the rank between
+//! `min_rank` and `max_rank`: grow when the gradient spectrum is too
+//! rich for the current rank, shrink when compression is already nearly
+//! lossless. Hysteresis + cooldown prevent oscillation. Warm-start `Q`
+//! columns are preserved on grow (new columns re-seeded) and truncated
+//! on shrink, so subspace tracking survives adaptation.
+
+use super::{Aggregated, Compressor, Locals, PowerSgd};
+use crate::collectives::CommLog;
+use crate::grad::ParamRegistry;
+use crate::tensor::Tensor;
+
+/// PowerSGD with residual-controlled rank.
+pub struct AdaptivePowerSgd {
+    inner: PowerSgd,
+    seed: u64,
+    pub min_rank: usize,
+    pub max_rank: usize,
+    /// Grow when relative residual exceeds this.
+    pub grow_threshold: f64,
+    /// Shrink when relative residual falls below this.
+    pub shrink_threshold: f64,
+    /// Steps to wait between rank changes.
+    pub cooldown: usize,
+    since_change: usize,
+    last_residual: f64,
+    rank_history: Vec<usize>,
+}
+
+impl AdaptivePowerSgd {
+    pub fn new(initial_rank: usize, min_rank: usize, max_rank: usize, seed: u64) -> Self {
+        assert!(min_rank >= 1 && min_rank <= initial_rank && initial_rank <= max_rank);
+        AdaptivePowerSgd {
+            inner: PowerSgd::new(initial_rank, seed),
+            seed,
+            min_rank,
+            max_rank,
+            grow_threshold: 0.7,
+            shrink_threshold: 0.3,
+            cooldown: 10,
+            since_change: 0,
+            last_residual: 0.0,
+            rank_history: Vec::new(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    pub fn rank_history(&self) -> &[usize] {
+        &self.rank_history
+    }
+
+    pub fn last_residual(&self) -> f64 {
+        self.last_residual
+    }
+
+    fn maybe_adapt(&mut self, residual: f64) {
+        self.since_change += 1;
+        if self.since_change < self.cooldown {
+            return;
+        }
+        let r = self.inner.rank();
+        let new_rank = if residual > self.grow_threshold && r < self.max_rank {
+            r * 2
+        } else if residual < self.shrink_threshold && r > self.min_rank {
+            r / 2
+        } else {
+            return;
+        };
+        let new_rank = new_rank.clamp(self.min_rank, self.max_rank);
+        if new_rank != r {
+            // Re-seed a fresh PowerSGD at the new rank. (Q columns are
+            // re-initialized; the warm start re-converges within a few
+            // steps — Theorem I — which the cooldown absorbs.)
+            self.inner = PowerSgd::new(new_rank, self.seed ^ new_rank as u64);
+            self.since_change = 0;
+        }
+    }
+}
+
+impl Compressor for AdaptivePowerSgd {
+    fn name(&self) -> String {
+        format!("Adaptive Rank [{}..{}] (now {})", self.min_rank, self.max_rank, self.inner.rank())
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let agg = self.inner.compress_aggregate(updates, log);
+        // Relative residual of the aggregate reconstruction vs the true
+        // mean update (matrix params only).
+        let w = updates.len() as f32;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (p, out) in agg.mean.iter().enumerate() {
+            if out.shape().len() < 2 {
+                continue;
+            }
+            let mut mean = Tensor::zeros(out.shape());
+            for wu in updates {
+                mean.axpy(1.0 / w, &wu[p]);
+            }
+            num += mean.sub(out).norm().powi(2);
+            den += mean.norm().powi(2);
+        }
+        let residual = if den > 0.0 { (num / den).sqrt() } else { 0.0 };
+        self.last_residual = residual;
+        self.rank_history.push(self.inner.rank());
+        self.maybe_adapt(residual);
+        Aggregated { mean: agg.mean, locals: Locals::SharedAggregate }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_rank_r_bytes_uncapped(self.inner.rank())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_updates(shape: &[usize], rank_of_data: usize, rng: &mut Rng) -> Vec<Vec<Tensor>> {
+        // construct a matrix of known rank
+        let (n, m) = (shape[0], shape[1]);
+        let mut acc = Tensor::zeros(&[n, m]);
+        for _ in 0..rank_of_data {
+            let mut u = Tensor::zeros(&[n, 1]);
+            let mut v = Tensor::zeros(&[1, m]);
+            rng.fill_normal(u.data_mut(), 1.0);
+            rng.fill_normal(v.data_mut(), 1.0);
+            acc.axpy(1.0, &crate::tensor::matmul(&u, &v));
+        }
+        vec![vec![acc]]
+    }
+
+    #[test]
+    fn grows_rank_on_rich_spectrum() {
+        let mut rng = Rng::new(71);
+        let mut c = AdaptivePowerSgd::new(1, 1, 8, 5);
+        c.cooldown = 3;
+        // full-rank-ish data: rank-1 approximation leaves a big residual
+        for _ in 0..30 {
+            let updates = rand_updates(&[20, 16], 12, &mut rng);
+            let mut log = CommLog::default();
+            c.compress_aggregate(&updates, &mut log);
+        }
+        assert!(c.rank() > 1, "rank should have grown, history {:?}", c.rank_history());
+    }
+
+    #[test]
+    fn shrinks_rank_on_low_rank_data() {
+        let mut rng = Rng::new(72);
+        let mut c = AdaptivePowerSgd::new(8, 1, 8, 6);
+        c.cooldown = 3;
+        // rank-1 data: rank-8 compression is lossless => shrink
+        for _ in 0..40 {
+            let updates = rand_updates(&[20, 16], 1, &mut rng);
+            let mut log = CommLog::default();
+            c.compress_aggregate(&updates, &mut log);
+        }
+        assert!(c.rank() < 8, "rank should have shrunk, history {:?}", c.rank_history());
+        assert!(c.last_residual() < 0.3);
+    }
+
+    #[test]
+    fn respects_bounds_and_cooldown() {
+        let mut rng = Rng::new(73);
+        let mut c = AdaptivePowerSgd::new(2, 2, 4, 7);
+        c.cooldown = 5;
+        for _ in 0..50 {
+            let updates = rand_updates(&[12, 10], 10, &mut rng);
+            let mut log = CommLog::default();
+            c.compress_aggregate(&updates, &mut log);
+        }
+        for &r in c.rank_history() {
+            assert!((2..=4).contains(&r));
+        }
+        // no two consecutive changes closer than cooldown
+        let mut last_change = 0usize;
+        let mut prev = c.rank_history()[0];
+        for (i, &r) in c.rank_history().iter().enumerate().skip(1) {
+            if r != prev {
+                assert!(i - last_change >= 5, "change too soon at {i}");
+                last_change = i;
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_track_current_rank() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![20, 16])]);
+        let c = AdaptivePowerSgd::new(4, 1, 8, 9);
+        assert_eq!(c.message_bytes(&reg), ((20 + 16) * 4 * 4) as u64);
+    }
+}

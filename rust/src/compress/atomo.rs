@@ -1,0 +1,237 @@
+//! Spectral Atomo (Wang et al. 2018; paper Appendix G.6).
+//!
+//! Unbiased importance sampling of the gradient's singular components:
+//! decompose `M = Σ σᵢ uᵢ vᵢᵀ`, compute inclusion probabilities `pᵢ`
+//! with `Σ pᵢ = r`, sample until exactly `r` components are selected
+//! (the paper's modification), and transmit `{(uᵢ·σᵢ/pᵢ, vᵢ)}`.
+//! Requires a full SVD every step — the cost §4.2 and Table 6 show to be
+//! prohibitive (948 ms vs 239 ms per batch), which our `kernel_hotpath`
+//! bench reproduces with the Jacobi SVD substrate.
+
+use super::{aggregate_vectors_uncompressed, split_kinds, Aggregated, Compressor, Locals};
+use crate::collectives::{all_gather, CommLog};
+use crate::grad::{CompressKind, ParamRegistry};
+use crate::linalg::svd;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Rank-r Spectral Atomo compressor.
+pub struct Atomo {
+    rank: usize,
+    rng: Rng,
+}
+
+impl Atomo {
+    pub fn new(rank: usize, seed: u64) -> Atomo {
+        assert!(rank >= 1);
+        Atomo { rank, rng: Rng::new(seed) }
+    }
+
+    /// Atomo inclusion probabilities: the water-filling solution of
+    /// min variance s.t. Σpᵢ = s, 0 < pᵢ ≤ 1 — iteratively assign
+    /// `pᵢ = σᵢ·s' / Σ_unsaturated σ` and clamp at 1.
+    pub(crate) fn probabilities(sigmas: &[f32], budget: usize) -> Vec<f64> {
+        let k = sigmas.len();
+        let s = budget.min(k);
+        let mut p = vec![0.0f64; k];
+        let mut saturated = vec![false; k];
+        loop {
+            let remaining_budget = s as f64 - saturated.iter().filter(|&&x| x).count() as f64;
+            let mass: f64 = sigmas
+                .iter()
+                .zip(&saturated)
+                .filter(|(_, &sat)| !sat)
+                .map(|(&x, _)| x as f64)
+                .sum();
+            if mass <= 0.0 || remaining_budget <= 0.0 {
+                for i in 0..k {
+                    if saturated[i] {
+                        p[i] = 1.0;
+                    }
+                }
+                break;
+            }
+            let mut newly = false;
+            for i in 0..k {
+                if !saturated[i] {
+                    p[i] = (sigmas[i] as f64) * remaining_budget / mass;
+                    if p[i] >= 1.0 {
+                        saturated[i] = true;
+                        newly = true;
+                    }
+                }
+            }
+            if !newly {
+                for i in 0..k {
+                    if saturated[i] {
+                        p[i] = 1.0;
+                    }
+                }
+                break;
+            }
+        }
+        p
+    }
+}
+
+impl Compressor for Atomo {
+    fn name(&self) -> String {
+        format!("Atomo (rank {})", self.rank)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        false
+    }
+
+    fn is_biased(&self) -> bool {
+        false // unbiased by construction; the paper runs it without EF
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // Per worker: SVD each matrix, sample exactly `rank` components,
+        // message = [u'_1 | v_1 | ... | u'_r | v_r] per matrix.
+        let mut per_worker_recon: Vec<Vec<Tensor>> = (0..w)
+            .map(|wi| {
+                let mut lt: Vec<Tensor> =
+                    updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+                for &p in &vec_idx {
+                    lt[p] = updates[wi][p].clone();
+                }
+                lt
+            })
+            .collect();
+        let mut msg_len = 0usize;
+        let messages: Vec<Vec<f32>> = updates
+            .iter()
+            .enumerate()
+            .map(|(wi, wu)| {
+                let mut msg = Vec::new();
+                for &p in &mat_idx {
+                    let (n, m) = (wu[p].rows(), wu[p].cols());
+                    let d = svd(&wu[p]);
+                    let probs = Atomo::probabilities(&d.s, self.rank);
+                    // Repeat sampling until exactly `rank` selected
+                    // (Appendix G.6's modification). Guard with a retry cap.
+                    let mut selected: Vec<usize> = Vec::new();
+                    for _attempt in 0..200 {
+                        selected = (0..d.s.len())
+                            .filter(|&i| self.rng.uniform() < probs[i])
+                            .collect();
+                        if selected.len() == self.rank.min(d.s.len()) {
+                            break;
+                        }
+                    }
+                    selected.truncate(self.rank);
+                    while selected.len() < self.rank.min(d.s.len()) {
+                        // pathological fallback: take argmax-prob components
+                        let extra = (0..d.s.len()).find(|i| !selected.contains(i)).unwrap();
+                        selected.push(extra);
+                    }
+                    for &i in &selected {
+                        let scale = if probs[i] > 0.0 { d.s[i] as f64 / probs[i] } else { 0.0 };
+                        for row in 0..n {
+                            msg.push((d.u.at(row, i) as f64 * scale) as f32);
+                        }
+                        for row in 0..m {
+                            msg.push(d.v.at(row, i));
+                        }
+                    }
+                    // local reconstruction for this worker
+                    let rec = per_worker_recon[wi][p].data_mut();
+                    for &i in &selected {
+                        let scale = if probs[i] > 0.0 { d.s[i] as f64 / probs[i] } else { 0.0 };
+                        for row in 0..n {
+                            let uv = d.u.at(row, i) as f64 * scale;
+                            for col in 0..m {
+                                rec[row * m + col] += (uv * d.v.at(col, i) as f64) as f32;
+                            }
+                        }
+                    }
+                }
+                msg_len = msg.len();
+                msg
+            })
+            .collect();
+        let _ = all_gather(&messages, log);
+
+        // Aggregate = average of per-worker reconstructions.
+        for &p in &mat_idx {
+            for wrec in per_worker_recon.iter() {
+                mean[p].axpy(1.0 / w as f32, &wrec[p]);
+            }
+        }
+        let _ = msg_len;
+        Aggregated { mean, locals: Locals::PerWorker(per_worker_recon) }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => ((rows + cols) * self.rank * 4) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_sum_to_budget() {
+        let sig = [5.0f32, 3.0, 1.0, 0.5, 0.1];
+        for budget in 1..=4 {
+            let p = Atomo::probabilities(&sig, budget);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - budget as f64).abs() < 1e-9, "budget {budget} sum {sum}");
+            assert!(p.iter().all(|&x| (0.0..=1.0 + 1e-12).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn probabilities_saturate_dominant_component() {
+        let sig = [100.0f32, 1.0, 1.0];
+        let p = Atomo::probabilities(&sig, 2);
+        assert!((p[0] - 1.0).abs() < 1e-9);
+        assert!((p[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Rng::new(111);
+        let mut m = Tensor::zeros(&[6, 4]);
+        rng.fill_normal(m.data_mut(), 1.0);
+        let updates = vec![vec![m.clone()]];
+        let mut c = Atomo::new(2, 112);
+        let mut log = CommLog::default();
+        let trials = 800;
+        let mut acc = Tensor::zeros(&[6, 4]);
+        for _ in 0..trials {
+            let rec = c.compress_aggregate(&updates, &mut log).mean[0].clone();
+            acc.axpy(1.0 / trials as f32, &rec);
+        }
+        let rel = acc.sub(&m).norm() / m.norm();
+        assert!(rel < 0.15, "Atomo bias too large: {rel}");
+    }
+
+    #[test]
+    fn exact_rank_components() {
+        let mut rng = Rng::new(113);
+        let mut m = Tensor::zeros(&[8, 5]);
+        rng.fill_normal(m.data_mut(), 1.0);
+        let mut c = Atomo::new(2, 114);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&[vec![m]], &mut log);
+        // Output is a sum of exactly 2 rank-1 terms => rank ≤ 2.
+        let d = svd(&agg.mean[0]);
+        assert!(d.s[2] < 1e-3 * d.s[0].max(1e-9), "{:?}", &d.s[..3]);
+    }
+}

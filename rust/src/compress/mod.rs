@@ -1,0 +1,229 @@
+//! Gradient compression operators (paper §3, §5.1 and Appendix G).
+//!
+//! Every operator implements [`Compressor`]: given each worker's update
+//! tensors (already matricized by [`crate::grad::ParamRegistry`]), it
+//! compresses, aggregates across workers with the collective its
+//! linearity permits, and returns
+//! - the decompressed **aggregate** update `Δ'` (identical on all
+//!   workers, like a real collective), and
+//! - the per-worker **local decompressions** `DECOMPRESS(C(Δ_w))` that
+//!   error feedback subtracts (Algorithm 2, line 9).
+//!
+//! Linear compressors (PowerSGD, unbiased rank-r, Random Block, Random K,
+//! no-compression) aggregate with all-reduce; sign- and top-K-based ones
+//! require all-gather. The distinction drives both the byte accounting
+//! and the simulated timing (Tables 4/5).
+//!
+//! Vector-shaped parameters (biases) are always sent uncompressed in a
+//! single packed all-reduce, per §3 of the paper; their local
+//! decompression is the identity, so they accumulate no error.
+
+mod adaptive;
+mod atomo;
+mod none;
+mod powersgd;
+mod sign;
+mod sparsify;
+mod unbiased;
+
+pub use adaptive::AdaptivePowerSgd;
+pub use atomo::Atomo;
+pub use none::NoCompression;
+pub use powersgd::{BestRankR, PowerSgd};
+pub use sign::{SignNorm, Signum};
+pub use sparsify::{RandomBlock, RandomK, TopK};
+pub use unbiased::UnbiasedRank;
+
+use crate::collectives::{all_reduce_mean, CommLog};
+use crate::grad::ParamRegistry;
+use crate::tensor::Tensor;
+
+/// Per-worker local decompressions for error feedback.
+#[derive(Debug, Clone)]
+pub enum Locals {
+    /// `DECOMPRESS(C(Δ_w))` equals the aggregate for every worker (the
+    /// PowerSGD convention: errors are taken against the shared
+    /// reconstruction — see epfml/powersgd `gradient_reducers.py`).
+    SharedAggregate,
+    /// Per-worker reconstructions (sign / top-K / sparsification).
+    PerWorker(Vec<Vec<Tensor>>),
+}
+
+/// Result of one compress+aggregate round.
+#[derive(Debug, Clone)]
+pub struct Aggregated {
+    /// Decompressed aggregate update `Δ'` (same on all workers).
+    pub mean: Vec<Tensor>,
+    /// What each worker's own compression reconstructed to (for EF).
+    pub locals: Locals,
+}
+
+impl Aggregated {
+    /// Local reconstruction for worker `w` (resolving `SharedAggregate`).
+    pub fn local_for(&self, w: usize) -> &[Tensor] {
+        match &self.locals {
+            Locals::SharedAggregate => &self.mean,
+            Locals::PerWorker(per) => &per[w],
+        }
+    }
+}
+
+/// A gradient compression + aggregation operator.
+pub trait Compressor: Send {
+    /// Human-readable name ("Rank 2", "Sign+Norm", ...).
+    fn name(&self) -> String;
+
+    /// True iff the scheme is linear and can aggregate with all-reduce
+    /// (the "All-reduce" column of Table 4).
+    fn supports_all_reduce(&self) -> bool;
+
+    /// Compress every worker's update, aggregate, decompress.
+    ///
+    /// `updates[w][p]` is worker `w`'s update for parameter `p` in
+    /// compression shape. All collective traffic must be recorded in
+    /// `log`.
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated;
+
+    /// Closed-form per-worker message size in bytes per step for the
+    /// given model (must agree with what `compress_aggregate` logs).
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64;
+
+    /// Whether this operator is biased (needs error feedback to converge).
+    fn is_biased(&self) -> bool {
+        true
+    }
+}
+
+/// Indices of matrix-kind (compressed) and vector-kind (uncompressed)
+/// parameters in an update list.
+pub(crate) fn split_kinds(updates: &[Tensor]) -> (Vec<usize>, Vec<usize>) {
+    let mut mats = Vec::new();
+    let mut vecs = Vec::new();
+    for (i, t) in updates.iter().enumerate() {
+        if t.shape().len() >= 2 {
+            mats.push(i);
+        } else {
+            vecs.push(i);
+        }
+    }
+    (mats, vecs)
+}
+
+/// All-reduce-mean the vector-shaped parameters uncompressed, writing
+/// the mean into `mean_out` and leaving per-worker error at zero
+/// (identity compression). Packs all vectors into one flat buffer, like
+/// the paper's flat-buffer optimization (Appendix H).
+pub(crate) fn aggregate_vectors_uncompressed(
+    updates: &[Vec<Tensor>],
+    vec_idx: &[usize],
+    mean_out: &mut [Tensor],
+    log: &mut CommLog,
+) {
+    if vec_idx.is_empty() {
+        return;
+    }
+    let total: usize = vec_idx.iter().map(|&i| updates[0][i].len()).sum();
+    let mut buffers: Vec<Vec<f32>> = updates
+        .iter()
+        .map(|wu| {
+            let mut buf = Vec::with_capacity(total);
+            for &i in vec_idx {
+                buf.extend_from_slice(wu[i].data());
+            }
+            buf
+        })
+        .collect();
+    all_reduce_mean(&mut buffers, log);
+    let mut off = 0;
+    for &i in vec_idx {
+        let n = updates[0][i].len();
+        mean_out[i] = Tensor::from_vec(&[n], buffers[0][off..off + n].to_vec());
+        off += n;
+    }
+}
+
+/// Pack a set of per-parameter tensors (selected by `idx`) into one flat
+/// per-worker buffer, all-reduce-mean it, and unpack back into tensors of
+/// the shapes found in `shapes_like`.
+pub(crate) fn all_reduce_mean_packed(
+    per_worker: &[Vec<Tensor>],
+    log: &mut CommLog,
+) -> Vec<Tensor> {
+    let total: usize = per_worker[0].iter().map(|t| t.len()).sum();
+    let mut buffers: Vec<Vec<f32>> = per_worker
+        .iter()
+        .map(|ts| {
+            let mut buf = Vec::with_capacity(total);
+            for t in ts {
+                buf.extend_from_slice(t.data());
+            }
+            buf
+        })
+        .collect();
+    all_reduce_mean(&mut buffers, log);
+    let mut out = Vec::with_capacity(per_worker[0].len());
+    let mut off = 0;
+    for t in &per_worker[0] {
+        let n = t.len();
+        out.push(Tensor::from_vec(t.shape(), buffers[0][off..off + n].to_vec()));
+        off += n;
+    }
+    out
+}
+
+/// Paper's sparsification budget: `(n + m) · r` values for an `n×m`
+/// matrix "to match rank-r PowerSGD" (Appendix G), capped at the matrix
+/// size.
+pub(crate) fn sparsify_budget(n: usize, m: usize, rank_equiv: usize) -> usize {
+    ((n + m) * rank_equiv).min(n * m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_kinds_separates() {
+        let ts = vec![
+            Tensor::zeros(&[3, 4]),
+            Tensor::zeros(&[5]),
+            Tensor::zeros(&[2, 2]),
+        ];
+        let (m, v) = split_kinds(&ts);
+        assert_eq!(m, vec![0, 2]);
+        assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn vectors_aggregate_to_mean() {
+        let updates = vec![
+            vec![Tensor::zeros(&[2, 2]), Tensor::from_vec(&[3], vec![1., 2., 3.])],
+            vec![Tensor::zeros(&[2, 2]), Tensor::from_vec(&[3], vec![3., 2., 1.])],
+        ];
+        let mut mean = vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[3])];
+        let mut log = CommLog::default();
+        aggregate_vectors_uncompressed(&updates, &[1], &mut mean, &mut log);
+        assert_eq!(mean[1].data(), &[2., 2., 2.]);
+        assert_eq!(log.bytes_sent(), 12);
+    }
+
+    #[test]
+    fn packed_allreduce_roundtrips_shapes() {
+        let per_worker = vec![
+            vec![Tensor::full(&[2, 2], 1.0), Tensor::full(&[3], 0.0)],
+            vec![Tensor::full(&[2, 2], 3.0), Tensor::full(&[3], 2.0)],
+        ];
+        let mut log = CommLog::default();
+        let mean = all_reduce_mean_packed(&per_worker, &mut log);
+        assert_eq!(mean[0].shape(), &[2, 2]);
+        assert_eq!(mean[0].data(), &[2.0; 4]);
+        assert_eq!(mean[1].data(), &[1.0; 3]);
+        assert_eq!(log.bytes_sent(), 7 * 4);
+    }
+
+    #[test]
+    fn budget_matches_paper_and_caps() {
+        assert_eq!(sparsify_budget(512, 4608, 2), (512 + 4608) * 2);
+        assert_eq!(sparsify_budget(2, 2, 10), 4); // capped at n*m
+    }
+}

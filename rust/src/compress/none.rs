@@ -1,0 +1,68 @@
+//! Uncompressed baseline: plain all-reduce of the full gradient (the
+//! paper's "SGD" / "No compression" rows).
+
+use super::{Aggregated, Compressor, Locals};
+use crate::collectives::CommLog;
+use crate::grad::ParamRegistry;
+use crate::tensor::Tensor;
+
+/// Identity "compressor": full-precision all-reduce.
+#[derive(Debug, Default)]
+pub struct NoCompression;
+
+impl NoCompression {
+    pub fn new() -> NoCompression {
+        NoCompression
+    }
+}
+
+impl Compressor for NoCompression {
+    fn name(&self) -> String {
+        "No compression".into()
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn is_biased(&self) -> bool {
+        false
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let mean = super::all_reduce_mean_packed(updates, log);
+        // Identity compression: each worker's local reconstruction is its
+        // own update, so EF error stays exactly zero.
+        let locals = Locals::PerWorker(updates.to_vec());
+        Aggregated { mean, locals }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::ParamRegistry;
+
+    #[test]
+    fn aggregates_to_exact_mean_with_zero_error() {
+        let updates = vec![
+            vec![Tensor::full(&[2, 2], 2.0), Tensor::full(&[3], 1.0)],
+            vec![Tensor::full(&[2, 2], 4.0), Tensor::full(&[3], 3.0)],
+        ];
+        let mut c = NoCompression::new();
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        assert_eq!(agg.mean[0].data(), &[3.0; 4]);
+        assert_eq!(agg.mean[1].data(), &[2.0; 3]);
+        // local = own update -> error = update - local = 0
+        let local0 = agg.local_for(0);
+        assert_eq!(local0[0].data(), &[2.0; 4]);
+        let reg = ParamRegistry::from_shapes(&[("w", vec![2, 2]), ("b", vec![3])]);
+        assert_eq!(log.bytes_sent(), c.message_bytes(&reg));
+        assert_eq!(c.message_bytes(&reg), 7 * 4);
+    }
+}

@@ -1,0 +1,387 @@
+//! PowerSGD (Algorithm 1) and the best-approximation reference (App. G.7).
+
+use super::{
+    aggregate_vectors_uncompressed, all_reduce_mean_packed, split_kinds, Aggregated, Compressor,
+    Locals,
+};
+use crate::collectives::CommLog;
+use crate::grad::ParamRegistry;
+use crate::linalg::gram_schmidt_in_place;
+use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
+use crate::util::Rng;
+
+/// Rank-r PowerSGD compression (Algorithm 1).
+///
+/// One warm-started subspace-iteration step per optimization step:
+/// `P ← M·Q` → all-reduce-mean → `P̂ ← orthogonalize(P)` → `Q ← Mᵀ·P̂`
+/// → all-reduce-mean → reconstruct `P̂·Qᵀ`. Both matrix products are
+/// linear in `M`, so the all-reduce computes exactly the factorization of
+/// the *mean* gradient — the "linearity" property (§3, Lemma 3).
+pub struct PowerSgd {
+    rank: usize,
+    /// Reuse `Q` across steps (§4.2 warm start). When false, `Q` is
+    /// re-sampled i.i.d. normal every step ("without warm start").
+    warm_start: bool,
+    /// Per-matrix-parameter `Q ∈ R^{m×r}` state, lazily initialized.
+    qs: Vec<Option<Tensor>>,
+    rng: Rng,
+}
+
+impl PowerSgd {
+    pub fn new(rank: usize, seed: u64) -> PowerSgd {
+        assert!(rank >= 1, "rank must be >= 1");
+        PowerSgd { rank, warm_start: true, qs: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    /// Disable warm start (Table 2 ablation).
+    pub fn without_warm_start(mut self) -> PowerSgd {
+        self.warm_start = false;
+        self
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ensure_q(&mut self, slot: usize, m: usize) -> Tensor {
+        if self.qs.len() <= slot {
+            self.qs.resize(slot + 1, None);
+        }
+        let need_fresh = !self.warm_start || self.qs[slot].is_none();
+        if need_fresh {
+            let mut q = Tensor::zeros(&[m, self.rank]);
+            self.rng.fill_normal(q.data_mut(), 1.0);
+            self.qs[slot] = Some(q);
+        }
+        self.qs[slot].clone().unwrap()
+    }
+}
+
+impl Compressor for PowerSgd {
+    fn name(&self) -> String {
+        if self.warm_start {
+            format!("Rank {}", self.rank)
+        } else {
+            format!("Rank {} (no warm start)", self.rank)
+        }
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        assert!(w > 0);
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        // Matrix slots are fully overwritten by the reconstruction below;
+        // allocate empty placeholders instead of zeroed n×m buffers
+        // (perf pass: saves one full-gradient memset per step).
+        let mut mean: Vec<Tensor> = updates[0]
+            .iter()
+            .map(|t| if t.shape().len() >= 2 { Tensor::zeros(&[0]) } else { Tensor::zeros(t.shape()) })
+            .collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // --- Stage 1: P_w = M_w · Q for every matrix, packed all-reduce.
+        let qs: Vec<Tensor> = mat_idx
+            .iter()
+            .enumerate()
+            .map(|(slot, &p)| self.ensure_q(slot, updates[0][p].cols()))
+            .collect();
+        let per_worker_p: Vec<Vec<Tensor>> = updates
+            .iter()
+            .map(|wu| {
+                mat_idx
+                    .iter()
+                    .zip(qs.iter())
+                    .map(|(&p, q)| {
+                        let mut out = Tensor::zeros(&[wu[p].rows(), self.rank]);
+                        matmul_into(&wu[p], q, &mut out);
+                        out
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut p_mean = all_reduce_mean_packed(&per_worker_p, log);
+
+        // --- Orthogonalize (Gram–Schmidt; paper §3).
+        for p in p_mean.iter_mut() {
+            gram_schmidt_in_place(p);
+        }
+
+        // --- Stage 2: Q_w = M_wᵀ · P̂, packed all-reduce.
+        let per_worker_q: Vec<Vec<Tensor>> = updates
+            .iter()
+            .map(|wu| {
+                mat_idx
+                    .iter()
+                    .zip(p_mean.iter())
+                    .map(|(&p, phat)| {
+                        let mut out = Tensor::zeros(&[wu[p].cols(), self.rank]);
+                        matmul_tn_into(&wu[p], phat, &mut out);
+                        out
+                    })
+                    .collect()
+            })
+            .collect();
+        let q_mean = all_reduce_mean_packed(&per_worker_q, log);
+
+        // --- Reconstruct P̂·Qᵀ and persist warm-start state.
+        for ((slot, &p), (phat, qn)) in
+            mat_idx.iter().enumerate().zip(p_mean.iter().zip(q_mean.iter()))
+        {
+            let mut rec = Tensor::zeros(&[phat.rows(), qn.rows()]);
+            matmul_nt_into(phat, qn, &mut rec);
+            mean[p] = rec;
+            if self.warm_start {
+                self.qs[slot] = Some(qn.clone());
+            }
+        }
+
+        Aggregated { mean, locals: Locals::SharedAggregate }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_rank_r_bytes_uncapped(self.rank)
+    }
+}
+
+/// "Best rank-r approximation" reference compressor (Appendix G.7):
+/// `iters` full subspace iterations per step, fresh random start, no
+/// reuse. Used by Table 2 to upper-bound warm-started PowerSGD and by
+/// §4.2's cost argument (it is ~`2·iters`× the GEMM work).
+pub struct BestRankR {
+    rank: usize,
+    iters: usize,
+    rng: Rng,
+}
+
+impl BestRankR {
+    pub fn new(rank: usize, seed: u64) -> BestRankR {
+        // Paper: "4 steps of subspace iterations (8 matrix multiplications)
+        // is enough to converge to the best low-rank approximation".
+        BestRankR { rank, iters: 4, rng: Rng::new(seed) }
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> BestRankR {
+        assert!(iters >= 1);
+        self.iters = iters;
+        self
+    }
+}
+
+impl Compressor for BestRankR {
+    fn name(&self) -> String {
+        format!("Best rank {} ({} iters)", self.rank, self.iters)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // Fresh random Q per step.
+        let mut qs: Vec<Tensor> = mat_idx
+            .iter()
+            .map(|&p| {
+                let mut q = Tensor::zeros(&[updates[0][p].cols(), self.rank]);
+                self.rng.fill_normal(q.data_mut(), 1.0);
+                q
+            })
+            .collect();
+
+        let mut p_mean: Vec<Tensor> = Vec::new();
+        for _ in 0..self.iters {
+            let per_worker_p: Vec<Vec<Tensor>> = updates
+                .iter()
+                .map(|wu| {
+                    mat_idx
+                        .iter()
+                        .zip(qs.iter())
+                        .map(|(&p, q)| {
+                            let mut out = Tensor::zeros(&[wu[p].rows(), self.rank]);
+                            matmul_into(&wu[p], q, &mut out);
+                            out
+                        })
+                        .collect()
+                })
+                .collect();
+            p_mean = all_reduce_mean_packed(&per_worker_p, log);
+            for p in p_mean.iter_mut() {
+                gram_schmidt_in_place(p);
+            }
+            let per_worker_q: Vec<Vec<Tensor>> = updates
+                .iter()
+                .map(|wu| {
+                    mat_idx
+                        .iter()
+                        .zip(p_mean.iter())
+                        .map(|(&p, phat)| {
+                            let mut out = Tensor::zeros(&[wu[p].cols(), self.rank]);
+                            matmul_tn_into(&wu[p], phat, &mut out);
+                            out
+                        })
+                        .collect()
+                })
+                .collect();
+            qs = all_reduce_mean_packed(&per_worker_q, log);
+        }
+
+        for (&p, (phat, qn)) in mat_idx.iter().zip(p_mean.iter().zip(qs.iter())) {
+            let mut rec = Tensor::zeros(&[phat.rows(), qn.rows()]);
+            matmul_nt_into(phat, qn, &mut rec);
+            mean[p] = rec;
+        }
+        Aggregated { mean, locals: Locals::SharedAggregate }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // matrices pay per iteration; vectors are all-reduced once
+        let vec_bytes: u64 = registry
+            .specs
+            .iter()
+            .filter(|s| s.matrix_dims().is_none())
+            .map(|s| s.bytes())
+            .sum();
+        let mat_bytes = registry.total_rank_r_bytes_uncapped(self.rank) - vec_bytes;
+        mat_bytes * self.iters as u64 + vec_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::best_rank_r;
+
+    fn rand_updates(w: usize, shapes: &[&[usize]], seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let mut t = Tensor::zeros(s);
+                        rng.fill_normal(t.data_mut(), 1.0);
+                        t
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn mean_of(updates: &[Vec<Tensor>], p: usize) -> Tensor {
+        let mut m = Tensor::zeros(updates[0][p].shape());
+        for wu in updates {
+            m.axpy(1.0 / updates.len() as f32, &wu[p]);
+        }
+        m
+    }
+
+    #[test]
+    fn output_is_rank_r() {
+        let updates = rand_updates(2, &[&[12, 8]], 71);
+        let mut c = PowerSgd::new(2, 1);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        // Rank of the output ≈ 2: singular values beyond index 2 vanish.
+        let svd = crate::linalg::svd(&agg.mean[0]);
+        assert!(svd.s[2] < 1e-4 * svd.s[0].max(1e-9), "sv tail {:?}", &svd.s[..4]);
+    }
+
+    #[test]
+    fn single_vs_multi_worker_equivalence() {
+        // Lemma 3: compressing the per-worker updates and averaging equals
+        // compressing the average (with identical Q init).
+        let shapes: &[&[usize]] = &[&[10, 6], &[6]];
+        let updates = rand_updates(4, shapes, 72);
+        let mean_update = vec![mean_of(&updates, 0), mean_of(&updates, 1)];
+
+        let mut multi = PowerSgd::new(2, 9);
+        let mut single = PowerSgd::new(2, 9);
+        let mut log = CommLog::default();
+        let agg_multi = multi.compress_aggregate(&updates, &mut log);
+        let agg_single = single.compress_aggregate(&[mean_update], &mut log);
+        for (a, b) in agg_multi.mean.iter().zip(agg_single.mean.iter()) {
+            assert!(a.allclose(b, 1e-3, 1e-4), "max diff {}", a.max_abs_diff(b));
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_to_best_rank_r() {
+        // Theorem I: repeated warm-started steps on a FIXED matrix recover
+        // the best rank-r approximation.
+        let updates = rand_updates(1, &[&[16, 10]], 73);
+        let m = &updates[0][0];
+        let mut c = PowerSgd::new(2, 5);
+        let mut log = CommLog::default();
+        let mut last = Tensor::zeros(&[16, 10]);
+        for _ in 0..50 {
+            last = c.compress_aggregate(&updates, &mut log).mean[0].clone();
+        }
+        let best = best_rank_r(m, 2);
+        let err_power = m.sub(&last).norm();
+        let err_best = m.sub(&best).norm();
+        assert!(
+            (err_power - err_best).abs() / err_best.max(1e-9) < 0.02,
+            "power {err_power} vs best {err_best}"
+        );
+    }
+
+    #[test]
+    fn cold_start_single_step_is_worse_than_warm() {
+        let updates = rand_updates(1, &[&[32, 20]], 74);
+        let m = &updates[0][0];
+        let mut warm = PowerSgd::new(1, 6);
+        let mut cold = PowerSgd::new(1, 6).without_warm_start();
+        let mut log = CommLog::default();
+        let mut warm_err = 0.0;
+        let mut cold_err = 0.0;
+        for _ in 0..20 {
+            warm_err = m.sub(&warm.compress_aggregate(&updates, &mut log).mean[0]).norm();
+            cold_err = m.sub(&cold.compress_aggregate(&updates, &mut log).mean[0]).norm();
+        }
+        assert!(
+            warm_err < cold_err,
+            "warm {warm_err} should beat cold {cold_err} on a fixed matrix"
+        );
+    }
+
+    #[test]
+    fn vectors_pass_through_uncompressed() {
+        let updates = rand_updates(3, &[&[4, 4], &[5]], 75);
+        let mut c = PowerSgd::new(1, 2);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        let expect = mean_of(&updates, 1);
+        assert!(agg.mean[1].allclose(&expect, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn byte_accounting_matches_closed_form() {
+        use crate::grad::ParamRegistry;
+        let reg = ParamRegistry::from_shapes(&[("w", vec![16, 10]), ("b", vec![5])]);
+        let updates = rand_updates(2, &[&[16, 10], &[5]], 76);
+        let mut c = PowerSgd::new(2, 3);
+        let mut log = CommLog::default();
+        c.compress_aggregate(&updates, &mut log);
+        assert_eq!(log.bytes_sent(), c.message_bytes(&reg));
+    }
+
+    #[test]
+    fn best_rank_r_compressor_tracks_svd() {
+        let updates = rand_updates(1, &[&[14, 9]], 77);
+        let m = &updates[0][0];
+        let mut c = BestRankR::new(2, 8);
+        let mut log = CommLog::default();
+        let out = c.compress_aggregate(&updates, &mut log).mean[0].clone();
+        let best = best_rank_r(m, 2);
+        let err_c = m.sub(&out).norm();
+        let err_b = m.sub(&best).norm();
+        assert!((err_c - err_b).abs() / err_b < 0.05, "{err_c} vs {err_b}");
+    }
+}

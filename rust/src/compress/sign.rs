@@ -1,0 +1,316 @@
+//! Sign-based compressors (Appendix G.3, G.5).
+//!
+//! Both transmit one bit per coordinate, packed into bytes exactly like
+//! the C++ bit-packing extension the paper uses — the byte accounting is
+//! `⌈nm/8⌉` per matrix. Neither is linear, so aggregation uses
+//! all-gather and decode cost scales with W (Table 5's hatched bars).
+
+use super::{aggregate_vectors_uncompressed, split_kinds, Aggregated, Compressor, Locals};
+use crate::collectives::{all_gather_bytes, CommLog};
+use crate::grad::{CompressKind, ParamRegistry};
+use crate::tensor::Tensor;
+
+/// Pack the sign bits of `data` (1 = non-negative) into bytes.
+pub(crate) fn pack_signs(data: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; data.len().div_ceil(8)];
+    for (i, &v) in data.iter().enumerate() {
+        if v >= 0.0 {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Unpack sign bits back to ±1.0 values.
+pub(crate) fn unpack_signs(bytes: &[u8], n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| if bytes[i / 8] >> (i % 8) & 1 == 1 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Sign + L1-norm compression (Algorithm 5), the EF-SGD-compatible
+/// sign scheme: transmit `sign(M)` and `ℓ = ‖M‖₁`; decompress
+/// `(ℓ / nm) · sign(M)`, aggregated by averaging over workers.
+pub struct SignNorm;
+
+impl SignNorm {
+    pub fn new() -> SignNorm {
+        SignNorm
+    }
+}
+
+impl Default for SignNorm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for SignNorm {
+    fn name(&self) -> String {
+        "Sign+Norm".into()
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        false
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // Message: per matrix, 4-byte scale then packed sign bits.
+        let messages: Vec<Vec<u8>> = updates
+            .iter()
+            .map(|wu| {
+                let mut msg = Vec::new();
+                for &p in &mat_idx {
+                    let nm = wu[p].len() as f64;
+                    let scale = (wu[p].norm_l1() / nm) as f32;
+                    msg.extend_from_slice(&scale.to_le_bytes());
+                    msg.extend_from_slice(&pack_signs(wu[p].data()));
+                }
+                msg
+            })
+            .collect();
+        let gathered = all_gather_bytes(&messages, log);
+        let received = &gathered[0];
+
+        let mut locals: Vec<Vec<Tensor>> = (0..w)
+            .map(|wi| {
+                let mut lt: Vec<Tensor> =
+                    updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+                for &p in &vec_idx {
+                    lt[p] = updates[wi][p].clone();
+                }
+                lt
+            })
+            .collect();
+        for (wi, msg) in received.iter().enumerate() {
+            let mut cursor = 0;
+            for &p in &mat_idx {
+                let n = updates[0][p].len();
+                let scale = f32::from_le_bytes(msg[cursor..cursor + 4].try_into().unwrap());
+                cursor += 4;
+                let nbytes = n.div_ceil(8);
+                let signs = unpack_signs(&msg[cursor..cursor + nbytes], n);
+                cursor += nbytes;
+                for (i, s) in signs.iter().enumerate() {
+                    let v = scale * s;
+                    mean[p].data_mut()[i] += v / w as f32;
+                    locals[wi][p].data_mut()[i] = v;
+                }
+            }
+        }
+        Aggregated { mean, locals: Locals::PerWorker(locals) }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => 4 + ((rows * cols).div_ceil(8)) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+/// Signum compression (Algorithm 7, Bernstein et al. 2019): transmit
+/// `sign(M)`, aggregate by **majority vote**, run WITHOUT error feedback
+/// (the caller pairs it with sign-of-momentum Signum updates).
+pub struct Signum;
+
+impl Signum {
+    pub fn new() -> Signum {
+        Signum
+    }
+}
+
+impl Default for Signum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for Signum {
+    fn name(&self) -> String {
+        "Signum".into()
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        false
+    }
+
+    fn is_biased(&self) -> bool {
+        // Biased, but the Signum optimizer uses it without EF by design.
+        true
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        let messages: Vec<Vec<u8>> = updates
+            .iter()
+            .map(|wu| {
+                let mut msg = Vec::new();
+                for &p in &mat_idx {
+                    msg.extend_from_slice(&pack_signs(wu[p].data()));
+                }
+                msg
+            })
+            .collect();
+        let gathered = all_gather_bytes(&messages, log);
+        let received = &gathered[0];
+
+        let mut locals: Vec<Vec<Tensor>> = (0..w)
+            .map(|wi| {
+                let mut lt: Vec<Tensor> =
+                    updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+                for &p in &vec_idx {
+                    lt[p] = updates[wi][p].clone();
+                }
+                lt
+            })
+            .collect();
+        // Majority vote: sign(sum of signs).
+        for &p in &mat_idx {
+            let n = updates[0][p].len();
+            let mut votes = vec![0.0f32; n];
+            let mut cursor = 0;
+            // locate this matrix's bits within each message
+            for &q in &mat_idx {
+                if q == p {
+                    break;
+                }
+                cursor += updates[0][q].len().div_ceil(8);
+            }
+            for (wi, msg) in received.iter().enumerate() {
+                let signs = unpack_signs(&msg[cursor..cursor + n.div_ceil(8)], n);
+                for (i, s) in signs.iter().enumerate() {
+                    votes[i] += s;
+                }
+                for (i, s) in signs.iter().enumerate() {
+                    locals[wi][p].data_mut()[i] = *s;
+                }
+            }
+            for (i, v) in votes.iter().enumerate() {
+                mean[p].data_mut()[i] = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        Aggregated { mean, locals: Locals::PerWorker(locals) }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => ((rows * cols).div_ceil(8)) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sign_pack_roundtrip() {
+        let data = [1.0f32, -2.0, 0.0, -0.5, 3.0, -1.0, -1.0, 2.0, 5.0];
+        let packed = pack_signs(&data);
+        assert_eq!(packed.len(), 2);
+        let signs = unpack_signs(&packed, data.len());
+        for (v, s) in data.iter().zip(signs.iter()) {
+            assert_eq!(*s, if *v >= 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    fn rand_updates(w: usize, shape: &[usize], seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| {
+                let mut t = Tensor::zeros(shape);
+                rng.fill_normal(t.data_mut(), 1.0);
+                vec![t]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sign_norm_scale_is_mean_abs() {
+        let updates = rand_updates(1, &[6, 6], 101);
+        let mut c = SignNorm::new();
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        let m = &updates[0][0];
+        let scale = (m.norm_l1() / m.len() as f64) as f32;
+        for (o, v) in agg.mean[0].data().iter().zip(m.data().iter()) {
+            let want = scale * v.signum().max(-1.0); // signum(0)=0 edge irrelevant here
+            assert!((o - want).abs() < 1e-5, "{o} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sign_norm_multiworker_averages() {
+        let updates = vec![
+            vec![Tensor::full(&[2, 2], 1.0)],
+            vec![Tensor::full(&[2, 2], -3.0)],
+        ];
+        let mut c = SignNorm::new();
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        // worker0: scale 1, signs +; worker1: scale 3, signs −
+        // mean = (1·1 + 3·(−1))/2 = −1
+        for v in agg.mean[0].data() {
+            assert!((v + 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn signum_majority_vote() {
+        let updates = vec![
+            vec![Tensor::from_vec(&[1, 3], vec![1.0, -1.0, 1.0])],
+            vec![Tensor::from_vec(&[1, 3], vec![1.0, -1.0, -1.0])],
+            vec![Tensor::from_vec(&[1, 3], vec![-1.0, -1.0, -1.0])],
+        ];
+        let mut c = Signum::new();
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        assert_eq!(agg.mean[0].data(), &[1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn byte_accounting_one_bit_per_coord() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![16, 16]), ("b", vec![4])]);
+        // 256 bits = 32 bytes + 4 scale + 16 bias bytes
+        assert_eq!(SignNorm::new().message_bytes(&reg), 32 + 4 + 16);
+        assert_eq!(Signum::new().message_bytes(&reg), 32 + 16);
+        let updates = rand_updates(2, &[16, 16], 102);
+        let updates: Vec<Vec<Tensor>> = updates
+            .into_iter()
+            .map(|mut wu| {
+                wu.push(Tensor::zeros(&[4]));
+                wu
+            })
+            .collect();
+        let mut log = CommLog::default();
+        let mut c = SignNorm::new();
+        c.compress_aggregate(&updates, &mut log);
+        assert_eq!(log.bytes_sent(), c.message_bytes(&reg));
+    }
+
+    #[test]
+    fn gather_not_reduce() {
+        assert!(!SignNorm::new().supports_all_reduce());
+        assert!(!Signum::new().supports_all_reduce());
+    }
+}

@@ -1,0 +1,464 @@
+//! Sparsification compressors (Appendix G.1, G.2, G.4): Random Block,
+//! Random K and Top K, each budgeted at `(n+m)·r` values per matrix "to
+//! match rank-r PowerSGD".
+
+use super::{
+    aggregate_vectors_uncompressed, sparsify_budget, split_kinds, Aggregated, Compressor, Locals,
+};
+use crate::collectives::{all_gather, all_reduce_mean, CommLog};
+use crate::grad::{CompressKind, ParamRegistry};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Random Block compression (Algorithm 3): a contiguous slice of the
+/// flattened matrix, start index shared across workers (same seed), so
+/// the blocks align and aggregate with all-reduce. The slice wraps
+/// around the end of the buffer so every coordinate has equal coverage
+/// probability — without wraparound, edge coordinates are visited
+/// O(b/nm) as often, their error-feedback memory accumulates for
+/// hundreds of steps, and the eventual replay destabilizes training.
+pub struct RandomBlock {
+    rank_equiv: usize,
+    rng: Rng,
+}
+
+impl RandomBlock {
+    pub fn new(rank_equiv: usize, seed: u64) -> RandomBlock {
+        RandomBlock { rank_equiv, rng: Rng::new(seed) }
+    }
+}
+
+impl Compressor for RandomBlock {
+    fn name(&self) -> String {
+        format!("Random Block (r={})", self.rank_equiv)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // Shared (cyclic) block positions per matrix.
+        let blocks: Vec<(usize, usize)> = mat_idx
+            .iter()
+            .map(|&p| {
+                let (n, m) = (updates[0][p].rows(), updates[0][p].cols());
+                let numel = n * m;
+                let b = sparsify_budget(n, m, self.rank_equiv);
+                let s = if numel > b { self.rng.below(numel as u64) as usize } else { 0 };
+                (s, b)
+            })
+            .collect();
+
+        // Pack each worker's (wrapping) slices, all-reduce, scatter back.
+        let mut buffers: Vec<Vec<f32>> = updates
+            .iter()
+            .map(|wu| {
+                let mut buf = Vec::new();
+                for (&p, &(s, b)) in mat_idx.iter().zip(blocks.iter()) {
+                    let d = wu[p].data();
+                    for k in 0..b {
+                        buf.push(d[(s + k) % d.len()]);
+                    }
+                }
+                buf
+            })
+            .collect();
+        // Per-worker locals: own slice scattered into zeros.
+        let locals: Vec<Vec<Tensor>> = (0..w)
+            .map(|wi| {
+                let mut lt: Vec<Tensor> =
+                    updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+                for &p in &vec_idx {
+                    // identity compression on vectors: zero error
+                    lt[p] = updates[wi][p].clone();
+                }
+                let mut off = 0;
+                for (&p, &(s, b)) in mat_idx.iter().zip(blocks.iter()) {
+                    let d = lt[p].data_mut();
+                    let len = d.len();
+                    for k in 0..b {
+                        d[(s + k) % len] = buffers[wi][off + k];
+                    }
+                    off += b;
+                }
+                lt
+            })
+            .collect();
+        all_reduce_mean(&mut buffers, log);
+        let mut off = 0;
+        for (&p, &(s, b)) in mat_idx.iter().zip(blocks.iter()) {
+            let d = mean[p].data_mut();
+            let len = d.len();
+            for k in 0..b {
+                d[(s + k) % len] = buffers[0][off + k];
+            }
+            off += b;
+        }
+        Aggregated { mean, locals: Locals::PerWorker(locals) }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        sparsified_bytes(registry, self.rank_equiv, 4)
+    }
+}
+
+/// Random K compression (Algorithm 4): `(n+m)·r` random coordinates,
+/// sampled without replacement with a seed shared across workers
+/// (all-reduce capable). The paper notes the random-access overhead makes
+/// it slow on GPU despite the same byte budget.
+pub struct RandomK {
+    rank_equiv: usize,
+    rng: Rng,
+}
+
+impl RandomK {
+    pub fn new(rank_equiv: usize, seed: u64) -> RandomK {
+        RandomK { rank_equiv, rng: Rng::new(seed) }
+    }
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> String {
+        format!("Random K (r={})", self.rank_equiv)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        let index_sets: Vec<Vec<usize>> = mat_idx
+            .iter()
+            .map(|&p| {
+                let (n, m) = (updates[0][p].rows(), updates[0][p].cols());
+                let k = sparsify_budget(n, m, self.rank_equiv);
+                self.rng.sample_indices(n * m, k)
+            })
+            .collect();
+
+        let mut buffers: Vec<Vec<f32>> = updates
+            .iter()
+            .map(|wu| {
+                let mut buf = Vec::new();
+                for (&p, idx) in mat_idx.iter().zip(index_sets.iter()) {
+                    let d = wu[p].data();
+                    buf.extend(idx.iter().map(|&i| d[i]));
+                }
+                buf
+            })
+            .collect();
+        let locals: Vec<Vec<Tensor>> = (0..w)
+            .map(|wi| {
+                let mut lt: Vec<Tensor> =
+                    updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+                for &p in &vec_idx {
+                    lt[p] = updates[wi][p].clone();
+                }
+                let mut off = 0;
+                for (&p, idx) in mat_idx.iter().zip(index_sets.iter()) {
+                    let d = lt[p].data_mut();
+                    for &i in idx {
+                        d[i] = buffers[wi][off];
+                        off += 1;
+                    }
+                }
+                lt
+            })
+            .collect();
+        all_reduce_mean(&mut buffers, log);
+        let mut off = 0;
+        for (&p, idx) in mat_idx.iter().zip(index_sets.iter()) {
+            let d = mean[p].data_mut();
+            for &i in idx {
+                d[i] = buffers[0][off];
+                off += 1;
+            }
+        }
+        Aggregated { mean, locals: Locals::PerWorker(locals) }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // values only: indices are derived from the shared seed
+        sparsified_bytes(registry, self.rank_equiv, 4)
+    }
+}
+
+/// Top K compression (Algorithm 6): each worker's own largest-|value|
+/// coordinates. Indices differ per worker, so aggregation needs
+/// all-gather (values + indices transmitted), and decode cost scales
+/// with W.
+pub struct TopK {
+    rank_equiv: usize,
+}
+
+impl TopK {
+    pub fn new(rank_equiv: usize) -> TopK {
+        TopK { rank_equiv }
+    }
+
+    /// Indices of the k largest-magnitude entries (unordered).
+    fn top_indices(data: &[f32], k: usize) -> Vec<usize> {
+        // Partial selection via binary-heap of (|v|, idx) — O(n log k).
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut heap: BinaryHeap<Reverse<(u32, usize)>> = BinaryHeap::with_capacity(k + 1);
+        for (i, &v) in data.iter().enumerate() {
+            // total order on f32 magnitude via bit tricks (all finite)
+            let key = v.abs().to_bits();
+            if heap.len() < k {
+                heap.push(Reverse((key, i)));
+            } else if let Some(&Reverse((min_key, _))) = heap.peek() {
+                if key > min_key {
+                    heap.pop();
+                    heap.push(Reverse((key, i)));
+                }
+            }
+        }
+        heap.into_iter().map(|Reverse((_, i))| i).collect()
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("Top K (r={})", self.rank_equiv)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        false
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // Each worker builds (indices, values) messages; encode both as
+        // f32 words in one buffer for the gather (index as bits).
+        let messages: Vec<Vec<f32>> = updates
+            .iter()
+            .map(|wu| {
+                let mut msg = Vec::new();
+                for &p in &mat_idx {
+                    let (n, m) = (wu[p].rows(), wu[p].cols());
+                    let k = sparsify_budget(n, m, self.rank_equiv);
+                    let idx = TopK::top_indices(wu[p].data(), k);
+                    for &i in &idx {
+                        msg.push(f32::from_bits(i as u32));
+                        msg.push(wu[p].data()[i]);
+                    }
+                }
+                msg
+            })
+            .collect();
+        let gathered = all_gather(&messages, log);
+
+        // Decode: every worker receives all W messages (we decode once and
+        // share the result — identical on all workers).
+        let received = &gathered[0];
+        let mut locals: Vec<Vec<Tensor>> = (0..w)
+            .map(|wi| {
+                let mut lt: Vec<Tensor> =
+                    updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+                for &p in &vec_idx {
+                    lt[p] = updates[wi][p].clone();
+                }
+                lt
+            })
+            .collect();
+        for (wi, msg) in received.iter().enumerate() {
+            let mut cursor = 0;
+            for &p in &mat_idx {
+                let (n, m) = (updates[0][p].rows(), updates[0][p].cols());
+                let k = sparsify_budget(n, m, self.rank_equiv);
+                for _ in 0..k {
+                    let i = msg[cursor].to_bits() as usize;
+                    let v = msg[cursor + 1];
+                    cursor += 2;
+                    mean[p].data_mut()[i] += v / w as f32;
+                    locals[wi][p].data_mut()[i] = v;
+                }
+            }
+        }
+        Aggregated { mean, locals: Locals::PerWorker(locals) }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // values + indices, 4 bytes each
+        sparsified_bytes(registry, self.rank_equiv, 8)
+    }
+}
+
+/// Shared byte formula: `budget × bytes_per_value` over matrices, plus
+/// uncompressed vectors.
+fn sparsified_bytes(registry: &ParamRegistry, rank_equiv: usize, bytes_per_value: u64) -> u64 {
+    registry
+        .specs
+        .iter()
+        .map(|s| match s.kind {
+            CompressKind::Matrix { rows, cols } => {
+                sparsify_budget(rows, cols, rank_equiv) as u64 * bytes_per_value
+            }
+            CompressKind::Vector { len } => (len * 4) as u64,
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_updates(w: usize, shape: &[usize], seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| {
+                let mut t = Tensor::zeros(shape);
+                rng.fill_normal(t.data_mut(), 1.0);
+                vec![t]
+            })
+            .collect()
+    }
+
+    fn mean_of(updates: &[Vec<Tensor>]) -> Tensor {
+        let mut m = Tensor::zeros(updates[0][0].shape());
+        for wu in updates {
+            m.axpy(1.0 / updates.len() as f32, &wu[0]);
+        }
+        m
+    }
+
+    #[test]
+    fn random_block_preserves_block_mean_and_zeros_elsewhere() {
+        let updates = rand_updates(3, &[8, 6], 91);
+        let mut c = RandomBlock::new(1, 92);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        let mean = mean_of(&updates);
+        let out = &agg.mean[0];
+        // Non-zero entries must match the true mean; count equals budget.
+        let budget = sparsify_budget(8, 6, 1);
+        let nz: Vec<usize> =
+            (0..48).filter(|&i| out.data()[i] != 0.0).collect();
+        assert!(nz.len() <= budget);
+        // contiguity of the (possibly wrapping) block: the complement of
+        // the nonzero set must also be contiguous modulo the length
+        if nz.len() > 1 && nz.len() < 48 {
+            let gaps = nz.windows(2).filter(|wd| wd[1] - wd[0] > 1).count();
+            assert!(gaps <= 1, "block not cyclic-contiguous: {nz:?}");
+        }
+        for &i in &nz {
+            assert!((out.data()[i] - mean.data()[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn random_k_hits_budget_and_matches_mean() {
+        let updates = rand_updates(2, &[10, 5], 93);
+        let mut c = RandomK::new(2, 94);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        let mean = mean_of(&updates);
+        let budget = sparsify_budget(10, 5, 2);
+        let nz = agg.mean[0].data().iter().filter(|&&v| v != 0.0).count();
+        assert!(nz <= budget && nz >= budget - 2, "nz={nz} budget={budget}");
+        for i in 0..50 {
+            let v = agg.mean[0].data()[i];
+            if v != 0.0 {
+                assert!((v - mean.data()[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_selects_largest() {
+        let mut t = Tensor::zeros(&[4, 4]);
+        t.set(1, 2, 10.0);
+        t.set(3, 3, -20.0);
+        t.set(0, 0, 0.5);
+        let idx = TopK::top_indices(t.data(), 2);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![6, 15]);
+    }
+
+    #[test]
+    fn top_k_aggregate_is_mean_of_worker_selections() {
+        let updates = rand_updates(2, &[6, 4], 95);
+        let mut c = TopK::new(1);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        // Every nonzero of the aggregate must be explainable as
+        // (sum of selecting workers' values) / W.
+        let w = 2.0f32;
+        for i in 0..24 {
+            let got = agg.mean[0].data()[i];
+            if got == 0.0 {
+                continue;
+            }
+            let mut expect = 0.0;
+            if let Locals::PerWorker(ref locals) = agg.locals {
+                for lw in locals {
+                    expect += lw[0].data()[i];
+                }
+            }
+            assert!((got - expect / w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn top_k_needs_gather() {
+        assert!(!TopK::new(1).supports_all_reduce());
+        assert!(RandomK::new(1, 0).supports_all_reduce());
+        assert!(RandomBlock::new(1, 0).supports_all_reduce());
+    }
+
+    #[test]
+    fn ef_error_identity_holds_per_worker() {
+        // update == local + (update - local): the error each worker keeps
+        // is exactly what its compression dropped.
+        let updates = rand_updates(3, &[5, 5], 96);
+        let mut c = RandomK::new(1, 97);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        if let Locals::PerWorker(ref locals) = agg.locals {
+            for (wu, lw) in updates.iter().zip(locals.iter()) {
+                let err = wu[0].sub(&lw[0]);
+                let recon = err.add(&lw[0]);
+                assert!(recon.allclose(&wu[0], 1e-6, 1e-6));
+            }
+        } else {
+            panic!("expected per-worker locals");
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![10, 5]), ("b", vec![3])]);
+        let b = sparsify_budget(10, 5, 2) as u64;
+        assert_eq!(RandomK::new(2, 0).message_bytes(&reg), b * 4 + 12);
+        assert_eq!(TopK::new(2).message_bytes(&reg), b * 8 + 12);
+        let updates = vec![
+            vec![Tensor::zeros(&[10, 5]), Tensor::zeros(&[3])],
+            vec![Tensor::zeros(&[10, 5]), Tensor::zeros(&[3])],
+        ];
+        let mut c = RandomK::new(2, 1);
+        let mut log = CommLog::default();
+        c.compress_aggregate(&updates, &mut log);
+        assert_eq!(log.bytes_sent(), c.message_bytes(&reg));
+        let mut c2 = TopK::new(2);
+        let mut log2 = CommLog::default();
+        c2.compress_aggregate(&updates, &mut log2);
+        assert_eq!(log2.bytes_sent(), c2.message_bytes(&reg));
+    }
+}

@@ -1,0 +1,154 @@
+//! Unbiased low-rank compression (§4.1): the natural unbiased counterpart
+//! of PowerSGD against which Table 1 compares.
+//!
+//! Sample a shared random `U ∈ R^{m×r}` with `E[U·Uᵀ] = I_m` (i.i.d.
+//! `N(0, 1/r)` entries) and transmit `M·U`; decompress `(M·U)·Uᵀ`. The
+//! scheme is linear (all-reduce capable) and unbiased, so the paper runs
+//! it *without* error feedback — which is exactly why it loses badly
+//! (71.2% vs 93.6% test accuracy at rank 1).
+
+use super::{aggregate_vectors_uncompressed, all_reduce_mean_packed, split_kinds, Aggregated, Compressor, Locals};
+use crate::collectives::CommLog;
+use crate::grad::{CompressKind, ParamRegistry};
+use crate::tensor::{matmul_into, matmul_nt_into, Tensor};
+use crate::util::Rng;
+
+/// Unbiased rank-r sketching compressor.
+pub struct UnbiasedRank {
+    rank: usize,
+    /// Shared across workers: all workers draw the same `U` each step
+    /// (same seed), so only `M·U` needs transmission.
+    rng: Rng,
+}
+
+impl UnbiasedRank {
+    pub fn new(rank: usize, seed: u64) -> UnbiasedRank {
+        assert!(rank >= 1);
+        UnbiasedRank { rank, rng: Rng::new(seed) }
+    }
+}
+
+impl Compressor for UnbiasedRank {
+    fn name(&self) -> String {
+        format!("Unbiased Rank {}", self.rank)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn is_biased(&self) -> bool {
+        false
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
+        aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
+
+        // Shared sketching matrices, E[U Uᵀ] = I  =>  entries N(0, 1/r).
+        let sigma = (1.0 / self.rank as f64).sqrt() as f32;
+        let us: Vec<Tensor> = mat_idx
+            .iter()
+            .map(|&p| {
+                let mut u = Tensor::zeros(&[updates[0][p].cols(), self.rank]);
+                self.rng.fill_normal(u.data_mut(), sigma);
+                u
+            })
+            .collect();
+
+        let per_worker_p: Vec<Vec<Tensor>> = updates
+            .iter()
+            .map(|wu| {
+                mat_idx
+                    .iter()
+                    .zip(us.iter())
+                    .map(|(&p, u)| {
+                        let mut out = Tensor::zeros(&[wu[p].rows(), self.rank]);
+                        matmul_into(&wu[p], u, &mut out);
+                        out
+                    })
+                    .collect()
+            })
+            .collect();
+        let p_mean = all_reduce_mean_packed(&per_worker_p, log);
+
+        for (&p, (pm, u)) in mat_idx.iter().zip(p_mean.iter().zip(us.iter())) {
+            let mut rec = Tensor::zeros(&[pm.rows(), u.rows()]);
+            matmul_nt_into(pm, u, &mut rec);
+            mean[p] = rec;
+        }
+        Aggregated { mean, locals: Locals::SharedAggregate }
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // Only M·U is transmitted (U is derived from the shared seed):
+        // n·r·4 per matrix — the reason Table 1 reports 3 MB for unbiased
+        // rank 1 vs 4 MB for PowerSGD rank 1.
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, .. } => (rows * self.rank * 4) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_updates(w: usize, shape: &[usize], seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| {
+                let mut t = Tensor::zeros(shape);
+                rng.fill_normal(t.data_mut(), 1.0);
+                vec![t]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // Averaging the reconstruction over many independent draws of U
+        // must converge to M itself.
+        let updates = rand_updates(1, &[6, 5], 81);
+        let m = &updates[0][0];
+        let mut c = UnbiasedRank::new(2, 82);
+        let mut log = CommLog::default();
+        let trials = 3000;
+        let mut acc = Tensor::zeros(&[6, 5]);
+        for _ in 0..trials {
+            let rec = c.compress_aggregate(&updates, &mut log).mean[0].clone();
+            acc.axpy(1.0 / trials as f32, &rec);
+        }
+        let rel = acc.sub(m).norm() / m.norm();
+        assert!(rel < 0.12, "bias too large: rel err {rel}");
+    }
+
+    #[test]
+    fn linear_and_variance_larger_than_powersgd_error() {
+        // Single draw: reconstruction error should be sizable (this is the
+        // point of Table 1 — the unbiased scheme is high-variance).
+        let updates = rand_updates(4, &[12, 10], 83);
+        let mut c = UnbiasedRank::new(1, 84);
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        assert!(matches!(agg.locals, Locals::SharedAggregate));
+        let mut mean = Tensor::zeros(&[12, 10]);
+        for wu in &updates {
+            mean.axpy(0.25, &wu[0]);
+        }
+        assert!(mean.sub(&agg.mean[0]).norm() > 0.1 * mean.norm());
+    }
+
+    #[test]
+    fn message_bytes_counts_only_p() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![12, 10]), ("b", vec![4])]);
+        let c = UnbiasedRank::new(2, 1);
+        assert_eq!(c.message_bytes(&reg), (12 * 2 * 4 + 4 * 4) as u64);
+    }
+}

@@ -1,0 +1,107 @@
+//! Checkpointing: save/restore trainer parameters (and nothing else —
+//! optimizer state is reconstructible and the paper's algorithms are
+//! robust to EF-memory resets, cf. §A).
+//!
+//! Format: a minimal self-describing binary —
+//! `PSGD1` magic, tensor count, then per tensor: name length/bytes,
+//! rank, dims (u64 LE), f32 LE data. No serde offline; 60 lines by hand.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 5] = b"PSGD1";
+
+/// Write named parameter tensors to `path`.
+pub fn save(path: impl AsRef<Path>, named: &[(String, &Tensor)]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(named.len() as u64).to_le_bytes())?;
+    for (name, t) in named {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u64).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // f32 LE payload
+        let mut buf = Vec::with_capacity(t.len() * 4);
+        for v in t.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut magic = [0u8; 5];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a PowerSGD checkpoint (bad magic)");
+    }
+    let count = read_u64(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u64(&mut f)? as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("checkpoint name not utf8")?;
+        let rank = read_u64(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut buf = vec![0u8; numel * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.push((name, Tensor::from_vec(&shape, data)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(61);
+        let mut a = Tensor::zeros(&[7, 5]);
+        rng.fill_normal(a.data_mut(), 1.0);
+        let b = Tensor::from_vec(&[3], vec![1.0, -2.0, 3.5]);
+        let dir = std::env::temp_dir().join("powersgd_ckpt_test.bin");
+        save(&dir, &[("w".to_string(), &a), ("b".to_string(), &b)]).unwrap();
+        let loaded = load(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "w");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("powersgd_ckpt_bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

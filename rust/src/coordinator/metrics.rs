@@ -1,0 +1,126 @@
+//! Training metrics: per-step time breakdown, communication volume,
+//! loss/accuracy history — the inputs to the paper-style tables and the
+//! convergence curves (Figures 4/5).
+
+use crate::util::stats;
+
+/// One training step's record.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    /// Measured per-worker gradient computation time (fwd+bwd), seconds.
+    pub grad_s: f64,
+    /// Measured compression + aggregation + decompression time, seconds.
+    pub compress_s: f64,
+    /// Per-worker bytes transmitted this step.
+    pub bytes: u64,
+    /// Simulated network time on the configured backend, seconds.
+    pub sim_comm_s: f64,
+    pub lr: f64,
+}
+
+/// Accumulated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub steps: Vec<StepRecord>,
+    /// (step, eval metric) pairs; meaning depends on the task
+    /// (accuracy for classification, perplexity for LM).
+    pub evals: Vec<(usize, f64)>,
+}
+
+impl Metrics {
+    pub fn record(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn record_eval(&mut self, step: usize, value: f64) {
+        self.evals.push((step, value));
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn mean_loss_last(&self, n: usize) -> f64 {
+        let tail: Vec<f64> =
+            self.steps.iter().rev().take(n).map(|s| s.loss).collect();
+        stats::mean(&tail)
+    }
+
+    pub fn last_eval(&self) -> Option<f64> {
+        self.evals.last().map(|&(_, v)| v)
+    }
+
+    pub fn best_eval(&self, higher_is_better: bool) -> Option<f64> {
+        let vals: Vec<f64> = self.evals.iter().map(|&(_, v)| v).collect();
+        if vals.is_empty() {
+            return None;
+        }
+        Some(if higher_is_better { stats::max(&vals) } else { stats::min(&vals) })
+    }
+
+    /// Mean measured per-step times (grad, compress) in seconds.
+    pub fn mean_times(&self) -> (f64, f64) {
+        let g: Vec<f64> = self.steps.iter().map(|s| s.grad_s).collect();
+        let c: Vec<f64> = self.steps.iter().map(|s| s.compress_s).collect();
+        (stats::mean(&g), stats::mean(&c))
+    }
+
+    /// Mean simulated communication time per step, seconds.
+    pub fn mean_sim_comm(&self) -> f64 {
+        let c: Vec<f64> = self.steps.iter().map(|s| s.sim_comm_s).collect();
+        stats::mean(&c)
+    }
+
+    /// Render the loss curve as step/loss CSV (for EXPERIMENTS.md).
+    pub fn loss_curve_csv(&self, every: usize) -> String {
+        let mut out = String::from("step,loss\n");
+        for r in self.steps.iter().filter(|r| r.step % every == 0) {
+            out.push_str(&format!("{},{:.5}\n", r.step, r.loss));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> StepRecord {
+        StepRecord { step, loss, grad_s: 0.01, compress_s: 0.002, bytes: 100, sim_comm_s: 0.001, lr: 0.1 }
+    }
+
+    #[test]
+    fn accumulates() {
+        let mut m = Metrics::default();
+        m.record(rec(0, 2.0));
+        m.record(rec(1, 1.0));
+        assert_eq!(m.total_bytes(), 200);
+        assert!((m.mean_loss_last(2) - 1.5).abs() < 1e-12);
+        assert!((m.mean_loss_last(1) - 1.0).abs() < 1e-12);
+        let (g, c) = m.mean_times();
+        assert!((g - 0.01).abs() < 1e-12 && (c - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evals_and_best() {
+        let mut m = Metrics::default();
+        m.record_eval(10, 0.7);
+        m.record_eval(20, 0.9);
+        m.record_eval(30, 0.85);
+        assert_eq!(m.last_eval(), Some(0.85));
+        assert_eq!(m.best_eval(true), Some(0.9));
+        assert_eq!(m.best_eval(false), Some(0.7));
+    }
+
+    #[test]
+    fn csv_subsamples() {
+        let mut m = Metrics::default();
+        for s in 0..10 {
+            m.record(rec(s, s as f64));
+        }
+        let csv = m.loss_curve_csv(5);
+        assert_eq!(csv.lines().count(), 3); // header + steps 0,5
+    }
+}

@@ -1,0 +1,329 @@
+//! Synthetic dataset substrates (DESIGN.md §6).
+//!
+//! The offline environment has no CIFAR10 / WikiText; these generators
+//! produce deterministic workloads that exercise the same optimization
+//! dynamics:
+//!
+//! - [`Classification`] — K-class Gaussian-mixture images. Each class
+//!   owns a few random prototypes; samples are prototype + noise. The
+//!   classes overlap, so models must actually learn boundaries and
+//!   compressor quality separates test accuracy (Tables 1/2/4/6).
+//! - [`LmCorpus`] — Zipf-distributed tokens with Markov bigram structure,
+//!   a proxy for WikiText: perplexity is meaningful and embedding-heavy
+//!   models stress the communication path (Table 7 / Appendix D).
+//!
+//! Sharding: worker `w` of `W` draws disjoint sample streams (split RNG),
+//! matching the paper's i.i.d. data-parallel setting.
+
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A per-worker batch supplier.
+pub trait DataSource: Send {
+    /// Next training batch for `worker` (advances that worker's stream).
+    fn next_batch(&mut self, worker: usize) -> Vec<Value>;
+    /// A fixed held-out evaluation batch (same for all callers).
+    fn eval_batch(&mut self) -> Vec<Value>;
+}
+
+/// K-class Gaussian-mixture classification task.
+pub struct Classification {
+    pub dim: usize,
+    pub classes: usize,
+    pub batch_per_worker: usize,
+    prototypes: Vec<Vec<f32>>, // classes × protos_per_class flattened
+    protos_per_class: usize,
+    noise: f32,
+    worker_rngs: Vec<Rng>,
+    eval_rng: Rng,
+    eval_cache: Option<Vec<Value>>,
+    eval_batch_size: usize,
+}
+
+impl Classification {
+    pub fn new(
+        dim: usize,
+        classes: usize,
+        batch_per_worker: usize,
+        workers: usize,
+        seed: u64,
+    ) -> Classification {
+        let mut root = Rng::new(seed);
+        let protos_per_class = 3;
+        // Prototypes drawn on a sphere of radius ~1.4 so classes overlap
+        // under unit noise but are separable by a trained model.
+        let mut prototypes = Vec::with_capacity(classes * protos_per_class);
+        for _ in 0..classes * protos_per_class {
+            let mut p = vec![0.0f32; dim];
+            root.fill_normal(&mut p, 1.0);
+            // Cyclic box blur: gives prototypes the low-frequency spatial
+            // structure natural images have, so convolutional models can
+            // average noise over neighbourhoods (white noise stays white).
+            let blur = 9usize.min(dim);
+            let mut smooth = vec![0.0f32; dim];
+            for i in 0..dim {
+                let mut acc = 0.0;
+                for k in 0..blur {
+                    acc += p[(i + k) % dim];
+                }
+                smooth[i] = acc / blur as f32;
+            }
+            let mut p = smooth;
+            let norm = p.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            // Per-coordinate prototype scale ~ 0.55 (vs noise sigma 0.9):
+            // overlapping but separable clusters.
+            let scale = 0.55 * (dim as f32).sqrt() / norm;
+            for v in p.iter_mut() {
+                *v *= scale;
+            }
+            prototypes.push(p);
+        }
+        let worker_rngs = (0..workers).map(|w| root.split(w as u64 + 1)).collect();
+        let eval_rng = root.split(0xEEE);
+        Classification {
+            dim,
+            classes,
+            batch_per_worker,
+            prototypes,
+            protos_per_class,
+            noise: 0.9,
+            worker_rngs,
+            eval_rng,
+            eval_cache: None,
+            eval_batch_size: 256,
+        }
+    }
+
+    fn sample_into(&self, rng: &mut Rng, x: &mut [f32], y: &mut [i32], n: usize, dim: usize) {
+        for i in 0..n {
+            let class = rng.below(self.classes as u64) as usize;
+            let proto_ix =
+                class * self.protos_per_class + rng.below(self.protos_per_class as u64) as usize;
+            let proto = &self.prototypes[proto_ix];
+            for d in 0..dim {
+                x[i * dim + d] = proto[d] + rng.normal() as f32 * self.noise;
+            }
+            y[i] = class as i32;
+        }
+    }
+}
+
+impl DataSource for Classification {
+    fn next_batch(&mut self, worker: usize) -> Vec<Value> {
+        let (n, dim) = (self.batch_per_worker, self.dim);
+        let mut x = vec![0.0f32; n * dim];
+        let mut y = vec![0i32; n];
+        let mut rng = self.worker_rngs[worker].clone();
+        self.sample_into(&mut rng, &mut x, &mut y, n, dim);
+        self.worker_rngs[worker] = rng;
+        vec![
+            Value::F32(Tensor::from_vec(&[n, dim], x)),
+            Value::I32(vec![n], y),
+        ]
+    }
+
+    fn eval_batch(&mut self) -> Vec<Value> {
+        if self.eval_cache.is_none() {
+            let (n, dim) = (self.eval_batch_size, self.dim);
+            let mut x = vec![0.0f32; n * dim];
+            let mut y = vec![0i32; n];
+            let mut rng = self.eval_rng.clone();
+            self.sample_into(&mut rng, &mut x, &mut y, n, dim);
+            self.eval_cache = Some(vec![
+                Value::F32(Tensor::from_vec(&[n, dim], x)),
+                Value::I32(vec![n], y),
+            ]);
+        }
+        self.eval_cache.clone().unwrap()
+    }
+}
+
+/// Zipf + Markov-bigram synthetic language corpus.
+pub struct LmCorpus {
+    pub vocab: usize,
+    pub batch_per_worker: usize,
+    pub seq_len: usize,
+    /// Per-token successor tables: `succ[t]` lists plausible next tokens.
+    succ: Vec<Vec<u32>>,
+    /// Zipf sampling table (token ids, heavy head).
+    zipf_weights: Vec<f64>,
+    worker_rngs: Vec<Rng>,
+    eval_rng: Rng,
+    eval_cache: Option<Vec<Value>>,
+    eval_batch_size: usize,
+}
+
+impl LmCorpus {
+    pub fn new(
+        vocab: usize,
+        batch_per_worker: usize,
+        seq_len: usize,
+        workers: usize,
+        seed: u64,
+    ) -> LmCorpus {
+        let mut root = Rng::new(seed ^ 0x11A0);
+        // Zipf(1.1) unigram weights.
+        let zipf_weights: Vec<f64> = (1..=vocab).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+        // Bigram structure: each token has 8 preferred successors; with
+        // prob 0.75 the next token comes from the successor table, else
+        // from the unigram Zipf. Gives the corpus learnable structure
+        // (perplexity well below vocab size for a trained model).
+        let branch = 8;
+        let succ: Vec<Vec<u32>> = (0..vocab)
+            .map(|_| {
+                (0..branch)
+                    .map(|_| root.weighted_index(&zipf_weights) as u32)
+                    .collect()
+            })
+            .collect();
+        let worker_rngs = (0..workers).map(|w| root.split(w as u64 + 101)).collect();
+        let eval_rng = root.split(0xFFF);
+        LmCorpus {
+            vocab,
+            batch_per_worker,
+            seq_len,
+            succ,
+            zipf_weights,
+            worker_rngs,
+            eval_rng,
+            eval_cache: None,
+            eval_batch_size: 16,
+        }
+    }
+
+    fn gen_tokens(&self, rng: &mut Rng, count: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(count);
+        let mut cur = rng.weighted_index(&self.zipf_weights) as u32;
+        out.push(cur as i32);
+        for _ in 1..count {
+            cur = if rng.uniform() < 0.75 {
+                let s = &self.succ[cur as usize];
+                s[rng.below(s.len() as u64) as usize]
+            } else {
+                rng.weighted_index(&self.zipf_weights) as u32
+            };
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    fn make_batch(&self, rng: &mut Rng, batch: usize) -> Vec<Value> {
+        let t = self.seq_len;
+        let mut inputs = Vec::with_capacity(batch * t);
+        let mut targets = Vec::with_capacity(batch * t);
+        for _ in 0..batch {
+            let toks = self.gen_tokens(rng, t + 1);
+            inputs.extend_from_slice(&toks[..t]);
+            targets.extend_from_slice(&toks[1..]);
+        }
+        vec![
+            Value::I32(vec![batch, t], inputs),
+            Value::I32(vec![batch, t], targets),
+        ]
+    }
+}
+
+impl DataSource for LmCorpus {
+    fn next_batch(&mut self, worker: usize) -> Vec<Value> {
+        let mut rng = self.worker_rngs[worker].clone();
+        let b = self.make_batch(&mut rng, self.batch_per_worker);
+        self.worker_rngs[worker] = rng;
+        b
+    }
+
+    fn eval_batch(&mut self) -> Vec<Value> {
+        if self.eval_cache.is_none() {
+            let mut rng = self.eval_rng.clone();
+            self.eval_cache = Some(self.make_batch(&mut rng, self.eval_batch_size));
+        }
+        self.eval_cache.clone().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_shapes_and_labels() {
+        let mut d = Classification::new(16, 4, 8, 2, 1);
+        let b = d.next_batch(0);
+        assert_eq!(b[0].shape(), &[8, 16]);
+        assert_eq!(b[1].shape(), &[8]);
+        if let Value::I32(_, y) = &b[1] {
+            assert!(y.iter().all(|&c| (0..4).contains(&c)));
+        } else {
+            panic!("labels must be i32");
+        }
+    }
+
+    #[test]
+    fn workers_get_different_streams() {
+        let mut d = Classification::new(8, 3, 4, 2, 2);
+        let b0 = d.next_batch(0);
+        let b1 = d.next_batch(1);
+        if let (Value::F32(x0), Value::F32(x1)) = (&b0[0], &b1[0]) {
+            assert!(x0.max_abs_diff(x1) > 1e-3);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn streams_are_deterministic_per_seed() {
+        let batch = |seed| {
+            let mut d = Classification::new(8, 3, 4, 1, seed);
+            match &d.next_batch(0)[0] {
+                Value::F32(t) => t.clone(),
+                _ => panic!(),
+            }
+        };
+        assert_eq!(batch(7), batch(7));
+        assert!(batch(7).max_abs_diff(&batch(8)) > 1e-3);
+    }
+
+    #[test]
+    fn eval_batch_is_fixed() {
+        let mut d = Classification::new(8, 3, 4, 1, 3);
+        let a = d.eval_batch();
+        let b = d.eval_batch();
+        if let (Value::F32(x), Value::F32(y)) = (&a[0], &b[0]) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn lm_targets_are_shifted_inputs() {
+        let mut d = LmCorpus::new(100, 2, 12, 1, 4);
+        let b = d.next_batch(0);
+        if let (Value::I32(_, x), Value::I32(_, y)) = (&b[0], &b[1]) {
+            // rows of length 12: y[i] == x[i+1] within a row
+            for row in 0..2 {
+                for i in 0..11 {
+                    assert_eq!(y[row * 12 + i], x[row * 12 + i + 1]);
+                }
+            }
+            assert!(x.iter().all(|&t| (0..100).contains(&t)));
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn lm_zipf_head_is_heavy() {
+        let mut d = LmCorpus::new(500, 4, 64, 1, 5);
+        let mut counts = vec![0usize; 500];
+        for _ in 0..30 {
+            let b = d.next_batch(0);
+            if let Value::I32(_, x) = &b[0] {
+                for &t in x {
+                    counts[t as usize] += 1;
+                }
+            }
+        }
+        let head: usize = counts[..10].iter().sum();
+        let tail: usize = counts[400..].iter().sum();
+        assert!(head > 10 * tail.max(1), "head {head} tail {tail}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Gradient/parameter registry: how raw model tensors become the
+//! matrices the compressors operate on.
+//!
+//! Following §3 of the paper:
+//! - vector-shaped parameters (biases, norm scales) are aggregated
+//!   **uncompressed**;
+//! - convolution kernels `[out, in, kh, kw]` are flattened to
+//!   `[out, in·kh·kw]` ("flattening input and kernel dimensions");
+//! - everything else of rank ≥ 2 becomes `[shape[0], ∏ rest]`.
+
+use crate::tensor::Tensor;
+
+/// How a parameter participates in compression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressKind {
+    /// Rank-≥2 tensor reshaped to a matrix and low-rank compressed.
+    Matrix { rows: usize, cols: usize },
+    /// Rank-1 (or scalar) tensor, sent uncompressed.
+    Vector { len: usize },
+}
+
+/// One model parameter: name, original tensor shape, compression view.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: CompressKind,
+}
+
+impl ParamSpec {
+    /// Build a spec applying the paper's matricization rule.
+    pub fn new(name: &str, shape: &[usize]) -> ParamSpec {
+        let numel: usize = shape.iter().product();
+        let kind = if shape.len() >= 2 {
+            CompressKind::Matrix { rows: shape[0], cols: numel / shape[0] }
+        } else {
+            CompressKind::Vector { len: numel }
+        };
+        ParamSpec { name: name.to_string(), shape: shape.to_vec(), kind }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.numel() * 4) as u64
+    }
+
+    /// Matrix view dims, if compressed.
+    pub fn matrix_dims(&self) -> Option<(usize, usize)> {
+        match self.kind {
+            CompressKind::Matrix { rows, cols } => Some((rows, cols)),
+            CompressKind::Vector { .. } => None,
+        }
+    }
+
+    /// Compressed message size (bytes) for a rank-`r` low-rank scheme:
+    /// `(n + m)·r·4` for matrices, full size for vectors. This is the
+    /// per-tensor "Compression" column of paper Tables 10/11. Capped at
+    /// the uncompressed size (reporting convention).
+    pub fn rank_r_bytes(&self, r: usize) -> u64 {
+        self.rank_r_bytes_uncapped(r).min(self.bytes())
+    }
+
+    /// Like [`rank_r_bytes`](Self::rank_r_bytes) but without the cap:
+    /// what PowerSGD actually transmits (`P` then `Q`) regardless of the
+    /// matrix size.
+    pub fn rank_r_bytes_uncapped(&self, r: usize) -> u64 {
+        match self.kind {
+            CompressKind::Matrix { rows, cols } => ((rows + cols) * r * 4) as u64,
+            CompressKind::Vector { len } => (len * 4) as u64,
+        }
+    }
+}
+
+/// Ordered set of parameters for one model.
+#[derive(Debug, Clone, Default)]
+pub struct ParamRegistry {
+    pub specs: Vec<ParamSpec>,
+}
+
+impl ParamRegistry {
+    pub fn new(specs: Vec<ParamSpec>) -> ParamRegistry {
+        ParamRegistry { specs }
+    }
+
+    pub fn from_shapes(named_shapes: &[(&str, Vec<usize>)]) -> ParamRegistry {
+        ParamRegistry {
+            specs: named_shapes
+                .iter()
+                .map(|(n, s)| ParamSpec::new(n, s))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.specs.iter().map(|s| s.numel()).sum()
+    }
+
+    /// Total uncompressed gradient bytes per step (per worker message).
+    pub fn total_bytes(&self) -> u64 {
+        self.specs.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Total rank-`r` compressed bytes per step.
+    pub fn total_rank_r_bytes(&self, r: usize) -> u64 {
+        self.specs.iter().map(|s| s.rank_r_bytes(r)).sum()
+    }
+
+    /// Total rank-`r` transmitted bytes per step, uncapped (see
+    /// [`ParamSpec::rank_r_bytes_uncapped`]).
+    pub fn total_rank_r_bytes_uncapped(&self, r: usize) -> u64 {
+        self.specs.iter().map(|s| s.rank_r_bytes_uncapped(r)).sum()
+    }
+
+    /// Overall compression ratio at rank `r` (paper Table 10: "243/r ×").
+    pub fn compression_ratio(&self, r: usize) -> f64 {
+        self.total_bytes() as f64 / self.total_rank_r_bytes(r) as f64
+    }
+
+    /// View raw gradient tensors as compression-shaped tensors
+    /// (matrices reshaped, vectors untouched). Cheap: reshape is metadata.
+    pub fn matricize(&self, grads: Vec<Tensor>) -> Vec<Tensor> {
+        assert_eq!(grads.len(), self.specs.len(), "grad count mismatch");
+        grads
+            .into_iter()
+            .zip(self.specs.iter())
+            .map(|(g, spec)| {
+                assert_eq!(g.len(), spec.numel(), "grad numel mismatch for {}", spec.name);
+                match spec.kind {
+                    CompressKind::Matrix { rows, cols } => g.reshape(&[rows, cols]),
+                    CompressKind::Vector { len } => g.reshape(&[len]),
+                }
+            })
+            .collect()
+    }
+
+    /// Undo [`matricize`]: restore original tensor shapes.
+    pub fn dematricize(&self, grads: Vec<Tensor>) -> Vec<Tensor> {
+        assert_eq!(grads.len(), self.specs.len());
+        grads
+            .into_iter()
+            .zip(self.specs.iter())
+            .map(|(g, spec)| g.reshape(&spec.shape))
+            .collect()
+    }
+
+    /// Allocate a zeroed update buffer set in compression shapes.
+    pub fn zeros_like(&self) -> Vec<Tensor> {
+        self.specs
+            .iter()
+            .map(|spec| match spec.kind {
+                CompressKind::Matrix { rows, cols } => Tensor::zeros(&[rows, cols]),
+                CompressKind::Vector { len } => Tensor::zeros(&[len]),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_matricization_matches_paper_table10() {
+        // layer4.1.conv2: 512×512×3×3 → 512×4608, 9216 KB, 461/r ×
+        let s = ParamSpec::new("layer4.1.conv2", &[512, 512, 3, 3]);
+        assert_eq!(s.matrix_dims(), Some((512, 4608)));
+        assert_eq!(s.bytes(), 9216 * 1024);
+        let ratio = s.bytes() as f64 / s.rank_r_bytes(1) as f64;
+        assert!((ratio - 460.8).abs() < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bias_stays_vector() {
+        let s = ParamSpec::new("bias", &[128]);
+        assert_eq!(s.kind, CompressKind::Vector { len: 128 });
+        assert_eq!(s.rank_r_bytes(1), 512); // full size
+    }
+
+    #[test]
+    fn lstm_encoder_matches_paper_table11() {
+        // encoder 28869×650: 636/r ×
+        let s = ParamSpec::new("encoder", &[28869, 650]);
+        let ratio = s.bytes() as f64 / s.rank_r_bytes(1) as f64;
+        assert!((ratio - 635.8).abs() < 1.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rank_r_bytes_capped_at_uncompressed() {
+        let s = ParamSpec::new("tiny", &[4, 4]);
+        assert_eq!(s.rank_r_bytes(100), s.bytes());
+    }
+
+    #[test]
+    fn matricize_roundtrip() {
+        let reg = ParamRegistry::from_shapes(&[
+            ("w", vec![8, 2, 3, 3]),
+            ("b", vec![8]),
+        ]);
+        let grads = vec![Tensor::full(&[8 * 2 * 3 * 3], 1.0).reshape(&[8, 2, 3, 3]), Tensor::zeros(&[8])];
+        let m = reg.matricize(grads.clone());
+        assert_eq!(m[0].shape(), &[8, 18]);
+        assert_eq!(m[1].shape(), &[8]);
+        let back = reg.dematricize(m);
+        assert_eq!(back[0].shape(), &[8, 2, 3, 3]);
+        assert_eq!(back[0], grads[0]);
+    }
+
+    #[test]
+    fn registry_totals() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![10, 20]), ("b", vec![20])]);
+        assert_eq!(reg.numel(), 220);
+        assert_eq!(reg.total_bytes(), 880);
+        // rank 1: (10+20)*4 + 80 = 200
+        assert_eq!(reg.total_rank_r_bytes(1), 200);
+    }
+}

@@ -1,0 +1,28 @@
+//! # PowerSGD — practical low-rank gradient compression
+//!
+//! Reproduction of Vogels, Karimireddy & Jaggi, *PowerSGD: Practical
+//! Low-Rank Gradient Compression for Distributed Optimization* (NeurIPS
+//! 2019) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the distributed-training coordinator: simulated
+//!   multi-worker data parallelism, collectives, nine gradient
+//!   compressors, error-feedback SGD, metrics and a network cost model.
+//! - **L2 (`python/compile/`)** — JAX models AOT-lowered to HLO text,
+//!   executed from Rust via PJRT (`runtime`).
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   compression hot-spot, verified against pure-jnp oracles.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod compress;
+pub mod grad;
+pub mod linalg;
+pub mod net;
+pub mod optim;
+pub mod profiles;
+pub mod simulate;
+pub mod tensor;
+pub mod util;

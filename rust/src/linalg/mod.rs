@@ -1,0 +1,14 @@
+//! Numerical linear algebra for the compressors.
+//!
+//! - [`gram_schmidt`] — the paper's orthogonalization choice ("we use the
+//!   Gram–Schmidt procedure to orthogonalize our matrices since they have
+//!   very few columns (1–4)").
+//! - [`svd`] — one-sided Jacobi SVD, needed by the Spectral-Atomo baseline
+//!   (Appendix G.6) and by the "best rank-r approximation" reference
+//!   (Table 2 / Appendix G.7 sanity checks).
+
+mod gram_schmidt;
+mod svd;
+
+pub use gram_schmidt::{gram_schmidt_in_place, orthonormal_error};
+pub use svd::{best_rank_r, svd, Svd};

@@ -1,0 +1,222 @@
+//! `powersgd` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//! - `train`    — distributed training of an AOT-compiled model with a
+//!   chosen compressor over W simulated workers.
+//! - `simulate` — shape-profile timing simulator (paper Tables 3–7,
+//!   Figure 3) without running a model.
+//! - `artifacts`— list available compiled artifacts.
+//!
+//! Examples:
+//! ```text
+//! powersgd train --model mlp --compressor powersgd --rank 2 --workers 4 --steps 200
+//! powersgd simulate --profile resnet18 --scheme rank2 --workers 16 --backend nccl
+//! ```
+
+use anyhow::{bail, Context, Result};
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::{Classification, DataSource, LmCorpus};
+use powersgd::net::backend_by_name;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd, SignumOpt};
+use powersgd::runtime::Runtime;
+use powersgd::simulate::{data_per_epoch_mb, simulate_step, Scheme};
+use powersgd::util::{Args, Table};
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: powersgd <train|simulate|artifacts> [--help]\n\
+                 see README.md for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Build the optimizer selected by `--compressor` (+ `--rank`).
+pub fn build_optimizer(
+    name: &str,
+    rank: usize,
+    schedule: LrSchedule,
+    momentum: f32,
+    seed: u64,
+    error_feedback: bool,
+) -> Result<Box<dyn DistOptimizer>> {
+    use powersgd::compress::*;
+    let boxed: Box<dyn Compressor> = match name {
+        "none" | "sgd" => return Ok(Box::new(Sgd::new(schedule, momentum))),
+        "signum" => return Ok(Box::new(SignumOpt::new(schedule, momentum))),
+        "powersgd" => Box::new(PowerSgd::new(rank, seed)),
+        "powersgd-adaptive" => Box::new(AdaptivePowerSgd::new(rank, 1, 32, seed)),
+        "powersgd-cold" => Box::new(PowerSgd::new(rank, seed).without_warm_start()),
+        "best-rank" => Box::new(BestRankR::new(rank, seed)),
+        "unbiased-rank" => Box::new(UnbiasedRank::new(rank, seed)),
+        "random-block" => Box::new(RandomBlock::new(rank, seed)),
+        "random-k" => Box::new(RandomK::new(rank, seed)),
+        "top-k" => Box::new(TopK::new(rank)),
+        "sign-norm" => Box::new(SignNorm::new()),
+        "atomo" => Box::new(Atomo::new(rank, seed)),
+        other => bail!("unknown compressor {other:?}"),
+    };
+    let ef = EfSgd::new(boxed, schedule, momentum);
+    Ok(Box::new(if error_feedback { ef } else { ef.without_error_feedback() }))
+}
+
+/// Construct the data source matching a model artifact name.
+pub fn build_data(model: &str, workers: usize, seed: u64) -> Result<Box<dyn DataSource>> {
+    Ok(match model {
+        "mlp" => Box::new(Classification::new(64, 10, 32, workers, seed)),
+        "convnet" => Box::new(Classification::new(3 * 16 * 16, 10, 32, workers, seed)),
+        "lstm" => Box::new(LmCorpus::new(1000, 8, 32, workers, seed)),
+        m if m.starts_with("transformer_tiny") => {
+            Box::new(LmCorpus::new(2000, 8, 64, workers, seed))
+        }
+        m if m.starts_with("transformer_small") => {
+            Box::new(LmCorpus::new(4000, 8, 128, workers, seed))
+        }
+        m if m.starts_with("transformer_25m") => {
+            Box::new(LmCorpus::new(8000, 4, 128, workers, seed))
+        }
+        m if m.starts_with("transformer_100m") => {
+            Box::new(LmCorpus::new(16000, 2, 256, workers, seed))
+        }
+        other => bail!("no data source for model {other:?}"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mlp").to_string();
+    let compressor = args.get_or("compressor", "powersgd").to_string();
+    let rank = args.get_parsed_or("rank", 2usize);
+    let workers = args.get_parsed_or("workers", 4usize);
+    let steps = args.get_parsed_or("steps", 100usize);
+    let lr = args.get_parsed_or("lr", 0.05f64);
+    let momentum = args.get_parsed_or("momentum", 0.9f64) as f32;
+    let seed = args.get_parsed_or("seed", 42u64);
+    let warmup = args.get_parsed_or("warmup", 0usize);
+    let eval_every = args.get_parsed_or("eval-every", steps / 4);
+    let backend = backend_by_name(args.get_or("backend", "nccl"))
+        .context("unknown backend (nccl|gloo)")?;
+    let artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    let no_ef = args.flag("no-error-feedback");
+
+    let mut rt = Runtime::cpu(&artifacts_dir)?;
+    let train = rt.load(&format!("{model}_train"))?;
+    let eval = rt.load(&format!("{model}_eval")).ok();
+
+    let is_lm = model.starts_with("lstm") || model.starts_with("transformer");
+    let schedule = LrSchedule::paper_step(lr, workers, warmup, vec![]);
+    let opt = build_optimizer(&compressor, rank, schedule, momentum, seed, !no_ef)?;
+    let cfg = TrainerConfig {
+        workers,
+        backend,
+        seed,
+        eval_every,
+        eval_kind: if is_lm { EvalKind::Perplexity } else { EvalKind::Accuracy },
+        log_every: args.get_parsed_or("log-every", 10usize),
+    };
+    let mut data = build_data(&model, workers, seed)?;
+    let mut trainer = Trainer::new(train, eval, opt, cfg)?;
+
+    eprintln!(
+        "training {model} with {} on {workers} workers ({} params, {} bytes/step uncompressed)",
+        trainer.optimizer_name(),
+        trainer.registry().numel(),
+        trainer.registry().total_bytes(),
+    );
+    trainer.train(data.as_mut(), steps)?;
+
+    let (grad_s, comp_s) = trainer.metrics.mean_times();
+    println!("final loss (mean last 10): {:.4}", trainer.metrics.mean_loss_last(10));
+    if let Some(e) = trainer.metrics.last_eval() {
+        println!("final eval: {:.3}", e);
+    }
+    println!(
+        "bytes/step: {}   grad: {:.1} ms   compress: {:.1} ms   sim-comm: {:.2} ms",
+        trainer.metrics.total_bytes() / steps as u64,
+        grad_s * 1e3,
+        comp_s * 1e3,
+        trainer.metrics.mean_sim_comm() * 1e3,
+    );
+    if args.flag("loss-curve") {
+        println!("{}", trainer.metrics.loss_curve_csv(5));
+    }
+    Ok(())
+}
+
+fn parse_scheme(s: &str, rank: usize) -> Result<Scheme> {
+    Ok(match s {
+        "sgd" => Scheme::Sgd,
+        "powersgd" | "rank" => Scheme::PowerSgd { rank },
+        "unbiased-rank" => Scheme::UnbiasedRank { rank },
+        "random-block" => Scheme::RandomBlock { rank },
+        "random-k" => Scheme::RandomK { rank },
+        "top-k" => Scheme::TopK { rank },
+        "sign-norm" => Scheme::SignNorm,
+        "signum" => Scheme::Signum,
+        "atomo" => Scheme::Atomo { rank },
+        other => bail!("unknown scheme {other:?}"),
+    })
+}
+
+fn profile_by_name(name: &str) -> Result<powersgd::profiles::ModelProfile> {
+    Ok(match name {
+        "resnet18" => powersgd::profiles::resnet18(),
+        "lstm" => powersgd::profiles::lstm_wikitext2(),
+        "transformer" => powersgd::profiles::transformer_wikitext103(),
+        other => bail!("unknown profile {other:?} (resnet18|lstm|transformer)"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let profile = profile_by_name(args.get_or("profile", "resnet18"))?;
+    let workers = args.get_parsed_or("workers", 16usize);
+    let backend = backend_by_name(args.get_or("backend", "nccl"))
+        .context("unknown backend (nccl|gloo)")?;
+    let rank = args.get_parsed_or("rank", 2usize);
+    let schemes: Vec<Scheme> = match args.get("scheme") {
+        Some(s) => vec![parse_scheme(s, rank)?],
+        None => vec![
+            Scheme::Sgd,
+            Scheme::PowerSgd { rank: 1 },
+            Scheme::PowerSgd { rank: 2 },
+            Scheme::PowerSgd { rank: 4 },
+            Scheme::Signum,
+            Scheme::Atomo { rank: 2 },
+        ],
+    };
+    let mut table = Table::new(
+        &format!("{} — {} workers, {}", profile.name, workers, backend.name),
+        &["Algorithm", "Data/epoch", "fwd", "bwd", "encode", "comm", "decode", "Time/batch"],
+    );
+    for s in schemes {
+        let b = simulate_step(&profile, s, workers, &backend);
+        table.row(&[
+            s.name(),
+            format!("{:.0} MB", data_per_epoch_mb(&profile, s)),
+            format!("{:.0} ms", b.fwd * 1e3),
+            format!("{:.0} ms", b.bwd * 1e3),
+            format!("{:.1} ms", b.encode * 1e3),
+            format!("{:.1} ms", b.comm * 1e3),
+            format!("{:.1} ms", b.decode * 1e3),
+            format!("{:.0} ms", b.total() * 1e3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::cpu(dir)?;
+    println!("platform: {}", rt.platform());
+    for name in rt.available() {
+        println!("  {name}");
+    }
+    Ok(())
+}

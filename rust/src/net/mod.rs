@@ -1,0 +1,139 @@
+//! α–β network cost model for the simulated cluster.
+//!
+//! The paper's testbed (Appendix B): 8 nodes × 2 GPUs, 10 Gbit/s
+//! Ethernet, PyTorch NCCL and GLOO backends. We price each collective
+//! with the standard latency–bandwidth model and calibrate the constants
+//! so the end-to-end per-batch times of Tables 3–7 are reproduced (see
+//! `calibration` tests below and EXPERIMENTS.md):
+//!
+//! - ring all-reduce: `t = 2(W−1)·α + 2·(W−1)/W · S/β`
+//! - all-gather:      `t = (W−1)·α + (W−1) · S/β`  (S = per-worker msg)
+//! - reduce+broadcast (parameter server): `t = 2(W−1)·(α + S/β)`
+//!
+//! Decode cost after an all-gather scales with W (each worker unpacks
+//! W messages) — that is modeled in the simulator, not here.
+
+use crate::collectives::{CollKind, CollOp};
+
+/// A communication backend profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Backend {
+    pub name: &'static str,
+    /// Per-hop latency, seconds.
+    pub alpha: f64,
+    /// Effective bandwidth, bytes/second.
+    pub beta: f64,
+}
+
+/// NCCL on 10 Gbit/s Ethernet: near line-rate for large messages,
+/// ~30 µs hop latency. Calibrated so an 83 MB ResNet18 all-reduce over
+/// 16 workers costs ≈ 73 ms, matching Table 3's SGD row (312 ms total
+/// with fwd+bwd ≈ 235 ms).
+pub const NCCL: Backend = Backend { name: "NCCL", alpha: 30e-6, beta: 1.10e9 };
+
+/// GLOO: the slower CPU-mediated backend — higher latency, lower
+/// effective bandwidth (Appendix B's measurements show ≈2–3× slower
+/// collectives at these message sizes).
+pub const GLOO: Backend = Backend { name: "GLOO", alpha: 200e-6, beta: 0.40e9 };
+
+impl Backend {
+    /// Time (seconds) for one collective op with per-worker message size
+    /// `bytes` across `w` workers.
+    pub fn time(&self, kind: CollKind, bytes: u64, w: usize) -> f64 {
+        if w <= 1 {
+            return 0.0;
+        }
+        let s = bytes as f64;
+        let wf = w as f64;
+        match kind {
+            CollKind::AllReduce => {
+                2.0 * (wf - 1.0) * self.alpha + 2.0 * (wf - 1.0) / wf * s / self.beta
+            }
+            CollKind::AllGather => (wf - 1.0) * self.alpha + (wf - 1.0) * s / self.beta,
+            CollKind::ReduceBroadcast => 2.0 * (wf - 1.0) * (self.alpha + s / self.beta),
+        }
+    }
+
+    /// Total time for a logged sequence of ops.
+    pub fn time_ops(&self, ops: &[CollOp], w: usize) -> f64 {
+        ops.iter().map(|o| self.time(o.kind, o.bytes, w)).sum()
+    }
+}
+
+/// Look up a backend profile by (case-insensitive) name.
+pub fn backend_by_name(name: &str) -> Option<Backend> {
+    match name.to_ascii_lowercase().as_str() {
+        "nccl" => Some(NCCL),
+        "gloo" => Some(GLOO),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_scaling_is_sublinear_in_w() {
+        // Ring all-reduce bandwidth term saturates at 2·S/β: doubling W
+        // from 8 to 16 must barely change the time for large S.
+        let s = 43_000_000u64;
+        let t8 = NCCL.time(CollKind::AllReduce, s, 8);
+        let t16 = NCCL.time(CollKind::AllReduce, s, 16);
+        assert!(t16 < t8 * 1.15, "{t8} -> {t16}");
+    }
+
+    #[test]
+    fn allgather_scales_linearly_in_w() {
+        let s = 1_000_000u64;
+        let t4 = NCCL.time(CollKind::AllGather, s, 4);
+        let t16 = NCCL.time(CollKind::AllGather, s, 16);
+        assert!(t16 > 3.0 * t4, "{t4} -> {t16}");
+    }
+
+    #[test]
+    fn gloo_slower_than_nccl() {
+        for &(kind, s) in &[
+            (CollKind::AllReduce, 43_000_000u64),
+            (CollKind::AllGather, 1_000_000),
+            (CollKind::ReduceBroadcast, 10_000_000),
+        ] {
+            assert!(GLOO.time(kind, s, 16) > NCCL.time(kind, s, 16));
+        }
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        assert_eq!(NCCL.time(CollKind::AllReduce, 1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn calibration_resnet18_sgd_comm() {
+        // Table 3: SGD on ResNet18, 16 workers — total 312 ms with
+        // fwd+bwd ≈ 235 ms ⇒ comm ≈ 75 ms for the 43 MB gradient.
+        let t = NCCL.time(CollKind::AllReduce, 43_000_000, 16) * 1e3;
+        assert!((60.0..95.0).contains(&t), "ResNet comm {t} ms");
+    }
+
+    #[test]
+    fn calibration_lstm_sgd_comm() {
+        // Table 7: SGD on the LSTM — total 300 ms with fwd+bwd ≈ 125 ms
+        // ⇒ comm ≈ 175 ms for the 110 MB gradient.
+        let t = NCCL.time(CollKind::AllReduce, 110_000_000, 16) * 1e3;
+        assert!((150.0..220.0).contains(&t), "LSTM comm {t} ms");
+    }
+
+    #[test]
+    fn powersgd_rank2_comm_is_negligible() {
+        // Rank-2 ResNet18 message ≈ 0.33 MB ⇒ well under 5 ms.
+        let t = NCCL.time(CollKind::AllReduce, 330_000, 16) * 1e3;
+        assert!(t < 5.0, "rank-2 comm {t} ms");
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(backend_by_name("nccl").unwrap().name, "NCCL");
+        assert_eq!(backend_by_name("GLOO").unwrap().name, "GLOO");
+        assert!(backend_by_name("mpi").is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Learning-rate schedules (paper §5, "Default experimental setting").
+//!
+//! The paper's rule: LRs are defined per worker and scaled linearly by
+//! the number of workers, with a linear warmup over the first 5 epochs
+//! starting from the single-worker LR; step decay /10 at fixed epochs.
+
+/// Decay shape after warmup.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleKind {
+    /// Constant after warmup.
+    Constant,
+    /// Multiply by `factor` at each milestone step.
+    Step { milestones: Vec<usize>, factor: f64 },
+    /// Cosine decay to zero at `total_steps` (Appendix D's transformer).
+    Cosine { total_steps: usize },
+}
+
+/// Learning-rate schedule with linear warmup and worker scaling.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    /// Single-worker base learning rate.
+    pub base_lr: f64,
+    /// Linear scaling factor (number of workers).
+    pub workers: usize,
+    /// Warmup duration in steps (0 = none). Warmup goes from `base_lr`
+    /// to `base_lr × workers` linearly, per Goyal et al. (2017).
+    pub warmup_steps: usize,
+    pub kind: ScheduleKind,
+}
+
+impl LrSchedule {
+    /// Constant LR (no scaling, no warmup) — for tests and toy runs.
+    pub fn constant(lr: f64) -> LrSchedule {
+        LrSchedule { base_lr: lr, workers: 1, warmup_steps: 0, kind: ScheduleKind::Constant }
+    }
+
+    /// The paper's CIFAR10 recipe scaled to `workers`, expressed in steps:
+    /// warmup over `warmup_steps`, /10 at the given milestones.
+    pub fn paper_step(
+        base_lr: f64,
+        workers: usize,
+        warmup_steps: usize,
+        milestones: Vec<usize>,
+    ) -> LrSchedule {
+        LrSchedule {
+            base_lr,
+            workers,
+            warmup_steps,
+            kind: ScheduleKind::Step { milestones, factor: 0.1 },
+        }
+    }
+
+    pub fn cosine(base_lr: f64, workers: usize, warmup_steps: usize, total_steps: usize) -> LrSchedule {
+        LrSchedule {
+            base_lr,
+            workers,
+            warmup_steps,
+            kind: ScheduleKind::Cosine { total_steps },
+        }
+    }
+
+    /// Learning rate at a (0-based) step.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let target = self.base_lr * self.workers as f64;
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            // linear from base_lr to target
+            let t = step as f64 / self.warmup_steps as f64;
+            return self.base_lr + (target - self.base_lr) * t;
+        }
+        match &self.kind {
+            ScheduleKind::Constant => target,
+            ScheduleKind::Step { milestones, factor } => {
+                let passed = milestones.iter().filter(|&&m| step >= m).count();
+                target * factor.powi(passed as i32)
+            }
+            ScheduleKind::Cosine { total_steps } => {
+                let t = ((step - self.warmup_steps) as f64
+                    / (total_steps.saturating_sub(self.warmup_steps)).max(1) as f64)
+                    .min(1.0);
+                target * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(1000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_from_base_to_scaled() {
+        let s = LrSchedule::paper_step(0.1, 16, 100, vec![]);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!(s.lr_at(50) > 0.1 && s.lr_at(50) < 1.6);
+        assert!((s.lr_at(100) - 1.6).abs() < 1e-12);
+        assert!((s.lr_at(500) - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_decay_applies_at_milestones() {
+        let s = LrSchedule::paper_step(0.1, 1, 0, vec![150, 250]);
+        assert!((s.lr_at(149) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(150) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(250) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = LrSchedule::cosine(0.1, 1, 0, 100);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!(s.lr_at(50) < 0.1 && s.lr_at(50) > 0.0);
+        assert!(s.lr_at(100) < 1e-9);
+        // clamps past the end
+        assert!(s.lr_at(1000) < 1e-9);
+    }
+
+    #[test]
+    fn monotone_decreasing_after_warmup() {
+        let s = LrSchedule::cosine(0.5, 4, 10, 200);
+        let mut prev = f64::INFINITY;
+        for step in 10..200 {
+            let lr = s.lr_at(step);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+}

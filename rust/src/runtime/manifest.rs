@@ -1,0 +1,263 @@
+//! Artifact manifest: the I/O contract emitted by `python/compile/aot.py`
+//! next to every HLO text file.
+//!
+//! Line-based format (one artifact per file):
+//!
+//! ```text
+//! artifact mlp_train_step
+//! input  w1 f32 64,128
+//! input  x  f32 32,64
+//! input  y  i32 32
+//! output loss    f32 -
+//! output grad.w1 f32 64,128
+//! param  w1
+//! meta   batch_per_worker 32
+//! ```
+//!
+//! `-` denotes a scalar (rank-0) shape. `param` lines mark which inputs
+//! are trainable parameters, in optimizer order; remaining inputs are
+//! per-step data. `meta` lines are free-form key/value pairs.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} (expected f32/i32)"),
+        }
+    }
+}
+
+/// One input or output tensor description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// Empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parameter initialization directive (emitted by aot.py so the Rust
+/// trainer replays exactly what the model author intended).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    Zero,
+    One,
+    /// N(0, sigma²) i.i.d.
+    Normal(f32),
+}
+
+impl Init {
+    fn parse(s: &str) -> Result<Init> {
+        if s == "zero" {
+            Ok(Init::Zero)
+        } else if s == "one" {
+            Ok(Init::One)
+        } else if let Some(sig) = s.strip_prefix("normal:") {
+            Ok(Init::Normal(sig.parse::<f32>().map_err(|e| anyhow!("bad sigma {sig:?}: {e}"))?))
+        } else {
+            bail!("unknown init {s:?} (zero|one|normal:<sigma>)")
+        }
+    }
+}
+
+/// Parsed manifest for one artifact.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Names of inputs that are trainable parameters, in order.
+    pub params: Vec<String>,
+    /// Per-parameter init directives, same order as `params`.
+    pub inits: Vec<Init>,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactManifest {
+    /// Parse from the text format above.
+    pub fn parse(text: &str) -> Result<ArtifactManifest> {
+        let mut m = ArtifactManifest::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let ctx = || format!("manifest line {}: {raw:?}", lineno + 1);
+            match tag {
+                "artifact" => {
+                    m.name = parts.next().ok_or_else(|| anyhow!("missing name")).with_context(ctx)?.to_string();
+                }
+                "input" | "output" => {
+                    let name = parts.next().ok_or_else(|| anyhow!("missing io name")).with_context(ctx)?;
+                    let dtype = DType::parse(parts.next().ok_or_else(|| anyhow!("missing dtype")).with_context(ctx)?)?;
+                    let shape_s = parts.next().ok_or_else(|| anyhow!("missing shape")).with_context(ctx)?;
+                    let shape: Vec<usize> = if shape_s == "-" {
+                        vec![]
+                    } else {
+                        shape_s
+                            .split(',')
+                            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+                            .collect::<Result<_>>()
+                            .with_context(ctx)?
+                    };
+                    let spec = IoSpec { name: name.to_string(), dtype, shape };
+                    if tag == "input" {
+                        m.inputs.push(spec);
+                    } else {
+                        m.outputs.push(spec);
+                    }
+                }
+                "param" => {
+                    m.params.push(
+                        parts.next().ok_or_else(|| anyhow!("missing param name")).with_context(ctx)?.to_string(),
+                    );
+                    m.inits.push(match parts.next() {
+                        Some(tok) => Init::parse(tok).with_context(ctx)?,
+                        None => Init::Zero,
+                    });
+                }
+                "meta" => {
+                    let k = parts.next().ok_or_else(|| anyhow!("missing meta key")).with_context(ctx)?;
+                    let v = parts.collect::<Vec<_>>().join(" ");
+                    m.meta.insert(k.to_string(), v);
+                }
+                other => bail!("unknown manifest tag {other:?} at line {}", lineno + 1),
+            }
+        }
+        if m.name.is_empty() {
+            bail!("manifest has no `artifact` line");
+        }
+        // Every declared param must exist among inputs.
+        for p in &m.params {
+            if !m.inputs.iter().any(|i| &i.name == p) {
+                bail!("param {p:?} not among inputs");
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ArtifactManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Input specs for the trainable parameters, in `params` order.
+    pub fn param_specs(&self) -> Vec<&IoSpec> {
+        self.params
+            .iter()
+            .map(|p| self.inputs.iter().find(|i| &i.name == p).unwrap())
+            .collect()
+    }
+
+    /// Input specs that are NOT parameters (per-step data), in input order.
+    pub fn data_specs(&self) -> Vec<&IoSpec> {
+        self.inputs
+            .iter()
+            .filter(|i| !self.params.contains(&i.name))
+            .collect()
+    }
+
+    /// Build a [`crate::grad::ParamRegistry`] over the parameter inputs.
+    pub fn param_registry(&self) -> crate::grad::ParamRegistry {
+        let named: Vec<(&str, Vec<usize>)> = self
+            .param_specs()
+            .iter()
+            .map(|s| (s.name.as_str(), if s.shape.is_empty() { vec![1] } else { s.shape.clone() }))
+            .collect();
+        crate::grad::ParamRegistry::from_shapes(&named)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact mlp_train_step
+input w1 f32 64,128
+input b1 f32 128
+input x f32 32,64
+input y i32 32
+output loss f32 -
+output grad.w1 f32 64,128
+output grad.b1 f32 128
+param w1 normal:0.125
+param b1 zero
+meta batch_per_worker 32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "mlp_train_step");
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.outputs.len(), 3);
+        assert_eq!(m.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.inputs[3].dtype, DType::I32);
+        assert_eq!(m.params, vec!["w1", "b1"]);
+        assert_eq!(m.inits, vec![Init::Normal(0.125), Init::Zero]);
+        assert_eq!(m.meta["batch_per_worker"], "32");
+    }
+
+    #[test]
+    fn param_and_data_split() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        let ps = m.param_specs();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].shape, vec![64, 128]);
+        let ds = m.data_specs();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].name, "x");
+    }
+
+    #[test]
+    fn registry_from_manifest() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        let reg = m.param_registry();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.numel(), 64 * 128 + 128);
+    }
+
+    #[test]
+    fn rejects_unknown_param() {
+        let bad = "artifact a\ninput x f32 2\nparam nope\n";
+        assert!(ArtifactManifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn init_parsing() {
+        let m = ArtifactManifest::parse(
+            "artifact a\ninput x f32 2\ninput s f32 2\nparam x one\nparam s\n",
+        )
+        .unwrap();
+        assert_eq!(m.inits, vec![Init::One, Init::Zero]);
+        assert!(ArtifactManifest::parse("artifact a\ninput x f32 2\nparam x banana\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_name_and_bad_dtype() {
+        assert!(ArtifactManifest::parse("input x f32 2\n").is_err());
+        assert!(ArtifactManifest::parse("artifact a\ninput x f64 2\n").is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the coordinator's hot path.
+//!
+//! `python/compile/aot.py` lowers every L2 JAX computation **once** to
+//! HLO *text* (`artifacts/<name>.hlo.txt`) plus a manifest
+//! (`artifacts/<name>.manifest`). This module loads the text, compiles it
+//! on the PJRT CPU client (one compile per artifact per process, cached),
+//! and exposes typed `execute` over [`crate::tensor::Tensor`]s.
+//!
+//! HLO text — not serialized `HloModuleProto` — is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+mod manifest;
+pub use manifest::{ArtifactManifest, DType, Init, IoSpec};
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// An input value for artifact execution.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(s, _) => s,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            Value::I32(_, v) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+/// One compiled artifact: PJRT executable + manifest.
+pub struct Artifact {
+    pub manifest: ArtifactManifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with positional inputs matching `manifest.inputs` order.
+    /// Returns f32 outputs as [`Tensor`]s (scalars become shape `[1]`).
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, manifest declares {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(self.manifest.inputs.iter()) {
+            let expect: &[usize] = &spec.shape;
+            if v.shape() != expect {
+                bail!(
+                    "artifact {}: input {} shape {:?} != manifest {:?}",
+                    self.manifest.name,
+                    spec.name,
+                    v.shape(),
+                    expect
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {}: got {} outputs, manifest declares {}",
+                self.manifest.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(self.manifest.outputs.iter()) {
+            let data = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("output {} to_vec", spec.name))?;
+            let shape: Vec<usize> = if spec.shape.is_empty() { vec![1] } else { spec.shape.clone() };
+            out.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT runtime with an artifact registry: each artifact is compiled at
+/// most once per process and cached by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::sync::Arc<Artifact>>,
+}
+
+impl Runtime {
+    /// CPU-backed runtime rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifacts_dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let man_path = self.dir.join(format!("{name}.manifest"));
+        let manifest = ArtifactManifest::load(&man_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {}", hlo_path.display()))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let artifact = std::sync::Arc::new(Artifact { manifest, exe });
+        self.cache.insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Names of all artifacts present in the directory (by `.manifest`).
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let n = e.file_name().to_string_lossy().to_string();
+                        n.strip_suffix(".manifest").map(|s| s.to_string())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts` to have run). Here: Value conversions.
+
+    #[test]
+    fn value_shapes() {
+        let v = Value::F32(Tensor::zeros(&[2, 3]));
+        assert_eq!(v.shape(), &[2, 3]);
+        let i = Value::I32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(i.shape(), &[4]);
+    }
+
+    #[test]
+    fn tensor_into_value() {
+        let v: Value = Tensor::zeros(&[5]).into();
+        assert!(matches!(v, Value::F32(_)));
+    }
+}

@@ -1,0 +1,252 @@
+//! Blocked matrix multiplication for the compression hot path.
+//!
+//! PowerSGD's GEMMs are *skinny*: `A[n×m] · B[m×r]` and `Aᵀ[m×n] · P[n×r]`
+//! with r ∈ 1..32 but n·m up to ~19M elements (the LSTM encoder layer).
+//! Both kernels are single-pass streams over A (the bandwidth roofline):
+//!
+//! - `matmul` transposes the skinny B once (m·r ≤ a few hundred KB) so
+//!   every output element is a contiguous dot product, computed with an
+//!   8-way multi-accumulator that LLVM auto-vectorizes; the A row is hot
+//!   in L1 across the r dots.
+//! - `matmul_tn` accumulates into an r×m transposed scratch so the inner
+//!   loop is a contiguous axpy, then transposes back once.
+//!
+//! Perf history in EXPERIMENTS.md §Perf (multi-accumulator + layout
+//! change ≈ 2–3× over the naive blocked loop).
+
+use super::Tensor;
+
+/// Contiguous dot product with 8 independent accumulators (ILP + SIMD).
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for k in 0..chunks {
+        let a8 = &a[k * 8..k * 8 + 8];
+        let b8 = &b[k * 8..k * 8 + 8];
+        for l in 0..8 {
+            acc[l] += a8[l] * b8[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for k in chunks * 8..a.len() {
+        tail += a[k] * b[k];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// out[j] += s * a[j] over a contiguous slice (vectorizable fused axpy).
+#[inline]
+fn axpy_slice(out: &mut [f32], s: f32, a: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    for (o, &v) in out.iter_mut().zip(a.iter()) {
+        *o += s * v;
+    }
+}
+
+/// out[n×r] = A[n×m] · B[m×r], allocating the output.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[a.rows(), b.cols()]);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// out[n×r] = A[n×m] · B[m×r]; `out` is overwritten.
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (n, m) = (a.rows(), a.cols());
+    let (mb, r) = (b.rows(), b.cols());
+    assert_eq!(m, mb, "matmul inner-dim mismatch: {m} vs {mb}");
+    assert_eq!(out.shape(), &[n, r], "matmul output shape");
+    let ad = a.data();
+    let bd = b.data();
+    // Transpose skinny B once: column c becomes a contiguous row.
+    let mut bt = vec![0.0f32; m * r];
+    for k in 0..m {
+        for c in 0..r {
+            bt[c * m + k] = bd[k * r + c];
+        }
+    }
+    let od = out.data_mut();
+    for i in 0..n {
+        let arow = &ad[i * m..(i + 1) * m];
+        for c in 0..r {
+            od[i * r + c] = dot8(arow, &bt[c * m..(c + 1) * m]);
+        }
+    }
+}
+// NOTE (perf pass, EXPERIMENTS.md §Perf): a fused two-column dot with
+// 4-wide accumulators was tried and REVERTED — it broke 8-lane (AVX2)
+// auto-vectorization and ran 2x slower than one 8-wide dot per column.
+
+/// out[m×r] = Aᵀ[m×n] · P[n×r] without materializing Aᵀ.
+///
+/// This is the second GEMM of the PowerSGD step (`Q = Mᵀ·P̂`). We stream
+/// rows of A once and accumulate into an r×m transposed scratch so every
+/// inner loop is a contiguous axpy over the A row.
+pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
+    let (n, m) = (a.rows(), a.cols());
+    let (np, r) = (p.rows(), p.cols());
+    assert_eq!(n, np, "matmul_tn inner-dim mismatch: {n} vs {np}");
+    assert_eq!(out.shape(), &[m, r], "matmul_tn output shape");
+    let ad = a.data();
+    let pd = p.data();
+    let mut scratch = vec![0.0f32; r * m];
+    for i in 0..n {
+        let arow = &ad[i * m..(i + 1) * m];
+        let prow = &pd[i * r..(i + 1) * r];
+        for c in 0..r {
+            let s = prow[c];
+            if s != 0.0 {
+                axpy_slice(&mut scratch[c * m..(c + 1) * m], s, arow);
+            }
+        }
+    }
+    let od = out.data_mut();
+    for j in 0..m {
+        for c in 0..r {
+            od[j * r + c] = scratch[c * m + j];
+        }
+    }
+}
+
+/// out[n×m] = P[n×r] · Qᵀ where Q is m×r — the PowerSGD *reconstruction*
+/// (decompress) kernel. The inner dimension is tiny (r), so the skinny
+/// `matmul` path would pay its per-output-dot overhead on n·m outputs;
+/// here we instead transpose Q once and emit each output row as r
+/// contiguous scaled-accumulate passes (perf pass: 4.4 ms → 1.0 ms per
+/// 512×4608 layer, see EXPERIMENTS.md §Perf).
+pub fn matmul_nt_into(p: &Tensor, q: &Tensor, out: &mut Tensor) {
+    let (n, r) = (p.rows(), p.cols());
+    let (m, rq) = (q.rows(), q.cols());
+    assert_eq!(r, rq, "matmul_nt rank mismatch: {r} vs {rq}");
+    assert_eq!(out.shape(), &[n, m], "matmul_nt output shape");
+    let pd = p.data();
+    let qd = q.data();
+    // Qᵀ: column c contiguous.
+    let mut qt = vec![0.0f32; r * m];
+    for j in 0..m {
+        for c in 0..r {
+            qt[c * m + j] = qd[j * r + c];
+        }
+    }
+    let od = out.data_mut();
+    for i in 0..n {
+        let orow = &mut od[i * m..(i + 1) * m];
+        // first term overwrites, the rest accumulate
+        let s0 = pd[i * r];
+        let q0 = &qt[..m];
+        for (o, &v) in orow.iter_mut().zip(q0.iter()) {
+            *o = s0 * v;
+        }
+        for c in 1..r {
+            axpy_slice(orow, pd[i * r + c], &qt[c * m..(c + 1) * m]);
+        }
+    }
+}
+
+/// Allocating wrapper for [`matmul_nt_into`].
+pub fn matmul_nt(p: &Tensor, q: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[p.rows(), q.rows()]);
+    matmul_nt_into(p, q, &mut out);
+    out
+}
+
+/// Convenience: Aᵀ·B allocating the output.
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[a.cols(), b.cols()]);
+    matmul_tn_into(a, b, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (n, m, r) = (a.rows(), a.cols(), b.cols());
+        let mut out = Tensor::zeros(&[n, r]);
+        for i in 0..n {
+            for j in 0..r {
+                let mut acc = 0.0f64;
+                for k in 0..m {
+                    acc += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                out.set(i, j, acc as f32);
+            }
+        }
+        out
+    }
+
+    fn random(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn matches_naive_over_shapes_and_ranks() {
+        let mut rng = Rng::new(11);
+        for &(n, m) in &[(1, 1), (3, 5), (17, 64), (40, 300), (257, 31)] {
+            for &r in &[1usize, 2, 3, 4, 7, 16] {
+                let a = random(&[n, m], &mut rng);
+                let b = random(&[m, r], &mut rng);
+                let got = matmul(&a, &b);
+                let want = naive(&a, &b);
+                assert!(
+                    got.allclose(&want, 1e-4, 1e-4),
+                    "mismatch n={n} m={m} r={r}, max diff {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(12);
+        for &(n, m, r) in &[(5, 3, 1), (64, 48, 2), (123, 77, 4), (30, 200, 9)] {
+            let a = random(&[n, m], &mut rng);
+            let p = random(&[n, r], &mut rng);
+            let got = matmul_at_b(&a, &p);
+            let want = matmul(&a.transpose(), &p);
+            assert!(
+                got.allclose(&want, 1e-4, 1e-4),
+                "mismatch n={n} m={m} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(14);
+        for &(n, m, r) in &[(5, 3, 1), (64, 48, 2), (123, 77, 4), (30, 200, 7)] {
+            let p = random(&[n, r], &mut rng);
+            let q = random(&[m, r], &mut rng);
+            let mut got = Tensor::zeros(&[n, m]);
+            matmul_nt_into(&p, &q, &mut got);
+            let want = matmul(&p, &q.transpose());
+            assert!(got.allclose(&want, 1e-4, 1e-4), "n={n} m={m} r={r}");
+        }
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Rng::new(13);
+        let a = random(&[6, 6], &mut rng);
+        let mut eye = Tensor::zeros(&[6, 6]);
+        for i in 0..6 {
+            eye.set(i, i, 1.0);
+        }
+        assert!(matmul(&a, &eye).allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn dimension_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        matmul(&a, &b);
+    }
+}

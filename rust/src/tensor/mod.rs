@@ -1,0 +1,260 @@
+//! Dense f32 tensor substrate.
+//!
+//! The coordinator's native hot path (PowerSGD compression, error
+//! feedback, optimizer updates) runs on these tensors. The heavy model
+//! fwd/bwd FLOPs run inside XLA via the PJRT runtime; here we only need
+//! skinny GEMMs (`n×m · m×r`, r ≤ 32), elementwise kernels, and packing.
+//!
+//! Layout is always contiguous row-major. Shapes are `Vec<usize>`;
+//! matrices are rank-2 views over the flat buffer.
+
+mod matmul;
+pub use matmul::{matmul, matmul_at_b, matmul_into, matmul_nt, matmul_nt_into, matmul_tn_into};
+
+/// Contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor from existing data; `data.len()` must equal the shape volume.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "data length {} != shape volume {}", data.len(), n);
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], value: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows when viewed as a matrix (rank-2 only).
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on rank-{} tensor", self.shape.len());
+        self.shape[0]
+    }
+
+    /// Number of columns when viewed as a matrix (rank-2 only).
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on rank-{} tensor", self.shape.len());
+        self.shape[1]
+    }
+
+    /// Matrix element access (rank-2 only, debug-friendly; hot loops index
+    /// `data()` directly).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    /// Reinterpret with a new shape of the same volume (no copy).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape volume mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transposed copy (rank-2).
+    pub fn transpose(&self) -> Tensor {
+        let (n, m) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..n {
+            for j in 0..m {
+                out.data[j * n + i] = self.data[i * m + j];
+            }
+        }
+        out
+    }
+
+    // ---- elementwise / BLAS-1 ----
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Elementwise difference `self - other` as a new tensor.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "sub shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Elementwise sum `self + other` as a new tensor.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Dot product over flattened contents.
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.len(), other.len(), "dot length mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum()
+    }
+
+    /// Frobenius / L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// L1 norm.
+    pub fn norm_l1(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64).abs()).sum()
+    }
+
+    /// Sum of elements.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|x| *x as f64).sum()
+    }
+
+    /// Max |relative or absolute| difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// True iff elementwise |a-b| <= atol + rtol*|b|.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_volume() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at(2, 1), 6.0);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn axpy_scale_sub() {
+        let mut a = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![10., 20., 30.]);
+        a.axpy(0.1, &b);
+        assert_eq!(a.data(), &[2., 4., 6.]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[1., 2., 3.]);
+        let d = b.sub(&a);
+        assert_eq!(d.data(), &[9., 18., 27.]);
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        let a = Tensor::from_vec(&[2, 2], vec![3., 0., 0., 4.]);
+        assert!((a.norm() - 5.0).abs() < 1e-9);
+        assert!((a.norm_l1() - 7.0).abs() < 1e-9);
+        let b = Tensor::full(&[2, 2], 1.0);
+        assert!((a.dot(&b) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]).reshape(&[2, 2]);
+        assert_eq!(t.at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        assert!(!a.allclose(&b, 0.0, 1e-8));
+    }
+}

@@ -1,0 +1,137 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Benches are plain binaries (`harness = false`) that call
+//! [`BenchRunner::bench`] per case and print a criterion-style summary.
+//! Warmup iterations are run first, then the measured phase is repeated
+//! until both a minimum iteration count and minimum elapsed time are hit,
+//! so fast and slow cases are both measured meaningfully.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Configuration for one benchmark runner.
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+    results: Vec<(String, Summary)>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            min_time: Duration::from_millis(300),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Runner that measures each case exactly `n` times (for very heavy
+    /// one-shot cases like a full SVD).
+    pub fn once(n: usize) -> Self {
+        BenchRunner {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: n.max(1),
+            min_time: Duration::from_millis(0),
+            ..Default::default()
+        }
+    }
+
+    /// Quick-mode runner for heavy end-to-end cases.
+    pub fn heavy() -> Self {
+        BenchRunner {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(200),
+            ..Default::default()
+        }
+    }
+
+    /// Measure `f`, print a summary line, and record it.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3); // ms
+            let enough_iters = samples.len() >= self.min_iters;
+            let enough_time = start.elapsed() >= self.min_time;
+            if (enough_iters && enough_time) || samples.len() >= self.max_iters {
+                break;
+            }
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "bench {name:<44} {:>10.4} ms/iter  (±{:.4}, n={}, p95={:.4})",
+            s.mean, s.std, s.n, s.p95
+        );
+        self.results.push((name.to_string(), s));
+        s
+    }
+
+    /// All recorded results, in execution order.
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut r = BenchRunner {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            min_time: Duration::from_millis(0),
+            results: Vec::new(),
+        };
+        let mut count = 0usize;
+        let s = r.bench("noop", || {
+            count += 1;
+            black_box(count);
+        });
+        assert!(s.n >= 3);
+        assert_eq!(r.results().len(), 1);
+        // warmup + measured
+        assert!(count >= 4);
+    }
+
+    #[test]
+    fn max_iters_caps_fast_cases() {
+        let mut r = BenchRunner {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 7,
+            min_time: Duration::from_secs(3600),
+            results: Vec::new(),
+        };
+        let s = r.bench("fast", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.n, 7);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments. Used by the `powersgd` binary and by every example.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (argv[0] must already be stripped).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed lookup with default; panics with a readable message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name}={v}: invalid value ({e:?})")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--rank", "4", "--workers=16"]);
+        assert_eq!(a.get("rank"), Some("4"));
+        assert_eq!(a.get("workers"), Some("16"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["train", "--verbose", "--rank", "2", "extra"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.positional(), &["train".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--rank", "4"]);
+        assert_eq!(a.get_parsed_or("rank", 1usize), 4);
+        assert_eq!(a.get_parsed_or("workers", 16usize), 16);
+        assert!((a.get_parsed_or("lr", 0.1f64) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse(&["--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn malformed_typed_value_panics() {
+        let a = parse(&["--rank", "banana"]);
+        let _: usize = a.get_parsed_or("rank", 1);
+    }
+}

@@ -1,0 +1,43 @@
+//! Shared utilities: RNG, CLI parsing, statistics, bench harness, tables.
+//!
+//! Everything here is hand-rolled because the offline build environment
+//! only vendors the `xla` crate's dependency closure (no rand / clap /
+//! criterion). See DESIGN.md §2 "Offline-environment deviations".
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use bench::{black_box, BenchRunner};
+pub use cli::Args;
+pub use rng::Rng;
+pub use table::Table;
+
+/// Format a byte count the way the paper does (MB with 0 or 1 decimals).
+pub fn fmt_mb(bytes: f64) -> String {
+    let mb = bytes / 1e6;
+    if mb >= 100.0 {
+        format!("{mb:.0} MB")
+    } else {
+        format!("{mb:.1} MB")
+    }
+}
+
+/// Format milliseconds like the paper's "time per batch" column.
+pub fn fmt_ms(ms: f64) -> String {
+    format!("{ms:.0} ms")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_mb(1023.0e6), "1023 MB");
+        assert_eq!(fmt_mb(8.0e6), "8.0 MB");
+        assert_eq!(fmt_ms(312.4), "312 ms");
+    }
+}

@@ -1,0 +1,85 @@
+//! Integration: collectives + cost model against closed-form expectations.
+
+use powersgd::collectives::{
+    all_gather, all_reduce_mean, ring_all_reduce_sum, CollKind, CommLog,
+};
+use powersgd::net::{backend_by_name, GLOO, NCCL};
+use powersgd::util::Rng;
+
+#[test]
+fn ring_all_reduce_large_buffers_many_workers() {
+    let mut rng = Rng::new(31);
+    for &w in &[2usize, 5, 16, 32] {
+        let n = 10_007; // prime: chunk boundaries never align
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut expect = vec![0.0f64; n];
+        for b in &bufs {
+            for (e, v) in expect.iter_mut().zip(b) {
+                *e += *v as f64;
+            }
+        }
+        let mut got = bufs.clone();
+        ring_all_reduce_sum(&mut got);
+        for b in &got {
+            for (g, e) in b.iter().zip(&expect) {
+                assert!((*g as f64 - e).abs() < 1e-3 * e.abs().max(1.0));
+            }
+        }
+    }
+}
+
+#[test]
+fn commlog_prices_consistently_across_backends() {
+    let mut log = CommLog::default();
+    let mut bufs = vec![vec![0.5f32; 1000]; 4];
+    all_reduce_mean(&mut bufs, &mut log);
+    let msgs = vec![vec![1.0f32; 250]; 4];
+    let _ = all_gather(&msgs, &mut log);
+
+    let t_nccl = NCCL.time_ops(&log.ops, 4);
+    let t_gloo = GLOO.time_ops(&log.ops, 4);
+    assert!(t_gloo > t_nccl);
+    // decomposes to the two ops
+    let t_parts = NCCL.time(CollKind::AllReduce, 4000, 4) + NCCL.time(CollKind::AllGather, 1000, 4);
+    assert!((t_nccl - t_parts).abs() < 1e-12);
+}
+
+#[test]
+fn allreduce_beats_gather_for_large_messages_many_workers() {
+    // §3's O(log W) vs O(W) claim at the paper's gradient sizes.
+    let bytes = 43_000_000;
+    for &w in &[4usize, 8, 16, 32] {
+        let red = NCCL.time(CollKind::AllReduce, bytes, w);
+        let gat = NCCL.time(CollKind::AllGather, bytes, w);
+        assert!(gat > red, "W={w}: gather {gat} must exceed reduce {red}");
+    }
+    // and the gap widens with W
+    let gap8 = NCCL.time(CollKind::AllGather, bytes, 8) / NCCL.time(CollKind::AllReduce, bytes, 8);
+    let gap32 =
+        NCCL.time(CollKind::AllGather, bytes, 32) / NCCL.time(CollKind::AllReduce, bytes, 32);
+    assert!(gap32 > gap8);
+}
+
+#[test]
+fn backend_lookup_and_appendix_b_ordering() {
+    let nccl = backend_by_name("nccl").unwrap();
+    let gloo = backend_by_name("gloo").unwrap();
+    // Appendix B: GLOO collectives are slower at every size measured.
+    for bytes in [1_000u64, 100_000, 10_000_000, 100_000_000] {
+        for kind in [CollKind::AllReduce, CollKind::AllGather, CollKind::ReduceBroadcast] {
+            assert!(gloo.time(kind, bytes, 16) > nccl.time(kind, bytes, 16));
+        }
+    }
+}
+
+#[test]
+fn parameter_server_double_cost() {
+    // §3: PS "double compression" — reduce+broadcast costs ≈ 2× the
+    // one-way volume; at large sizes PS ≥ all-reduce.
+    let bytes = 10_000_000;
+    let ps = NCCL.time(CollKind::ReduceBroadcast, bytes, 16);
+    let ar = NCCL.time(CollKind::AllReduce, bytes, 16);
+    assert!(ps > ar);
+}

@@ -1,0 +1,165 @@
+//! Integration: the full compressor matrix driving EF-SGD on a common
+//! synthetic objective, checking convergence behaviour, byte accounting
+//! and aggregation-kind claims across all nine operators (paper Table 4).
+
+use powersgd::collectives::CommLog;
+use powersgd::compress::*;
+use powersgd::grad::ParamRegistry;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule};
+use powersgd::tensor::Tensor;
+use powersgd::util::Rng;
+
+fn registry() -> ParamRegistry {
+    ParamRegistry::from_shapes(&[("w", vec![24, 16]), ("b", vec![8])])
+}
+
+fn quad_grads(x: &[Tensor], w: usize, noise: f32, rng: &mut Rng) -> Vec<Vec<Tensor>> {
+    (0..w)
+        .map(|_| {
+            x.iter()
+                .map(|t| {
+                    let mut g = t.clone();
+                    let mut nz = Tensor::zeros(t.shape());
+                    rng.fill_normal(nz.data_mut(), noise);
+                    g.axpy(1.0, &nz);
+                    g
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn train_quadratic(mut opt: Box<dyn DistOptimizer>, steps: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![Tensor::full(&[24, 16], 1.0), Tensor::full(&[8], -1.0)];
+    let mut log = CommLog::default();
+    for step in 0..steps {
+        let grads = quad_grads(&x, 4, 0.02, &mut rng);
+        let delta = opt.step(&grads, step, &mut log);
+        for (xi, di) in x.iter_mut().zip(delta.iter()) {
+            xi.axpy(-1.0, di);
+        }
+    }
+    x.iter().map(|t| t.norm()).sum()
+}
+
+fn all_compressors(seed: u64) -> Vec<Box<dyn Compressor>> {
+    vec![
+        Box::new(NoCompression::new()),
+        Box::new(PowerSgd::new(2, seed)),
+        Box::new(PowerSgd::new(2, seed).without_warm_start()),
+        Box::new(BestRankR::new(2, seed)),
+        Box::new(UnbiasedRank::new(2, seed)),
+        Box::new(RandomBlock::new(2, seed)),
+        Box::new(RandomK::new(2, seed)),
+        Box::new(TopK::new(2)),
+        Box::new(SignNorm::new()),
+        Box::new(Signum::new()),
+        Box::new(Atomo::new(2, seed)),
+    ]
+}
+
+#[test]
+fn every_biased_compressor_with_ef_converges_on_quadratic() {
+    // Signum's ±1 output cannot settle on a quadratic with plain EF-SGD
+    // (it has its own optimizer), and the high-variance Unbiased Rank
+    // scheme diverges under heavy momentum — exactly the pathology
+    // Table 1 documents (71.2% vs 93.6% test accuracy). Both are
+    // exercised in their paper-faithful configurations elsewhere.
+    for comp in all_compressors(7) {
+        let name = comp.name();
+        if name == "Signum" || name.starts_with("Unbiased") || name.starts_with("Atomo") {
+            // Atomo is likewise unbiased and run without EF in the paper
+            // (Appendix G.6, its own tuned learning rate).
+            continue;
+        }
+        let opt = Box::new(EfSgd::new(comp, LrSchedule::constant(0.02), 0.5));
+        let final_norm = train_quadratic(opt, 800, 11);
+        assert!(final_norm < 0.5, "{name} failed to converge: |x| = {final_norm}");
+    }
+}
+
+#[test]
+fn byte_accounting_matches_closed_form_for_all() {
+    let reg = registry();
+    let mut rng = Rng::new(13);
+    let updates: Vec<Vec<Tensor>> = (0..3)
+        .map(|_| {
+            vec![
+                {
+                    let mut t = Tensor::zeros(&[24, 16]);
+                    rng.fill_normal(t.data_mut(), 1.0);
+                    t
+                },
+                {
+                    let mut t = Tensor::zeros(&[8]);
+                    rng.fill_normal(t.data_mut(), 1.0);
+                    t
+                },
+            ]
+        })
+        .collect();
+    for mut comp in all_compressors(17) {
+        let mut log = CommLog::default();
+        comp.compress_aggregate(&updates, &mut log);
+        assert_eq!(
+            log.bytes_sent(),
+            comp.message_bytes(&reg),
+            "byte mismatch for {}",
+            comp.name()
+        );
+    }
+}
+
+#[test]
+fn aggregation_kind_matches_table4() {
+    // Table 4's "All-reduce" column.
+    let yes = ["No compression", "Rank 2", "Unbiased Rank 2"];
+    for comp in all_compressors(19) {
+        let name = comp.name();
+        let expect = yes.iter().any(|y| name.starts_with(y))
+            || name.starts_with("Random")
+            || name.starts_with("Best rank");
+        assert_eq!(comp.supports_all_reduce(), expect, "{name}");
+    }
+}
+
+#[test]
+fn compression_ratios_match_paper_scale() {
+    // Rank-r PowerSGD on the ResNet18 profile compresses > 100× (paper:
+    // 243/r ×); sign-based ≈ 32×.
+    let p = powersgd::profiles::resnet18();
+    let full = p.registry.total_bytes() as f64;
+    let r2 = PowerSgd::new(2, 0).message_bytes(&p.registry) as f64;
+    assert!(full / r2 > 100.0, "rank-2 ratio {}", full / r2);
+    let sign = SignNorm::new().message_bytes(&p.registry) as f64;
+    let ratio = full / sign;
+    assert!((25.0..35.0).contains(&ratio), "sign ratio {ratio}");
+}
+
+#[test]
+fn warm_start_beats_cold_on_slow_moving_objective() {
+    // Table 2's mechanism: on a slowly-varying gradient sequence the
+    // warm-started approximation tracks the dominant subspace better.
+    let mut rng = Rng::new(23);
+    let mut base = Tensor::zeros(&[30, 20]);
+    rng.fill_normal(base.data_mut(), 1.0);
+
+    let mut warm = PowerSgd::new(1, 5);
+    let mut cold = PowerSgd::new(1, 5).without_warm_start();
+    let mut log = CommLog::default();
+    let (mut err_warm, mut err_cold) = (0.0, 0.0);
+    for _ in 0..30 {
+        // slow drift
+        let mut drift = Tensor::zeros(&[30, 20]);
+        rng.fill_normal(drift.data_mut(), 0.02);
+        base.axpy(1.0, &drift);
+        let updates = vec![vec![base.clone()]];
+        err_warm += base.sub(&warm.compress_aggregate(&updates, &mut log).mean[0]).norm();
+        err_cold += base.sub(&cold.compress_aggregate(&updates, &mut log).mean[0]).norm();
+    }
+    assert!(
+        err_warm < err_cold,
+        "warm {err_warm} should beat cold {err_cold}"
+    );
+}

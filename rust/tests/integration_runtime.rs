@@ -1,0 +1,134 @@
+//! Integration: PJRT runtime over real artifacts, including the
+//! Rust-native vs XLA-Pallas differential test for PowerSGD.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use powersgd::linalg::gram_schmidt_in_place;
+use powersgd::runtime::{Runtime, Value};
+use powersgd::tensor::{matmul, matmul_at_b, Tensor};
+use powersgd::util::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("mlp_train.manifest").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+#[test]
+fn mlp_train_artifact_runs_and_matches_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let art = rt.load("mlp_train").unwrap();
+    let m = &art.manifest;
+    assert_eq!(m.params.len(), 4);
+    let mut rng = Rng::new(41);
+    let mut inputs: Vec<Value> = Vec::new();
+    for spec in &m.inputs {
+        match spec.dtype {
+            powersgd::runtime::DType::F32 => {
+                inputs.push(Value::F32(rand_tensor(&spec.shape, &mut rng)))
+            }
+            powersgd::runtime::DType::I32 => {
+                let n: usize = spec.shape.iter().product();
+                inputs.push(Value::I32(
+                    spec.shape.clone(),
+                    (0..n).map(|i| (i % 10) as i32).collect(),
+                ));
+            }
+        }
+    }
+    let outs = art.execute(&inputs).unwrap();
+    assert_eq!(outs.len(), m.outputs.len());
+    // grads have param shapes
+    for (g, p) in outs[1..].iter().zip(m.param_specs()) {
+        assert_eq!(g.shape(), &p.shape[..]);
+    }
+    assert!(outs[0].data()[0].is_finite());
+}
+
+#[test]
+fn artifact_shape_validation_rejects_bad_input() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let art = rt.load("mlp_train").unwrap();
+    let bad = vec![Value::F32(Tensor::zeros(&[1]))];
+    assert!(art.execute(&bad).is_err());
+}
+
+#[test]
+fn runtime_caches_compiled_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let a = rt.load("mlp_eval").unwrap();
+    let b = rt.load("mlp_eval").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert!(rt.available().contains(&"mlp_train".to_string()));
+}
+
+/// Differential test: the XLA/Pallas compression artifacts must agree
+/// with the Rust-native PowerSGD math on the same inputs.
+#[test]
+fn pallas_artifacts_match_native_powersgd() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !std::path::Path::new(&dir).join("powersgd_stage1_16x10_r2.manifest").exists() {
+        eprintln!("SKIP: powersgd kernel artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let (n, m, r) = (16usize, 10usize, 2usize);
+    let mut rng = Rng::new(43);
+    let m_mat = rand_tensor(&[n, m], &mut rng);
+    let q0 = rand_tensor(&[m, r], &mut rng);
+
+    // stage 1: P = M·Q
+    let s1 = rt.load("powersgd_stage1_16x10_r2").unwrap();
+    let p_xla = &s1.execute(&[m_mat.clone().into(), q0.clone().into()]).unwrap()[0];
+    let p_native = matmul(&m_mat, &q0);
+    assert!(
+        p_xla.allclose(&p_native, 1e-4, 1e-4),
+        "stage1 diff {}",
+        p_xla.max_abs_diff(&p_native)
+    );
+
+    // stage 2: P̂ = GS(P); Q = Mᵀ·P̂
+    let s2 = rt.load("powersgd_stage2_16x10_r2").unwrap();
+    let outs = s2.execute(&[m_mat.clone().into(), p_native.clone().into()]).unwrap();
+    let mut p_hat_native = p_native.clone();
+    gram_schmidt_in_place(&mut p_hat_native);
+    // Gram–Schmidt sign conventions agree (both normalize without flips).
+    assert!(
+        outs[0].allclose(&p_hat_native, 2e-3, 2e-3),
+        "p_hat diff {}",
+        outs[0].max_abs_diff(&p_hat_native)
+    );
+    let q_native = matmul_at_b(&m_mat, &p_hat_native);
+    assert!(
+        outs[1].allclose(&q_native, 2e-3, 2e-3),
+        "q diff {}",
+        outs[1].max_abs_diff(&q_native)
+    );
+
+    // decompress: M̂ = P̂Qᵀ; e = Δ − M̂
+    let dec = rt.load("powersgd_decompress_16x10_r2").unwrap();
+    let outs = dec
+        .execute(&[
+            p_hat_native.clone().into(),
+            q_native.clone().into(),
+            m_mat.clone().into(),
+        ])
+        .unwrap();
+    let m_hat_native = matmul(&p_hat_native, &q_native.transpose());
+    let err_native = m_mat.sub(&m_hat_native);
+    assert!(outs[0].allclose(&m_hat_native, 1e-3, 1e-3));
+    assert!(outs[1].allclose(&err_native, 1e-3, 1e-3));
+}

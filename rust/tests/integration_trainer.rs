@@ -1,0 +1,169 @@
+//! Integration: the full coordinator over real PJRT artifacts.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use powersgd::compress::PowerSgd;
+use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
+use powersgd::data::{Classification, LmCorpus};
+use powersgd::optim::{EfSgd, LrSchedule, Sgd};
+use powersgd::runtime::Runtime;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("mlp_train.manifest").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+fn mlp_trainer(dir: &str, opt: Box<dyn powersgd::optim::DistOptimizer>, workers: usize) -> Trainer {
+    let mut rt = Runtime::cpu(dir).unwrap();
+    let train = rt.load("mlp_train").unwrap();
+    let eval = rt.load("mlp_eval").unwrap();
+    let cfg = TrainerConfig {
+        workers,
+        eval_every: 0,
+        eval_kind: EvalKind::Accuracy,
+        ..Default::default()
+    };
+    Trainer::new(train, Some(eval), opt, cfg).unwrap()
+}
+
+#[test]
+fn mlp_powersgd_trains_to_high_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let opt = Box::new(EfSgd::new(
+        Box::new(PowerSgd::new(2, 1)),
+        LrSchedule::constant(0.08),
+        0.9,
+    ));
+    let mut trainer = mlp_trainer(&dir, opt, 4);
+    let mut data = Classification::new(64, 10, 32, 4, 42);
+    trainer.train(&mut data, 250).unwrap();
+    let acc = trainer.evaluate(&mut data).unwrap();
+    assert!(acc > 75.0, "accuracy {acc}");
+    // communication volume: rank-2 message ≪ full gradient
+    let per_step = trainer.metrics.total_bytes() / 250;
+    assert!(per_step < trainer.registry().total_bytes() / 5, "{per_step}");
+}
+
+#[test]
+fn sgd_baseline_trains_and_sends_full_gradients() {
+    let Some(dir) = artifacts_dir() else { return };
+    let opt = Box::new(Sgd::new(LrSchedule::constant(0.08), 0.9));
+    let mut trainer = mlp_trainer(&dir, opt, 2);
+    let mut data = Classification::new(64, 10, 32, 2, 42);
+    trainer.train(&mut data, 200).unwrap();
+    let acc = trainer.evaluate(&mut data).unwrap();
+    assert!(acc > 75.0, "accuracy {acc}");
+    assert_eq!(
+        trainer.metrics.total_bytes() / 200,
+        trainer.registry().total_bytes()
+    );
+}
+
+#[test]
+fn error_feedback_ablation_orders_correctly() {
+    // Fig. 7 (Appendix E): PowerSGD without error feedback does not
+    // converge to a good accuracy — the rank-1 approximation permanently
+    // discards the orthogonal complement of every gradient.
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |ef: bool| {
+        let inner = Box::new(PowerSgd::new(1, 3));
+        let mut opt = EfSgd::new(inner, LrSchedule::constant(0.08), 0.9);
+        if !ef {
+            opt = opt.without_error_feedback();
+        }
+        let mut trainer = mlp_trainer(&dir, Box::new(opt), 2);
+        let mut data = Classification::new(64, 10, 32, 2, 7);
+        trainer.train(&mut data, 300).unwrap();
+        trainer.evaluate(&mut data).unwrap()
+    };
+    let with_ef = run(true);
+    let without_ef = run(false);
+    assert!(
+        with_ef > without_ef + 5.0,
+        "EF {with_ef}% must beat no-EF {without_ef}% clearly"
+    );
+}
+
+#[test]
+fn lstm_perplexity_drops() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let train = rt.load("lstm_train").unwrap();
+    let eval = rt.load("lstm_eval").unwrap();
+    let opt = Box::new(EfSgd::new(
+        Box::new(PowerSgd::new(4, 2)),
+        LrSchedule::constant(0.5),
+        0.9,
+    ));
+    let cfg = TrainerConfig {
+        workers: 2,
+        eval_kind: EvalKind::Perplexity,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(train, Some(eval), opt, cfg).unwrap();
+    let mut data = LmCorpus::new(1000, 8, 32, 2, 5);
+    let ppl0 = trainer.evaluate(&mut data).unwrap();
+    trainer.train(&mut data, 60).unwrap();
+    let ppl1 = trainer.evaluate(&mut data).unwrap();
+    assert!(
+        ppl1 < ppl0 * 0.7,
+        "perplexity should drop substantially: {ppl0} -> {ppl1}"
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = || {
+        let opt = Box::new(EfSgd::new(
+            Box::new(PowerSgd::new(2, 1)),
+            LrSchedule::constant(0.05),
+            0.9,
+        ));
+        let mut trainer = mlp_trainer(&dir, opt, 2);
+        let mut data = Classification::new(64, 10, 32, 2, 9);
+        trainer.train(&mut data, 20).unwrap();
+        trainer.metrics.mean_loss_last(5)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must reproduce the loss trajectory");
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let opt = Box::new(EfSgd::new(
+        Box::new(PowerSgd::new(2, 1)),
+        LrSchedule::constant(0.05),
+        0.9,
+    ));
+    let mut trainer = mlp_trainer(&dir, opt, 2);
+    let mut data = Classification::new(64, 10, 32, 2, 13);
+    trainer.train(&mut data, 30).unwrap();
+    let ckpt = std::env::temp_dir().join("powersgd_trainer_ckpt.bin");
+    trainer.save_checkpoint(&ckpt).unwrap();
+    let params_before = trainer.params.clone();
+
+    // fresh trainer with a different seed -> different init; restore
+    let opt2 = Box::new(EfSgd::new(
+        Box::new(PowerSgd::new(2, 1)),
+        LrSchedule::constant(0.05),
+        0.9,
+    ));
+    let mut rt = Runtime::cpu(&dir).unwrap();
+    let train = rt.load("mlp_train").unwrap();
+    let eval = rt.load("mlp_eval").unwrap();
+    let cfg = TrainerConfig { workers: 2, seed: 999, ..Default::default() };
+    let mut restored = Trainer::new(train, Some(eval), opt2, cfg).unwrap();
+    assert!(restored.params[0].max_abs_diff(&params_before[0]) > 1e-4);
+    restored.load_checkpoint(&ckpt).unwrap();
+    for (a, b) in restored.params.iter().zip(params_before.iter()) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_file(ckpt).ok();
+}

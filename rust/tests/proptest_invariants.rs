@@ -1,0 +1,236 @@
+//! Property-based tests over the coordinator's core invariants.
+//!
+//! No proptest crate offline — properties are checked over seeded random
+//! sweeps (many shapes × worker counts × ranks per property), which is
+//! what proptest would generate, minus shrinking.
+
+use powersgd::collectives::{ring_all_reduce_sum, CommLog};
+use powersgd::compress::{Compressor, Locals, PowerSgd, RandomK, SignNorm, TopK, UnbiasedRank};
+use powersgd::grad::ParamRegistry;
+use powersgd::linalg::{gram_schmidt_in_place, orthonormal_error, svd};
+use powersgd::tensor::{matmul, Tensor};
+use powersgd::util::Rng;
+
+fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+fn rand_dims(rng: &mut Rng) -> (usize, usize, usize) {
+    let n = 2 + rng.below(40) as usize;
+    let m = 2 + rng.below(40) as usize;
+    let r = 1 + rng.below(4.min(n.min(m) as u64)) as usize;
+    (n, m, r)
+}
+
+/// Property: PowerSGD linearity (Lemma 3) — compress+aggregate over W
+/// workers equals compressing the mean update, for random shapes/W.
+#[test]
+fn prop_powersgd_linearity() {
+    let mut rng = Rng::new(101);
+    for case in 0..25 {
+        let (n, m, r) = rand_dims(&mut rng);
+        let w = 1 + rng.below(8) as usize;
+        let updates: Vec<Vec<Tensor>> =
+            (0..w).map(|_| vec![rand_tensor(&[n, m], &mut rng)]).collect();
+        let mut mean = Tensor::zeros(&[n, m]);
+        for wu in &updates {
+            mean.axpy(1.0 / w as f32, &wu[0]);
+        }
+        let mut multi = PowerSgd::new(r, case);
+        let mut single = PowerSgd::new(r, case);
+        let mut log = CommLog::default();
+        let a = multi.compress_aggregate(&updates, &mut log);
+        let b = single.compress_aggregate(&[vec![mean]], &mut log);
+        assert!(
+            a.mean[0].allclose(&b.mean[0], 1e-2, 1e-3),
+            "case {case} (n={n} m={m} r={r} w={w}): diff {}",
+            a.mean[0].max_abs_diff(&b.mean[0])
+        );
+    }
+}
+
+/// Property: unbiased rank-r is linear too.
+#[test]
+fn prop_unbiased_linearity() {
+    let mut rng = Rng::new(102);
+    for case in 0..15 {
+        let (n, m, r) = rand_dims(&mut rng);
+        let w = 1 + rng.below(5) as usize;
+        let updates: Vec<Vec<Tensor>> =
+            (0..w).map(|_| vec![rand_tensor(&[n, m], &mut rng)]).collect();
+        let mut mean = Tensor::zeros(&[n, m]);
+        for wu in &updates {
+            mean.axpy(1.0 / w as f32, &wu[0]);
+        }
+        let mut multi = UnbiasedRank::new(r, case);
+        let mut single = UnbiasedRank::new(r, case);
+        let mut log = CommLog::default();
+        let a = multi.compress_aggregate(&updates, &mut log);
+        let b = single.compress_aggregate(&[vec![mean]], &mut log);
+        assert!(a.mean[0].allclose(&b.mean[0], 1e-2, 1e-3), "case {case}");
+    }
+}
+
+/// Property: ring all-reduce == naive sum for arbitrary W and lengths,
+/// including lengths smaller than W.
+#[test]
+fn prop_ring_allreduce_equals_naive() {
+    let mut rng = Rng::new(103);
+    for _ in 0..40 {
+        let w = 1 + rng.below(12) as usize;
+        let n = 1 + rng.below(300) as usize;
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut expect = vec![0.0f32; n];
+        for b in &bufs {
+            for (e, v) in expect.iter_mut().zip(b) {
+                *e += v;
+            }
+        }
+        let mut got = bufs.clone();
+        ring_all_reduce_sum(&mut got);
+        for b in &got {
+            for (g, e) in b.iter().zip(&expect) {
+                assert!((g - e).abs() <= 1e-4 * e.abs().max(1.0), "w={w} n={n}");
+            }
+        }
+    }
+}
+
+/// Property: EF memory identity — for per-worker compressors, the local
+/// reconstruction plus the retained error reproduces the worker's update
+/// exactly.
+#[test]
+fn prop_error_feedback_identity() {
+    let mut rng = Rng::new(104);
+    for case in 0..15 {
+        let (n, m, r) = rand_dims(&mut rng);
+        let w = 2 + rng.below(4) as usize;
+        let updates: Vec<Vec<Tensor>> =
+            (0..w).map(|_| vec![rand_tensor(&[n, m], &mut rng)]).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(RandomK::new(r, case)),
+            Box::new(TopK::new(r)),
+            Box::new(SignNorm::new()),
+        ];
+        for mut comp in comps {
+            let mut log = CommLog::default();
+            let agg = comp.compress_aggregate(&updates, &mut log);
+            if let Locals::PerWorker(ref locals) = agg.locals {
+                for (wu, lw) in updates.iter().zip(locals.iter()) {
+                    let err = wu[0].sub(&lw[0]);
+                    let recon = err.add(&lw[0]);
+                    assert!(
+                        recon.allclose(&wu[0], 1e-5, 1e-5),
+                        "{} case {case}",
+                        comp.name()
+                    );
+                }
+            } else {
+                panic!("{} should produce per-worker locals", comp.name());
+            }
+        }
+    }
+}
+
+/// Property: Gram–Schmidt output is orthonormal and spans the input.
+#[test]
+fn prop_gram_schmidt_orthonormal() {
+    let mut rng = Rng::new(105);
+    for _ in 0..30 {
+        let n = 2 + rng.below(200) as usize;
+        let r = 1 + rng.below(6.min(n as u64)) as usize;
+        let mut p = rand_tensor(&[n, r], &mut rng);
+        let orig = p.clone();
+        gram_schmidt_in_place(&mut p);
+        assert!(orthonormal_error(&p) < 1e-3, "n={n} r={r}");
+        // span preserved: orig = P (Pᵀ orig) exactly for full-rank input
+        let coeffs = powersgd::tensor::matmul_at_b(&p, &orig);
+        let recon = matmul(&p, &coeffs);
+        assert!(
+            recon.allclose(&orig, 5e-2, 5e-2),
+            "span lost: diff {}",
+            recon.max_abs_diff(&orig)
+        );
+    }
+}
+
+/// Property: SVD reconstructs and is ordered, on random rectangles.
+#[test]
+fn prop_svd_reconstruction() {
+    let mut rng = Rng::new(106);
+    for _ in 0..20 {
+        let n = 2 + rng.below(24) as usize;
+        let m = 2 + rng.below(24) as usize;
+        let a = rand_tensor(&[n, m], &mut rng);
+        let d = svd(&a);
+        let rec = d.reconstruct(n.min(m));
+        assert!(
+            rec.allclose(&a, 5e-3, 5e-3),
+            "n={n} m={m} diff {}",
+            rec.max_abs_diff(&a)
+        );
+        for wpair in d.s.windows(2) {
+            assert!(wpair[0] >= wpair[1] - 1e-5);
+        }
+    }
+}
+
+/// Property: byte accounting equals the closed-form message size for
+/// every compressor on random registries.
+#[test]
+fn prop_bytes_match_closed_form() {
+    let mut rng = Rng::new(107);
+    for case in 0..10 {
+        let (n, m, r) = rand_dims(&mut rng);
+        let vlen = 1 + rng.below(16) as usize;
+        let reg = ParamRegistry::from_shapes(&[("w", vec![n, m]), ("b", vec![vlen])]);
+        let w = 2 + rng.below(4) as usize;
+        let updates: Vec<Vec<Tensor>> = (0..w)
+            .map(|_| vec![rand_tensor(&[n, m], &mut rng), rand_tensor(&[vlen], &mut rng)])
+            .collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(PowerSgd::new(r, case)),
+            Box::new(UnbiasedRank::new(r, case)),
+            Box::new(RandomK::new(r, case)),
+            Box::new(TopK::new(r)),
+            Box::new(SignNorm::new()),
+        ];
+        for mut comp in comps {
+            let mut log = CommLog::default();
+            comp.compress_aggregate(&updates, &mut log);
+            assert_eq!(
+                log.bytes_sent(),
+                comp.message_bytes(&reg),
+                "{} case {case} (n={n} m={m} r={r})",
+                comp.name()
+            );
+        }
+    }
+}
+
+/// Property: PowerSGD output rank never exceeds r.
+#[test]
+fn prop_powersgd_output_rank_bounded() {
+    let mut rng = Rng::new(108);
+    for case in 0..10 {
+        let (n, m, r) = rand_dims(&mut rng);
+        if r >= n.min(m) {
+            continue;
+        }
+        let updates = vec![vec![rand_tensor(&[n, m], &mut rng)]];
+        let mut comp = PowerSgd::new(r, case);
+        let mut log = CommLog::default();
+        let out = comp.compress_aggregate(&updates, &mut log).mean[0].clone();
+        let d = svd(&out);
+        let tail = d.s[r];
+        assert!(
+            tail < 1e-3 * d.s[0].max(1e-9),
+            "case {case}: rank leak, sv[{r}]={tail} vs sv[0]={}",
+            d.s[0]
+        );
+    }
+}
