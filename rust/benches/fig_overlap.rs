@@ -1,0 +1,80 @@
+//! Comm/compute overlap on the threaded engine: simulated step time for
+//! bucketed, overlapped collectives vs. the sequential (no-overlap)
+//! schedule — the system-level effect Agarwal et al. and Zhang et al.
+//! show dominates end-to-end speedup (PAPERS.md).
+//!
+//! Companion to `fig3_scaling`: same α–β cluster, but the schedule now
+//! matters. PowerSGD rank 2 with 4 MB buckets must beat its no-overlap
+//! configuration at every W — and overlap also helps plain SGD, which
+//! shrinks (but does not erase) compression's edge.
+
+use powersgd::net::{GLOO, NCCL};
+use powersgd::profiles::resnet18;
+use powersgd::simulate::{simulate_step_overlapped, Scheme};
+use powersgd::transport::Cluster;
+use powersgd::util::Table;
+
+const BUCKET_BYTES: u64 = 4 << 20; // DDP-ish 4 MB buckets
+
+fn main() {
+    let prof = resnet18();
+    let schemes = [Scheme::Sgd, Scheme::PowerSgd { rank: 2 }, Scheme::SignNorm];
+
+    for backend in [NCCL, GLOO] {
+        for scheme in schemes {
+            let mut table = Table::new(
+                &format!(
+                    "Overlap — {} on {}, 4 MB buckets ({})",
+                    scheme.name(),
+                    prof.name,
+                    backend.name
+                ),
+                &["Workers", "No overlap", "Overlapped", "Comm exposed", "Saved"],
+            );
+            for w in [4usize, 8, 16] {
+                let cluster = Cluster::uniform(w, &backend);
+                let seq = simulate_step_overlapped(&prof, scheme, &cluster, BUCKET_BYTES, false);
+                let ovl = simulate_step_overlapped(&prof, scheme, &cluster, BUCKET_BYTES, true);
+                assert!(
+                    ovl.total < seq.total,
+                    "{} W={w}: overlapped {:.1} ms !< sequential {:.1} ms",
+                    scheme.name(),
+                    ovl.total * 1e3,
+                    seq.total * 1e3
+                );
+                table.row(&[
+                    format!("{w}"),
+                    format!("{:.0} ms", seq.total * 1e3),
+                    format!("{:.0} ms", ovl.total * 1e3),
+                    format!("{:.1} ms", ovl.exposed_comm * 1e3),
+                    format!("{:.0}%", 100.0 * (1.0 - ovl.total / seq.total)),
+                ]);
+            }
+            table.print();
+            println!();
+        }
+    }
+
+    // Straggler scenario: one worker 1.5× slower gates every collective;
+    // overlap still hides the network but cannot hide the slow compute.
+    let mut table = Table::new(
+        "Straggler — PowerSGD rank 2, 16 workers, NCCL, 4 MB buckets",
+        &["Slowdown", "No overlap", "Overlapped", "Comm exposed"],
+    );
+    for slowdown in [1.0f64, 1.25, 1.5, 2.0] {
+        let cluster = Cluster::with_straggler(16, &NCCL, slowdown);
+        let scheme = Scheme::PowerSgd { rank: 2 };
+        let seq = simulate_step_overlapped(&prof, scheme, &cluster, BUCKET_BYTES, false);
+        let ovl = simulate_step_overlapped(&prof, scheme, &cluster, BUCKET_BYTES, true);
+        table.row(&[
+            format!("×{slowdown:.2}"),
+            format!("{:.0} ms", seq.total * 1e3),
+            format!("{:.0} ms", ovl.total * 1e3),
+            format!("{:.1} ms", ovl.exposed_comm * 1e3),
+        ]);
+    }
+    table.print();
+    println!();
+    println!("shape: overlap strictly beats no-overlap at every W (asserted);");
+    println!("it helps SGD too — compression's edge shrinks but survives on GLOO.");
+}

@@ -15,6 +15,16 @@
 //! - parameter-server (reduce + broadcast) is priced by the cost model
 //!   for comparison (Appendix B) but all algorithms in the paper's main
 //!   experiments use one of the two above.
+//!
+//! Every collective here dispatches on the process-wide engine
+//! ([`crate::transport::engine`]): `Lockstep` runs the sequential
+//! reference implementation on the caller's thread, `Threaded` runs the
+//! channel-based ring in [`crate::transport`] with one OS thread per
+//! worker. Both produce bitwise-identical results (the lockstep path is
+//! the oracle the threaded engine is tested against), so the switch
+//! never changes training trajectories.
+
+use std::sync::Arc;
 
 /// What kind of collective an operation used.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,8 +71,20 @@ impl CommLog {
 /// steps. Real chunked data movement; O(2·(W−1)/W · N) values moved per
 /// worker — the ring's bandwidth term.
 pub fn ring_all_reduce_sum(buffers: &mut [Vec<f32>]) {
+    if crate::transport::engine() == crate::transport::EngineKind::Threaded {
+        crate::transport::ring_all_reduce_sum_threaded(buffers);
+        return;
+    }
+    ring_all_reduce_sum_lockstep(buffers);
+}
+
+/// The sequential reference implementation of [`ring_all_reduce_sum`] —
+/// the correctness oracle for the threaded engine.
+pub(crate) fn ring_all_reduce_sum_lockstep(buffers: &mut [Vec<f32>]) {
     let w = buffers.len();
-    assert!(w > 0);
+    if w == 0 {
+        return;
+    }
     let n = buffers[0].len();
     assert!(buffers.iter().all(|b| b.len() == n), "buffer length mismatch");
     if w == 1 || n == 0 {
@@ -109,7 +131,11 @@ pub fn ring_all_reduce_sum(buffers: &mut [Vec<f32>]) {
 }
 
 /// All-reduce **mean** across per-worker buffers, recording the traffic.
+/// A no-op on an empty worker set (no traffic logged).
 pub fn all_reduce_mean(buffers: &mut [Vec<f32>], log: &mut CommLog) {
+    if buffers.is_empty() {
+        return;
+    }
     let w = buffers.len() as f32;
     let bytes = (buffers[0].len() * 4) as u64;
     ring_all_reduce_sum(buffers);
@@ -121,21 +147,45 @@ pub fn all_reduce_mean(buffers: &mut [Vec<f32>], log: &mut CommLog) {
     log.record(CollKind::AllReduce, bytes);
 }
 
-/// All-gather: returns, for each worker, a copy of every worker's message
-/// (the flattened list, indexable by source worker).
-pub fn all_gather(messages: &[Vec<f32>], log: &mut CommLog) -> Vec<Vec<Vec<f32>>> {
-    let bytes = (messages.first().map(|m| m.len()).unwrap_or(0) * 4) as u64;
+/// Materialize the gathered view on the configured engine. On the
+/// lockstep engine this is a straight copy of the message list; on the
+/// threaded engine the messages really travel the channel ring.
+fn gathered_view<M: Clone + Send + Sync + Default>(messages: &[M]) -> Vec<M> {
+    match crate::transport::engine() {
+        crate::transport::EngineKind::Threaded => {
+            crate::transport::ring_all_gather_threaded(messages)
+        }
+        crate::transport::EngineKind::Lockstep => messages.to_vec(),
+    }
+}
+
+/// All-gather: returns, for each worker, every worker's message (the
+/// flattened list, indexable by source worker). All workers receive
+/// identical views, so one gathered view is built and shared via `Arc` —
+/// decode paths only read it, and this avoids the O(W²) clone of a
+/// per-worker deep copy. `CommLog` accounting is unchanged (the wire
+/// still carries one message per worker). Empty input gathers nothing
+/// and logs nothing.
+pub fn all_gather(messages: &[Vec<f32>], log: &mut CommLog) -> Vec<Arc<Vec<Vec<f32>>>> {
+    if messages.is_empty() {
+        return Vec::new();
+    }
+    let bytes = (messages[0].len() * 4) as u64;
     log.record(CollKind::AllGather, bytes);
-    let view: Vec<Vec<f32>> = messages.to_vec();
-    messages.iter().map(|_| view.clone()).collect()
+    let view = Arc::new(gathered_view(messages));
+    messages.iter().map(|_| Arc::clone(&view)).collect()
 }
 
 /// All-gather for byte-packed messages (sign compression sends bitmaps).
-pub fn all_gather_bytes(messages: &[Vec<u8>], log: &mut CommLog) -> Vec<Vec<Vec<u8>>> {
-    let bytes = messages.first().map(|m| m.len()).unwrap_or(0) as u64;
+/// Same `Arc` sharing and empty-input behavior as [`all_gather`].
+pub fn all_gather_bytes(messages: &[Vec<u8>], log: &mut CommLog) -> Vec<Arc<Vec<Vec<u8>>>> {
+    if messages.is_empty() {
+        return Vec::new();
+    }
+    let bytes = messages[0].len() as u64;
     log.record(CollKind::AllGather, bytes);
-    let view: Vec<Vec<u8>> = messages.to_vec();
-    messages.iter().map(|_| view.clone()).collect()
+    let view = Arc::new(gathered_view(messages));
+    messages.iter().map(|_| Arc::clone(&view)).collect()
 }
 
 #[cfg(test)]
@@ -214,6 +264,34 @@ mod tests {
         let mut bufs = vec![vec![5.0f32, -1.0]];
         ring_all_reduce_sum(&mut bufs);
         assert_eq!(bufs[0], vec![5.0, -1.0]);
+    }
+
+    #[test]
+    fn empty_worker_set_is_a_noop() {
+        // Regression: `buffers[0]` indexing used to panic on empty input.
+        let mut log = CommLog::default();
+        let mut bufs: Vec<Vec<f32>> = Vec::new();
+        all_reduce_mean(&mut bufs, &mut log);
+        ring_all_reduce_sum(&mut bufs);
+        let gathered = all_gather(&[], &mut log);
+        assert!(gathered.is_empty());
+        let gathered_b = all_gather_bytes(&[], &mut log);
+        assert!(gathered_b.is_empty());
+        assert!(log.ops.is_empty(), "empty collectives must not log traffic");
+    }
+
+    #[test]
+    fn all_gather_shares_one_view() {
+        let msgs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut log = CommLog::default();
+        let got = all_gather(&msgs, &mut log);
+        assert_eq!(got.len(), 3);
+        // One gathered view, shared: no O(W²) deep copies.
+        assert!(std::sync::Arc::ptr_eq(&got[0], &got[1]));
+        assert!(std::sync::Arc::ptr_eq(&got[1], &got[2]));
+        assert_eq!(got[2][0], vec![1.0, 2.0]);
+        // Byte accounting unchanged: one per-worker message.
+        assert_eq!(log.bytes_sent(), 8);
     }
 
     #[test]

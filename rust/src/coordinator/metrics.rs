@@ -15,8 +15,14 @@ pub struct StepRecord {
     pub compress_s: f64,
     /// Per-worker bytes transmitted this step.
     pub bytes: u64,
-    /// Simulated network time on the configured backend, seconds.
+    /// Simulated network busy time on the configured cluster, seconds.
     pub sim_comm_s: f64,
+    /// Simulated end-to-end step time (compute + exposed communication;
+    /// the threaded engine overlaps bucketed collectives with backprop),
+    /// seconds. An upper bound: the measured compress time it folds in
+    /// already includes executing the collectives in memory (see
+    /// `Trainer::train_step`).
+    pub sim_step_s: f64,
     pub lr: f64,
 }
 
@@ -73,6 +79,12 @@ impl Metrics {
         stats::mean(&c)
     }
 
+    /// Mean simulated end-to-end step time, seconds.
+    pub fn mean_sim_step(&self) -> f64 {
+        let c: Vec<f64> = self.steps.iter().map(|s| s.sim_step_s).collect();
+        stats::mean(&c)
+    }
+
     /// Render the loss curve as step/loss CSV (for EXPERIMENTS.md).
     pub fn loss_curve_csv(&self, every: usize) -> String {
         let mut out = String::from("step,loss\n");
@@ -88,7 +100,16 @@ mod tests {
     use super::*;
 
     fn rec(step: usize, loss: f64) -> StepRecord {
-        StepRecord { step, loss, grad_s: 0.01, compress_s: 0.002, bytes: 100, sim_comm_s: 0.001, lr: 0.1 }
+        StepRecord {
+            step,
+            loss,
+            grad_s: 0.01,
+            compress_s: 0.002,
+            bytes: 100,
+            sim_comm_s: 0.001,
+            sim_step_s: 0.013,
+            lr: 0.1,
+        }
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! - **L3 (this crate)** — the distributed-training coordinator: simulated
 //!   multi-worker data parallelism, collectives, nine gradient
 //!   compressors, error-feedback SGD, metrics and a network cost model.
+//! - **Transport engine (`transport`)** — the concurrent execution
+//!   substrate under L3: thread-per-worker channel-based ring
+//!   collectives, DDP-style gradient bucketing, and a comm/compute
+//!   overlap scheduler over heterogeneous clusters (per-link α/β,
+//!   per-worker stragglers).
 //! - **L2 (`python/compile/`)** — JAX models AOT-lowered to HLO text,
 //!   executed from Rust via PJRT (`runtime`).
 //! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the
@@ -25,4 +30,5 @@ pub mod optim;
 pub mod profiles;
 pub mod simulate;
 pub mod tensor;
+pub mod transport;
 pub mod util;

@@ -10,7 +10,9 @@
 //! Examples:
 //! ```text
 //! powersgd train --model mlp --compressor powersgd --rank 2 --workers 4 --steps 200
+//! powersgd train --model mlp --engine threaded --bucket-mb 4 --straggler 1.5
 //! powersgd simulate --profile resnet18 --scheme rank2 --workers 16 --backend nccl
+//! powersgd simulate --profile resnet18 --bucket-mb 4 --overlap
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -19,7 +21,8 @@ use powersgd::data::{Classification, DataSource, LmCorpus};
 use powersgd::net::backend_by_name;
 use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd, SignumOpt};
 use powersgd::runtime::Runtime;
-use powersgd::simulate::{data_per_epoch_mb, simulate_step, Scheme};
+use powersgd::simulate::{data_per_epoch_mb, simulate_step, simulate_step_overlapped, Scheme};
+use powersgd::transport::{bytes_from_mb, engine_by_name, Cluster};
 use powersgd::util::{Args, Table};
 
 fn main() -> Result<()> {
@@ -104,6 +107,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         .context("unknown backend (nccl|gloo)")?;
     let artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     let no_ef = args.flag("no-error-feedback");
+    let engine = engine_by_name(args.get_or("engine", "lockstep"))
+        .context("unknown engine (lockstep|threaded)")?;
+    let bucket_mb = args.get_parsed_or("bucket-mb", 0.0f64);
+    let straggler = args.get_parsed_or("straggler", 1.0f64);
 
     let mut rt = Runtime::cpu(&artifacts_dir)?;
     let train = rt.load(&format!("{model}_train"))?;
@@ -119,6 +126,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every,
         eval_kind: if is_lm { EvalKind::Perplexity } else { EvalKind::Accuracy },
         log_every: args.get_parsed_or("log-every", 10usize),
+        engine,
+        bucket_bytes: bytes_from_mb(bucket_mb),
+        straggler,
     };
     let mut data = build_data(&model, workers, seed)?;
     let mut trainer = Trainer::new(train, eval, opt, cfg)?;
@@ -137,11 +147,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("final eval: {:.3}", e);
     }
     println!(
-        "bytes/step: {}   grad: {:.1} ms   compress: {:.1} ms   sim-comm: {:.2} ms",
+        "bytes/step: {}   grad: {:.1} ms   compress: {:.1} ms   sim-comm: {:.2} ms   sim-step: {:.2} ms",
         trainer.metrics.total_bytes() / steps as u64,
         grad_s * 1e3,
         comp_s * 1e3,
         trainer.metrics.mean_sim_comm() * 1e3,
+        trainer.metrics.mean_sim_step() * 1e3,
     );
     if args.flag("loss-curve") {
         println!("{}", trainer.metrics.loss_curve_csv(5));
@@ -194,11 +205,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         &format!("{} — {} workers, {}", profile.name, workers, backend.name),
         &["Algorithm", "Data/epoch", "fwd", "bwd", "encode", "comm", "decode", "Time/batch"],
     );
-    for s in schemes {
-        let b = simulate_step(&profile, s, workers, &backend);
+    for s in &schemes {
+        let b = simulate_step(&profile, *s, workers, &backend);
         table.row(&[
             s.name(),
-            format!("{:.0} MB", data_per_epoch_mb(&profile, s)),
+            format!("{:.0} MB", data_per_epoch_mb(&profile, *s)),
             format!("{:.0} ms", b.fwd * 1e3),
             format!("{:.0} ms", b.bwd * 1e3),
             format!("{:.1} ms", b.encode * 1e3),
@@ -208,6 +219,35 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
+
+    // `--bucket-mb N` (with optional `--overlap` / `--straggler S`) adds
+    // the threaded engine's bucketed comm/compute-overlap projection.
+    let bucket_mb = args.get_parsed_or("bucket-mb", 0.0f64);
+    if bucket_mb > 0.0 || args.flag("overlap") {
+        let straggler = args.get_parsed_or("straggler", 1.0f64);
+        let cluster = Cluster::with_straggler(workers, &backend, straggler);
+        let bucket_bytes = bytes_from_mb(bucket_mb);
+        let mut table = Table::new(
+            &format!(
+                "Overlap projection — {:.1} MB buckets, straggler ×{straggler:.2}",
+                bucket_mb
+            ),
+            &["Algorithm", "Buckets", "No overlap", "Overlapped", "Comm exposed", "Saved"],
+        );
+        for s in &schemes {
+            let seq = simulate_step_overlapped(&profile, *s, &cluster, bucket_bytes, false);
+            let ovl = simulate_step_overlapped(&profile, *s, &cluster, bucket_bytes, true);
+            table.row(&[
+                s.name(),
+                format!("{}", ovl.buckets),
+                format!("{:.0} ms", seq.total * 1e3),
+                format!("{:.0} ms", ovl.total * 1e3),
+                format!("{:.1} ms", ovl.exposed_comm * 1e3),
+                format!("{:.0}%", 100.0 * (1.0 - ovl.total / seq.total)),
+            ]);
+        }
+        table.print();
+    }
     Ok(())
 }
 

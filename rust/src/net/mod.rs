@@ -16,6 +16,9 @@
 use crate::collectives::{CollKind, CollOp};
 
 /// A communication backend profile.
+// `Eq` is intentionally not derived: the f64 fields make equality only
+// partial (NaN). `simulate::Scheme`, whose fields are integers, does
+// derive it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Backend {
     pub name: &'static str,

@@ -1,0 +1,141 @@
+//! PyTorch-DDP-style gradient bucketing.
+//!
+//! Launching one collective per layer drowns small tensors in α (latency)
+//! terms; launching one collective for the whole model forfeits
+//! comm/compute overlap. DDP's answer — adopted here — is to pack layers
+//! into fixed-capacity buckets in **gradient-ready order** (reverse
+//! declaration order, because backprop produces gradients output→input)
+//! and launch one collective per bucket as soon as its layers are ready.
+//!
+//! The capacity is measured in *raw gradient bytes* (like DDP's
+//! `bucket_cap_mb`): readiness is governed by backprop, which runs at
+//! raw-gradient granularity, while the wire cost of the bucket is the sum
+//! of its layers' *compressed* message bytes.
+
+/// MiB → bytes for bucket capacities (negative input clamps to 0,
+/// which [`Bucketer::new`] treats as unbounded). The single home for
+/// the CLI's `--bucket-mb` unit convention.
+pub fn bytes_from_mb(mb: f64) -> u64 {
+    (mb.max(0.0) * 1024.0 * 1024.0) as u64
+}
+
+/// Per-layer sizing input to the bucketer, in declaration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerTiming {
+    /// Compressed bytes this layer contributes to the wire message.
+    pub msg_bytes: u64,
+    /// Raw gradient bytes (drives backprop-readiness and bucket caps).
+    pub raw_bytes: u64,
+}
+
+/// One bucket of layers whose compressed messages travel together.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Bucket {
+    /// Layer indices, in gradient-ready order (reverse declaration).
+    pub layers: Vec<usize>,
+    /// Compressed bytes this bucket puts on the wire per worker.
+    pub msg_bytes: u64,
+    /// Raw gradient bytes backprop must produce before the bucket is
+    /// ready.
+    pub raw_bytes: u64,
+}
+
+/// Packs layers into fixed-capacity buckets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucketer {
+    cap_bytes: u64,
+}
+
+impl Bucketer {
+    /// Bucketer with a raw-gradient-byte capacity. `0` is treated as
+    /// unbounded (a single bucket — i.e. no bucketing).
+    pub fn new(cap_bytes: u64) -> Bucketer {
+        Bucketer { cap_bytes: if cap_bytes == 0 { u64::MAX } else { cap_bytes } }
+    }
+
+    /// Bucketer with a capacity in MiB (the CLI's `--bucket-mb` unit).
+    pub fn from_mb(mb: f64) -> Bucketer {
+        Bucketer::new(bytes_from_mb(mb))
+    }
+
+    /// Assign layers (given in declaration order) to buckets, walking in
+    /// reverse declaration order. A bucket closes when the next layer
+    /// would push it past the capacity; a single layer larger than the
+    /// capacity still gets a (dedicated) bucket.
+    pub fn assign(&self, layers: &[LayerTiming]) -> Vec<Bucket> {
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut cur = Bucket::default();
+        for idx in (0..layers.len()).rev() {
+            let l = layers[idx];
+            if !cur.layers.is_empty() && cur.raw_bytes + l.raw_bytes > self.cap_bytes {
+                buckets.push(std::mem::take(&mut cur));
+            }
+            cur.layers.push(idx);
+            cur.msg_bytes += l.msg_bytes;
+            cur.raw_bytes += l.raw_bytes;
+        }
+        if !cur.layers.is_empty() {
+            buckets.push(cur);
+        }
+        buckets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(msg: u64, raw: u64) -> LayerTiming {
+        LayerTiming { msg_bytes: msg, raw_bytes: raw }
+    }
+
+    #[test]
+    fn partitions_every_layer_exactly_once() {
+        let layers: Vec<LayerTiming> = (0..13).map(|i| layer(i + 1, 10 * (i + 1))).collect();
+        let buckets = Bucketer::new(300).assign(&layers);
+        let mut seen: Vec<usize> = buckets.iter().flat_map(|b| b.layers.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..13).collect::<Vec<_>>());
+        for b in &buckets {
+            let msg: u64 = b.layers.iter().map(|&i| layers[i].msg_bytes).sum();
+            assert_eq!(msg, b.msg_bytes);
+        }
+    }
+
+    #[test]
+    fn respects_capacity_except_oversized_layers() {
+        let layers = vec![layer(1, 100), layer(1, 100), layer(1, 1000), layer(1, 100)];
+        let buckets = Bucketer::new(250).assign(&layers);
+        for b in &buckets {
+            assert!(b.raw_bytes <= 250 || b.layers.len() == 1, "{b:?}");
+        }
+        // The 1000-byte layer sits alone in its bucket.
+        assert!(buckets.iter().any(|b| b.layers == vec![2]));
+    }
+
+    #[test]
+    fn reverse_declaration_order() {
+        let layers = vec![layer(1, 10); 6];
+        let buckets = Bucketer::new(20).assign(&layers);
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].layers, vec![5, 4]);
+        assert_eq!(buckets[1].layers, vec![3, 2]);
+        assert_eq!(buckets[2].layers, vec![1, 0]);
+    }
+
+    #[test]
+    fn zero_capacity_means_single_bucket() {
+        let layers = vec![layer(5, 50); 4];
+        let buckets = Bucketer::new(0).assign(&layers);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].raw_bytes, 200);
+        assert_eq!(buckets[0].msg_bytes, 20);
+        let via_mb = Bucketer::from_mb(0.0).assign(&layers);
+        assert_eq!(via_mb.len(), 1);
+    }
+
+    #[test]
+    fn empty_layer_list() {
+        assert!(Bucketer::new(100).assign(&[]).is_empty());
+    }
+}

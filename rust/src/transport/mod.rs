@@ -1,0 +1,99 @@
+//! The concurrent worker engine (DESIGN.md §9).
+//!
+//! Everything below [`crate::coordinator`] used to execute every
+//! simulated worker sequentially on the caller's thread, and only
+//! *priced* network time with the α–β model. This module is a real
+//! execution substrate:
+//!
+//! - [`Transport`] — the point-to-point seam: a worker endpoint that can
+//!   send a message to its ring successor and (blockingly) receive from
+//!   its predecessor. [`InProcRing`] implements it with `std::sync::mpsc`
+//!   channels; a future TCP transport only has to implement this trait.
+//! - [`ring`] — channel-based ring collectives: each simulated worker
+//!   runs on its own OS thread and moves chunks over its endpoint. The
+//!   arithmetic (chunk boundaries, accumulation order) is identical to
+//!   the lockstep reference in [`crate::collectives`], so the threaded
+//!   engine reproduces its results *bitwise* — the lockstep path is the
+//!   correctness oracle.
+//! - [`Bucketer`] — PyTorch-DDP-style gradient bucketing: per-layer
+//!   messages are packed into fixed-capacity buckets in gradient-ready
+//!   (reverse declaration) order.
+//! - [`overlap`] — the comm/compute overlap scheduler: each bucket's
+//!   collective launches as soon as backprop has produced its layers,
+//!   over a [`Cluster`] with per-link α/β and per-worker compute jitter
+//!   (straggler and heterogeneous-cluster scenarios).
+//!
+//! # Engine selection
+//!
+//! The engine is process-wide configuration, like a `torch.distributed`
+//! backend: [`set_engine`] flips every collective in the process between
+//! the lockstep reference and the threaded ring. [`crate::coordinator`]
+//! sets it from [`TrainerConfig::engine`](crate::coordinator::TrainerConfig),
+//! and the CLI exposes it as `--engine {lockstep,threaded}`. Both engines
+//! produce identical bytes, so concurrent tests that race on the switch
+//! can differ only in thread schedule, never in results.
+
+mod bucket;
+pub mod overlap;
+pub mod ring;
+
+pub use bucket::{bytes_from_mb, Bucket, Bucketer, LayerTiming};
+pub use overlap::{schedule_step, Cluster, ComputePhases, Link, OverlapOutcome};
+pub use ring::{
+    ring_all_gather_threaded, ring_all_gather_worker, ring_all_reduce_sum_threaded,
+    ring_all_reduce_worker, InProcRing, RingNode, Transport,
+};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which execution substrate collectives run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Sequential reference implementation (the correctness oracle).
+    #[default]
+    Lockstep,
+    /// Thread-per-worker ring over mpsc channels.
+    Threaded,
+}
+
+/// Look up an engine by (case-insensitive) CLI name.
+pub fn engine_by_name(name: &str) -> Option<EngineKind> {
+    match name.to_ascii_lowercase().as_str() {
+        "lockstep" | "sequential" => Some(EngineKind::Lockstep),
+        "threaded" | "ring" => Some(EngineKind::Threaded),
+        _ => None,
+    }
+}
+
+static ENGINE: AtomicU8 = AtomicU8::new(0);
+
+/// Select the process-wide collective engine.
+pub fn set_engine(kind: EngineKind) {
+    ENGINE.store(kind as u8, Ordering::SeqCst);
+}
+
+/// The currently selected collective engine.
+pub fn engine() -> EngineKind {
+    match ENGINE.load(Ordering::SeqCst) {
+        1 => EngineKind::Threaded,
+        _ => EngineKind::Lockstep,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_names() {
+        assert_eq!(engine_by_name("lockstep"), Some(EngineKind::Lockstep));
+        assert_eq!(engine_by_name("THREADED"), Some(EngineKind::Threaded));
+        assert_eq!(engine_by_name("ring"), Some(EngineKind::Threaded));
+        assert_eq!(engine_by_name("mpi"), None);
+    }
+
+    #[test]
+    fn default_engine_is_lockstep() {
+        assert_eq!(EngineKind::default(), EngineKind::Lockstep);
+    }
+}

@@ -1,0 +1,306 @@
+//! Comm/compute overlap scheduler over a heterogeneous simulated
+//! cluster.
+//!
+//! Agarwal et al. and Zhang et al. (PAPERS.md) both find that gradient
+//! compression only yields wall-clock wins when the system overlaps
+//! communication with the remaining backprop and buckets small tensors —
+//! exactly what PyTorch DDP does for uncompressed SGD. This module
+//! prices that schedule: backprop emits per-layer gradients in reverse
+//! declaration order; each [`Bucket`]'s collective launches as soon as
+//! its layers (plus its share of encode) are done, concurrently with the
+//! remaining compute. Two simulated resources serialize work — the
+//! compute stream (fwd, per-bucket bwd and encode, final decode) and the
+//! network stream (one collective per bucket, FIFO).
+//!
+//! [`Cluster`] generalizes the α–β [`Backend`](crate::net::Backend) to
+//! per-link parameters and per-worker compute jitter: a synchronous ring
+//! advances at the pace of its slowest link, and a lockstep collective
+//! cannot start before the slowest worker's compute — the straggler and
+//! heterogeneous-cluster scenarios.
+
+use super::bucket::{Bucket, LayerTiming};
+use crate::collectives::CollKind;
+use crate::net::Backend;
+
+/// One directed ring link (worker `i` → `i+1`): latency α (s) and
+/// bandwidth β (bytes/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl From<&Backend> for Link {
+    fn from(b: &Backend) -> Link {
+        Link { alpha: b.alpha, beta: b.beta }
+    }
+}
+
+/// A simulated cluster: per-link α/β and per-worker compute speed.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Ring links; `links[i]` carries worker `i`'s sends. `links.len()`
+    /// is the worker count.
+    pub links: Vec<Link>,
+    /// Per-worker compute-time multiplier (1.0 = nominal, >1 = slower).
+    pub jitter: Vec<f64>,
+}
+
+impl Cluster {
+    /// Homogeneous cluster: every link gets `backend`'s α/β, every
+    /// worker nominal compute.
+    pub fn uniform(workers: usize, backend: &Backend) -> Cluster {
+        Cluster { links: vec![Link::from(backend); workers], jitter: vec![1.0; workers] }
+    }
+
+    /// Homogeneous cluster with worker 0 slowed by `slowdown` (≥ 1):
+    /// the straggler scenario.
+    pub fn with_straggler(workers: usize, backend: &Backend, slowdown: f64) -> Cluster {
+        let mut c = Cluster::uniform(workers, backend);
+        if let Some(j) = c.jitter.first_mut() {
+            *j = slowdown.max(1.0);
+        }
+        c
+    }
+
+    /// Heterogeneous cluster: deterministic per-worker compute jitter in
+    /// `[1, 1+spread)` drawn from `seed`.
+    pub fn with_jitter(workers: usize, backend: &Backend, spread: f64, seed: u64) -> Cluster {
+        let mut c = Cluster::uniform(workers, backend);
+        let mut rng = crate::util::Rng::new(seed);
+        for j in c.jitter.iter_mut() {
+            *j = 1.0 + spread.max(0.0) * rng.uniform();
+        }
+        c
+    }
+
+    pub fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Compute multiplier that gates every lockstep collective: the
+    /// slowest worker's.
+    pub fn compute_scale(&self) -> f64 {
+        self.jitter.iter().copied().fold(1.0, f64::max)
+    }
+
+    /// One synchronous ring step moving `step_bytes` over every link
+    /// concurrently: the slowest link sets the pace.
+    fn worst_step_time(&self, step_bytes: f64) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.alpha + step_bytes / l.beta)
+            .fold(0.0, f64::max)
+    }
+
+    /// Time (seconds) for one collective with per-worker message size
+    /// `bytes`. With uniform links this reduces to the closed forms in
+    /// [`Backend::time`].
+    pub fn time(&self, kind: CollKind, bytes: u64) -> f64 {
+        let w = self.workers();
+        if w <= 1 {
+            return 0.0;
+        }
+        let wf = w as f64;
+        let s = bytes as f64;
+        match kind {
+            // 2(W−1) steps of S/W bytes per link.
+            CollKind::AllReduce => 2.0 * (wf - 1.0) * self.worst_step_time(s / wf),
+            // W−1 steps forwarding whole messages.
+            CollKind::AllGather => (wf - 1.0) * self.worst_step_time(s),
+            // reduce then broadcast, both at full message size.
+            CollKind::ReduceBroadcast => 2.0 * (wf - 1.0) * self.worst_step_time(s),
+        }
+    }
+
+}
+
+/// Compute-phase durations (seconds, nominal — i.e. before straggler
+/// scaling) for one training step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputePhases {
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub encode_s: f64,
+    pub decode_s: f64,
+}
+
+/// Outcome of scheduling one training step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OverlapOutcome {
+    /// End-to-end simulated step time, seconds.
+    pub total: f64,
+    /// Network time *not* hidden behind compute, seconds.
+    pub exposed_comm: f64,
+    /// Total network busy time, seconds.
+    pub comm_busy: f64,
+    /// Number of buckets scheduled.
+    pub buckets: usize,
+}
+
+/// Schedule one step over `cluster`.
+///
+/// Backprop walks the buckets in their given (gradient-ready) order;
+/// each bucket costs its raw-byte share of `bwd_s` plus its msg-byte
+/// share of `encode_s` on the compute stream. With `overlap`, the
+/// bucket's collective (priced by `comm`, typically
+/// `|b| cluster.time(kind, b.msg_bytes)`) launches the moment the bucket
+/// is ready, queuing FIFO on the network stream; without it, all
+/// collectives wait for the full backward+encode — the lockstep
+/// schedule. Decode runs after both streams drain. Compute segments are
+/// scaled by [`Cluster::compute_scale`] (the slowest worker gates every
+/// synchronous collective).
+pub fn schedule_step(
+    layers: &[LayerTiming],
+    buckets: &[Bucket],
+    compute: ComputePhases,
+    comm: &dyn Fn(&Bucket) -> f64,
+    cluster: &Cluster,
+    overlap: bool,
+) -> OverlapOutcome {
+    let scale = cluster.compute_scale();
+    let total_raw: f64 = layers.iter().map(|l| l.raw_bytes as f64).sum();
+    let total_msg: f64 = layers.iter().map(|l| l.msg_bytes as f64).sum();
+
+    if !overlap {
+        let compute_end = (compute.fwd_s + compute.bwd_s + compute.encode_s) * scale;
+        let comm_busy: f64 = buckets.iter().map(comm).sum();
+        let total = compute_end + comm_busy + compute.decode_s * scale;
+        return OverlapOutcome {
+            total,
+            exposed_comm: comm_busy,
+            comm_busy,
+            buckets: buckets.len(),
+        };
+    }
+
+    let mut compute_t = compute.fwd_s * scale;
+    let mut net_free = 0.0f64;
+    let mut comm_busy = 0.0f64;
+    let mut last_comm_done = 0.0f64;
+    for b in buckets {
+        let bwd_share = if total_raw > 0.0 {
+            compute.bwd_s * (b.raw_bytes as f64) / total_raw
+        } else {
+            0.0
+        };
+        let enc_share = if total_msg > 0.0 {
+            compute.encode_s * (b.msg_bytes as f64) / total_msg
+        } else {
+            0.0
+        };
+        compute_t += (bwd_share + enc_share) * scale;
+        let c = comm(b);
+        let start = compute_t.max(net_free);
+        net_free = start + c;
+        comm_busy += c;
+        last_comm_done = last_comm_done.max(net_free);
+    }
+    // Backward/encode not attributed to any bucket still happens on the
+    // compute stream (callers normally cover all layers, making this
+    // exactly zero — the bucket byte sums are integers).
+    let covered_raw: f64 = buckets.iter().map(|b| b.raw_bytes as f64).sum();
+    let covered_msg: f64 = buckets.iter().map(|b| b.msg_bytes as f64).sum();
+    let raw_done = if total_raw > 0.0 { covered_raw / total_raw } else { 0.0 };
+    let msg_done = if total_msg > 0.0 { covered_msg / total_msg } else { 0.0 };
+    compute_t +=
+        (compute.bwd_s * (1.0 - raw_done) + compute.encode_s * (1.0 - msg_done)) * scale;
+    let both_done = last_comm_done.max(compute_t);
+    OverlapOutcome {
+        total: both_done + compute.decode_s * scale,
+        exposed_comm: (last_comm_done - compute_t).max(0.0),
+        comm_busy,
+        buckets: buckets.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NCCL;
+    use crate::transport::Bucketer;
+
+    fn layers_uniform(n: usize, msg: u64, raw: u64) -> Vec<LayerTiming> {
+        vec![LayerTiming { msg_bytes: msg, raw_bytes: raw }; n]
+    }
+
+    #[test]
+    fn uniform_cluster_matches_backend_closed_forms() {
+        let c = Cluster::uniform(16, &NCCL);
+        for &bytes in &[1_000u64, 330_000, 43_000_000] {
+            for kind in [CollKind::AllReduce, CollKind::AllGather, CollKind::ReduceBroadcast] {
+                let a = c.time(kind, bytes);
+                let b = NCCL.time(kind, bytes, 16);
+                assert!((a - b).abs() <= 1e-12 * b.max(1.0), "{kind:?} {bytes}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn slow_link_gates_the_ring() {
+        let mut c = Cluster::uniform(8, &NCCL);
+        c.links[3].beta /= 10.0;
+        let slow = c.time(CollKind::AllReduce, 10_000_000);
+        let fast = Cluster::uniform(8, &NCCL).time(CollKind::AllReduce, 10_000_000);
+        assert!(slow > 5.0 * fast, "slow {slow} vs fast {fast}");
+    }
+
+    #[test]
+    fn straggler_scales_compute_not_comm() {
+        let c = Cluster::with_straggler(4, &NCCL, 3.0);
+        assert_eq!(c.compute_scale(), 3.0);
+        assert!((c.time(CollKind::AllReduce, 1_000_000)
+            - Cluster::uniform(4, &NCCL).time(CollKind::AllReduce, 1_000_000))
+        .abs()
+            < 1e-15);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let a = Cluster::with_jitter(8, &NCCL, 0.5, 7);
+        let b = Cluster::with_jitter(8, &NCCL, 0.5, 7);
+        assert_eq!(a.jitter, b.jitter);
+        assert!(a.jitter.iter().all(|&j| (1.0..1.5).contains(&j)));
+    }
+
+    #[test]
+    fn overlap_hides_comm_behind_backprop() {
+        let layers = layers_uniform(20, 10_000, 2_000_000);
+        let buckets = Bucketer::new(4_000_000).assign(&layers);
+        assert!(buckets.len() > 1);
+        let cluster = Cluster::uniform(8, &NCCL);
+        let compute =
+            ComputePhases { fwd_s: 0.1, bwd_s: 0.14, encode_s: 0.004, decode_s: 0.002 };
+        let comm = |b: &Bucket| cluster.time(CollKind::AllReduce, b.msg_bytes);
+        let with = schedule_step(&layers, &buckets, compute, &comm, &cluster, true);
+        let without = schedule_step(&layers, &buckets, compute, &comm, &cluster, false);
+        assert!(with.total < without.total, "{} !< {}", with.total, without.total);
+        assert!(with.exposed_comm < without.exposed_comm);
+        assert!((with.comm_busy - without.comm_busy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_bucket_overlap_equals_sequential() {
+        // No bucketing ⇒ the one collective only becomes ready when all
+        // compute is done ⇒ overlap buys nothing.
+        let layers = layers_uniform(5, 50_000, 1_000_000);
+        let buckets = Bucketer::new(0).assign(&layers);
+        assert_eq!(buckets.len(), 1);
+        let cluster = Cluster::uniform(4, &NCCL);
+        let compute = ComputePhases { fwd_s: 0.05, bwd_s: 0.07, encode_s: 0.001, decode_s: 0.001 };
+        let comm = |b: &Bucket| cluster.time(CollKind::AllReduce, b.msg_bytes);
+        let with = schedule_step(&layers, &buckets, compute, &comm, &cluster, true);
+        let without = schedule_step(&layers, &buckets, compute, &comm, &cluster, false);
+        assert!((with.total - without.total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_buckets_cost_only_compute() {
+        let cluster = Cluster::uniform(4, &NCCL);
+        let compute = ComputePhases { fwd_s: 0.1, bwd_s: 0.2, encode_s: 0.0, decode_s: 0.0 };
+        let comm = |_: &Bucket| 0.0;
+        let out = schedule_step(&[], &[], compute, &comm, &cluster, true);
+        assert!((out.total - 0.3).abs() < 1e-12);
+        assert_eq!(out.buckets, 0);
+    }
+}

@@ -1,0 +1,280 @@
+//! Channel-based ring transport and thread-per-worker collectives.
+//!
+//! [`InProcRing::endpoints`] wires `W` [`RingNode`]s into a directed
+//! ring of `std::sync::mpsc` channels. [`ring_all_reduce_sum_threaded`]
+//! and [`ring_all_gather_threaded`] then give every worker its own OS
+//! thread; each thread runs the per-worker half of the collective
+//! ([`ring_all_reduce_worker`] / [`ring_all_gather_worker`]) against the
+//! [`Transport`] trait, so a future TCP transport plugs in by
+//! implementing `Transport` — the collective algorithms don't change.
+//!
+//! **Determinism.** The reduce-scatter schedule (chunk boundaries at
+//! `c·n/W`, one accumulation per worker per step, partial sums forwarded
+//! around the ring) is exactly the schedule of the lockstep
+//! [`crate::collectives::ring_all_reduce_sum`]: every floating-point
+//! addition happens in the same order on the same values, regardless of
+//! how the OS schedules the threads (channels sequence all cross-worker
+//! data flow). The threaded engine therefore matches the lockstep oracle
+//! *bitwise*, not just within associativity tolerance — see
+//! `tests/integration_transport.rs`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A worker's point-to-point endpoint in a directed ring.
+///
+/// Generic over the message type `M` so the same trait carries f32
+/// chunks (all-reduce), byte-packed sign bitmaps, and whole gathered
+/// messages.
+pub trait Transport<M: Send = Vec<f32>>: Send {
+    /// This worker's position in the ring.
+    fn rank(&self) -> usize;
+    /// Number of workers in the ring.
+    fn world(&self) -> usize;
+    /// Send a message to the ring successor (never blocks).
+    fn send_next(&self, msg: M);
+    /// Receive the next message from the ring predecessor (blocks).
+    fn recv_prev(&self) -> M;
+}
+
+/// [`Transport`] endpoint backed by in-process mpsc channels.
+pub struct RingNode<M: Send = Vec<f32>> {
+    rank: usize,
+    world: usize,
+    tx_next: Sender<M>,
+    rx_prev: Receiver<M>,
+}
+
+impl<M: Send> Transport<M> for RingNode<M> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_next(&self, msg: M) {
+        self.tx_next.send(msg).expect("ring successor hung up");
+    }
+
+    fn recv_prev(&self) -> M {
+        self.rx_prev.recv().expect("ring predecessor hung up")
+    }
+}
+
+/// In-process ring fabric: a factory for connected [`RingNode`]s.
+pub struct InProcRing;
+
+impl InProcRing {
+    /// Build `world` endpoints wired into a directed ring: node `i`
+    /// sends to node `(i+1) % world` and receives from
+    /// `(i+world-1) % world`.
+    pub fn endpoints<M: Send>(world: usize) -> Vec<RingNode<M>> {
+        assert!(world > 0, "ring needs at least one worker");
+        let mut txs: Vec<Sender<M>> = Vec::with_capacity(world);
+        let mut rxs: Vec<Option<Receiver<M>>> = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        (0..world)
+            .map(|i| RingNode {
+                rank: i,
+                world,
+                tx_next: txs[i].clone(),
+                rx_prev: rxs[(i + world - 1) % world]
+                    .take()
+                    .expect("each receiver is handed out exactly once"),
+            })
+            .collect()
+    }
+}
+
+/// The per-worker half of ring all-reduce (sum), run by one thread per
+/// worker against its [`Transport`] endpoint. `buf` is this worker's
+/// full-length buffer; on return it holds the elementwise sum over all
+/// workers.
+pub fn ring_all_reduce_worker<T: Transport + ?Sized>(t: &T, buf: &mut [f32]) {
+    let w = t.world();
+    let n = buf.len();
+    if w == 1 || n == 0 {
+        return;
+    }
+    let i = t.rank();
+    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
+
+    // Phase 1: reduce-scatter. Step s: send chunk (i−s) mod w to the
+    // successor, accumulate chunk (i−1−s) mod w from the predecessor.
+    // The chunk sent at step s is exactly the partial sum accumulated at
+    // step s−1, so partial sums travel the ring just like the lockstep
+    // reference.
+    for s in 0..w - 1 {
+        let c_send = (i + w - s) % w;
+        t.send_next(buf[starts[c_send]..starts[c_send + 1]].to_vec());
+        let c_recv = (i + 2 * w - 1 - s) % w;
+        let chunk = t.recv_prev();
+        let dst = &mut buf[starts[c_recv]..starts[c_recv + 1]];
+        debug_assert_eq!(dst.len(), chunk.len(), "ring chunk size mismatch");
+        for (d, v) in dst.iter_mut().zip(chunk.iter()) {
+            *d += v;
+        }
+    }
+
+    // Phase 2: all-gather of the reduced chunks. Step s: send chunk
+    // (i+1−s) mod w, overwrite chunk (i−s) mod w from the predecessor.
+    for s in 0..w - 1 {
+        let c_send = (i + 1 + w - s) % w;
+        t.send_next(buf[starts[c_send]..starts[c_send + 1]].to_vec());
+        let c_recv = (i + w - s) % w;
+        let chunk = t.recv_prev();
+        buf[starts[c_recv]..starts[c_recv + 1]].copy_from_slice(&chunk);
+    }
+}
+
+/// Ring all-reduce (sum) on the threaded engine: every buffer is owned
+/// by its own OS thread for the duration of the collective; chunks move
+/// over mpsc channels. Bitwise-identical to the lockstep
+/// [`crate::collectives::ring_all_reduce_sum`].
+pub fn ring_all_reduce_sum_threaded(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len();
+    if w == 0 {
+        return;
+    }
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n), "buffer length mismatch");
+    if w == 1 || n == 0 {
+        return;
+    }
+    let nodes = InProcRing::endpoints::<Vec<f32>>(w);
+    std::thread::scope(|scope| {
+        for (node, buf) in nodes.into_iter().zip(buffers.iter_mut()) {
+            scope.spawn(move || ring_all_reduce_worker(&node, buf));
+        }
+    });
+}
+
+/// The per-worker half of ring all-gather: after `W−1` steps every
+/// worker holds all `W` messages, indexed by source rank.
+pub fn ring_all_gather_worker<M, T>(t: &T, msg: M) -> Vec<M>
+where
+    M: Clone + Send + Default,
+    T: Transport<M> + ?Sized,
+{
+    let w = t.world();
+    let i = t.rank();
+    let mut gathered: Vec<M> = vec![M::default(); w];
+    if w == 1 {
+        gathered[0] = msg;
+        return gathered;
+    }
+    gathered[i] = msg;
+    // Step s forwards the message that originated at rank (i−s) mod w —
+    // i.e. the one received at step s−1 (own message at step 0).
+    for s in 0..w - 1 {
+        let src_send = (i + w - s) % w;
+        t.send_next(gathered[src_send].clone());
+        let src_recv = (i + 2 * w - 1 - s) % w;
+        gathered[src_recv] = t.recv_prev();
+    }
+    gathered
+}
+
+/// Ring all-gather on the threaded engine. All workers end up with
+/// identical gathered views (each message is copied verbatim around the
+/// ring), so only one view is returned; callers share it (see the `Arc`
+/// sharing in [`crate::collectives::all_gather`]).
+pub fn ring_all_gather_threaded<M>(messages: &[M]) -> Vec<M>
+where
+    M: Clone + Send + Sync + Default,
+{
+    let w = messages.len();
+    if w == 0 {
+        return Vec::new();
+    }
+    if w == 1 {
+        return messages.to_vec();
+    }
+    let nodes = InProcRing::endpoints::<M>(w);
+    let mut views: Vec<Vec<M>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .zip(messages.iter())
+            .map(|(node, msg)| scope.spawn(move || ring_all_gather_worker(&node, msg.clone())))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("gather worker panicked"))
+            .collect()
+    });
+    views.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_buffers(w: usize, n: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+        (0..w)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn threaded_ring_matches_lockstep_bitwise() {
+        let mut rng = Rng::new(61);
+        for &w in &[1usize, 2, 3, 5, 8, 16] {
+            for &n in &[0usize, 1, 7, 256, 1003] {
+                let bufs = random_buffers(w, n, &mut rng);
+                let mut lockstep = bufs.clone();
+                crate::collectives::ring_all_reduce_sum_lockstep(&mut lockstep);
+                let mut threaded = bufs.clone();
+                ring_all_reduce_sum_threaded(&mut threaded);
+                assert_eq!(threaded, lockstep, "w={w} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_gather_preserves_source_order() {
+        let msgs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; 3]).collect();
+        let view = ring_all_gather_threaded(&msgs);
+        assert_eq!(view, msgs);
+    }
+
+    #[test]
+    fn threaded_gather_bytes() {
+        let msgs: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8, 10 + i as u8]).collect();
+        let view = ring_all_gather_threaded(&msgs);
+        assert_eq!(view, msgs);
+    }
+
+    #[test]
+    fn gather_handles_uneven_message_lengths() {
+        let msgs = vec![vec![1.0f32], vec![2.0, 3.0], vec![]];
+        let view = ring_all_gather_threaded(&msgs);
+        assert_eq!(view, msgs);
+    }
+
+    #[test]
+    fn single_worker_ring_is_identity() {
+        let mut bufs = vec![vec![4.0f32, -2.0]];
+        ring_all_reduce_sum_threaded(&mut bufs);
+        assert_eq!(bufs[0], vec![4.0, -2.0]);
+        let view = ring_all_gather_threaded(&[vec![9.0f32]]);
+        assert_eq!(view, vec![vec![9.0]]);
+    }
+
+    #[test]
+    fn endpoints_form_a_cycle() {
+        let nodes = InProcRing::endpoints::<Vec<f32>>(3);
+        // Pass one token all the way around the ring by hand.
+        nodes[0].send_next(vec![7.0]);
+        let at1 = nodes[1].recv_prev();
+        nodes[1].send_next(at1);
+        let at2 = nodes[2].recv_prev();
+        nodes[2].send_next(at2);
+        assert_eq!(nodes[0].recv_prev(), vec![7.0]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Integration: the threaded transport engine against the lockstep
+//! oracle — property sweeps over random worker counts and buffer
+//! lengths, end-to-end trajectory determinism, and the overlap
+//! scheduler's acceptance shape.
+
+use powersgd::collectives::{all_gather, all_reduce_mean, ring_all_reduce_sum, CommLog};
+use powersgd::compress::PowerSgd;
+use powersgd::net::NCCL;
+use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule};
+use powersgd::profiles::resnet18;
+use powersgd::simulate::{simulate_step_overlapped, Scheme};
+use powersgd::tensor::Tensor;
+use powersgd::transport::{
+    ring_all_gather_threaded, ring_all_reduce_sum_threaded, set_engine, Bucketer, Cluster,
+    EngineKind, LayerTiming,
+};
+use powersgd::util::Rng;
+use std::sync::Mutex;
+
+/// Serializes tests that flip the process-wide engine: cargo runs tests
+/// in parallel threads, and without this a concurrent `set_engine`
+/// could silently send a "threaded" leg down the lockstep path.
+static ENGINE_LOCK: Mutex<()> = Mutex::new(());
+
+fn engine_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Property: threaded ring all-reduce matches the naive sum within
+/// float-associativity tolerance, over random worker counts and buffer
+/// lengths (proptest-style seeded sweep; no proptest crate offline).
+#[test]
+fn prop_threaded_ring_matches_naive_sum() {
+    let mut rng = Rng::new(71);
+    for case in 0..40 {
+        let w = 1 + rng.below(17) as usize;
+        let n = rng.below(2000) as usize;
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut expect = vec![0.0f64; n];
+        for b in &bufs {
+            for (e, v) in expect.iter_mut().zip(b) {
+                *e += *v as f64;
+            }
+        }
+        let mut got = bufs.clone();
+        ring_all_reduce_sum_threaded(&mut got);
+        for b in &got {
+            for (g, e) in b.iter().zip(&expect) {
+                assert!(
+                    (*g as f64 - e).abs() <= 1e-3 * e.abs().max(1.0),
+                    "case {case} w={w} n={n}: {g} vs {e}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: the threaded engine reproduces the lockstep engine
+/// *bitwise* — same chunk schedule, same accumulation order.
+#[test]
+fn prop_threaded_engine_is_bitwise_identical_to_lockstep() {
+    let _guard = engine_guard();
+    let mut rng = Rng::new(72);
+    for _ in 0..25 {
+        let w = 1 + rng.below(12) as usize;
+        let n = rng.below(1500) as usize;
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+
+        set_engine(EngineKind::Lockstep);
+        let mut lockstep = bufs.clone();
+        ring_all_reduce_sum(&mut lockstep);
+
+        set_engine(EngineKind::Threaded);
+        let mut threaded = bufs.clone();
+        ring_all_reduce_sum(&mut threaded);
+        set_engine(EngineKind::Lockstep);
+
+        assert_eq!(threaded, lockstep, "w={w} n={n}");
+    }
+}
+
+#[test]
+fn threaded_all_gather_matches_lockstep_view() {
+    let _guard = engine_guard();
+    let mut rng = Rng::new(73);
+    let msgs: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..37).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let view = ring_all_gather_threaded(&msgs);
+    assert_eq!(view, msgs);
+
+    // Through the public collective, on the threaded engine.
+    set_engine(EngineKind::Threaded);
+    let mut log = CommLog::default();
+    let gathered = all_gather(&msgs, &mut log);
+    set_engine(EngineKind::Lockstep);
+    assert_eq!(gathered.len(), 6);
+    assert_eq!(*gathered[3], msgs);
+    assert_eq!(log.bytes_sent(), 37 * 4);
+}
+
+/// Determinism acceptance: the threaded engine yields the *same training
+/// trajectory* as lockstep for a fixed seed (EF-SGD + PowerSGD over a
+/// noisy quadratic — the full optimizer stack minus PJRT).
+#[test]
+fn threaded_training_trajectory_equals_lockstep() {
+    let _guard = engine_guard();
+    let run = |engine: EngineKind| -> Vec<Tensor> {
+        set_engine(engine);
+        let mut rng = Rng::new(301);
+        let mut x = vec![Tensor::full(&[12, 9], 1.0), Tensor::full(&[7], -1.5)];
+        let mut opt = EfSgd::new(Box::new(PowerSgd::new(2, 5)), LrSchedule::constant(0.05), 0.9);
+        let mut log = CommLog::default();
+        for step in 0..60 {
+            // gradient of ||x||²/2 plus per-worker noise
+            let grads: Vec<Vec<Tensor>> = (0..4)
+                .map(|_| {
+                    x.iter()
+                        .map(|t| {
+                            let mut g = t.clone();
+                            let mut nz = Tensor::zeros(t.shape());
+                            rng.fill_normal(nz.data_mut(), 0.01);
+                            g.axpy(1.0, &nz);
+                            g
+                        })
+                        .collect()
+                })
+                .collect();
+            let delta = opt.step(&grads, step, &mut log);
+            for (xi, di) in x.iter_mut().zip(delta.iter()) {
+                xi.axpy(-1.0, di);
+            }
+        }
+        set_engine(EngineKind::Lockstep);
+        x
+    };
+    let lockstep = run(EngineKind::Lockstep);
+    let threaded = run(EngineKind::Threaded);
+    for (a, b) in lockstep.iter().zip(threaded.iter()) {
+        assert_eq!(a, b, "trajectories must match exactly");
+    }
+}
+
+#[test]
+fn empty_collectives_do_not_panic() {
+    // Regression: `buffers[0]` used to panic on an empty worker set.
+    let mut log = CommLog::default();
+    let mut empty: Vec<Vec<f32>> = Vec::new();
+    all_reduce_mean(&mut empty, &mut log);
+    ring_all_reduce_sum(&mut empty);
+    assert!(all_gather(&[], &mut log).is_empty());
+    assert_eq!(log.bytes_sent(), 0);
+}
+
+#[test]
+fn bucketer_covers_resnet_layers() {
+    let prof = resnet18();
+    let scheme = Scheme::PowerSgd { rank: 2 };
+    let layers: Vec<LayerTiming> = scheme.layer_timings(&prof.registry);
+    let buckets = Bucketer::from_mb(4.0).assign(&layers);
+    assert!(buckets.len() > 3, "43 MB of gradients should span many 4 MB buckets");
+    let covered: u64 = buckets.iter().map(|b| b.raw_bytes).sum();
+    assert_eq!(covered, prof.registry.total_bytes());
+    let msg: u64 = buckets.iter().map(|b| b.msg_bytes).sum();
+    assert_eq!(msg, scheme.message_bytes(&prof.registry));
+}
+
+/// Acceptance: bucketing + overlap strictly below the no-overlap
+/// configuration for PowerSGD rank 2 at W ∈ {4, 8, 16}.
+#[test]
+fn overlap_acceptance_powersgd_rank2() {
+    let prof = resnet18();
+    for &w in &[4usize, 8, 16] {
+        let cluster = Cluster::uniform(w, &NCCL);
+        let scheme = Scheme::PowerSgd { rank: 2 };
+        let ovl = simulate_step_overlapped(&prof, scheme, &cluster, 4 << 20, true);
+        let seq = simulate_step_overlapped(&prof, scheme, &cluster, 4 << 20, false);
+        assert!(
+            ovl.total < seq.total,
+            "W={w}: {:.2} ms !< {:.2} ms",
+            ovl.total * 1e3,
+            seq.total * 1e3
+        );
+    }
+}
