@@ -7,20 +7,30 @@
 //! matters. PowerSGD rank 2 with 4 MB buckets must beat its no-overlap
 //! configuration at every W — and overlap also helps plain SGD, which
 //! shrinks (but does not erase) compression's edge.
+//!
+//! Emits `BENCH_fig_overlap.json` (one record per scheme × backend × W)
+//! for the CI `bench-smoke` artifact trail. `BENCH_QUICK=1` restricts
+//! the sweep to NCCL.
 
 use powersgd::net::{GLOO, NCCL};
 use powersgd::profiles::resnet18;
 use powersgd::simulate::{simulate_step_overlapped, Scheme};
 use powersgd::transport::Cluster;
-use powersgd::util::Table;
+use powersgd::util::{quick_mode, BenchJson, Table};
 
 const BUCKET_BYTES: u64 = 4 << 20; // DDP-ish 4 MB buckets
 
 fn main() {
     let prof = resnet18();
     let schemes = [Scheme::Sgd, Scheme::PowerSgd { rank: 2 }, Scheme::SignNorm];
+    let backends = if quick_mode() {
+        vec![NCCL]
+    } else {
+        vec![NCCL, GLOO]
+    };
+    let mut json = BenchJson::new("fig_overlap");
 
-    for backend in [NCCL, GLOO] {
+    for backend in backends {
         for scheme in schemes {
             let mut table = Table::new(
                 &format!(
@@ -49,6 +59,15 @@ fn main() {
                     format!("{:.1} ms", ovl.exposed_comm * 1e3),
                     format!("{:.0}%", 100.0 * (1.0 - ovl.total / seq.total)),
                 ]);
+                json.record(
+                    &format!("{}/{}/w{}", backend.name, scheme.name(), w),
+                    &[
+                        ("no_overlap_ms", seq.total * 1e3),
+                        ("overlapped_ms", ovl.total * 1e3),
+                        ("exposed_comm_ms", ovl.exposed_comm * 1e3),
+                        ("saved_pct", 100.0 * (1.0 - ovl.total / seq.total)),
+                    ],
+                );
             }
             table.print();
             println!();
@@ -72,9 +91,14 @@ fn main() {
             format!("{:.0} ms", ovl.total * 1e3),
             format!("{:.1} ms", ovl.exposed_comm * 1e3),
         ]);
+        json.record(
+            &format!("straggler/x{slowdown:.2}"),
+            &[("no_overlap_ms", seq.total * 1e3), ("overlapped_ms", ovl.total * 1e3)],
+        );
     }
     table.print();
     println!();
     println!("shape: overlap strictly beats no-overlap at every W (asserted);");
     println!("it helps SGD too — compression's edge shrinks but survives on GLOO.");
+    json.write().expect("write BENCH_fig_overlap.json");
 }

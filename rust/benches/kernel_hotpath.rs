@@ -6,12 +6,16 @@
 //! same shapes: the *ordering and the gap* must reproduce (SVD ≫
 //! PowerSGD step). This bench is also the profiling entry point for the
 //! performance pass (EXPERIMENTS.md §Perf).
+//!
+//! Emits `BENCH_kernel_hotpath.json` for the CI `bench-smoke` artifact
+//! trail. `BENCH_QUICK=1` shrinks shapes and iteration budgets (the SVD
+//! drops to a smaller matrix) so the smoke job stays fast.
 
 use powersgd::collectives::CommLog;
 use powersgd::compress::{Compressor, PowerSgd};
 use powersgd::linalg::{gram_schmidt_in_place, svd};
 use powersgd::tensor::{matmul, matmul_at_b, Tensor};
-use powersgd::util::{black_box, BenchRunner, Rng};
+use powersgd::util::{black_box, quick_mode, BenchJson, BenchRunner, Rng};
 
 fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
     let mut t = Tensor::zeros(shape);
@@ -20,13 +24,21 @@ fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
 }
 
 fn main() {
+    let quick = quick_mode();
     let mut rng = Rng::new(55);
-    let mut runner = BenchRunner::new();
+    let mut runner = BenchRunner::from_env();
+    let mut json = BenchJson::new("kernel_hotpath");
 
     // --- the paper's dominant layer shapes ---
-    for &(n, m) in &[(512usize, 4608usize), (2600, 650), (128, 1152)] {
+    let shapes: &[(usize, usize)] = if quick {
+        &[(512, 4608)]
+    } else {
+        &[(512, 4608), (2600, 650), (128, 1152)]
+    };
+    let ranks: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
+    for &(n, m) in shapes {
         let a = rand_tensor(&[n, m], &mut rng);
-        for &r in &[1usize, 2, 4] {
+        for &r in ranks {
             let q = rand_tensor(&[m, r], &mut rng);
             runner.bench(&format!("matmul M[{n}x{m}]·Q[r={r}]"), || {
                 black_box(matmul(&a, &q));
@@ -39,7 +51,12 @@ fn main() {
     }
 
     // --- Gram–Schmidt (the paper's "most expensive part") ---
-    for &(n, r) in &[(512usize, 2usize), (2600, 4), (28869, 4)] {
+    let gs_shapes: &[(usize, usize)] = if quick {
+        &[(512, 2)]
+    } else {
+        &[(512, 2), (2600, 4), (28869, 4)]
+    };
+    for &(n, r) in gs_shapes {
         let p0 = rand_tensor(&[n, r], &mut rng);
         runner.bench(&format!("gram_schmidt [{n}x{r}]"), || {
             let mut p = p0.clone();
@@ -49,22 +66,29 @@ fn main() {
     }
 
     // --- full PowerSGD step over the ResNet18-scale matrix set ---
-    let shapes: Vec<(usize, usize)> = vec![(512, 4608), (512, 4608), (512, 4608), (256, 2304)];
+    let step_shapes: Vec<(usize, usize)> = if quick {
+        vec![(512, 4608)]
+    } else {
+        vec![(512, 4608), (512, 4608), (512, 4608), (256, 2304)]
+    };
     let updates: Vec<Vec<Tensor>> = (0..1)
-        .map(|_| shapes.iter().map(|&(n, m)| rand_tensor(&[n, m], &mut rng)).collect())
+        .map(|_| step_shapes.iter().map(|&(n, m)| rand_tensor(&[n, m], &mut rng)).collect())
         .collect();
     let mut comp = PowerSgd::new(2, 1);
-    let step_summary = runner.bench("PowerSGD rank-2 full step (4 big layers)", || {
+    let nlayers = step_shapes.len();
+    let step_summary = runner.bench(&format!("PowerSGD rank-2 full step ({nlayers} layers)"), || {
         let mut log = CommLog::default();
         black_box(comp.compress_aggregate(&updates, &mut log));
     });
 
     // --- the Atomo cost: full SVD of the dominant layer ---
-    let a = rand_tensor(&[512, 4608], &mut rng);
-    let mut svd_runner = BenchRunner::once(2);
-    let svd_summary = svd_runner.bench("Jacobi SVD 512x4608 (Atomo per-layer cost)", || {
-        black_box(svd(&a));
-    });
+    let (svd_n, svd_m) = if quick { (128, 1152) } else { (512, 4608) };
+    let a = rand_tensor(&[svd_n, svd_m], &mut rng);
+    let mut svd_runner = BenchRunner::once(if quick { 1 } else { 2 });
+    let svd_summary =
+        svd_runner.bench(&format!("Jacobi SVD {svd_n}x{svd_m} (Atomo per-layer cost)"), || {
+            black_box(svd(&a));
+        });
 
     println!(
         "\n§4.2 reproduction: SVD {:.0} ms vs PowerSGD step {:.1} ms — {:.0}x gap (paper: 673 vs 105 ms, 6.4x)",
@@ -72,4 +96,12 @@ fn main() {
         step_summary.mean,
         svd_summary.mean / step_summary.mean
     );
+
+    json.record_runner(&runner);
+    json.record_runner(&svd_runner);
+    json.record(
+        "svd_vs_powersgd_step",
+        &[("gap_x", svd_summary.mean / step_summary.mean)],
+    );
+    json.write().expect("write BENCH_kernel_hotpath.json");
 }

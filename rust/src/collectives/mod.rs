@@ -23,6 +23,13 @@
 //! worker. Both produce bitwise-identical results (the lockstep path is
 //! the oracle the threaded engine is tested against), so the switch
 //! never changes training trajectories.
+//!
+//! These entry points take *all* workers' buffers at once — the
+//! centralized view the oracle compressors use. The decentralized
+//! per-worker path ([`crate::compress::WorkerCompressor`]) instead
+//! calls the per-worker collective halves in
+//! [`crate::transport::ring`] directly from each worker thread, with
+//! identical chunk schedules and identical [`CommLog`] accounting.
 
 use std::sync::Arc;
 

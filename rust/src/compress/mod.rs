@@ -17,22 +17,39 @@
 //! Vector-shaped parameters (biases) are always sent uncompressed in a
 //! single packed all-reduce, per §3 of the paper; their local
 //! decompression is the identity, so they accumulate no error.
+//!
+//! Two execution paths (DESIGN.md §5):
+//! - **Centralized oracle** — [`Compressor::compress_aggregate`] sees
+//!   all workers' updates in one call and simulates the collectives
+//!   inline; the reference semantics every test pins.
+//! - **Decentralized per-worker** — [`WorkerCompressor`] instances run
+//!   one per worker thread against a [`crate::transport::Transport`]
+//!   endpoint, with reusable [`ScratchArena`] buffers;
+//!   [`DecentralizedCompressor`] adapts a fleet of them back to the
+//!   [`Compressor`] interface, bitwise-identical to the oracle.
 
 mod adaptive;
 mod atomo;
 mod none;
 mod powersgd;
+mod scratch;
 mod sign;
 mod sparsify;
 mod unbiased;
+mod worker;
 
 pub use adaptive::AdaptivePowerSgd;
 pub use atomo::Atomo;
 pub use none::NoCompression;
 pub use powersgd::{BestRankR, PowerSgd};
+pub use scratch::{ScratchArena, TensorPool};
 pub use sign::{SignNorm, Signum};
 pub use sparsify::{RandomBlock, RandomK, TopK};
 pub use unbiased::UnbiasedRank;
+pub use worker::{
+    decentralized_by_name, DecentralizedCompressor, NoCompressionWorker, PowerSgdWorker,
+    SignNormWorker, TopKWorker, UnbiasedRankWorker, WorkerCompressor, WorkerLink, WorkerRound,
+};
 
 use crate::collectives::{all_reduce_mean, CommLog};
 use crate::grad::ParamRegistry;
@@ -92,6 +109,15 @@ pub trait Compressor: Send {
     fn is_biased(&self) -> bool {
         true
     }
+
+    /// Tensor allocations made by reusable scratch buffers so far, when
+    /// the operator runs the decentralized per-worker path with a
+    /// [`ScratchArena`] (`None` for the centralized oracles). On a
+    /// shape-stable workload the count must stop moving after step 1 —
+    /// the zero-alloc regression hook.
+    fn scratch_allocations(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Indices of matrix-kind (compressed) and vector-kind (uncompressed)
@@ -142,9 +168,9 @@ pub(crate) fn aggregate_vectors_uncompressed(
     }
 }
 
-/// Pack a set of per-parameter tensors (selected by `idx`) into one flat
-/// per-worker buffer, all-reduce-mean it, and unpack back into tensors of
-/// the shapes found in `shapes_like`.
+/// Pack each worker's per-parameter tensors into one flat per-worker
+/// buffer, all-reduce-mean across workers, and unpack the shared mean
+/// back into tensors shaped like the first worker's list.
 pub(crate) fn all_reduce_mean_packed(
     per_worker: &[Vec<Tensor>],
     log: &mut CommLog,

@@ -43,7 +43,10 @@ impl PowerSgd {
         self.rank
     }
 
-    fn ensure_q(&mut self, slot: usize, m: usize) -> Tensor {
+    /// Ensure the warm-start `Q` for `slot` exists (re-sampling it when
+    /// warm start is off) and return a borrow. Returning `&Tensor`
+    /// instead of a clone saves one full `m×r` copy per matrix per step.
+    fn ensure_q(&mut self, slot: usize, m: usize) -> &Tensor {
         if self.qs.len() <= slot {
             self.qs.resize(slot + 1, None);
         }
@@ -53,7 +56,7 @@ impl PowerSgd {
             self.rng.fill_normal(q.data_mut(), 1.0);
             self.qs[slot] = Some(q);
         }
-        self.qs[slot].clone().unwrap()
+        self.qs[slot].as_ref().expect("initialized above")
     }
 }
 
@@ -84,11 +87,13 @@ impl Compressor for PowerSgd {
         aggregate_vectors_uncompressed(updates, &vec_idx, &mut mean, log);
 
         // --- Stage 1: P_w = M_w · Q for every matrix, packed all-reduce.
-        let qs: Vec<Tensor> = mat_idx
-            .iter()
-            .enumerate()
-            .map(|(slot, &p)| self.ensure_q(slot, updates[0][p].cols()))
-            .collect();
+        // Ensure every warm-start Q exists first (one RNG pass in slot
+        // order), then borrow them for the GEMM sweep.
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            self.ensure_q(slot, updates[0][p].cols());
+        }
+        let rank = self.rank;
+        let qs = &self.qs;
         let per_worker_p: Vec<Vec<Tensor>> = updates
             .iter()
             .map(|wu| {
@@ -96,7 +101,8 @@ impl Compressor for PowerSgd {
                     .iter()
                     .zip(qs.iter())
                     .map(|(&p, q)| {
-                        let mut out = Tensor::zeros(&[wu[p].rows(), self.rank]);
+                        let q = q.as_ref().expect("warm-start Q ensured above");
+                        let mut out = Tensor::zeros(&[wu[p].rows(), rank]);
                         matmul_into(&wu[p], q, &mut out);
                         out
                     })

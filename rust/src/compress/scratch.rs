@@ -1,0 +1,140 @@
+//! Reusable per-worker scratch storage for the decentralized
+//! compression hot path.
+//!
+//! The centralized oracle allocates a fresh `Tensor::zeros` for every
+//! GEMM output and re-packs a fresh flat buffer for every collective,
+//! every step. A [`ScratchArena`] gives each worker thread a private
+//! set of slot-addressed buffers that are allocated on the first step
+//! and reused verbatim afterwards: pools for the `P`/`Q` factor
+//! tensors, one growable f32 buffer for packed collectives and decode
+//! votes, and one byte buffer for packed sign messages.
+//!
+//! [`ScratchArena::allocations`] counts every tensor the arena had to
+//! allocate; after the shapes stabilize (step 1) the count must stop
+//! moving — `tests/integration_decentralized.rs` pins exactly that.
+
+use crate::tensor::Tensor;
+
+/// Slot-addressed pool of reusable tensors.
+///
+/// `get(idx, shape)` returns the tensor at `idx`, reusing the previous
+/// step's buffer whenever the shape is unchanged (contents are stale —
+/// every user overwrites). A shape change reallocates and bumps the
+/// allocation counter.
+#[derive(Debug, Default)]
+pub struct TensorPool {
+    items: Vec<Tensor>,
+    allocs: u64,
+}
+
+impl TensorPool {
+    pub fn new() -> TensorPool {
+        TensorPool { items: Vec::new(), allocs: 0 }
+    }
+
+    /// Tensor slot `idx` shaped exactly `shape`. Contents are whatever
+    /// the previous step left behind; callers must overwrite.
+    pub fn get(&mut self, idx: usize, shape: &[usize]) -> &mut Tensor {
+        while self.items.len() <= idx {
+            self.items.push(Tensor::zeros(&[0]));
+        }
+        if self.items[idx].shape() != shape {
+            self.items[idx] = Tensor::zeros(shape);
+            self.allocs += 1;
+        }
+        &mut self.items[idx]
+    }
+
+    /// Shared view of slot `idx` (must have been `get` before).
+    pub fn at(&self, idx: usize) -> &Tensor {
+        &self.items[idx]
+    }
+
+    /// The first `k` slots, for packing into a flat collective buffer.
+    pub fn first(&self, k: usize) -> &[Tensor] {
+        &self.items[..k]
+    }
+
+    /// Mutable view of the first `k` slots, for unpacking a collective
+    /// result back into tensors.
+    pub fn first_mut(&mut self, k: usize) -> &mut [Tensor] {
+        &mut self.items[..k]
+    }
+
+    /// How many tensors this pool has allocated so far.
+    pub fn allocations(&self) -> u64 {
+        self.allocs
+    }
+}
+
+/// Per-worker scratch: everything a [`WorkerCompressor`] round needs
+/// besides its own state, reused across steps.
+///
+/// [`WorkerCompressor`]: super::WorkerCompressor
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Left factors: the worker's `M·Q` products, then (after the
+    /// all-reduce unpacks into the same slots) the shared `P̂` mean.
+    pub p: TensorPool,
+    /// Right factors: sketching matrices / `Mᵀ·P̂` products, then the
+    /// shared `Q` mean.
+    pub q: TensorPool,
+    /// Flat f32 buffer for packed all-reduces, gather messages and
+    /// decode votes; capacity grows to the step maximum once and then
+    /// amortizes every later use.
+    pub buf: Vec<f32>,
+    /// Byte buffer for packed sign messages.
+    pub bytes: Vec<u8>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Total tensors allocated by the arena's pools so far — the
+    /// counter the zero-alloc regression test pins: it must not move
+    /// after the first step of a shape-stable workload.
+    pub fn allocations(&self) -> u64 {
+        self.p.allocations() + self.q.allocations()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_matching_shapes() {
+        let mut pool = TensorPool::new();
+        pool.get(0, &[3, 2]).data_mut().fill(7.0);
+        assert_eq!(pool.allocations(), 1);
+        // Same shape: stale contents, no new allocation.
+        assert_eq!(pool.get(0, &[3, 2]).data(), &[7.0; 6]);
+        assert_eq!(pool.allocations(), 1);
+        // Shape change: reallocates.
+        pool.get(0, &[2, 2]);
+        assert_eq!(pool.allocations(), 2);
+    }
+
+    #[test]
+    fn pool_grows_to_slot_index() {
+        let mut pool = TensorPool::new();
+        pool.get(2, &[4]);
+        assert_eq!(pool.first(3).len(), 3);
+        assert_eq!(pool.at(2).shape(), &[4]);
+        // Slots 0/1 are placeholders until claimed; only slot 2 counted.
+        assert_eq!(pool.allocations(), 1);
+    }
+
+    #[test]
+    fn arena_counter_sums_pools() {
+        let mut a = ScratchArena::new();
+        a.p.get(0, &[2, 2]);
+        a.q.get(0, &[2, 1]);
+        a.q.get(1, &[3, 1]);
+        assert_eq!(a.allocations(), 3);
+        a.p.get(0, &[2, 2]);
+        assert_eq!(a.allocations(), 3);
+    }
+}

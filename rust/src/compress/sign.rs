@@ -10,15 +10,16 @@ use crate::collectives::{all_gather_bytes, CommLog};
 use crate::grad::{CompressKind, ParamRegistry};
 use crate::tensor::Tensor;
 
-/// Pack the sign bits of `data` (1 = non-negative) into bytes.
-pub(crate) fn pack_signs(data: &[f32]) -> Vec<u8> {
-    let mut out = vec![0u8; data.len().div_ceil(8)];
+/// Append the sign bits of `data` (1 = non-negative) to `out` —
+/// allocation-free when `out` has capacity (the per-worker hot path).
+pub(crate) fn pack_signs_into(data: &[f32], out: &mut Vec<u8>) {
+    let start = out.len();
+    out.resize(start + data.len().div_ceil(8), 0);
     for (i, &v) in data.iter().enumerate() {
         if v >= 0.0 {
-            out[i / 8] |= 1 << (i % 8);
+            out[start + i / 8] |= 1 << (i % 8);
         }
     }
-    out
 }
 
 /// Unpack sign bits back to ±1.0 values.
@@ -69,7 +70,7 @@ impl Compressor for SignNorm {
                     let nm = wu[p].len() as f64;
                     let scale = (wu[p].norm_l1() / nm) as f32;
                     msg.extend_from_slice(&scale.to_le_bytes());
-                    msg.extend_from_slice(&pack_signs(wu[p].data()));
+                    pack_signs_into(wu[p].data(), &mut msg);
                 }
                 msg
             })
@@ -160,7 +161,7 @@ impl Compressor for Signum {
             .map(|wu| {
                 let mut msg = Vec::new();
                 for &p in &mat_idx {
-                    msg.extend_from_slice(&pack_signs(wu[p].data()));
+                    pack_signs_into(wu[p].data(), &mut msg);
                 }
                 msg
             })
@@ -226,7 +227,8 @@ mod tests {
     #[test]
     fn sign_pack_roundtrip() {
         let data = [1.0f32, -2.0, 0.0, -0.5, 3.0, -1.0, -1.0, 2.0, 5.0];
-        let packed = pack_signs(&data);
+        let mut packed = Vec::new();
+        pack_signs_into(&data, &mut packed);
         assert_eq!(packed.len(), 2);
         let signs = unpack_signs(&packed, data.len());
         for (v, s) in data.iter().zip(signs.iter()) {

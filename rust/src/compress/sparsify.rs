@@ -207,8 +207,9 @@ impl TopK {
         TopK { rank_equiv }
     }
 
-    /// Indices of the k largest-magnitude entries (unordered).
-    fn top_indices(data: &[f32], k: usize) -> Vec<usize> {
+    /// Indices of the k largest-magnitude entries (unordered). Shared
+    /// with the per-worker [`crate::compress::TopKWorker`] path.
+    pub(crate) fn top_indices(data: &[f32], k: usize) -> Vec<usize> {
         // Partial selection via binary-heap of (|v|, idx) — O(n log k).
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
@@ -302,7 +303,11 @@ impl Compressor for TopK {
 
 /// Shared byte formula: `budget × bytes_per_value` over matrices, plus
 /// uncompressed vectors.
-fn sparsified_bytes(registry: &ParamRegistry, rank_equiv: usize, bytes_per_value: u64) -> u64 {
+pub(crate) fn sparsified_bytes(
+    registry: &ParamRegistry,
+    rank_equiv: usize,
+    bytes_per_value: u64,
+) -> u64 {
     registry
         .specs
         .iter()

@@ -1,0 +1,815 @@
+//! Decentralized compression: one compressor instance **per worker**,
+//! aggregating over the transport engine.
+//!
+//! The centralized [`Compressor`] trait is an oracle: it receives every
+//! worker's update in one call and simulates the collectives inline.
+//! The paper's actual execution structure (§3, Lemma 3) is the inverse —
+//! each worker compresses *its own* gradient and the small `P`/`Q`
+//! factors (or packed messages) are aggregated with a real collective.
+//! [`WorkerCompressor`] is that per-worker half: `compress → collective
+//! over a [`Transport`] endpoint → decompress`, with all reusable
+//! buffers in a per-worker [`ScratchArena`].
+//!
+//! [`DecentralizedCompressor`] adapts a fleet of per-worker instances
+//! back to the [`Compressor`] interface: every call spawns one OS
+//! thread per worker, wires them into an [`InProcRing`], and runs each
+//! worker's round concurrently. Because the threaded ring reproduces
+//! the lockstep reference bitwise (see [`crate::transport::ring`]) and
+//! every shared random draw is replicated from the same seed, the
+//! decentralized path matches the centralized oracle **bitwise** — the
+//! oracle stays the reference, asserted by
+//! `tests/integration_decentralized.rs`.
+//!
+//! Worker state (warm-start `Q`, scratch arenas) persists across steps;
+//! changing the worker count between calls re-initializes it, like
+//! re-building a process group.
+
+use super::scratch::ScratchArena;
+use super::sign::pack_signs_into;
+use super::sparsify::{sparsified_bytes, TopK};
+use super::{split_kinds, sparsify_budget, Aggregated, Compressor, Locals};
+use crate::collectives::{CollKind, CommLog};
+use crate::grad::{CompressKind, ParamRegistry};
+use crate::linalg::gram_schmidt_in_place;
+use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
+use crate::transport::{ring_all_gather_worker, ring_all_reduce_worker, InProcRing, Transport};
+use crate::util::Rng;
+
+/// One worker's handle on the collective fabric: a typed [`Transport`]
+/// endpoint per message kind, plus mean/gather conveniences that do the
+/// byte accounting exactly like the centralized [`crate::collectives`].
+pub struct WorkerLink<'a> {
+    /// f32 ring endpoint (all-reduce chunks, top-K gather messages).
+    pub f32s: &'a dyn Transport<Vec<f32>>,
+    /// Byte ring endpoint (packed sign bitmaps).
+    pub bytes: &'a dyn Transport<Vec<u8>>,
+}
+
+impl WorkerLink<'_> {
+    /// This worker's rank in the ring.
+    pub fn rank(&self) -> usize {
+        self.f32s.rank()
+    }
+
+    /// Number of workers in the ring.
+    pub fn world(&self) -> usize {
+        self.f32s.world()
+    }
+
+    /// All-reduce-mean `buf` in place across the ring. Chunk schedule
+    /// and divide order are exactly the centralized
+    /// [`crate::collectives::all_reduce_mean`], so results are bitwise
+    /// identical to the lockstep oracle.
+    pub fn all_reduce_mean(&self, buf: &mut [f32], log: &mut CommLog) {
+        let bytes = (buf.len() * 4) as u64;
+        ring_all_reduce_worker(self.f32s, buf);
+        let w = self.world() as f32;
+        for v in buf.iter_mut() {
+            *v /= w;
+        }
+        log.record(CollKind::AllReduce, bytes);
+    }
+
+    /// All-gather this worker's byte message; the returned view is
+    /// indexed by source rank (identical on every worker).
+    pub fn all_gather_bytes(&self, msg: Vec<u8>, log: &mut CommLog) -> Vec<Vec<u8>> {
+        log.record(CollKind::AllGather, msg.len() as u64);
+        ring_all_gather_worker(self.bytes, msg)
+    }
+
+    /// All-gather this worker's f32 message (top-K index/value pairs).
+    pub fn all_gather_f32(&self, msg: Vec<f32>, log: &mut CommLog) -> Vec<Vec<f32>> {
+        log.record(CollKind::AllGather, (msg.len() * 4) as u64);
+        ring_all_gather_worker(self.f32s, msg)
+    }
+}
+
+/// Result of one per-worker compress → collective → decompress round.
+pub struct WorkerRound {
+    /// Decompressed aggregate `Δ'` — identical bits on every worker.
+    pub mean: Vec<Tensor>,
+    /// This worker's own reconstruction for error feedback; `None`
+    /// means it equals the aggregate (the PowerSGD convention).
+    pub local: Option<Vec<Tensor>>,
+}
+
+/// The per-worker half of a compression scheme.
+///
+/// Instances hold one worker's state (warm-start `Q`, shared-seed RNG)
+/// and run one round per step against a [`WorkerLink`]. Shared
+/// randomness is replicated: every worker is constructed with the same
+/// seed and draws the same sequence, so `Q`/`U` agree across workers
+/// without extra traffic — exactly the centralized oracle's convention.
+pub trait WorkerCompressor: Send {
+    /// Human-readable name ("Rank 2", "Sign+Norm", ...).
+    fn name(&self) -> String;
+
+    /// True iff aggregation is all-reduce (linear scheme).
+    fn supports_all_reduce(&self) -> bool;
+
+    /// Closed-form per-worker message bytes per step (must agree with
+    /// what `round` logs).
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64;
+
+    /// Whether the scheme is biased (needs error feedback to converge).
+    fn is_biased(&self) -> bool {
+        true
+    }
+
+    /// One round: compress `update` (this worker's tensors in
+    /// compression shape), aggregate over `link`, decompress. All
+    /// step-invariant intermediates live in `scratch`; traffic goes to
+    /// `log`.
+    fn round(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound;
+}
+
+/// Pack tensors into one flat buffer (reusing its capacity).
+fn pack(buf: &mut Vec<f32>, tensors: &[Tensor]) {
+    buf.clear();
+    for t in tensors {
+        buf.extend_from_slice(t.data());
+    }
+}
+
+/// Unpack a flat buffer back into same-shaped tensors.
+fn unpack(buf: &[f32], tensors: &mut [Tensor]) {
+    let mut off = 0;
+    for t in tensors.iter_mut() {
+        let n = t.len();
+        t.data_mut().copy_from_slice(&buf[off..off + n]);
+        off += n;
+    }
+}
+
+/// All-reduce-mean the vector-shaped parameters uncompressed (one
+/// packed flat buffer, like the centralized
+/// `aggregate_vectors_uncompressed`), writing the mean tensors into
+/// `mean`. No traffic when there are no vector parameters.
+fn reduce_vectors(
+    update: &[Tensor],
+    vec_idx: &[usize],
+    mean: &mut [Tensor],
+    buf: &mut Vec<f32>,
+    link: &WorkerLink<'_>,
+    log: &mut CommLog,
+) {
+    if vec_idx.is_empty() {
+        return;
+    }
+    buf.clear();
+    for &i in vec_idx {
+        buf.extend_from_slice(update[i].data());
+    }
+    link.all_reduce_mean(buf, log);
+    let mut off = 0;
+    for &i in vec_idx {
+        let n = update[i].len();
+        mean[i] = Tensor::from_vec(&[n], buf[off..off + n].to_vec());
+        off += n;
+    }
+}
+
+/// Placeholder mean list: empty tensors for matrix slots (overwritten
+/// by the reconstruction), zeros for vector slots (overwritten by
+/// [`reduce_vectors`]).
+fn mean_placeholders(update: &[Tensor]) -> Vec<Tensor> {
+    update
+        .iter()
+        .map(|t| {
+            if t.shape().len() >= 2 {
+                Tensor::zeros(&[0])
+            } else {
+                Tensor::zeros(t.shape())
+            }
+        })
+        .collect()
+}
+
+/// Sign bit `i` of a packed bitmap as ±1.0 (the `unpack_signs` mapping).
+#[inline]
+fn sign_at(bits: &[u8], i: usize) -> f32 {
+    if bits[i / 8] >> (i % 8) & 1 == 1 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// PowerSGD (Algorithm 1), per-worker half.
+// ---------------------------------------------------------------------
+
+/// Rank-r PowerSGD, one worker's side: `P ← M·Q` → all-reduce-mean →
+/// orthogonalize → `Q ← Mᵀ·P̂` → all-reduce-mean → reconstruct `P̂·Qᵀ`.
+/// Warm-start `Q` persists in this instance; both GEMM outputs and the
+/// packed collective buffers live in the [`ScratchArena`].
+pub struct PowerSgdWorker {
+    rank: usize,
+    warm_start: bool,
+    /// Warm-start `Q` per matrix slot (same bits on every worker).
+    qs: Vec<Tensor>,
+    rng: Rng,
+}
+
+impl PowerSgdWorker {
+    pub fn new(rank: usize, seed: u64) -> PowerSgdWorker {
+        assert!(rank >= 1, "rank must be >= 1");
+        PowerSgdWorker { rank, warm_start: true, qs: Vec::new(), rng: Rng::new(seed) }
+    }
+
+    /// Disable warm start (Table 2 ablation): re-sample `Q` every step.
+    pub fn without_warm_start(mut self) -> PowerSgdWorker {
+        self.warm_start = false;
+        self
+    }
+
+    /// Ensure the `Q` for `slot` exists, drawing from the shared-seed
+    /// RNG in slot order — the exact draw order of the centralized
+    /// oracle's `ensure_q`, so the bits agree.
+    fn ensure_q(&mut self, slot: usize, m: usize) {
+        let fresh = if self.qs.len() <= slot {
+            self.qs.push(Tensor::zeros(&[m, self.rank]));
+            true
+        } else {
+            !self.warm_start
+        };
+        if fresh {
+            let q = &mut self.qs[slot];
+            if q.shape() != [m, self.rank] {
+                *q = Tensor::zeros(&[m, self.rank]);
+            }
+            self.rng.fill_normal(q.data_mut(), 1.0);
+        }
+    }
+}
+
+impl WorkerCompressor for PowerSgdWorker {
+    fn name(&self) -> String {
+        if self.warm_start {
+            format!("Rank {}", self.rank)
+        } else {
+            format!("Rank {} (no warm start)", self.rank)
+        }
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_rank_r_bytes_uncapped(self.rank)
+    }
+
+    fn round(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound {
+        let (mat_idx, vec_idx) = split_kinds(update);
+        let mut mean = mean_placeholders(update);
+        reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
+        let k = mat_idx.len();
+
+        // Cold start re-samples every Q up front, in slot order, so the
+        // RNG stream matches the centralized oracle step for step.
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            self.ensure_q(slot, update[p].cols());
+        }
+
+        // Stage 1: P = M·Q into the arena, packed all-reduce-mean; the
+        // reduced buffer unpacks back into the same slots, which then
+        // hold the shared mean and are orthogonalized in place.
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
+            matmul_into(&update[p], &self.qs[slot], out);
+        }
+        pack(&mut scratch.buf, scratch.p.first(k));
+        link.all_reduce_mean(&mut scratch.buf, log);
+        unpack(&scratch.buf, scratch.p.first_mut(k));
+        for phat in scratch.p.first_mut(k) {
+            gram_schmidt_in_place(phat);
+        }
+
+        // Stage 2: Q = Mᵀ·P̂, packed all-reduce-mean, same slot reuse.
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let out = scratch.q.get(slot, &[update[p].cols(), self.rank]);
+            matmul_tn_into(&update[p], scratch.p.at(slot), out);
+        }
+        pack(&mut scratch.buf, scratch.q.first(k));
+        link.all_reduce_mean(&mut scratch.buf, log);
+        unpack(&scratch.buf, scratch.q.first_mut(k));
+
+        // Reconstruct P̂·Qᵀ directly into the returned aggregate (the
+        // API hands ownership out, so this is the one per-step tensor
+        // allocation left on the hot path) and persist warm-start Q.
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
+            matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
+            mean[p] = rec;
+            if self.warm_start {
+                self.qs[slot].data_mut().copy_from_slice(scratch.q.at(slot).data());
+            }
+        }
+        WorkerRound { mean, local: None }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Unbiased rank-r sketching (§4.1), per-worker half.
+// ---------------------------------------------------------------------
+
+/// Unbiased rank-r: every worker draws the same `U ~ N(0, 1/r)` from
+/// the shared seed, transmits `M·U` (packed all-reduce-mean) and
+/// reconstructs `(M·U)·Uᵀ`.
+pub struct UnbiasedRankWorker {
+    rank: usize,
+    rng: Rng,
+}
+
+impl UnbiasedRankWorker {
+    pub fn new(rank: usize, seed: u64) -> UnbiasedRankWorker {
+        assert!(rank >= 1);
+        UnbiasedRankWorker { rank, rng: Rng::new(seed) }
+    }
+}
+
+impl WorkerCompressor for UnbiasedRankWorker {
+    fn name(&self) -> String {
+        format!("Unbiased Rank {}", self.rank)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, .. } => (rows * self.rank * 4) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+
+    fn is_biased(&self) -> bool {
+        false
+    }
+
+    fn round(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound {
+        let (mat_idx, vec_idx) = split_kinds(update);
+        let mut mean = mean_placeholders(update);
+        reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
+        let k = mat_idx.len();
+
+        // Shared sketching matrices: same seed on every worker, drawn
+        // in matrix order — E[U·Uᵀ] = I via N(0, 1/r) entries.
+        let sigma = (1.0 / self.rank as f64).sqrt() as f32;
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let u = scratch.q.get(slot, &[update[p].cols(), self.rank]);
+            self.rng.fill_normal(u.data_mut(), sigma);
+        }
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
+            matmul_into(&update[p], scratch.q.at(slot), out);
+        }
+        pack(&mut scratch.buf, scratch.p.first(k));
+        link.all_reduce_mean(&mut scratch.buf, log);
+        unpack(&scratch.buf, scratch.p.first_mut(k));
+
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
+            matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
+            mean[p] = rec;
+        }
+        WorkerRound { mean, local: None }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sign + L1 norm (Algorithm 5), per-worker half (all-gather path).
+// ---------------------------------------------------------------------
+
+/// Sign+Norm: transmit `(‖M‖₁/nm, sign(M))` packed to one bit per
+/// coordinate, all-gather, decode all `W` messages into the average.
+#[derive(Default)]
+pub struct SignNormWorker;
+
+impl SignNormWorker {
+    pub fn new() -> SignNormWorker {
+        SignNormWorker
+    }
+}
+
+impl WorkerCompressor for SignNormWorker {
+    fn name(&self) -> String {
+        "Sign+Norm".into()
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        false
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => 4 + ((rows * cols).div_ceil(8)) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+
+    fn round(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound {
+        let (mat_idx, vec_idx) = split_kinds(update);
+        let w = link.world() as f32;
+        // Gather path: the aggregate is accumulated, so matrix means
+        // start at zero; vectors still travel uncompressed first.
+        let mut mean: Vec<Tensor> = update.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
+
+        // Own message: per matrix, 4-byte scale then packed sign bits.
+        scratch.bytes.clear();
+        for &p in &mat_idx {
+            let nm = update[p].len() as f64;
+            let scale = (update[p].norm_l1() / nm) as f32;
+            scratch.bytes.extend_from_slice(&scale.to_le_bytes());
+            pack_signs_into(update[p].data(), &mut scratch.bytes);
+        }
+        // Hand the scratch buffer itself to the gather (it lands in the
+        // view at our own rank) and reclaim it below — no per-step copy.
+        let mut gathered = link.all_gather_bytes(std::mem::take(&mut scratch.bytes), log);
+
+        // Decode every worker's message in rank order — the same
+        // accumulation order as the centralized oracle, so the mean
+        // agrees bitwise. Only our own message feeds the EF local.
+        let me = link.rank();
+        let mut local: Vec<Tensor> = update.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        for &p in &vec_idx {
+            local[p] = update[p].clone();
+        }
+        for (wi, msg) in gathered.iter().enumerate() {
+            let mut cursor = 0;
+            for &p in &mat_idx {
+                let n = update[p].len();
+                let scale = f32::from_le_bytes(msg[cursor..cursor + 4].try_into().unwrap());
+                cursor += 4;
+                let bits = &msg[cursor..cursor + n.div_ceil(8)];
+                cursor += n.div_ceil(8);
+                let md = mean[p].data_mut();
+                for i in 0..n {
+                    md[i] += scale * sign_at(bits, i) / w;
+                }
+                if wi == me {
+                    let ld = local[p].data_mut();
+                    for i in 0..n {
+                        ld[i] = scale * sign_at(bits, i);
+                    }
+                }
+            }
+        }
+        scratch.bytes = std::mem::take(&mut gathered[me]);
+        WorkerRound { mean, local: Some(local) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Top-K (Algorithm 6), per-worker half (all-gather path).
+// ---------------------------------------------------------------------
+
+/// Top-K: each worker gathers its own `(index, value)` pairs for the
+/// `(n+m)·r` largest-magnitude coordinates; decode scatters all `W`
+/// messages (the cost that scales with W in Table 5).
+pub struct TopKWorker {
+    rank_equiv: usize,
+}
+
+impl TopKWorker {
+    pub fn new(rank_equiv: usize) -> TopKWorker {
+        TopKWorker { rank_equiv }
+    }
+}
+
+impl WorkerCompressor for TopKWorker {
+    fn name(&self) -> String {
+        format!("Top K (r={})", self.rank_equiv)
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        false
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        sparsified_bytes(registry, self.rank_equiv, 8)
+    }
+
+    fn round(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound {
+        let (mat_idx, vec_idx) = split_kinds(update);
+        let w = link.world() as f32;
+        let mut mean: Vec<Tensor> = update.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
+
+        // Own message: (index bits, value) pairs, f32-encoded.
+        scratch.buf.clear();
+        for &p in &mat_idx {
+            let (n, m) = (update[p].rows(), update[p].cols());
+            let budget = sparsify_budget(n, m, self.rank_equiv);
+            let idx = TopK::top_indices(update[p].data(), budget);
+            let d = update[p].data();
+            for &i in &idx {
+                scratch.buf.push(f32::from_bits(i as u32));
+                scratch.buf.push(d[i]);
+            }
+        }
+        // As in the sign path: move the scratch buffer into the gather
+        // and reclaim it from our own slot of the view afterwards.
+        let mut gathered = link.all_gather_f32(std::mem::take(&mut scratch.buf), log);
+
+        let me = link.rank();
+        let mut local: Vec<Tensor> = update.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        for &p in &vec_idx {
+            local[p] = update[p].clone();
+        }
+        for (wi, msg) in gathered.iter().enumerate() {
+            let mut cursor = 0;
+            for &p in &mat_idx {
+                let (n, m) = (update[p].rows(), update[p].cols());
+                let budget = sparsify_budget(n, m, self.rank_equiv);
+                let md = mean[p].data_mut();
+                for _ in 0..budget {
+                    let i = msg[cursor].to_bits() as usize;
+                    let v = msg[cursor + 1];
+                    cursor += 2;
+                    md[i] += v / w;
+                    if wi == me {
+                        local[p].data_mut()[i] = v;
+                    }
+                }
+            }
+        }
+        scratch.buf = std::mem::take(&mut gathered[me]);
+        WorkerRound { mean, local: Some(local) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// No compression, per-worker half.
+// ---------------------------------------------------------------------
+
+/// Identity "compression": one packed full-gradient all-reduce-mean.
+/// The EF local is the worker's own update (zero error).
+#[derive(Default)]
+pub struct NoCompressionWorker;
+
+impl NoCompressionWorker {
+    pub fn new() -> NoCompressionWorker {
+        NoCompressionWorker
+    }
+}
+
+impl WorkerCompressor for NoCompressionWorker {
+    fn name(&self) -> String {
+        "No compression".into()
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        true
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_bytes()
+    }
+
+    fn is_biased(&self) -> bool {
+        false
+    }
+
+    fn round(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound {
+        pack(&mut scratch.buf, update);
+        link.all_reduce_mean(&mut scratch.buf, log);
+        let mut mean = Vec::with_capacity(update.len());
+        let mut off = 0;
+        for t in update {
+            let n = t.len();
+            mean.push(Tensor::from_vec(t.shape(), scratch.buf[off..off + n].to_vec()));
+            off += n;
+        }
+        WorkerRound { mean, local: Some(update.to_vec()) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Driver: per-worker fleet behind the centralized Compressor interface.
+// ---------------------------------------------------------------------
+
+type BoxedWorker = Box<dyn WorkerCompressor>;
+type WorkerFactory = Box<dyn Fn() -> BoxedWorker + Send>;
+
+struct WorkerSlot {
+    comp: BoxedWorker,
+    scratch: ScratchArena,
+}
+
+/// Runs one [`WorkerCompressor`] instance per worker, each on its own
+/// OS thread with its own [`ScratchArena`], aggregating over an
+/// [`InProcRing`]. Drop-in [`Compressor`], bitwise-identical to the
+/// centralized oracle for the schemes implemented here.
+pub struct DecentralizedCompressor {
+    workers: Vec<WorkerSlot>,
+    factory: WorkerFactory,
+    /// Prototype instance for name/byte metadata before the first round.
+    proto: BoxedWorker,
+}
+
+impl DecentralizedCompressor {
+    /// Build from a per-worker factory. The factory must produce
+    /// identically-seeded instances so shared random draws (warm-start
+    /// `Q`, sketching `U`) agree across workers.
+    pub fn new<F>(factory: F) -> DecentralizedCompressor
+    where
+        F: Fn() -> BoxedWorker + Send + 'static,
+    {
+        let proto = factory();
+        DecentralizedCompressor { workers: Vec::new(), factory: Box::new(factory), proto }
+    }
+
+    fn ensure_workers(&mut self, w: usize) {
+        if self.workers.len() != w {
+            self.workers = (0..w)
+                .map(|_| WorkerSlot { comp: (self.factory)(), scratch: ScratchArena::new() })
+                .collect();
+        }
+    }
+
+    /// Total [`ScratchArena`] tensor allocations across all workers —
+    /// the zero-alloc regression hook: on a shape-stable workload this
+    /// must not change after the first step.
+    pub fn scratch_allocations(&self) -> u64 {
+        self.workers.iter().map(|s| s.scratch.allocations()).sum()
+    }
+}
+
+impl Compressor for DecentralizedCompressor {
+    fn name(&self) -> String {
+        format!("{} (per-worker)", self.proto.name())
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        self.proto.supports_all_reduce()
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        self.proto.message_bytes(registry)
+    }
+
+    fn is_biased(&self) -> bool {
+        self.proto.is_biased()
+    }
+
+    fn scratch_allocations(&self) -> Option<u64> {
+        Some(DecentralizedCompressor::scratch_allocations(self))
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        let w = updates.len();
+        assert!(w > 0, "decentralized compressor needs at least one worker");
+        self.ensure_workers(w);
+        let f32_nodes = InProcRing::endpoints::<Vec<f32>>(w);
+        let byte_nodes = InProcRing::endpoints::<Vec<u8>>(w);
+        let mut results: Vec<(WorkerRound, CommLog)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .workers
+                .iter_mut()
+                .zip(updates.iter())
+                .zip(f32_nodes.into_iter().zip(byte_nodes))
+                .map(|((slot, update), (fnode, bnode))| {
+                    scope.spawn(move || {
+                        let link = WorkerLink { f32s: &fnode, bytes: &bnode };
+                        let mut wlog = CommLog::default();
+                        let round = slot.comp.round(update, &link, &mut slot.scratch, &mut wlog);
+                        (round, wlog)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker compressor thread panicked"))
+                .collect()
+        });
+        // Every worker holds the identical aggregate; adopt worker 0's
+        // view of the result and of the per-worker traffic (the
+        // CommLog unit is bytes sent *per worker*).
+        let (first, wlog) = results.remove(0);
+        log.ops.extend(wlog.ops);
+        let locals = match first.local {
+            None => Locals::SharedAggregate,
+            Some(own) => {
+                let mut per = Vec::with_capacity(w);
+                per.push(own);
+                for (round, _) in results {
+                    per.push(round.local.expect("workers disagree on locals kind"));
+                }
+                Locals::PerWorker(per)
+            }
+        };
+        Aggregated { mean: first.mean, locals }
+    }
+}
+
+/// Per-worker implementation for a CLI compressor name; `None` when the
+/// scheme has no decentralized path yet (callers fall back to the
+/// centralized oracle).
+pub fn decentralized_by_name(
+    name: &str,
+    rank: usize,
+    seed: u64,
+) -> Option<DecentralizedCompressor> {
+    let factory: WorkerFactory = match name {
+        "powersgd" => Box::new(move || Box::new(PowerSgdWorker::new(rank, seed))),
+        "powersgd-cold" => {
+            Box::new(move || Box::new(PowerSgdWorker::new(rank, seed).without_warm_start()))
+        }
+        "unbiased-rank" => Box::new(move || Box::new(UnbiasedRankWorker::new(rank, seed))),
+        "sign-norm" => Box::new(|| Box::new(SignNormWorker::new())),
+        "top-k" => Box::new(move || Box::new(TopKWorker::new(rank))),
+        "none" | "sgd" | "identity" => Box::new(|| Box::new(NoCompressionWorker::new())),
+        _ => return None,
+    };
+    Some(DecentralizedCompressor::new(factory))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_mapping_covers_worker_schemes() {
+        for name in ["powersgd", "powersgd-cold", "unbiased-rank", "sign-norm", "top-k", "none"] {
+            let c = decentralized_by_name(name, 2, 1).unwrap_or_else(|| panic!("{name}"));
+            assert!(c.name().ends_with("(per-worker)"), "{}", c.name());
+        }
+        assert!(decentralized_by_name("atomo", 2, 1).is_none());
+        assert!(decentralized_by_name("random-k", 2, 1).is_none());
+    }
+
+    #[test]
+    fn aggregation_kind_matches_scheme() {
+        assert!(decentralized_by_name("powersgd", 1, 0).unwrap().supports_all_reduce());
+        assert!(!decentralized_by_name("sign-norm", 1, 0).unwrap().supports_all_reduce());
+        assert!(!decentralized_by_name("top-k", 1, 0).unwrap().supports_all_reduce());
+    }
+
+    #[test]
+    fn single_worker_round_is_mean_of_itself() {
+        let mut c = decentralized_by_name("none", 1, 0).unwrap();
+        let updates = vec![vec![Tensor::full(&[2, 3], 2.5), Tensor::full(&[4], -1.0)]];
+        let mut log = CommLog::default();
+        let agg = c.compress_aggregate(&updates, &mut log);
+        assert_eq!(agg.mean[0].data(), updates[0][0].data());
+        assert_eq!(agg.mean[1].data(), updates[0][1].data());
+        assert_eq!(log.bytes_sent(), (6 + 4) * 4);
+    }
+
+    #[test]
+    fn message_bytes_match_centralized_formulas() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![16, 10]), ("b", vec![5])]);
+        let d = decentralized_by_name("powersgd", 2, 3).unwrap();
+        assert_eq!(d.message_bytes(&reg), reg.total_rank_r_bytes_uncapped(2));
+        let s = decentralized_by_name("sign-norm", 2, 3).unwrap();
+        assert_eq!(s.message_bytes(&reg), 4 + (160u64).div_ceil(8) + 20);
+    }
+}

@@ -60,9 +60,11 @@ pub struct TrainerConfig {
     /// Print a progress line every this many steps (0 = never).
     pub log_every: usize,
     /// Collective execution substrate. `Threaded` runs every collective
-    /// on the channel-based ring (one OS thread per worker) and projects
-    /// step time with comm/compute overlap; `Lockstep` is the sequential
-    /// reference. Both produce identical gradients.
+    /// on the channel-based ring (one OS thread per worker), runs
+    /// compression decentralized when the scheme has a per-worker
+    /// implementation (see `powersgd::compress::decentralized_by_name`),
+    /// and projects step time with comm/compute overlap; `Lockstep` is
+    /// the sequential reference. Both produce identical gradients.
     pub engine: EngineKind,
     /// DDP-style bucket capacity in raw gradient bytes (0 = a single
     /// bucket per step, i.e. no bucketing).
@@ -268,8 +270,15 @@ impl Trainer {
         });
 
         if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+            // Decentralized compressors report their scratch-arena
+            // allocation count; a number still moving after step 1 means
+            // the zero-alloc hot path regressed.
+            let scratch = match self.opt.scratch_allocations() {
+                Some(n) => format!(" scratch-allocs {n}"),
+                None => String::new(),
+            };
             eprintln!(
-                "[{}] step {:>5} loss {:.4} lr {:.4} bytes/step {} grad {:.1} ms compress {:.1} ms",
+                "[{}] step {:>5} loss {:.4} lr {:.4} bytes/step {} grad {:.1} ms compress {:.1} ms{}",
                 self.opt.name(),
                 self.step,
                 loss,
@@ -277,6 +286,7 @@ impl Trainer {
                 bytes,
                 grad_s * 1e3,
                 compress_s * 1e3,
+                scratch,
             );
         }
 

@@ -144,7 +144,7 @@ impl ParamRegistry {
             .collect()
     }
 
-    /// Undo [`matricize`]: restore original tensor shapes.
+    /// Undo [`Self::matricize`]: restore original tensor shapes.
     pub fn dematricize(&self, grads: Vec<Tensor>) -> Vec<Tensor> {
         assert_eq!(grads.len(), self.specs.len());
         grads

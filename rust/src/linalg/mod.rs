@@ -1,6 +1,6 @@
 //! Numerical linear algebra for the compressors.
 //!
-//! - [`gram_schmidt`] — the paper's orthogonalization choice ("we use the
+//! - [`gram_schmidt_in_place`] — the paper's orthogonalization choice ("we use the
 //!   Gram–Schmidt procedure to orthogonalize our matrices since they have
 //!   very few columns (1–4)").
 //! - [`svd`] — one-sided Jacobi SVD, needed by the Spectral-Atomo baseline

@@ -13,7 +13,14 @@
 //! powersgd train --model mlp --engine threaded --bucket-mb 4 --straggler 1.5
 //! powersgd simulate --profile resnet18 --scheme rank2 --workers 16 --backend nccl
 //! powersgd simulate --profile resnet18 --bucket-mb 4 --overlap
+//! powersgd simulate --profile resnet18 --scheme rank2 --engine threaded
 //! ```
+//!
+//! With `--engine threaded`, `train` runs compression decentralized
+//! (per-worker `WorkerCompressor` instances over the `InProcRing`) for
+//! schemes that support it, and `simulate` executes one real
+//! decentralized round per scheme, checked bitwise against the
+//! centralized lockstep oracle.
 
 use anyhow::{bail, Context, Result};
 use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
@@ -21,8 +28,10 @@ use powersgd::data::{Classification, DataSource, LmCorpus};
 use powersgd::net::backend_by_name;
 use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule, Sgd, SignumOpt};
 use powersgd::runtime::Runtime;
-use powersgd::simulate::{data_per_epoch_mb, simulate_step, simulate_step_overlapped, Scheme};
-use powersgd::transport::{bytes_from_mb, engine_by_name, Cluster};
+use powersgd::simulate::{
+    data_per_epoch_mb, scheme_by_name, simulate_step, simulate_step_overlapped, Scheme,
+};
+use powersgd::transport::{bytes_from_mb, engine_by_name, Cluster, EngineKind};
 use powersgd::util::{Args, Table};
 
 fn main() -> Result<()> {
@@ -41,7 +50,12 @@ fn main() -> Result<()> {
     }
 }
 
-/// Build the optimizer selected by `--compressor` (+ `--rank`).
+/// Build the optimizer selected by `--compressor` (+ `--rank`). Under
+/// the threaded engine, schemes with a per-worker implementation run
+/// decentralized — each worker thread compresses its own gradient and
+/// aggregates over the `InProcRing`, bitwise-identical to the oracle —
+/// while the rest fall back to the centralized path (whose collectives
+/// still run on the threaded ring via the engine switch).
 pub fn build_optimizer(
     name: &str,
     rank: usize,
@@ -49,11 +63,29 @@ pub fn build_optimizer(
     momentum: f32,
     seed: u64,
     error_feedback: bool,
+    engine: EngineKind,
 ) -> Result<Box<dyn DistOptimizer>> {
-    use powersgd::compress::*;
+    use powersgd::compress::{decentralized_by_name, Compressor};
     let boxed: Box<dyn Compressor> = match name {
         "none" | "sgd" => return Ok(Box::new(Sgd::new(schedule, momentum))),
         "signum" => return Ok(Box::new(SignumOpt::new(schedule, momentum))),
+        _ => match (engine, decentralized_by_name(name, rank, seed)) {
+            (EngineKind::Threaded, Some(dec)) => Box::new(dec),
+            _ => centralized_compressor(name, rank, seed)?,
+        },
+    };
+    let ef = EfSgd::new(boxed, schedule, momentum);
+    Ok(Box::new(if error_feedback { ef } else { ef.without_error_feedback() }))
+}
+
+/// The centralized oracle compressor for a CLI name.
+fn centralized_compressor(
+    name: &str,
+    rank: usize,
+    seed: u64,
+) -> Result<Box<dyn powersgd::compress::Compressor>> {
+    use powersgd::compress::*;
+    Ok(match name {
         "powersgd" => Box::new(PowerSgd::new(rank, seed)),
         "powersgd-adaptive" => Box::new(AdaptivePowerSgd::new(rank, 1, 32, seed)),
         "powersgd-cold" => Box::new(PowerSgd::new(rank, seed).without_warm_start()),
@@ -65,9 +97,7 @@ pub fn build_optimizer(
         "sign-norm" => Box::new(SignNorm::new()),
         "atomo" => Box::new(Atomo::new(rank, seed)),
         other => bail!("unknown compressor {other:?}"),
-    };
-    let ef = EfSgd::new(boxed, schedule, momentum);
-    Ok(Box::new(if error_feedback { ef } else { ef.without_error_feedback() }))
+    })
 }
 
 /// Construct the data source matching a model artifact name.
@@ -118,7 +148,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let is_lm = model.starts_with("lstm") || model.starts_with("transformer");
     let schedule = LrSchedule::paper_step(lr, workers, warmup, vec![]);
-    let opt = build_optimizer(&compressor, rank, schedule, momentum, seed, !no_ef)?;
+    let opt = build_optimizer(&compressor, rank, schedule, momentum, seed, !no_ef, engine)?;
     let cfg = TrainerConfig {
         workers,
         backend,
@@ -161,18 +191,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn parse_scheme(s: &str, rank: usize) -> Result<Scheme> {
-    Ok(match s {
-        "sgd" => Scheme::Sgd,
-        "powersgd" | "rank" => Scheme::PowerSgd { rank },
-        "unbiased-rank" => Scheme::UnbiasedRank { rank },
-        "random-block" => Scheme::RandomBlock { rank },
-        "random-k" => Scheme::RandomK { rank },
-        "top-k" => Scheme::TopK { rank },
-        "sign-norm" => Scheme::SignNorm,
-        "signum" => Scheme::Signum,
-        "atomo" => Scheme::Atomo { rank },
-        other => bail!("unknown scheme {other:?}"),
-    })
+    scheme_by_name(s, rank).with_context(|| format!("unknown scheme {s:?}"))
 }
 
 fn profile_by_name(name: &str) -> Result<powersgd::profiles::ModelProfile> {
@@ -248,6 +267,110 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         table.print();
     }
+
+    // `--engine threaded` additionally executes one *real* decentralized
+    // compression round per scheme — per-worker WorkerCompressor
+    // instances over the InProcRing — and verifies it reproduces the
+    // centralized lockstep oracle bitwise on the profile's layer shapes.
+    if let Some(engine_name) = args.get("engine") {
+        let engine = engine_by_name(engine_name).context("unknown engine (lockstep|threaded)")?;
+        if engine == EngineKind::Threaded {
+            let seed = args.get_parsed_or("seed", 42u64);
+            run_decentralized_check(&profile, &schemes, workers, seed)?;
+        }
+    }
+    Ok(())
+}
+
+/// Execute one real decentralized compression round per scheme over the
+/// profile's layer shapes and check it against the centralized lockstep
+/// oracle bitwise — the equivalence `tests/integration_decentralized.rs`
+/// pins, demonstrated here on the paper's real shapes.
+fn run_decentralized_check(
+    profile: &powersgd::profiles::ModelProfile,
+    schemes: &[Scheme],
+    workers: usize,
+    seed: u64,
+) -> Result<()> {
+    use powersgd::collectives::CommLog;
+    use powersgd::compress::Compressor as _;
+    use powersgd::simulate::{centralized_for_scheme, decentralized_for_scheme};
+    use powersgd::tensor::Tensor;
+    use powersgd::util::Rng;
+
+    // Cap the world size so the check stays in memory. All-reduce
+    // schemes hold ~W full gradients plus one shared mean per path;
+    // gather schemes (sign/top-K) additionally materialize a full-model
+    // mean and per-worker locals on both paths, so budget them 4× lower.
+    let numel = profile.registry.numel().max(1);
+    let budget: usize = if schemes.iter().all(|s| s.all_reduce()) {
+        200_000_000
+    } else {
+        50_000_000
+    };
+    let w = workers.min((budget / numel).max(2));
+    if w < workers {
+        eprintln!("note: capping the decentralized check at {w} workers ({numel} params each)");
+    }
+
+    let mut rng = Rng::new(seed ^ 0x9e37);
+    let updates: Vec<Vec<Tensor>> = (0..w)
+        .map(|_| {
+            profile
+                .registry
+                .specs
+                .iter()
+                .map(|s| {
+                    let shape: Vec<usize> = match s.matrix_dims() {
+                        Some((n, m)) => vec![n, m],
+                        None => vec![s.numel()],
+                    };
+                    let mut t = Tensor::zeros(&shape);
+                    rng.fill_normal(t.data_mut(), 1.0);
+                    t
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut table = Table::new(
+        &format!(
+            "Decentralized per-worker compression — {} over InProcRing, {w} workers",
+            profile.name
+        ),
+        &["Algorithm", "Per-worker step", "Oracle step", "Bytes/worker", "Bitwise"],
+    );
+    for &scheme in schemes {
+        let (Some(mut dec), Some(mut oracle)) =
+            (decentralized_for_scheme(scheme, seed), centralized_for_scheme(scheme, seed))
+        else {
+            eprintln!("note: {} has no per-worker implementation; skipped", scheme.name());
+            continue;
+        };
+        let mut dlog = CommLog::default();
+        let t0 = std::time::Instant::now();
+        let dec_out = dec.compress_aggregate(&updates, &mut dlog);
+        let dec_s = t0.elapsed().as_secs_f64();
+        let mut olog = CommLog::default();
+        let t1 = std::time::Instant::now();
+        let oracle_out = oracle.compress_aggregate(&updates, &mut olog);
+        let oracle_s = t1.elapsed().as_secs_f64();
+        let mut bitwise = dlog.bytes_sent() == olog.bytes_sent();
+        for (a, b) in dec_out.mean.iter().zip(oracle_out.mean.iter()) {
+            bitwise &= a.data() == b.data();
+        }
+        if !bitwise {
+            bail!("{}: decentralized path diverged from the lockstep oracle", scheme.name());
+        }
+        table.row(&[
+            scheme.name(),
+            format!("{:.1} ms", dec_s * 1e3),
+            format!("{:.1} ms", oracle_s * 1e3),
+            format!("{}", dlog.bytes_sent()),
+            "ok".into(),
+        ]);
+    }
+    table.print();
     Ok(())
 }
 

@@ -29,6 +29,13 @@ pub trait DistOptimizer: Send {
 
     /// Learning rate used at `step` (for logging).
     fn lr_at(&self, step: usize) -> f64;
+
+    /// Scratch-arena tensor allocations so far, when the optimizer
+    /// drives a decentralized per-worker compressor (see
+    /// [`Compressor::scratch_allocations`]); `None` otherwise.
+    fn scratch_allocations(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Distributed error-feedback SGD with momentum (Algorithm 2).
@@ -88,6 +95,10 @@ impl DistOptimizer for EfSgd {
 
     fn lr_at(&self, step: usize) -> f64 {
         self.schedule.lr_at(step)
+    }
+
+    fn scratch_allocations(&self) -> Option<u64> {
+        self.compressor.scratch_allocations()
     }
 
     fn step(&mut self, grads: &[Vec<Tensor>], step: usize, log: &mut CommLog) -> Vec<Tensor> {

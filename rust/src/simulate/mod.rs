@@ -11,6 +11,7 @@
 //! "constant across all algorithms and numbers of workers" (Table 5).
 
 use crate::collectives::CollKind;
+use crate::compress::{decentralized_by_name, Compressor, DecentralizedCompressor};
 use crate::grad::{CompressKind, ParamRegistry, ParamSpec};
 use crate::net::Backend;
 use crate::profiles::ModelProfile;
@@ -104,6 +105,54 @@ impl Scheme {
             .map(|s| LayerTiming { msg_bytes: self.spec_message_bytes(s), raw_bytes: s.bytes() })
             .collect()
     }
+}
+
+/// Scheme by CLI name. Accepts the long `train`-subcommand spellings
+/// ("powersgd", "sign-norm", ...) plus the compact "rank1"/"rank2"/...
+/// spellings of the paper's tables (which override `rank`).
+pub fn scheme_by_name(name: &str, rank: usize) -> Option<Scheme> {
+    Some(match name {
+        "sgd" | "none" => Scheme::Sgd,
+        "powersgd" | "rank" => Scheme::PowerSgd { rank },
+        "unbiased-rank" => Scheme::UnbiasedRank { rank },
+        "random-block" => Scheme::RandomBlock { rank },
+        "random-k" => Scheme::RandomK { rank },
+        "top-k" => Scheme::TopK { rank },
+        "sign-norm" => Scheme::SignNorm,
+        "signum" => Scheme::Signum,
+        "atomo" => Scheme::Atomo { rank },
+        other => {
+            let r: usize = other.strip_prefix("rank")?.parse().ok().filter(|&r| r >= 1)?;
+            return Some(Scheme::PowerSgd { rank: r });
+        }
+    })
+}
+
+/// The decentralized per-worker implementation of `scheme`, when one
+/// exists (PowerSGD, unbiased rank-r, sign, top-K, no compression).
+pub fn decentralized_for_scheme(scheme: Scheme, seed: u64) -> Option<DecentralizedCompressor> {
+    match scheme {
+        Scheme::Sgd => decentralized_by_name("identity", 0, seed),
+        Scheme::PowerSgd { rank } => decentralized_by_name("powersgd", rank, seed),
+        Scheme::UnbiasedRank { rank } => decentralized_by_name("unbiased-rank", rank, seed),
+        Scheme::TopK { rank } => decentralized_by_name("top-k", rank, seed),
+        Scheme::SignNorm => decentralized_by_name("sign-norm", 0, seed),
+        _ => None,
+    }
+}
+
+/// The centralized oracle implementation of `scheme`, for checking the
+/// decentralized path against (same seed ⇒ bitwise-identical output).
+pub fn centralized_for_scheme(scheme: Scheme, seed: u64) -> Option<Box<dyn Compressor>> {
+    use crate::compress::{NoCompression, PowerSgd, SignNorm, TopK, UnbiasedRank};
+    Some(match scheme {
+        Scheme::Sgd => Box::new(NoCompression::new()),
+        Scheme::PowerSgd { rank } => Box::new(PowerSgd::new(rank, seed)),
+        Scheme::UnbiasedRank { rank } => Box::new(UnbiasedRank::new(rank, seed)),
+        Scheme::TopK { rank } => Box::new(TopK::new(rank)),
+        Scheme::SignNorm => Box::new(SignNorm::new()),
+        _ => return None,
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -328,6 +377,55 @@ mod tests {
     use super::*;
     use crate::net::{GLOO, NCCL};
     use crate::profiles::{lstm_wikitext2, resnet18};
+
+    #[test]
+    fn scheme_names_parse_including_compact_rank() {
+        assert_eq!(scheme_by_name("rank2", 0), Some(Scheme::PowerSgd { rank: 2 }));
+        assert_eq!(scheme_by_name("powersgd", 4), Some(Scheme::PowerSgd { rank: 4 }));
+        assert_eq!(scheme_by_name("sign-norm", 1), Some(Scheme::SignNorm));
+        assert_eq!(scheme_by_name("bogus", 1), None);
+        assert_eq!(scheme_by_name("rankx", 1), None);
+        // rank 0 must be a clean parse error, not a downstream panic.
+        assert_eq!(scheme_by_name("rank0", 1), None);
+        assert!(decentralized_for_scheme(Scheme::PowerSgd { rank: 2 }, 1).is_some());
+        assert!(decentralized_for_scheme(Scheme::Signum, 1).is_none());
+        assert!(centralized_for_scheme(Scheme::SignNorm, 1).is_some());
+        assert!(centralized_for_scheme(Scheme::Atomo { rank: 2 }, 1).is_none());
+    }
+
+    #[test]
+    fn scheme_compressor_mappings_stay_in_sync() {
+        // The scheme → compressor mappings live in several match arms;
+        // this pins them together so adding a decentralized path without
+        // its oracle counterpart (or vice versa) fails loudly instead of
+        // silently skipping / falling back.
+        let all = [
+            Scheme::Sgd,
+            Scheme::PowerSgd { rank: 2 },
+            Scheme::UnbiasedRank { rank: 2 },
+            Scheme::RandomBlock { rank: 2 },
+            Scheme::RandomK { rank: 2 },
+            Scheme::TopK { rank: 2 },
+            Scheme::SignNorm,
+            Scheme::Signum,
+            Scheme::Atomo { rank: 2 },
+        ];
+        for scheme in all {
+            let dec = decentralized_for_scheme(scheme, 1);
+            let cen = centralized_for_scheme(scheme, 1);
+            assert_eq!(
+                dec.is_some(),
+                cen.is_some(),
+                "{}: decentralized and oracle mappings drifted",
+                scheme.name()
+            );
+            if let (Some(d), Some(c)) = (dec, cen) {
+                assert_eq!(d.name(), format!("{} (per-worker)", c.name()));
+                assert_eq!(d.supports_all_reduce(), c.supports_all_reduce());
+                assert_eq!(d.supports_all_reduce(), scheme.all_reduce());
+            }
+        }
+    }
 
     #[test]
     fn table3_resnet_times_reproduced() {

@@ -18,6 +18,12 @@
 //! - [`Bucketer`] — PyTorch-DDP-style gradient bucketing: per-layer
 //!   messages are packed into fixed-capacity buckets in gradient-ready
 //!   (reverse declaration) order.
+//! - **Per-worker compression** — the [`Transport`] seam also carries
+//!   the decentralized compression path
+//!   ([`crate::compress::WorkerCompressor`]): under the threaded engine
+//!   each worker thread compresses its own gradient and aggregates the
+//!   `P`/`Q` factors (or packed messages) over an [`InProcRing`],
+//!   bitwise-matching the centralized lockstep oracle.
 //! - [`overlap`] — the comm/compute overlap scheduler: each bucket's
 //!   collective launches as soon as backprop has produced its layers,
 //!   over a [`Cluster`] with per-link α/β and per-worker compute jitter

@@ -104,6 +104,24 @@ pub fn ring_all_reduce_worker<T: Transport + ?Sized>(t: &T, buf: &mut [f32]) {
     let i = t.rank();
     let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
 
+    // Outgoing messages reuse the Vec received on the previous step
+    // (its owner, our predecessor, is done with it), so a worker
+    // allocates one chunk per collective instead of one per step.
+    // Values and send order are unchanged — this is a buffer-recycling
+    // optimization only.
+    let mut spare: Option<Vec<f32>> = None;
+    let send_chunk = |t: &T, src: &[f32], spare: &mut Option<Vec<f32>>| {
+        let msg = match spare.take() {
+            Some(mut v) => {
+                v.clear();
+                v.extend_from_slice(src);
+                v
+            }
+            None => src.to_vec(),
+        };
+        t.send_next(msg);
+    };
+
     // Phase 1: reduce-scatter. Step s: send chunk (i−s) mod w to the
     // successor, accumulate chunk (i−1−s) mod w from the predecessor.
     // The chunk sent at step s is exactly the partial sum accumulated at
@@ -111,7 +129,7 @@ pub fn ring_all_reduce_worker<T: Transport + ?Sized>(t: &T, buf: &mut [f32]) {
     // reference.
     for s in 0..w - 1 {
         let c_send = (i + w - s) % w;
-        t.send_next(buf[starts[c_send]..starts[c_send + 1]].to_vec());
+        send_chunk(t, &buf[starts[c_send]..starts[c_send + 1]], &mut spare);
         let c_recv = (i + 2 * w - 1 - s) % w;
         let chunk = t.recv_prev();
         let dst = &mut buf[starts[c_recv]..starts[c_recv + 1]];
@@ -119,16 +137,18 @@ pub fn ring_all_reduce_worker<T: Transport + ?Sized>(t: &T, buf: &mut [f32]) {
         for (d, v) in dst.iter_mut().zip(chunk.iter()) {
             *d += v;
         }
+        spare = Some(chunk);
     }
 
     // Phase 2: all-gather of the reduced chunks. Step s: send chunk
     // (i+1−s) mod w, overwrite chunk (i−s) mod w from the predecessor.
     for s in 0..w - 1 {
         let c_send = (i + 1 + w - s) % w;
-        t.send_next(buf[starts[c_send]..starts[c_send + 1]].to_vec());
+        send_chunk(t, &buf[starts[c_send]..starts[c_send + 1]], &mut spare);
         let c_recv = (i + w - s) % w;
         let chunk = t.recv_prev();
         buf[starts[c_recv]..starts[c_recv + 1]].copy_from_slice(&chunk);
+        spare = Some(chunk);
     }
 }
 

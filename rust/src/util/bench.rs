@@ -5,8 +5,16 @@
 //! Warmup iterations are run first, then the measured phase is repeated
 //! until both a minimum iteration count and minimum elapsed time are hit,
 //! so fast and slow cases are both measured meaningfully.
+//!
+//! Two CI hooks:
+//! - `BENCH_QUICK=1` ([`quick_mode`]) shrinks case lists and iteration
+//!   budgets so the `bench-smoke` job finishes in seconds;
+//! - [`BenchJson`] emits one `BENCH_<name>.json` per bench binary
+//!   (hand-rolled writer; serde is unavailable offline), uploaded as a
+//!   workflow artifact — the bench regression trajectory.
 
 use super::stats::Summary;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Prevent the optimizer from eliding a computed value.
@@ -39,6 +47,23 @@ impl Default for BenchRunner {
 impl BenchRunner {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Runner honoring [`quick_mode`]: in the CI smoke job each case
+    /// runs a handful of iterations — enough for a trend point in the
+    /// JSON artifact, not a stable measurement.
+    pub fn from_env() -> Self {
+        if quick_mode() {
+            BenchRunner {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 5,
+                min_time: Duration::from_millis(0),
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
     }
 
     /// Runner that measures each case exactly `n` times (for very heavy
@@ -96,6 +121,92 @@ impl BenchRunner {
     }
 }
 
+/// True when `BENCH_QUICK=1` (the CI `bench-smoke` job): benches shrink
+/// their case lists and iteration budgets but still emit JSON.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// Machine-readable bench output: one flat-record JSON document per
+/// bench binary, written as `BENCH_<name>.json` so CI can upload the
+/// files as artifacts and later runs can diff them.
+pub struct BenchJson {
+    bench: String,
+    records: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> BenchJson {
+        BenchJson { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    /// Append one record of named metrics.
+    pub fn record(&mut self, name: &str, metrics: &[(&str, f64)]) {
+        self.records
+            .push((name.to_string(), metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect()));
+    }
+
+    /// Append every result of a runner as mean/p50/p95 records.
+    pub fn record_runner(&mut self, runner: &BenchRunner) {
+        for (name, s) in runner.results() {
+            self.record(
+                name,
+                &[("mean_ms", s.mean), ("p50_ms", s.p50), ("p95_ms", s.p95), ("n", s.n as f64)],
+            );
+        }
+    }
+
+    /// Serialize the document (stable key order, valid JSON).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        out.push_str(&format!("  \"quick\": {},\n", quick_mode()));
+        out.push_str("  \"records\": [\n");
+        for (i, (name, metrics)) in self.records.iter().enumerate() {
+            out.push_str(&format!("    {{\"name\": \"{}\"", json_escape(name)));
+            for (k, v) in metrics {
+                out.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+            }
+            out.push_str(if i + 1 < self.records.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<bench>.json` into `$BENCH_JSON_DIR` (default: the
+    /// working directory); returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json())?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number: f64 `Display` never uses exponent notation; non-finite
+/// values (which JSON cannot carry) become null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,6 +229,40 @@ mod tests {
         assert_eq!(r.results().len(), 1);
         // warmup + measured
         assert!(count >= 4);
+    }
+
+    #[test]
+    fn json_document_is_well_formed() {
+        let mut j = BenchJson::new("unit");
+        j.record("case \"a\"", &[("mean_ms", 1.5), ("n", 3.0)]);
+        j.record("case_b", &[("mean_ms", f64::NAN)]);
+        let doc = j.to_json();
+        assert!(doc.contains("\"bench\": \"unit\""));
+        assert!(doc.contains("\"case \\\"a\\\"\", \"mean_ms\": 1.5, \"n\": 3"));
+        assert!(doc.contains("\"case_b\", \"mean_ms\": null"));
+        // Balanced braces/brackets — a cheap structural validity check.
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let opens = doc.matches(open).count();
+            let closes = doc.matches(close).count();
+            assert_eq!(opens, closes, "unbalanced {open}{close}");
+        }
+    }
+
+    #[test]
+    fn json_runner_results_round_trip() {
+        let mut r = BenchRunner {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: Duration::from_millis(0),
+            results: Vec::new(),
+        };
+        r.bench("tiny", || {
+            black_box(1 + 1);
+        });
+        let mut j = BenchJson::new("runner");
+        j.record_runner(&r);
+        assert!(j.to_json().contains("\"tiny\""));
     }
 
     #[test]

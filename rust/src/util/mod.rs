@@ -10,7 +10,7 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
-pub use bench::{black_box, BenchRunner};
+pub use bench::{black_box, quick_mode, BenchJson, BenchRunner};
 pub use cli::Args;
 pub use rng::Rng;
 pub use table::Table;
