@@ -4,6 +4,14 @@
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! For the *multi-process* quickstart — W real OS processes over a
+//! localhost TCP ring, verified bitwise against the in-process oracle
+//! (DESIGN.md §10) — no artifacts are needed:
+//!
+//! ```text
+//! cargo run --release -- launch --workers 4 --transport tcp --compressor powersgd --rank 2
+//! ```
 
 use anyhow::Result;
 use powersgd::compress::PowerSgd;

@@ -12,6 +12,8 @@
 //! for the CI `bench-smoke` artifact trail. `BENCH_QUICK=1` restricts
 //! the sweep to NCCL.
 
+use powersgd::collectives::{ring_wire_bytes, CollKind};
+use powersgd::grad::ParamRegistry;
 use powersgd::net::{GLOO, NCCL};
 use powersgd::profiles::resnet18;
 use powersgd::simulate::{simulate_step_overlapped, Scheme};
@@ -19,6 +21,56 @@ use powersgd::transport::Cluster;
 use powersgd::util::{quick_mode, BenchJson, Table};
 
 const BUCKET_BYTES: u64 = 4 << 20; // DDP-ish 4 MB buckets
+
+/// The per-step collective ops a decentralized worker round issues for
+/// `scheme` (mirrors `compress/worker.rs`): vectors travel in one
+/// packed all-reduce, matrix traffic uses the scheme's own collective,
+/// and PowerSGD splits into separate P and Q all-reduces. Feeding each
+/// op through `ring_wire_bytes` reproduces exactly what a metered
+/// transport counts — not just the single-collective approximation.
+fn worker_round_ops(scheme: Scheme, reg: &ParamRegistry) -> Vec<(CollKind, u64)> {
+    let vec_bytes: u64 =
+        reg.specs.iter().filter(|s| s.matrix_dims().is_none()).map(|s| s.bytes()).sum();
+    let mat_msg: u64 = reg
+        .specs
+        .iter()
+        .filter(|s| s.matrix_dims().is_some())
+        .map(|s| scheme.spec_message_bytes(s))
+        .sum();
+    let mut ops = Vec::new();
+    match scheme {
+        // Identity compression packs everything into one all-reduce.
+        Scheme::Sgd => ops.push((CollKind::AllReduce, vec_bytes + mat_msg)),
+        Scheme::PowerSgd { rank } => {
+            if vec_bytes > 0 {
+                ops.push((CollKind::AllReduce, vec_bytes));
+            }
+            let p: u64 = reg
+                .specs
+                .iter()
+                .filter_map(|s| s.matrix_dims())
+                .map(|(n, _)| (n * rank * 4) as u64)
+                .sum();
+            let q: u64 = reg
+                .specs
+                .iter()
+                .filter_map(|s| s.matrix_dims())
+                .map(|(_, m)| (m * rank * 4) as u64)
+                .sum();
+            ops.push((CollKind::AllReduce, p));
+            ops.push((CollKind::AllReduce, q));
+        }
+        _ => {
+            // Gather schemes: vectors still all-reduce uncompressed;
+            // only the packed matrix messages are gathered.
+            if vec_bytes > 0 {
+                ops.push((CollKind::AllReduce, vec_bytes));
+            }
+            ops.push((if scheme.all_reduce() { CollKind::AllReduce } else { CollKind::AllGather }, mat_msg));
+        }
+    }
+    ops
+}
 
 fn main() {
     let prof = resnet18();
@@ -29,6 +81,10 @@ fn main() {
         vec![NCCL, GLOO]
     };
     let mut json = BenchJson::new("fig_overlap");
+    // This bench models the threaded engine's bucketed schedule over
+    // in-process rings; tag the trajectory so it stays comparable with
+    // lockstep and tcp runs of the same cases.
+    json.set_context("threaded", "inproc");
 
     for backend in backends {
         for scheme in schemes {
@@ -59,6 +115,15 @@ fn main() {
                     format!("{:.1} ms", ovl.exposed_comm * 1e3),
                     format!("{:.0}%", 100.0 * (1.0 - ovl.total / seq.total)),
                 ]);
+                // Byte columns: the logical per-worker message plus the
+                // exact ring expansion a metered transport would count
+                // (rank 0's share, summed over the round's collectives;
+                // even splits make ranks identical).
+                let msg = scheme.message_bytes(&prof.registry);
+                let wire: u64 = worker_round_ops(scheme, &prof.registry)
+                    .iter()
+                    .map(|&(kind, bytes)| ring_wire_bytes(kind, bytes, w, 0))
+                    .sum();
                 json.record(
                     &format!("{}/{}/w{}", backend.name, scheme.name(), w),
                     &[
@@ -66,6 +131,8 @@ fn main() {
                         ("overlapped_ms", ovl.total * 1e3),
                         ("exposed_comm_ms", ovl.exposed_comm * 1e3),
                         ("saved_pct", 100.0 * (1.0 - ovl.total / seq.total)),
+                        ("logical_bytes", msg as f64),
+                        ("wire_bytes", wire as f64),
                     ],
                 );
             }

@@ -28,6 +28,7 @@ fn main() {
     let mut rng = Rng::new(55);
     let mut runner = BenchRunner::from_env();
     let mut json = BenchJson::new("kernel_hotpath");
+    json.set_context("lockstep", "inproc");
 
     // --- the paper's dominant layer shapes ---
     let shapes: &[(usize, usize)] = if quick {

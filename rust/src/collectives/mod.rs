@@ -70,6 +70,46 @@ impl CommLog {
     }
 }
 
+/// Exact payload bytes a single worker puts on the wire for one ring
+/// collective carrying a `msg_bytes`-byte per-worker message — the
+/// *measured* counterpart of the logical [`CommLog`] unit (which
+/// records the message size once, not the ring expansion). A metered
+/// transport must observe exactly this many sent bytes per collective;
+/// `transport::tcp` cross-checks it on every multi-process run.
+///
+/// - **All-reduce** (f32 payload): the two-phase ring sends `2(W−1)`
+///   chunks; chunk `c` covers values `[c·n/W, (c+1)·n/W)`, so when `W`
+///   does not divide `n` the total depends on which chunks this
+///   worker's `rank` touches. Summed over all ranks this is the
+///   classic `2·(W−1)/W · N` bandwidth term.
+/// - **All-gather**: the worker forwards `W−1` messages; the schemes
+///   that gather (sign, top-K) send equal-length messages from every
+///   rank, so the expansion is `(W−1)·msg_bytes`.
+/// - **Reduce+broadcast** is only priced by the α–β model, never
+///   executed on a transport; its sent-side share is the message
+///   itself.
+pub fn ring_wire_bytes(kind: CollKind, msg_bytes: u64, world: usize, rank: usize) -> u64 {
+    if world <= 1 {
+        return 0;
+    }
+    match kind {
+        CollKind::AllReduce => {
+            debug_assert_eq!(msg_bytes % 4, 0, "all-reduce payloads are f32");
+            let n = (msg_bytes / 4) as usize;
+            let starts: Vec<usize> = (0..=world).map(|c| c * n / world).collect();
+            let chunk = |c: usize| (starts[c + 1] - starts[c]) as u64;
+            let mut values = 0u64;
+            for s in 0..world - 1 {
+                values += chunk((rank + world - s) % world); // reduce-scatter send
+                values += chunk((rank + 1 + world - s) % world); // all-gather send
+            }
+            values * 4
+        }
+        CollKind::AllGather => (world as u64 - 1) * msg_bytes,
+        CollKind::ReduceBroadcast => msg_bytes,
+    }
+}
+
 /// Ring all-reduce (sum) across per-worker buffers, in place: after the
 /// call every worker's buffer holds the elementwise sum.
 ///
@@ -299,6 +339,37 @@ mod tests {
         assert_eq!(got[2][0], vec![1.0, 2.0]);
         // Byte accounting unchanged: one per-worker message.
         assert_eq!(log.bytes_sent(), 8);
+    }
+
+    #[test]
+    fn ring_wire_bytes_sums_to_bandwidth_term() {
+        // Σ over ranks of the per-rank expansion = 2·(W−1)·N·4 for
+        // all-reduce (every step moves every chunk exactly once per
+        // phase), and W·(W−1)·B for all-gather.
+        for &(w, n) in &[(2usize, 8usize), (3, 10), (4, 1003), (5, 7), (7, 0)] {
+            let msg = (n * 4) as u64;
+            let total: u64 =
+                (0..w).map(|r| ring_wire_bytes(CollKind::AllReduce, msg, w, r)).sum();
+            assert_eq!(total, 2 * (w as u64 - 1) * (n as u64) * 4, "w={w} n={n}");
+            let gather: u64 =
+                (0..w).map(|r| ring_wire_bytes(CollKind::AllGather, 10, w, r)).sum();
+            assert_eq!(gather, (w as u64) * (w as u64 - 1) * 10);
+        }
+    }
+
+    #[test]
+    fn ring_wire_bytes_even_split_is_rank_independent() {
+        // When W | n every rank sends the same 2(W−1)·(n/W) values.
+        let (w, n) = (4usize, 64usize);
+        for r in 0..w {
+            assert_eq!(
+                ring_wire_bytes(CollKind::AllReduce, (n * 4) as u64, w, r),
+                (2 * (w as u64 - 1)) * ((n / w) as u64) * 4
+            );
+        }
+        // Single worker: nothing crosses a wire.
+        assert_eq!(ring_wire_bytes(CollKind::AllReduce, 400, 1, 0), 0);
+        assert_eq!(ring_wire_bytes(CollKind::AllGather, 400, 1, 0), 0);
     }
 
     #[test]

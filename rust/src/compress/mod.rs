@@ -47,8 +47,9 @@ pub use sign::{SignNorm, Signum};
 pub use sparsify::{RandomBlock, RandomK, TopK};
 pub use unbiased::UnbiasedRank;
 pub use worker::{
-    decentralized_by_name, DecentralizedCompressor, NoCompressionWorker, PowerSgdWorker,
-    SignNormWorker, TopKWorker, UnbiasedRankWorker, WorkerCompressor, WorkerLink, WorkerRound,
+    decentralized_by_name, oracle_by_name, worker_by_name, DecentralizedCompressor,
+    EndpointCompressor, NoCompressionWorker, PowerSgdWorker, SignNormWorker, TopKWorker,
+    UnbiasedRankWorker, WorkerCompressor, WorkerLink, WorkerRound,
 };
 
 use crate::collectives::{all_reduce_mean, CommLog};

@@ -27,7 +27,10 @@
 use super::scratch::ScratchArena;
 use super::sign::pack_signs_into;
 use super::sparsify::{sparsified_bytes, TopK};
-use super::{split_kinds, sparsify_budget, Aggregated, Compressor, Locals};
+use super::{
+    split_kinds, sparsify_budget, Aggregated, Compressor, Locals, NoCompression, PowerSgd,
+    SignNorm, UnbiasedRank,
+};
 use crate::collectives::{CollKind, CommLog};
 use crate::grad::{CompressKind, ParamRegistry};
 use crate::linalg::gram_schmidt_in_place;
@@ -750,26 +753,135 @@ impl Compressor for DecentralizedCompressor {
     }
 }
 
-/// Per-worker implementation for a CLI compressor name; `None` when the
-/// scheme has no decentralized path yet (callers fall back to the
-/// centralized oracle).
+/// One per-worker [`WorkerCompressor`] instance for a CLI compressor
+/// name; `None` when the scheme has no decentralized path. This is the
+/// single name→scheme mapping shared by the threaded fleet
+/// ([`decentralized_by_name`]) and the multi-process TCP harness (one
+/// instance per OS process).
+pub fn worker_by_name(name: &str, rank: usize, seed: u64) -> Option<Box<dyn WorkerCompressor>> {
+    Some(match name {
+        "powersgd" => Box::new(PowerSgdWorker::new(rank, seed)),
+        "powersgd-cold" => Box::new(PowerSgdWorker::new(rank, seed).without_warm_start()),
+        "unbiased-rank" => Box::new(UnbiasedRankWorker::new(rank, seed)),
+        "sign-norm" => Box::new(SignNormWorker::new()),
+        "top-k" => Box::new(TopKWorker::new(rank)),
+        "none" | "sgd" | "identity" => Box::new(NoCompressionWorker::new()),
+        _ => return None,
+    })
+}
+
+/// The centralized oracle for the same CLI names [`worker_by_name`]
+/// covers — the reference a decentralized run (threaded or TCP) is
+/// checked against. Kept next to the per-worker mapping so the two
+/// cannot drift.
+pub fn oracle_by_name(name: &str, rank: usize, seed: u64) -> Option<Box<dyn Compressor>> {
+    Some(match name {
+        "powersgd" => Box::new(PowerSgd::new(rank, seed)),
+        "powersgd-cold" => Box::new(PowerSgd::new(rank, seed).without_warm_start()),
+        "unbiased-rank" => Box::new(UnbiasedRank::new(rank, seed)),
+        "sign-norm" => Box::new(SignNorm::new()),
+        "top-k" => Box::new(TopK::new(rank)),
+        "none" | "sgd" | "identity" => Box::new(NoCompression::new()),
+        _ => return None,
+    })
+}
+
+/// Per-worker fleet for a CLI compressor name; `None` when the scheme
+/// has no decentralized path yet (callers fall back to the centralized
+/// oracle).
 pub fn decentralized_by_name(
     name: &str,
     rank: usize,
     seed: u64,
 ) -> Option<DecentralizedCompressor> {
-    let factory: WorkerFactory = match name {
-        "powersgd" => Box::new(move || Box::new(PowerSgdWorker::new(rank, seed))),
-        "powersgd-cold" => {
-            Box::new(move || Box::new(PowerSgdWorker::new(rank, seed).without_warm_start()))
-        }
-        "unbiased-rank" => Box::new(move || Box::new(UnbiasedRankWorker::new(rank, seed))),
-        "sign-norm" => Box::new(|| Box::new(SignNormWorker::new())),
-        "top-k" => Box::new(move || Box::new(TopKWorker::new(rank))),
-        "none" | "sgd" | "identity" => Box::new(|| Box::new(NoCompressionWorker::new())),
-        _ => return None,
-    };
+    // Probe once so unknown names return None instead of a factory
+    // that fails later.
+    worker_by_name(name, rank, seed)?;
+    let name = name.to_string();
+    let factory: WorkerFactory = Box::new(move || {
+        worker_by_name(&name, rank, seed).expect("probed at construction")
+    });
     Some(DecentralizedCompressor::new(factory))
+}
+
+// ---------------------------------------------------------------------
+// Endpoint adapter: one worker process behind the Compressor interface.
+// ---------------------------------------------------------------------
+
+/// One worker's [`Compressor`] view over a live transport endpoint.
+///
+/// [`DecentralizedCompressor`] adapts a *fleet* of per-worker instances
+/// (it owns every worker and wires an [`InProcRing`] per call); this
+/// adapter is the multi-process counterpart: the process holds exactly
+/// **one** worker's state and one connected endpoint (e.g. a
+/// `transport::tcp::TcpRing`, usually metered), and `compress_aggregate`
+/// receives only this worker's update. The collective inside
+/// [`WorkerCompressor::round`] reaches the other processes through the
+/// endpoint, so the returned aggregate is still the cross-worker mean —
+/// which is exactly what lets an unmodified [`crate::optim::EfSgd`]
+/// drive a distributed run: its per-worker error feedback state is this
+/// process's own, and the momentum update sees the shared aggregate.
+pub struct EndpointCompressor<E> {
+    endpoint: E,
+    comp: Box<dyn WorkerCompressor>,
+    scratch: ScratchArena,
+}
+
+impl<E> EndpointCompressor<E>
+where
+    E: Transport<Vec<f32>> + Transport<Vec<u8>>,
+{
+    pub fn new(endpoint: E, comp: Box<dyn WorkerCompressor>) -> EndpointCompressor<E> {
+        EndpointCompressor { endpoint, comp, scratch: ScratchArena::new() }
+    }
+
+    /// The wrapped endpoint (e.g. to read metered byte counters).
+    pub fn endpoint(&self) -> &E {
+        &self.endpoint
+    }
+}
+
+impl<E> Compressor for EndpointCompressor<E>
+where
+    E: Transport<Vec<f32>> + Transport<Vec<u8>>,
+{
+    fn name(&self) -> String {
+        format!("{} (endpoint)", self.comp.name())
+    }
+
+    fn supports_all_reduce(&self) -> bool {
+        self.comp.supports_all_reduce()
+    }
+
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        self.comp.message_bytes(registry)
+    }
+
+    fn is_biased(&self) -> bool {
+        self.comp.is_biased()
+    }
+
+    fn scratch_allocations(&self) -> Option<u64> {
+        Some(self.scratch.allocations())
+    }
+
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
+        assert_eq!(
+            updates.len(),
+            1,
+            "an endpoint compressor holds exactly this process's worker; \
+             other workers' updates live in other processes"
+        );
+        let link = WorkerLink { f32s: &self.endpoint, bytes: &self.endpoint };
+        let round = self.comp.round(&updates[0], &link, &mut self.scratch, log);
+        Aggregated {
+            mean: round.mean,
+            locals: match round.local {
+                None => Locals::SharedAggregate,
+                Some(own) => Locals::PerWorker(vec![own]),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -802,6 +914,123 @@ mod tests {
         assert_eq!(agg.mean[0].data(), updates[0][0].data());
         assert_eq!(agg.mean[1].data(), updates[0][1].data());
         assert_eq!(log.bytes_sent(), (6 + 4) * 4);
+    }
+
+    #[test]
+    fn worker_and_oracle_mappings_stay_in_sync() {
+        let reg = ParamRegistry::from_shapes(&[("w", vec![16, 10]), ("b", vec![5])]);
+        for name in ["powersgd", "powersgd-cold", "unbiased-rank", "sign-norm", "top-k", "none"] {
+            let worker = worker_by_name(name, 2, 1).unwrap_or_else(|| panic!("{name}"));
+            let oracle = oracle_by_name(name, 2, 1).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(worker.supports_all_reduce(), oracle.supports_all_reduce(), "{name}");
+            assert_eq!(worker.is_biased(), oracle.is_biased(), "{name}");
+            assert_eq!(worker.message_bytes(&reg), oracle.message_bytes(&reg), "{name}");
+        }
+        assert!(worker_by_name("atomo", 2, 1).is_none());
+        assert!(oracle_by_name("atomo", 2, 1).is_none());
+        assert!(worker_by_name("random-k", 2, 1).is_none());
+        assert!(oracle_by_name("random-k", 2, 1).is_none());
+    }
+
+    /// Two-typed endpoint over a pair of InProcRing nodes — the shape a
+    /// multi-process endpoint has (TcpRing multiplexes both types over
+    /// one connection; here each type gets its own channel ring).
+    struct PairEndpoint {
+        f: crate::transport::RingNode<Vec<f32>>,
+        b: crate::transport::RingNode<Vec<u8>>,
+    }
+
+    impl Transport<Vec<f32>> for PairEndpoint {
+        fn rank(&self) -> usize {
+            self.f.rank()
+        }
+        fn world(&self) -> usize {
+            self.f.world()
+        }
+        fn send_next(&self, msg: Vec<f32>) {
+            self.f.send_next(msg);
+        }
+        fn recv_prev(&self) -> Vec<f32> {
+            self.f.recv_prev()
+        }
+    }
+
+    impl Transport<Vec<u8>> for PairEndpoint {
+        fn rank(&self) -> usize {
+            Transport::<Vec<u8>>::rank(&self.b)
+        }
+        fn world(&self) -> usize {
+            Transport::<Vec<u8>>::world(&self.b)
+        }
+        fn send_next(&self, msg: Vec<u8>) {
+            self.b.send_next(msg);
+        }
+        fn recv_prev(&self) -> Vec<u8> {
+            self.b.recv_prev()
+        }
+    }
+
+    /// The endpoint adapter, one instance per "process" (thread here),
+    /// must reproduce the centralized oracle bitwise — aggregate,
+    /// per-worker locals, and logged traffic.
+    #[test]
+    fn endpoint_compressor_matches_oracle_bitwise() {
+        use crate::util::Rng;
+        let world = 2;
+        let shapes: [&[usize]; 3] = [&[6, 4], &[3], &[5, 5]];
+        let mut rng = Rng::new(9);
+        for name in ["powersgd", "sign-norm", "top-k", "none"] {
+            let updates: Vec<Vec<Tensor>> = (0..world)
+                .map(|_| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            let mut t = Tensor::zeros(s);
+                            rng.fill_normal(t.data_mut(), 1.0);
+                            t
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut oracle = oracle_by_name(name, 2, 5).unwrap();
+            let mut olog = CommLog::default();
+            let want = oracle.compress_aggregate(&updates, &mut olog);
+
+            let fnodes = InProcRing::endpoints::<Vec<f32>>(world);
+            let bnodes = InProcRing::endpoints::<Vec<u8>>(world);
+            let results: Vec<(Aggregated, CommLog)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = fnodes
+                    .into_iter()
+                    .zip(bnodes)
+                    .zip(updates.iter())
+                    .map(|((f, b), up)| {
+                        scope.spawn(move || {
+                            let endpoint = PairEndpoint { f, b };
+                            let mut comp = EndpointCompressor::new(
+                                endpoint,
+                                worker_by_name(name, 2, 5).unwrap(),
+                            );
+                            let mut log = CommLog::default();
+                            let agg =
+                                comp.compress_aggregate(std::slice::from_ref(up), &mut log);
+                            (agg, log)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (wi, (agg, log)) in results.iter().enumerate() {
+                assert_eq!(log.bytes_sent(), olog.bytes_sent(), "{name}: bytes");
+                for (p, (a, b)) in agg.mean.iter().zip(want.mean.iter()).enumerate() {
+                    assert_eq!(a.data(), b.data(), "{name}: mean[{p}] (worker {wi})");
+                }
+                for (p, (a, b)) in
+                    agg.local_for(0).iter().zip(want.local_for(wi).iter()).enumerate()
+                {
+                    assert_eq!(a.data(), b.data(), "{name}: local[{p}] (worker {wi})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //!   chosen compressor over W simulated workers.
 //! - `simulate` — shape-profile timing simulator (paper Tables 3–7,
 //!   Figure 3) without running a model.
+//! - `launch`   — quickstart for the multi-process TCP ring
+//!   (DESIGN.md §10): spawn W `powersgd worker` OS processes on
+//!   localhost, rendezvous them into a ring, run a deterministic
+//!   PowerSGD EF-SGD trajectory over real sockets, and verify it
+//!   **bitwise** against the in-process lockstep oracle — including
+//!   measured-wire-bytes vs. the analytic `message_bytes` model.
+//! - `worker`   — one rank of a launch (spawned by `launch`; can also
+//!   be started by hand against a known coordinator address).
 //! - `artifacts`— list available compiled artifacts.
 //!
 //! Examples:
@@ -14,13 +22,17 @@
 //! powersgd simulate --profile resnet18 --scheme rank2 --workers 16 --backend nccl
 //! powersgd simulate --profile resnet18 --bucket-mb 4 --overlap
 //! powersgd simulate --profile resnet18 --scheme rank2 --engine threaded
+//! powersgd launch --workers 4 --transport tcp --compressor powersgd --rank 2 --steps 3
+//! powersgd launch --workers 2 --compressor sign-norm --steps 5
 //! ```
 //!
 //! With `--engine threaded`, `train` runs compression decentralized
 //! (per-worker `WorkerCompressor` instances over the `InProcRing`) for
 //! schemes that support it, and `simulate` executes one real
 //! decentralized round per scheme, checked bitwise against the
-//! centralized lockstep oracle.
+//! centralized lockstep oracle. `launch` takes the same per-worker path
+//! across real process boundaries: each worker compresses its own
+//! gradient and aggregates over a `TcpRing`.
 
 use anyhow::{bail, Context, Result};
 use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
@@ -39,10 +51,12 @@ fn main() -> Result<()> {
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("launch") => cmd_launch(&args),
+        Some("worker") => cmd_worker(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: powersgd <train|simulate|artifacts> [--help]\n\
+                "usage: powersgd <train|simulate|launch|worker|artifacts> [--help]\n\
                  see README.md for options"
             );
             Ok(())
@@ -372,6 +386,121 @@ fn run_decentralized_check(
     }
     table.print();
     Ok(())
+}
+
+/// Shared `launch`/`worker` options → the TCP harness config. The
+/// momentum parses as f32 directly (not via f64) so the coordinator's
+/// value and the string-forwarded worker values are bit-identical.
+fn harness_config(args: &Args) -> powersgd::transport::tcp::HarnessConfig {
+    powersgd::transport::tcp::HarnessConfig {
+        compressor: args.get_or("compressor", "powersgd").to_string(),
+        rank: args.get_parsed_or("rank", 2usize),
+        seed: args.get_parsed_or("seed", 42u64),
+        steps: args.get_parsed_or("steps", 3usize),
+        lr: args.get_parsed_or("lr", 0.05f64),
+        momentum: args.get_parsed_or("momentum", 0.9f32),
+    }
+}
+
+fn harness_timeout(args: &Args) -> std::time::Duration {
+    std::time::Duration::from_secs_f64(args.get_parsed_or("timeout-s", 30.0f64))
+}
+
+/// `powersgd launch`: spawn W worker processes, rendezvous them into a
+/// TCP ring on localhost, and verify the run against the lockstep
+/// oracle (bitwise parameters + exact byte accounting). Exits non-zero
+/// on any mismatch or dead worker.
+fn cmd_launch(args: &Args) -> Result<()> {
+    use powersgd::transport::tcp::{coordinate, Rendezvous};
+    use std::process::Command;
+
+    let workers = args.get_parsed_or("workers", 4usize);
+    let transport = args.get_or("transport", "tcp");
+    if transport != "tcp" {
+        bail!("unknown transport {transport:?} (tcp)");
+    }
+    let cfg = harness_config(args);
+    let timeout = harness_timeout(args);
+
+    let rendezvous = Rendezvous::bind(args.get_or("bind", "127.0.0.1:0"))?;
+    let addr = rendezvous.addr()?;
+    let exe = std::env::current_exe().context("cannot locate the powersgd binary")?;
+    eprintln!(
+        "launching {workers} worker processes (rendezvous {addr}, {} rank {}, {} steps)",
+        cfg.compressor, cfg.rank, cfg.steps
+    );
+    let mut children = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let child = Command::new(&exe)
+            .arg("worker")
+            .arg("--coordinator")
+            .arg(&addr)
+            .arg("--compressor")
+            .arg(&cfg.compressor)
+            .arg("--rank")
+            .arg(cfg.rank.to_string())
+            .arg("--seed")
+            .arg(cfg.seed.to_string())
+            .arg("--steps")
+            .arg(cfg.steps.to_string())
+            .arg("--lr")
+            .arg(cfg.lr.to_string())
+            .arg("--momentum")
+            .arg(cfg.momentum.to_string())
+            .arg("--timeout-s")
+            .arg(timeout.as_secs_f64().to_string())
+            .spawn()
+            .context("spawning a worker process")?;
+        children.push(child);
+    }
+
+    let outcome = coordinate(&rendezvous, workers, &cfg, timeout);
+    if outcome.is_err() {
+        // Don't leave orphan workers behind a failed launch.
+        for child in &mut children {
+            let _ = child.kill();
+        }
+    }
+    for (idx, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().context("waiting for a worker process")?;
+        if outcome.is_ok() && !status.success() {
+            bail!("worker process #{idx} exited with {status}");
+        }
+    }
+    let outcome = outcome?;
+
+    let mut table = Table::new(
+        &format!(
+            "TCP ring — {} workers × {} steps, {} (rank {})",
+            outcome.world, outcome.steps, cfg.compressor, cfg.rank
+        ),
+        &["Rank", "Wire bytes", "Logical bytes", "Model bytes/step", "vs oracle"],
+    );
+    for report in &outcome.reports {
+        table.row(&[
+            format!("{}", report.rank),
+            format!("{}", report.wire_bytes),
+            format!("{}", report.logical_bytes),
+            format!("{}", outcome.model_bytes_per_step),
+            "bitwise".into(),
+        ]);
+    }
+    table.print();
+    println!(
+        "ok: {} workers bitwise-identical to the lockstep oracle; measured wire bytes match \
+         the analytic message_bytes model",
+        outcome.world
+    );
+    Ok(())
+}
+
+/// `powersgd worker`: one rank of a `launch` — rendezvous, run the
+/// trajectory over the metered TCP ring, report back.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let coordinator = args
+        .get("coordinator")
+        .context("worker needs --coordinator host:port (normally passed by `launch`)")?;
+    powersgd::transport::tcp::run_worker(coordinator, &harness_config(args), harness_timeout(args))
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

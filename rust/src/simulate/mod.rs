@@ -428,6 +428,34 @@ mod tests {
     }
 
     #[test]
+    fn scheme_bytes_match_worker_models_on_the_tcp_harness_registry() {
+        // The TCP harness verifies measured wire bytes against the
+        // per-worker compressor's message_bytes model; this pins that
+        // model to the simulator's Scheme::message_bytes for every
+        // mapped scheme, closing the chain
+        // measured ↔ logged ↔ worker model ↔ analytic Scheme.
+        use crate::compress::worker_by_name;
+        use crate::transport::tcp::harness_registry;
+        let reg = harness_registry();
+        let cases: [(Scheme, &str); 5] = [
+            (Scheme::PowerSgd { rank: 2 }, "powersgd"),
+            (Scheme::UnbiasedRank { rank: 2 }, "unbiased-rank"),
+            (Scheme::TopK { rank: 2 }, "top-k"),
+            (Scheme::SignNorm, "sign-norm"),
+            (Scheme::Sgd, "none"),
+        ];
+        for (scheme, name) in cases {
+            let worker = worker_by_name(name, 2, 0).unwrap();
+            assert_eq!(
+                scheme.message_bytes(&reg),
+                worker.message_bytes(&reg),
+                "{}",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
     fn table3_resnet_times_reproduced() {
         let p = resnet18();
         let sgd = simulate_step(&p, Scheme::Sgd, 16, &NCCL).total() * 1e3;

@@ -8,7 +8,7 @@
 //! - [`Transport`] — the point-to-point seam: a worker endpoint that can
 //!   send a message to its ring successor and (blockingly) receive from
 //!   its predecessor. [`InProcRing`] implements it with `std::sync::mpsc`
-//!   channels; a future TCP transport only has to implement this trait.
+//!   channels; [`TcpRing`] implements it over real OS sockets.
 //! - [`ring`] — channel-based ring collectives: each simulated worker
 //!   runs on its own OS thread and moves chunks over its endpoint. The
 //!   arithmetic (chunk boundaries, accumulation order) is identical to
@@ -28,6 +28,12 @@
 //!   collective launches as soon as backprop has produced its layers,
 //!   over a [`Cluster`] with per-link α/β and per-worker compute jitter
 //!   (straggler and heterogeneous-cluster scenarios).
+//! - [`tcp`] — the multi-process backend (DESIGN.md §10): a
+//!   length-prefixed wire codec, a coordinator-hosted rendezvous that
+//!   assigns ranks and distributes peer addresses, the [`TcpRing`]
+//!   transport over real sockets, [`MeteredTransport`] measured-bytes
+//!   accounting, and the `powersgd launch`/`worker` harness that pins
+//!   a localhost multi-process run bitwise to the lockstep oracle.
 //!
 //! # Engine selection
 //!
@@ -42,6 +48,7 @@
 mod bucket;
 pub mod overlap;
 pub mod ring;
+pub mod tcp;
 
 pub use bucket::{bytes_from_mb, Bucket, Bucketer, LayerTiming};
 pub use overlap::{schedule_step, Cluster, ComputePhases, Link, OverlapOutcome};
@@ -49,6 +56,7 @@ pub use ring::{
     ring_all_gather_threaded, ring_all_gather_worker, ring_all_reduce_sum_threaded,
     ring_all_reduce_worker, InProcRing, RingNode, Transport,
 };
+pub use tcp::{MeteredTransport, TcpRing, WireCounters};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 

@@ -1,0 +1,391 @@
+//! The `powersgd launch` / `powersgd worker` driver: a deterministic
+//! multi-process EF-SGD run over the TCP ring, verified **bitwise**
+//! against the centralized lockstep oracle.
+//!
+//! The workload is a fixed small parameter set with seeded synthetic
+//! gradients: every process regenerates the full `W`-worker gradient
+//! draw from the shared seed and uses only its own slice
+//! ([`synthetic_grads`]), so `W` OS processes and the in-process oracle
+//! see identical bits without moving any training data. Each worker
+//! runs an **unmodified** [`EfSgd`] whose compressor is an
+//! [`EndpointCompressor`] over a metered [`super::TcpRing`]: the same
+//! per-worker compression rounds, the same ring collectives, real
+//! sockets.
+//!
+//! Verification chain (every link checked on every run):
+//!
+//! 1. worker-side: measured wire bytes == the
+//!    [`ring_wire_bytes`] expansion of every logged collective;
+//! 2. coordinator-side: every worker's logged (logical) bytes == the
+//!    compressor's closed-form `message_bytes` model × steps;
+//! 3. coordinator-side: every worker's final parameters are
+//!    **bit-identical** to the oracle trajectory's.
+//!
+//! `tests/integration_tcp.rs` drives this both in-process (threads with
+//! real sockets) and as true multi-process runs of the binary.
+
+use super::metered::MeteredTransport;
+use super::rendezvous::{join, Rendezvous};
+use super::wire::{read_frame, write_frame, Frame};
+use super::TcpRing;
+use crate::collectives::{ring_wire_bytes, CommLog};
+use crate::compress::{oracle_by_name, worker_by_name, EndpointCompressor};
+use crate::grad::ParamRegistry;
+use crate::optim::{DistOptimizer, EfSgd, LrSchedule};
+use crate::tensor::Tensor;
+use crate::transport::Transport;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Duration;
+
+/// What a launch and its workers agree to run. Every field must be
+/// identical on the coordinator and all workers (the launch subcommand
+/// forwards them on each worker's command line).
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    /// Compressor CLI name (must have a per-worker implementation).
+    pub compressor: String,
+    /// Compression rank `r` where applicable.
+    pub rank: usize,
+    pub seed: u64,
+    pub steps: usize,
+    pub lr: f64,
+    pub momentum: f32,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> HarnessConfig {
+        HarnessConfig {
+            compressor: "powersgd".into(),
+            rank: 2,
+            seed: 42,
+            steps: 3,
+            lr: 0.05,
+            momentum: 0.9,
+        }
+    }
+}
+
+/// The harness model: mixed matrix/vector parameters, vectors
+/// interleaved like a real network.
+pub fn harness_shapes() -> Vec<Vec<usize>> {
+    vec![vec![12, 8], vec![5], vec![6, 10], vec![3]]
+}
+
+/// [`ParamRegistry`] over [`harness_shapes`], for the closed-form
+/// `message_bytes` cross-check.
+pub fn harness_registry() -> ParamRegistry {
+    ParamRegistry::from_shapes(&[
+        ("w0", vec![12, 8]),
+        ("b0", vec![5]),
+        ("w1", vec![6, 10]),
+        ("b1", vec![3]),
+    ])
+}
+
+/// Deterministic per-step gradients for all `world` workers. Every
+/// process calls this with the same arguments and slices out its own
+/// rank; the oracle consumes the whole draw. One shared RNG stream in
+/// worker-major order keeps the bits identical everywhere.
+pub fn synthetic_grads(world: usize, seed: u64, step: usize) -> Vec<Vec<Tensor>> {
+    let mut rng = Rng::new(seed ^ ((step as u64 + 1).wrapping_mul(0x9e37_79b9)));
+    (0..world)
+        .map(|_| {
+            harness_shapes()
+                .iter()
+                .map(|shape| {
+                    let mut t = Tensor::zeros(shape);
+                    rng.fill_normal(t.data_mut(), 1.0);
+                    t
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Deterministic initial parameters (identical on every process).
+pub fn initial_params(seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed ^ 0xA11CE);
+    harness_shapes()
+        .iter()
+        .map(|shape| {
+            let mut t = Tensor::zeros(shape);
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        })
+        .collect()
+}
+
+/// The centralized lockstep oracle trajectory: the same EF-SGD loop the
+/// worker processes run, driven in one process with all `world` updates
+/// per call. Returns the final parameters and the total per-worker
+/// logical bytes logged.
+pub fn oracle_trajectory(world: usize, cfg: &HarnessConfig) -> Result<(Vec<Tensor>, u64)> {
+    let comp = oracle_by_name(&cfg.compressor, cfg.rank, cfg.seed)
+        .ok_or_else(|| anyhow!("no centralized oracle for compressor {:?}", cfg.compressor))?;
+    let mut opt = EfSgd::new(comp, LrSchedule::constant(cfg.lr), cfg.momentum);
+    let mut params = initial_params(cfg.seed);
+    let mut log = CommLog::default();
+    for step in 0..cfg.steps {
+        let grads = synthetic_grads(world, cfg.seed, step);
+        let delta = opt.step(&grads, step, &mut log);
+        for (x, d) in params.iter_mut().zip(delta.iter()) {
+            x.axpy(-1.0, d);
+        }
+    }
+    Ok((params, log.bytes_sent()))
+}
+
+/// One worker's finished run.
+pub struct WorkerRunReport {
+    pub rank: usize,
+    pub params: Vec<Tensor>,
+    /// Per-worker logical bytes (the `CommLog` unit), summed over steps.
+    pub logical_bytes: u64,
+    /// Payload bytes this worker actually put on the wire.
+    pub wire_bytes: u64,
+}
+
+/// Run this process's half of the EF-SGD trajectory over a connected,
+/// metered endpoint. A peer dying mid-collective surfaces as a
+/// contextual error (the infallible [`Transport`] methods panic with
+/// the dead rank's name; this loop converts the panic back). Before
+/// returning, the measured wire bytes are cross-checked against the
+/// [`ring_wire_bytes`] expansion of every logged collective.
+pub fn worker_trajectory<T>(
+    endpoint: MeteredTransport<T>,
+    cfg: &HarnessConfig,
+) -> Result<WorkerRunReport>
+where
+    T: Transport<Vec<f32>> + Transport<Vec<u8>> + 'static,
+{
+    let world = <MeteredTransport<T> as Transport<Vec<f32>>>::world(&endpoint);
+    let rank = <MeteredTransport<T> as Transport<Vec<f32>>>::rank(&endpoint);
+    let counters = endpoint.counters();
+    let comp = worker_by_name(&cfg.compressor, cfg.rank, cfg.seed).ok_or_else(|| {
+        anyhow!("compressor {:?} has no per-worker implementation", cfg.compressor)
+    })?;
+    let logical_model = comp.message_bytes(&harness_registry()) * cfg.steps as u64;
+    let mut opt = EfSgd::new(
+        Box::new(EndpointCompressor::new(endpoint, comp)),
+        LrSchedule::constant(cfg.lr),
+        cfg.momentum,
+    );
+
+    let mut params = initial_params(cfg.seed);
+    let mut log = CommLog::default();
+    for step in 0..cfg.steps {
+        let grads = vec![synthetic_grads(world, cfg.seed, step).swap_remove(rank)];
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            opt.step(&grads, step, &mut log)
+        }));
+        let delta = match stepped {
+            Ok(delta) => delta,
+            Err(payload) => bail!(
+                "rank {rank}: ring collective failed at step {step}: {}",
+                panic_message(payload)
+            ),
+        };
+        for (x, d) in params.iter_mut().zip(delta.iter()) {
+            x.axpy(-1.0, d);
+        }
+    }
+
+    let logical_bytes = log.bytes_sent();
+    if logical_bytes != logical_model {
+        bail!(
+            "rank {rank}: logged {logical_bytes} logical bytes but the closed-form \
+             message_bytes model predicts {logical_model}"
+        );
+    }
+    let wire_bytes = counters.sent();
+    let expected_wire: u64 = log
+        .ops
+        .iter()
+        .map(|op| ring_wire_bytes(op.kind, op.bytes, world, rank))
+        .sum();
+    if wire_bytes != expected_wire {
+        bail!(
+            "rank {rank}: measured {wire_bytes} wire bytes but the ring expansion of the \
+             logged collectives predicts {expected_wire}"
+        );
+    }
+    Ok(WorkerRunReport { rank, params, logical_bytes, wire_bytes })
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(msg) = payload.downcast_ref::<String>() {
+        msg.clone()
+    } else if let Some(msg) = payload.downcast_ref::<&'static str>() {
+        (*msg).to_string()
+    } else {
+        "worker panicked".into()
+    }
+}
+
+/// Full worker process: rendezvous at `coordinator`, run the
+/// trajectory over a metered [`TcpRing`], report the final parameters
+/// and byte counters back on the control connection.
+pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> Result<()> {
+    let joined = join(coordinator, timeout)?;
+    let (ring, mut control) = TcpRing::from_joined(joined, timeout)?;
+    let report = worker_trajectory(MeteredTransport::new(ring), cfg)?;
+    write_frame(
+        &mut control,
+        &Frame::Report {
+            rank: report.rank as u32,
+            wire_bytes: report.wire_bytes,
+            logical_bytes: report.logical_bytes,
+            tensors: report.params.iter().map(|t| t.data().to_vec()).collect(),
+        },
+    )
+    .map_err(|e| anyhow!(e))
+    .with_context(|| format!("rank {}: reporting to the coordinator", report.rank))?;
+    Ok(())
+}
+
+/// One worker's verified outcome, as the coordinator sees it.
+pub struct WorkerWireReport {
+    pub rank: usize,
+    pub wire_bytes: u64,
+    pub logical_bytes: u64,
+    /// Final parameters bit-identical to the oracle's.
+    pub bitwise: bool,
+}
+
+/// A verified launch.
+pub struct LaunchOutcome {
+    pub world: usize,
+    pub steps: usize,
+    /// Per-rank reports (rank-indexed).
+    pub reports: Vec<WorkerWireReport>,
+    /// The oracle's per-worker logical bytes over the whole run.
+    pub logical_bytes: u64,
+    /// Closed-form per-worker message bytes per step.
+    pub model_bytes_per_step: u64,
+}
+
+/// Coordinator half of a launch: rendezvous `world` workers, run the
+/// lockstep oracle in-process, collect every worker's report, and
+/// verify the whole chain — bitwise parameters, logical bytes against
+/// the oracle, and the closed-form model. Any mismatch (or a worker
+/// dying before it reports) is an error.
+pub fn coordinate(
+    rendezvous: &Rendezvous,
+    world: usize,
+    cfg: &HarnessConfig,
+    timeout: Duration,
+) -> Result<LaunchOutcome> {
+    let mut controls = rendezvous.run(world, timeout)?;
+    let (oracle_params, oracle_logical) = oracle_trajectory(world, cfg)?;
+    let model_bytes_per_step = worker_by_name(&cfg.compressor, cfg.rank, cfg.seed)
+        .map(|w| w.message_bytes(&harness_registry()))
+        .unwrap_or(0);
+
+    let mut reports = Vec::with_capacity(world);
+    for (rank, control) in controls.iter_mut().enumerate() {
+        let frame = read_frame(control).map_err(|e| anyhow!(e)).with_context(|| {
+            format!("launch: worker rank {rank} died before reporting its result")
+        })?;
+        let (got, wire_bytes, logical_bytes, tensors) = match frame {
+            Frame::Report { rank, wire_bytes, logical_bytes, tensors } => {
+                (rank, wire_bytes, logical_bytes, tensors)
+            }
+            other => {
+                bail!("launch: expected a Report from rank {rank}, got {}", other.kind_name())
+            }
+        };
+        if got as usize != rank {
+            bail!("launch: control stream {rank} delivered a report from rank {got}");
+        }
+        let bitwise = tensors.len() == oracle_params.len()
+            && tensors.iter().zip(oracle_params.iter()).all(|(got, want)| {
+                got.len() == want.len()
+                    && got
+                        .iter()
+                        .zip(want.data().iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            });
+        if !bitwise {
+            bail!(
+                "launch: rank {rank}'s final parameters diverged from the lockstep oracle \
+                 (the TCP path must be bitwise-identical)"
+            );
+        }
+        if logical_bytes != oracle_logical {
+            bail!(
+                "launch: rank {rank} logged {logical_bytes} logical bytes, oracle logged \
+                 {oracle_logical}"
+            );
+        }
+        reports.push(WorkerWireReport { rank, wire_bytes, logical_bytes, bitwise });
+    }
+    Ok(LaunchOutcome {
+        world,
+        steps: cfg.steps,
+        reports,
+        logical_bytes: oracle_logical,
+        model_bytes_per_step,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_grads_are_deterministic_and_worker_major() {
+        let a = synthetic_grads(4, 7, 2);
+        let b = synthetic_grads(4, 7, 2);
+        for (wa, wb) in a.iter().zip(b.iter()) {
+            for (ta, tb) in wa.iter().zip(wb.iter()) {
+                assert_eq!(ta.data(), tb.data());
+            }
+        }
+        // A different step or seed draws different bits.
+        let c = synthetic_grads(4, 7, 3);
+        assert_ne!(a[0][0].data(), c[0][0].data());
+        // A smaller world is a prefix of a larger one (worker-major
+        // stream), so every process can slice out its own rank.
+        let small = synthetic_grads(2, 7, 2);
+        for (wa, wb) in small.iter().zip(a.iter().take(2)) {
+            for (ta, tb) in wa.iter().zip(wb.iter()) {
+                assert_eq!(ta.data(), tb.data());
+            }
+        }
+    }
+
+    #[test]
+    fn registry_matches_shapes() {
+        let reg = harness_registry();
+        let shapes = harness_shapes();
+        assert_eq!(reg.len(), shapes.len());
+        let numel: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        assert_eq!(reg.numel(), numel);
+    }
+
+    #[test]
+    fn oracle_trajectory_moves_and_is_deterministic() {
+        let cfg = HarnessConfig::default();
+        let (a, bytes_a) = oracle_trajectory(2, &cfg).unwrap();
+        let (b, bytes_b) = oracle_trajectory(2, &cfg).unwrap();
+        assert_eq!(bytes_a, bytes_b);
+        let mut moved = false;
+        for (ta, tb) in a.iter().zip(b.iter()) {
+            assert_eq!(ta.data(), tb.data());
+        }
+        let x0 = initial_params(cfg.seed);
+        for (t, t0) in a.iter().zip(x0.iter()) {
+            if t.data() != t0.data() {
+                moved = true;
+            }
+        }
+        assert!(moved, "three EF-SGD steps must move the parameters");
+    }
+
+    #[test]
+    fn unknown_compressor_is_a_clean_error() {
+        let cfg = HarnessConfig { compressor: "atomo".into(), ..HarnessConfig::default() };
+        assert!(oracle_trajectory(2, &cfg).is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! `transport/tcp` — the multi-process TCP ring transport
+//! (DESIGN.md §10).
+//!
+//! Everything under [`crate::transport`] so far runs inside one OS
+//! process; this module is the backend that turns the reproduction into
+//! a distributed system: `W` independent processes on real OS sockets,
+//! carrying the **same** ring collectives and the **same** per-worker
+//! compression path, bitwise-identical to the in-process oracle.
+//!
+//! - [`wire`] — length-prefixed binary frame codec (control frames for
+//!   rendezvous/reports, data frames for f32 chunks and sign bitmaps).
+//! - [`rendezvous`] — coordinator-hosted handshake: workers `Hello` a
+//!   coordinator, get rank + peer addresses back, and dial each other
+//!   into a directed ring.
+//! - [`TcpRing`] — the [`Transport`] implementation over one socket
+//!   pair (read from predecessor, write to successor). The existing
+//!   collective workers ([`crate::transport::ring_all_reduce_worker`],
+//!   [`crate::transport::ring_all_gather_worker`]) and the
+//!   [`crate::compress::WorkerCompressor`] round run on it unmodified.
+//! - [`MeteredTransport`] — wraps any [`Transport`] and counts the
+//!   bytes that actually cross the wire, for cross-checking against the
+//!   analytic [`crate::collectives::ring_wire_bytes`] expansion of the
+//!   `Scheme::message_bytes` model.
+//! - [`harness`] — the `powersgd launch` / `powersgd worker` driver: a
+//!   deterministic multi-process EF-SGD run whose final parameters the
+//!   coordinator verifies **bitwise** against the centralized lockstep
+//!   oracle.
+//!
+//! # Failure semantics
+//!
+//! The [`Transport`] trait is infallible (collectives assume a healthy
+//! ring), so [`TcpRing`] exposes two layers: checked inherent methods
+//! ([`TcpRing::send_f32s_checked`] etc.) that return a contextual
+//! [`anyhow`] error naming the dead peer's rank, and the trait impls,
+//! which panic with that same message. The harness converts the panic
+//! back into an error with `catch_unwind`, so a worker process that
+//! dies mid-collective surfaces as "rank 0: ring predecessor rank 1
+//! closed the connection mid-collective" instead of a hang — every
+//! blocking read carries a timeout.
+//!
+//! # Blocking
+//!
+//! [`Transport::send_next`] is documented "never blocks" for the mpsc
+//! backend; a TCP send can block once the OS socket buffer fills. The
+//! ring schedule alternates one send and one receive per step on every
+//! worker, so in-flight data is bounded by one chunk per edge and
+//! backpressure clears as soon as the successor reads. For chunks
+//! larger than the socket buffers a fully-blocked ring is still
+//! possible (every rank stuck in `write`), so the successor socket
+//! carries a **write timeout** too — the worst case is a contextual
+//! error naming the stuck peer, never a silent permanent hang.
+
+pub mod harness;
+mod metered;
+pub mod rendezvous;
+pub mod wire;
+
+pub use harness::{
+    coordinate, harness_registry, harness_shapes, initial_params, oracle_trajectory, run_worker,
+    synthetic_grads, worker_trajectory, HarnessConfig, LaunchOutcome, WorkerWireReport,
+};
+pub use metered::{MeteredTransport, WireCounters, WireSized};
+pub use rendezvous::{join, JoinedRing, Rendezvous};
+
+use super::Transport;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+use wire::{read_frame, write_frame, Frame, WireError};
+
+/// [`Transport`] endpoint over real OS sockets: one buffered writer to
+/// the ring successor, one buffered reader from the ring predecessor.
+///
+/// Implements both `Transport<Vec<f32>>` and `Transport<Vec<u8>>` over
+/// the same connection pair: frames are tagged, and because every
+/// worker executes the same deterministic sequence of typed collective
+/// ops, the predecessor's send order always matches this worker's
+/// receive order — a tag mismatch therefore means a corrupt or
+/// misbehaving peer and surfaces as an error, never a reinterpreted
+/// payload.
+pub struct TcpRing {
+    rank: usize,
+    world: usize,
+    writer: RefCell<BufWriter<TcpStream>>,
+    reader: RefCell<BufReader<TcpStream>>,
+}
+
+impl TcpRing {
+    /// Wrap an established ring edge pair. `timeout` bounds every
+    /// blocking read from the predecessor *and* every blocking write to
+    /// the successor, so a dead, hung, or deadlocked peer becomes a
+    /// contextual error instead of a hang. Must be non-zero.
+    pub fn new(
+        rank: usize,
+        world: usize,
+        to_next: TcpStream,
+        from_prev: TcpStream,
+        timeout: Duration,
+    ) -> Result<TcpRing> {
+        assert!(world > 0 && rank < world, "bad ring identity {rank}/{world}");
+        from_prev
+            .set_read_timeout(Some(timeout))
+            .context("tcp ring: setting predecessor read timeout")?;
+        to_next
+            .set_write_timeout(Some(timeout))
+            .context("tcp ring: setting successor write timeout")?;
+        to_next.set_nodelay(true).ok();
+        Ok(TcpRing {
+            rank,
+            world,
+            writer: RefCell::new(BufWriter::new(to_next)),
+            reader: RefCell::new(BufReader::new(from_prev)),
+        })
+    }
+
+    /// Build from a completed rendezvous handshake; hands the control
+    /// stream back to the caller (it is not part of the ring).
+    pub fn from_joined(joined: JoinedRing, timeout: Duration) -> Result<(TcpRing, TcpStream)> {
+        let JoinedRing { rank, world, control, to_next, from_prev } = joined;
+        Ok((TcpRing::new(rank, world, to_next, from_prev, timeout)?, control))
+    }
+
+    fn succ(&self) -> usize {
+        (self.rank + 1) % self.world
+    }
+
+    fn pred(&self) -> usize {
+        (self.rank + self.world - 1) % self.world
+    }
+
+    fn send_frame_checked(&self, frame: &Frame) -> Result<()> {
+        fn write_and_flush(
+            writer: &mut BufWriter<TcpStream>,
+            frame: &Frame,
+        ) -> Result<(), WireError> {
+            write_frame(writer, frame)?;
+            writer.flush()?;
+            Ok(())
+        }
+        let mut writer = self.writer.borrow_mut();
+        write_and_flush(&mut writer, frame).map_err(|e| {
+            let (me, succ) = (self.rank, self.succ());
+            if e.is_timeout() {
+                anyhow!(
+                    "rank {me}: timed out sending to ring successor rank {succ} \
+                     (worker {succ} hung or the ring is backpressure-deadlocked?)"
+                )
+            } else {
+                anyhow!(e).context(format!(
+                    "rank {me}: cannot send to ring successor rank {succ} (worker {succ} died?)"
+                ))
+            }
+        })
+    }
+
+    fn recv_frame_checked(&self) -> Result<Frame> {
+        let mut reader = self.reader.borrow_mut();
+        read_frame(&mut *reader).map_err(|e| {
+            let (me, pred) = (self.rank, self.pred());
+            if e.is_timeout() {
+                anyhow!(
+                    "rank {me}: timed out waiting for ring predecessor rank {pred} \
+                     (worker {pred} dead or hung?)"
+                )
+            } else if matches!(e, WireError::Truncated(_)) {
+                anyhow!(
+                    "rank {me}: ring predecessor rank {pred} closed the connection \
+                     mid-collective (worker {pred} died?)"
+                )
+            } else {
+                anyhow!(e).context(format!(
+                    "rank {me}: corrupt frame from ring predecessor rank {pred}"
+                ))
+            }
+        })
+    }
+
+    /// Fallible send of an f32 chunk to the ring successor.
+    pub fn send_f32s_checked(&self, msg: Vec<f32>) -> Result<()> {
+        self.send_frame_checked(&Frame::F32s(msg))
+    }
+
+    /// Fallible receive of an f32 chunk from the ring predecessor.
+    pub fn recv_f32s_checked(&self) -> Result<Vec<f32>> {
+        match self.recv_frame_checked()? {
+            Frame::F32s(vals) => Ok(vals),
+            other => bail!(
+                "rank {}: protocol mismatch — expected an f32 chunk from rank {}, got {}",
+                self.rank,
+                self.pred(),
+                other.kind_name()
+            ),
+        }
+    }
+
+    /// Fallible send of a byte message to the ring successor.
+    pub fn send_bytes_checked(&self, msg: Vec<u8>) -> Result<()> {
+        self.send_frame_checked(&Frame::Bytes(msg))
+    }
+
+    /// Fallible receive of a byte message from the ring predecessor.
+    pub fn recv_bytes_checked(&self) -> Result<Vec<u8>> {
+        match self.recv_frame_checked()? {
+            Frame::Bytes(bytes) => Ok(bytes),
+            other => bail!(
+                "rank {}: protocol mismatch — expected a byte message from rank {}, got {}",
+                self.rank,
+                self.pred(),
+                other.kind_name()
+            ),
+        }
+    }
+}
+
+impl Transport<Vec<f32>> for TcpRing {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_next(&self, msg: Vec<f32>) {
+        if let Err(e) = self.send_f32s_checked(msg) {
+            panic!("{e:#}");
+        }
+    }
+
+    fn recv_prev(&self) -> Vec<f32> {
+        match self.recv_f32s_checked() {
+            Ok(vals) => vals,
+            Err(e) => panic!("{e:#}"),
+        }
+    }
+}
+
+impl Transport<Vec<u8>> for TcpRing {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_next(&self, msg: Vec<u8>) {
+        if let Err(e) = self.send_bytes_checked(msg) {
+            panic!("{e:#}");
+        }
+    }
+
+    fn recv_prev(&self) -> Vec<u8> {
+        match self.recv_bytes_checked() {
+            Ok(bytes) => bytes,
+            Err(e) => panic!("{e:#}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{ring_all_gather_worker, ring_all_reduce_worker};
+
+    const T: Duration = Duration::from_secs(10);
+
+    /// Rendezvous `world` threads and hand each its connected TcpRing.
+    fn socket_ring(world: usize) -> Vec<TcpRing> {
+        let rv = Rendezvous::bind("127.0.0.1:0").unwrap();
+        let addr = rv.addr().unwrap();
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let joined = join(&addr, T).unwrap();
+                    let (ring, _control) = TcpRing::from_joined(joined, T).unwrap();
+                    ring
+                })
+            })
+            .collect();
+        rv.run(world, T).unwrap();
+        let mut rings: Vec<TcpRing> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        rings.sort_by_key(|r| r.rank);
+        rings
+    }
+
+    #[test]
+    fn tcp_ring_all_reduce_matches_lockstep_bitwise() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(62);
+        for &(world, n) in &[(2usize, 7usize), (3, 256), (4, 1003)] {
+            let bufs: Vec<Vec<f32>> = (0..world)
+                .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let mut lockstep = bufs.clone();
+            crate::collectives::ring_all_reduce_sum_lockstep(&mut lockstep);
+
+            let rings = socket_ring(world);
+            let mut tcp = bufs.clone();
+            // TcpRing is Send but not Sync (buffered streams behind
+            // RefCell): each worker thread owns its endpoint, exactly
+            // like a worker process owns its sockets.
+            std::thread::scope(|scope| {
+                for (ring, buf) in rings.into_iter().zip(tcp.iter_mut()) {
+                    scope.spawn(move || ring_all_reduce_worker(&ring, buf));
+                }
+            });
+            assert_eq!(tcp, lockstep, "world={world} n={n}");
+        }
+    }
+
+    #[test]
+    fn tcp_ring_all_gather_mixed_types() {
+        let world = 3;
+        let rings = socket_ring(world);
+        let views: Vec<(usize, Vec<Vec<f32>>, Vec<Vec<u8>>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = rings
+                .into_iter()
+                .map(|ring| {
+                    scope.spawn(move || {
+                        let rank = Transport::<Vec<f32>>::rank(&ring);
+                        // Interleave typed collectives on one connection.
+                        let f = ring_all_gather_worker(&ring, vec![rank as f32; 2]);
+                        let b = ring_all_gather_worker(&ring, vec![rank as u8, 0xAB]);
+                        (rank, f, b)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(views.len(), world);
+        for (_, f32_view, byte_view) in &views {
+            for w in 0..world {
+                assert_eq!(f32_view[w], vec![w as f32; 2]);
+                assert_eq!(byte_view[w], vec![w as u8, 0xAB]);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_predecessor_names_the_rank() {
+        let rings = socket_ring(2);
+        let mut iter = rings.into_iter();
+        let r0 = iter.next().unwrap();
+        let r1 = iter.next().unwrap();
+        // Worker 1 dies: both its sockets close.
+        drop(r1);
+        let err = r0.recv_f32s_checked().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "{msg}");
+        assert!(msg.contains("closed the connection"), "{msg}");
+    }
+
+    #[test]
+    fn silent_predecessor_times_out_with_rank() {
+        let rv = Rendezvous::bind("127.0.0.1:0").unwrap();
+        let addr = rv.addr().unwrap();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || join(&addr, T).unwrap())
+            })
+            .collect();
+        rv.run(2, T).unwrap();
+        let mut joined: Vec<JoinedRing> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        joined.sort_by_key(|j| j.rank);
+        let j1 = joined.pop().unwrap();
+        let j0 = joined.pop().unwrap();
+        // Rank 1 stays alive but never sends; rank 0 uses a short timeout.
+        let (r0, _c0) = TcpRing::from_joined(j0, Duration::from_millis(200)).unwrap();
+        let err = r0.recv_f32s_checked().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("rank 1"), "{msg}");
+        drop(j1);
+    }
+
+    #[test]
+    fn type_confusion_is_a_protocol_error() {
+        let rings = socket_ring(2);
+        // Rank 0 sends bytes; rank 1 expects f32s.
+        rings[0].send_bytes_checked(vec![1, 2, 3]).unwrap();
+        let err = rings[1].recv_f32s_checked().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("protocol mismatch"), "{msg}");
+    }
+}

@@ -1,0 +1,296 @@
+//! Coordinator-hosted rendezvous: how `W` independent OS processes
+//! become a ring (DESIGN.md §10).
+//!
+//! The protocol has four steps, all over the [`super::wire`] codec:
+//!
+//! 1. Each worker binds its own ring listener on an ephemeral localhost
+//!    port **before** announcing itself, then connects to the
+//!    coordinator and sends `Hello { listen_addr }`.
+//! 2. The coordinator accepts `W` hellos, assigns ranks in arrival
+//!    order, and sends every worker `Welcome { rank, world, peers }`
+//!    with the full rank-indexed address list.
+//! 3. Each worker dials its ring **successor**'s listener (rank+1 mod W)
+//!    and introduces itself with `Connect { rank }`.
+//! 4. Each worker accepts exactly one connection on its own listener
+//!    and verifies the `Connect` frame names its ring **predecessor**.
+//!
+//! Because every listener is bound before any `Hello` is sent, step 3
+//! can never race step 4: the successor's listener already exists (the
+//! OS backlog holds the connection until the accept). The `Hello`
+//! connection stays open as the **control channel** — workers send
+//! their end-of-run `Report` on it.
+//!
+//! Every blocking call (accept, connect, handshake read) carries a
+//! timeout, so a worker that never shows up or dies mid-handshake
+//! surfaces as a contextual error naming the missing rank instead of a
+//! hang.
+
+use super::wire::{read_frame, write_frame, Frame};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// The coordinator's half of the handshake.
+pub struct Rendezvous {
+    listener: TcpListener,
+}
+
+impl Rendezvous {
+    /// Bind the rendezvous listener (e.g. `"127.0.0.1:0"` for an
+    /// ephemeral port).
+    pub fn bind(addr: &str) -> Result<Rendezvous> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("rendezvous: cannot bind {addr}"))?;
+        Ok(Rendezvous { listener })
+    }
+
+    /// The address workers should dial (resolved, with the real port).
+    pub fn addr(&self) -> Result<String> {
+        Ok(self.listener.local_addr().context("rendezvous: no local addr")?.to_string())
+    }
+
+    /// Accept `world` workers, assign ranks in arrival order, and send
+    /// each its `Welcome`. Returns the control streams indexed by rank;
+    /// workers send their final `Report` frames on these.
+    pub fn run(&self, world: usize, timeout: Duration) -> Result<Vec<TcpStream>> {
+        assert!(world > 0, "rendezvous needs at least one worker");
+        let mut joined: Vec<(TcpStream, String)> = Vec::with_capacity(world);
+        let deadline = Instant::now() + timeout;
+        while joined.len() < world {
+            let remaining = world - joined.len();
+            let (mut stream, from) = accept_with_deadline(&self.listener, deadline)
+                .with_context(|| {
+                    format!(
+                        "rendezvous: only {}/{world} workers joined ({remaining} missing)",
+                        joined.len()
+                    )
+                })?;
+            stream.set_read_timeout(Some(timeout)).context("rendezvous: set timeout")?;
+            stream.set_nodelay(true).ok();
+            let rank = joined.len();
+            match read_frame(&mut stream)
+                .map_err(|e| anyhow!(e))
+                .with_context(|| format!("rendezvous: handshake with {from} (would-be rank {rank})"))?
+            {
+                Frame::Hello { listen_addr } => joined.push((stream, listen_addr)),
+                other => bail!(
+                    "rendezvous: expected Hello from {from}, got {}",
+                    other.kind_name()
+                ),
+            }
+        }
+        let peers: Vec<String> = joined.iter().map(|(_, addr)| addr.clone()).collect();
+        for (rank, (stream, _)) in joined.iter_mut().enumerate() {
+            write_frame(
+                stream,
+                &Frame::Welcome { rank: rank as u32, world: world as u32, peers: peers.clone() },
+            )
+            .map_err(|e| anyhow!(e))
+            .with_context(|| format!("rendezvous: sending Welcome to rank {rank}"))?;
+        }
+        Ok(joined.into_iter().map(|(stream, _)| stream).collect())
+    }
+}
+
+/// A worker's completed handshake: its identity plus the three live
+/// connections (control to the coordinator, ring edge to the successor,
+/// ring edge from the predecessor).
+pub struct JoinedRing {
+    pub rank: usize,
+    pub world: usize,
+    /// The original `Hello` connection; carries the final `Report`.
+    pub control: TcpStream,
+    /// Ring edge this worker writes to (its successor reads it).
+    pub to_next: TcpStream,
+    /// Ring edge this worker reads from (its predecessor writes it).
+    pub from_prev: TcpStream,
+}
+
+/// The worker's half of the handshake: join the ring hosted by
+/// `coordinator` (a `host:port` string).
+pub fn join(coordinator: &str, timeout: Duration) -> Result<JoinedRing> {
+    // Bind the ring listener *before* saying Hello, so the predecessor
+    // can dial us the moment it learns our address.
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("worker: cannot bind ring listener")?;
+    let my_addr = listener.local_addr().context("worker: ring listener addr")?.to_string();
+
+    let mut control = connect(coordinator, timeout)
+        .with_context(|| format!("worker: coordinator {coordinator} unreachable"))?;
+    control.set_read_timeout(Some(timeout)).context("worker: set control timeout")?;
+    write_frame(&mut control, &Frame::Hello { listen_addr: my_addr })
+        .map_err(|e| anyhow!(e))
+        .context("worker: sending Hello")?;
+
+    let (rank, world, peers) = match read_frame(&mut control)
+        .map_err(|e| anyhow!(e))
+        .context("worker: waiting for Welcome (coordinator died or timed out?)")?
+    {
+        Frame::Welcome { rank, world, peers } => (rank as usize, world as usize, peers),
+        other => bail!("worker: expected Welcome, got {}", other.kind_name()),
+    };
+    if world == 0 || rank >= world || peers.len() != world {
+        bail!("worker: malformed Welcome (rank {rank}, world {world}, {} peers)", peers.len());
+    }
+
+    let next = (rank + 1) % world;
+    let mut to_next = connect(&peers[next], timeout).with_context(|| {
+        format!("rank {rank}: ring successor rank {next} at {} unreachable", peers[next])
+    })?;
+    write_frame(&mut to_next, &Frame::Connect { rank: rank as u32 })
+        .map_err(|e| anyhow!(e))
+        .with_context(|| format!("rank {rank}: introducing to successor rank {next}"))?;
+
+    let prev = (rank + world - 1) % world;
+    let deadline = Instant::now() + timeout;
+    let (mut from_prev, _) = accept_with_deadline(&listener, deadline).with_context(|| {
+        format!("rank {rank}: ring predecessor rank {prev} never connected")
+    })?;
+    from_prev.set_read_timeout(Some(timeout)).context("worker: set ring timeout")?;
+    match read_frame(&mut from_prev)
+        .map_err(|e| anyhow!(e))
+        .with_context(|| format!("rank {rank}: handshake from predecessor rank {prev}"))?
+    {
+        Frame::Connect { rank: got } if got as usize == prev => {}
+        Frame::Connect { rank: got } => bail!(
+            "rank {rank}: expected Connect from predecessor rank {prev}, got rank {got}"
+        ),
+        other => bail!(
+            "rank {rank}: expected Connect from predecessor rank {prev}, got {}",
+            other.kind_name()
+        ),
+    }
+
+    Ok(JoinedRing { rank, world, control, to_next, from_prev })
+}
+
+/// `TcpListener::accept` with a deadline: `accept` alone blocks forever
+/// if the peer never dials, which is exactly the hang the TCP transport
+/// must turn into an error.
+fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+) -> Result<(TcpStream, std::net::SocketAddr)> {
+    listener.set_nonblocking(true).context("set_nonblocking")?;
+    let out = loop {
+        match listener.accept() {
+            Ok((stream, from)) => {
+                // Accepted sockets must be blocking regardless of what
+                // they inherited from the listener.
+                stream.set_nonblocking(false).context("accepted stream")?;
+                stream.set_nodelay(true).ok();
+                break Ok((stream, from));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    break Err(anyhow!("accept timed out"));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => break Err(e).context("accept failed"),
+        }
+    };
+    // Restore blocking accepts for any later use of the listener.
+    listener.set_nonblocking(false).ok();
+    out
+}
+
+/// `TcpStream::connect` with a timeout, resolving `host:port` strings.
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let mut last: Option<io::Error> = None;
+    for sock_addr in addr
+        .to_socket_addrs()
+        .with_context(|| format!("cannot resolve {addr}"))?
+    {
+        match TcpStream::connect_timeout(&sock_addr, timeout) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    match last {
+        Some(e) => Err(anyhow!("connect {addr}: {e}")),
+        None => Err(anyhow!("connect {addr}: no addresses resolved")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: Duration = Duration::from_secs(10);
+
+    /// Three threads rendezvous into a ring and pass one token all the
+    /// way around it — the ring topology (successor/predecessor wiring)
+    /// is exactly rank order.
+    #[test]
+    fn three_workers_form_a_ring() {
+        let rv = Rendezvous::bind("127.0.0.1:0").unwrap();
+        let addr = rv.addr().unwrap();
+        let world = 3;
+
+        let workers: Vec<_> = (0..world)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> Result<(usize, usize)> {
+                    let mut joined = join(&addr, T)?;
+                    // Send own rank to the successor; read predecessor's.
+                    write_frame(&mut joined.to_next, &Frame::Connect {
+                        rank: joined.rank as u32,
+                    })
+                    .map_err(|e| anyhow!(e))?;
+                    let got = match read_frame(&mut joined.from_prev).map_err(|e| anyhow!(e))? {
+                        Frame::Connect { rank } => rank as usize,
+                        other => bail!("unexpected {}", other.kind_name()),
+                    };
+                    Ok((joined.rank, got))
+                })
+            })
+            .collect();
+
+        let controls = rv.run(world, T).unwrap();
+        assert_eq!(controls.len(), world);
+        for handle in workers {
+            let (rank, from_pred) = handle.join().unwrap().unwrap();
+            assert_eq!(from_pred, (rank + world - 1) % world, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn single_worker_ring_loops_to_itself() {
+        let rv = Rendezvous::bind("127.0.0.1:0").unwrap();
+        let addr = rv.addr().unwrap();
+        let worker = std::thread::spawn(move || join(&addr, T));
+        rv.run(1, T).unwrap();
+        let joined = worker.join().unwrap().unwrap();
+        assert_eq!(joined.rank, 0);
+        assert_eq!(joined.world, 1);
+    }
+
+    #[test]
+    fn missing_worker_times_out_with_count() {
+        let rv = Rendezvous::bind("127.0.0.1:0").unwrap();
+        let addr = rv.addr().unwrap();
+        // Only one of two workers ever joins.
+        let worker = std::thread::spawn(move || join(&addr, Duration::from_secs(5)));
+        let err = rv.run(2, Duration::from_millis(400)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1/2 workers joined"), "{msg}");
+        // The joined worker fails too (its Welcome never arrives).
+        assert!(worker.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn unreachable_coordinator_is_an_error_not_a_hang() {
+        // A bound-then-dropped listener leaves a port with no acceptor.
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = join(&format!("127.0.0.1:{port}"), Duration::from_millis(300)).unwrap_err();
+        assert!(format!("{err:#}").contains("coordinator"), "{err:#}");
+    }
+}

@@ -1,0 +1,536 @@
+//! Length-prefixed binary wire codec for the TCP ring transport
+//! (DESIGN.md §10).
+//!
+//! Every message on a ring edge or a rendezvous control connection is
+//! one frame:
+//!
+//! ```text
+//! ┌───────┬──────┬───────────┬─────────────┐
+//! │ magic │ kind │ len (u32) │ payload     │
+//! │ "PS"  │ 1 B  │ LE        │ `len` bytes │
+//! └───────┴──────┴───────────┴─────────────┘
+//! ```
+//!
+//! Control frames carry the rendezvous handshake (`Hello` / `Welcome` /
+//! `Connect`) and the end-of-run `Report`; data frames carry the ring
+//! collectives' payloads (`F32s` for all-reduce chunks and top-K gather
+//! messages, `Bytes` for packed sign bitmaps). All integers are
+//! little-endian; f32 payloads round-trip **bit-exactly** (the codec
+//! moves `f32::to_le_bytes` bits, never reformats values), which is
+//! what lets the TCP engine stay bitwise-identical to the in-process
+//! oracle.
+//!
+//! Decoding never panics: truncated input, a bad magic, an unknown
+//! kind, an oversized length prefix, or a payload inconsistent with its
+//! kind all surface as a typed [`WireError`]. A corrupt peer can
+//! therefore produce at worst a contextual error, not a crash or a
+//! multi-gigabyte allocation (lengths are capped at [`MAX_PAYLOAD`]).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Every frame starts with these two bytes.
+pub const MAGIC: [u8; 2] = *b"PS";
+
+/// Upper bound on a frame payload: a corrupt length prefix is rejected
+/// instead of being trusted as an allocation size.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// Fixed frame header size: magic (2) + kind (1) + length (4).
+pub const HEADER_LEN: usize = 7;
+
+const KIND_HELLO: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_CONNECT: u8 = 3;
+const KIND_F32S: u8 = 4;
+const KIND_BYTES: u8 = 5;
+const KIND_REPORT: u8 = 6;
+
+/// One wire message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker → coordinator: "I want to join; my ring listener is at
+    /// `listen_addr`."
+    Hello { listen_addr: String },
+    /// Coordinator → worker: assigned rank, world size, and every
+    /// worker's ring listener address indexed by rank.
+    Welcome { rank: u32, world: u32, peers: Vec<String> },
+    /// Ring predecessor → successor, first frame on a ring edge:
+    /// identifies who is connecting.
+    Connect { rank: u32 },
+    /// An f32 collective payload (all-reduce chunk, top-K message).
+    F32s(Vec<f32>),
+    /// A raw byte collective payload (packed sign bitmap).
+    Bytes(Vec<u8>),
+    /// Worker → coordinator at end of run: final parameters plus the
+    /// measured-bytes accounting for cross-checking.
+    Report { rank: u32, wire_bytes: u64, logical_bytes: u64, tensors: Vec<Vec<f32>> },
+}
+
+impl Frame {
+    fn kind_byte(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => KIND_HELLO,
+            Frame::Welcome { .. } => KIND_WELCOME,
+            Frame::Connect { .. } => KIND_CONNECT,
+            Frame::F32s(_) => KIND_F32S,
+            Frame::Bytes(_) => KIND_BYTES,
+            Frame::Report { .. } => KIND_REPORT,
+        }
+    }
+
+    /// Human-readable kind for protocol-mismatch errors.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::Welcome { .. } => "Welcome",
+            Frame::Connect { .. } => "Connect",
+            Frame::F32s(_) => "F32s",
+            Frame::Bytes(_) => "Bytes",
+            Frame::Report { .. } => "Report",
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Frame::Hello { listen_addr } => put_str(&mut out, listen_addr),
+            Frame::Welcome { rank, world, peers } => {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&world.to_le_bytes());
+                for p in peers {
+                    put_str(&mut out, p);
+                }
+            }
+            Frame::Connect { rank } => out.extend_from_slice(&rank.to_le_bytes()),
+            Frame::F32s(vals) => {
+                out.reserve(vals.len() * 4);
+                for v in vals {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Bytes(b) => out.extend_from_slice(b),
+            Frame::Report { rank, wire_bytes, logical_bytes, tensors } => {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&wire_bytes.to_le_bytes());
+                out.extend_from_slice(&logical_bytes.to_le_bytes());
+                out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+                for t in tensors {
+                    out.extend_from_slice(&(t.len() as u32).to_le_bytes());
+                    for v in t {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Serialize to a complete frame (header + payload).
+    ///
+    /// Panics if the payload exceeds [`MAX_PAYLOAD`]: a length prefix
+    /// that wrapped past `u32` would silently desynchronize the stream
+    /// and surface on a *healthy* peer as a corrupt-stream error — a
+    /// loud local failure at the sender is strictly better.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.payload();
+        assert!(
+            payload.len() as u64 <= MAX_PAYLOAD as u64,
+            "frame payload of {} bytes exceeds the {MAX_PAYLOAD}-byte wire cap",
+            payload.len()
+        );
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(self.kind_byte());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize, "address string too long");
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Why a frame could not be read or decoded.
+#[derive(Debug)]
+pub enum WireError {
+    /// The stream or buffer ended mid-frame — the peer closed the
+    /// connection or the message was cut short.
+    Truncated(&'static str),
+    /// The first bytes are not a frame header.
+    BadMagic([u8; 2]),
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// The length prefix exceeds [`MAX_PAYLOAD`].
+    Oversize(u32),
+    /// The payload bytes are inconsistent with the frame kind.
+    Malformed(&'static str),
+    /// Transport-level I/O failure (includes read timeouts).
+    Io(io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated(what) => write!(f, "truncated frame ({what})"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?} (corrupt stream)"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k} (corrupt stream)"),
+            WireError::Oversize(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_PAYLOAD}-byte cap (corrupt stream)")
+            }
+            WireError::Malformed(what) => write!(f, "malformed frame payload ({what})"),
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+impl WireError {
+    /// True when the error means the peer timed out rather than died or
+    /// sent garbage (SO_RCVTIMEO surfaces as `WouldBlock` on Linux and
+    /// `TimedOut` on other platforms).
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            WireError::Io(e)
+                if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut
+        )
+    }
+}
+
+/// Write one frame. The caller flushes (ring sends flush per frame;
+/// rendezvous flushes per handshake message).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    w.write_all(&frame.encode())?;
+    Ok(())
+}
+
+/// Read exactly one frame from a blocking stream. An EOF before or
+/// inside a frame is [`WireError::Truncated`]; a read timeout surfaces
+/// as [`WireError::Io`] with `is_timeout() == true`.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact(r, &mut header, "header")?;
+    if header[..2] != MAGIC {
+        return Err(WireError::BadMagic([header[0], header[1]]));
+    }
+    let kind = header[2];
+    let len = u32::from_le_bytes([header[3], header[4], header[5], header[6]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversize(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact(r, &mut payload, "payload")?;
+    decode_payload(kind, &payload)
+}
+
+fn read_exact<R: Read>(r: &mut R, buf: &mut [u8], what: &'static str) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated(what)
+        } else {
+            WireError::Io(e)
+        }
+    })
+}
+
+/// Decode one frame from a byte buffer; returns the frame and the
+/// number of bytes consumed. For tests and for parsing recorded
+/// streams — the live path uses [`read_frame`].
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated("header"));
+    }
+    if buf[..2] != MAGIC {
+        return Err(WireError::BadMagic([buf[0], buf[1]]));
+    }
+    let kind = buf[2];
+    let len = u32::from_le_bytes([buf[3], buf[4], buf[5], buf[6]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversize(len));
+    }
+    let end = HEADER_LEN + len as usize;
+    if buf.len() < end {
+        return Err(WireError::Truncated("payload"));
+    }
+    Ok((decode_payload(kind, &buf[HEADER_LEN..end])?, end))
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut cur = Cur { buf: payload, off: 0 };
+    let frame = match kind {
+        KIND_HELLO => Frame::Hello { listen_addr: cur.string()? },
+        KIND_WELCOME => {
+            let rank = cur.u32()?;
+            let world = cur.u32()?;
+            let mut peers = Vec::with_capacity(world.min(1 << 16) as usize);
+            for _ in 0..world {
+                peers.push(cur.string()?);
+            }
+            Frame::Welcome { rank, world, peers }
+        }
+        KIND_CONNECT => Frame::Connect { rank: cur.u32()? },
+        KIND_F32S => {
+            if payload.len() % 4 != 0 {
+                return Err(WireError::Malformed("f32 payload length not a multiple of 4"));
+            }
+            let vals = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            cur.off = payload.len();
+            Frame::F32s(vals)
+        }
+        KIND_BYTES => {
+            cur.off = payload.len();
+            Frame::Bytes(payload.to_vec())
+        }
+        KIND_REPORT => {
+            let rank = cur.u32()?;
+            let wire_bytes = cur.u64()?;
+            let logical_bytes = cur.u64()?;
+            let count = cur.u32()?;
+            let mut tensors = Vec::with_capacity(count.min(1 << 16) as usize);
+            for _ in 0..count {
+                let n = cur.u32()? as usize;
+                let Some(nbytes) = n.checked_mul(4) else {
+                    return Err(WireError::Malformed("tensor length overflows"));
+                };
+                let raw = cur.take(nbytes)?;
+                tensors.push(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                );
+            }
+            Frame::Report { rank, wire_bytes, logical_bytes, tensors }
+        }
+        other => return Err(WireError::BadKind(other)),
+    };
+    cur.done()?;
+    Ok(frame)
+}
+
+/// Bounds-checked payload cursor; every read can fail, none can panic.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or(WireError::Malformed("field runs past the payload end"))?;
+        let out = &self.buf[self.off..end];
+        self.off = end;
+        Ok(out)
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| WireError::Malformed("non-utf8 string"))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.off == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes after the payload"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(frame: &Frame) {
+        let bytes = frame.encode();
+        let (decoded, consumed) = decode(&bytes).expect("decode");
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(&decoded, frame);
+        // Streaming path agrees with the buffer path.
+        let mut cursor: &[u8] = &bytes;
+        assert_eq!(&read_frame(&mut cursor).expect("read_frame"), frame);
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        roundtrip(&Frame::Hello { listen_addr: "127.0.0.1:45123".into() });
+        roundtrip(&Frame::Welcome {
+            rank: 2,
+            world: 4,
+            peers: (0..4).map(|i| format!("127.0.0.1:{}", 40000 + i)).collect(),
+        });
+        roundtrip(&Frame::Connect { rank: 3 });
+        roundtrip(&Frame::Report {
+            rank: 1,
+            wire_bytes: u64::MAX - 7,
+            logical_bytes: 12345,
+            tensors: vec![vec![1.0, -2.5], vec![], vec![f32::MIN_POSITIVE]],
+        });
+    }
+
+    /// Proptest-style seeded sweep (no proptest crate offline):
+    /// encode→decode identity over random chunk shapes and lengths,
+    /// including exact bit patterns for f32 payloads.
+    #[test]
+    fn prop_data_frames_roundtrip_bit_exactly() {
+        let mut rng = Rng::new(91);
+        for case in 0..60 {
+            let n = rng.below(4000) as usize;
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let frame = Frame::F32s(vals.clone());
+            let (decoded, _) = decode(&frame.encode()).unwrap_or_else(|e| panic!("case {case}: {e}"));
+            match decoded {
+                Frame::F32s(got) => {
+                    assert_eq!(got.len(), vals.len(), "case {case}");
+                    for (a, b) in got.iter().zip(vals.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "case {case}");
+                    }
+                }
+                other => panic!("case {case}: wrong kind {}", other.kind_name()),
+            }
+
+            let m = rng.below(3000) as usize;
+            let bytes: Vec<u8> = (0..m).map(|_| rng.below(256) as u8).collect();
+            roundtrip(&Frame::Bytes(bytes));
+        }
+    }
+
+    #[test]
+    fn special_f32_values_survive_the_wire() {
+        roundtrip(&Frame::F32s(vec![
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN,
+            f32::MAX,
+            f32::EPSILON,
+        ]));
+        // NaN payload bits survive (PartialEq would fail; check bits).
+        let nan = f32::from_bits(0x7fc0_dead);
+        let (decoded, _) = decode(&Frame::F32s(vec![nan]).encode()).unwrap();
+        match decoded {
+            Frame::F32s(v) => assert_eq!(v[0].to_bits(), nan.to_bits()),
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    /// Every truncation point of every frame must be a clean error.
+    #[test]
+    fn prop_truncation_never_panics() {
+        let frames = [
+            Frame::Hello { listen_addr: "127.0.0.1:9".into() },
+            Frame::Welcome { rank: 0, world: 2, peers: vec!["a:1".into(), "b:2".into()] },
+            Frame::F32s(vec![1.0, 2.0, 3.0]),
+            Frame::Bytes(vec![9, 8, 7]),
+            Frame::Report { rank: 0, wire_bytes: 1, logical_bytes: 2, tensors: vec![vec![1.0]] },
+        ];
+        for frame in &frames {
+            let bytes = frame.encode();
+            for cut in 0..bytes.len() {
+                let err = decode(&bytes[..cut]).expect_err("truncated input must be rejected");
+                assert!(
+                    matches!(err, WireError::Truncated(_) | WireError::Malformed(_)),
+                    "cut {cut}: unexpected {err}"
+                );
+            }
+            // Streaming reader agrees on a truncated stream.
+            let mut cursor = &bytes[..bytes.len() - 1];
+            assert!(matches!(
+                read_frame(&mut cursor).expect_err("truncated stream"),
+                WireError::Truncated(_)
+            ));
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_panicked() {
+        // Bad magic.
+        let mut bad = Frame::Connect { rank: 1 }.encode();
+        bad[0] = b'X';
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::BadMagic(_)));
+
+        // Unknown kind.
+        let mut bad = Frame::Connect { rank: 1 }.encode();
+        bad[2] = 0xEE;
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::BadKind(0xEE)));
+
+        // Oversized length prefix must not allocate.
+        let mut bad = Frame::Bytes(vec![0; 4]).encode();
+        bad[3..7].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::Oversize(_)));
+
+        // f32 payload with a non-multiple-of-4 length.
+        let mut bad = Frame::F32s(vec![1.0]).encode();
+        bad[3..7].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(decode(&bad[..HEADER_LEN + 3]).unwrap_err(), WireError::Malformed(_)));
+
+        // Non-utf8 address string.
+        let mut bad = Frame::Hello { listen_addr: "ab".into() }.encode();
+        bad[HEADER_LEN + 2] = 0xFF;
+        bad[HEADER_LEN + 3] = 0xFE;
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::Malformed(_)));
+
+        // Trailing garbage after a well-formed payload.
+        let mut bad = Frame::Connect { rank: 1 }.encode();
+        bad.push(0);
+        let len = (bad.len() - HEADER_LEN) as u32;
+        bad[3..7].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::Malformed(_)));
+
+        // A Welcome whose peer list runs past the payload (world says 9
+        // peers but the payload carries none).
+        let bad = Frame::Welcome { rank: 0, world: 9, peers: vec![] }.encode();
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::Malformed(_)));
+    }
+
+    #[test]
+    fn timeout_classification() {
+        let t = WireError::Io(io::Error::new(io::ErrorKind::WouldBlock, "rcvtimeo"));
+        assert!(t.is_timeout());
+        let t2 = WireError::Io(io::Error::new(io::ErrorKind::TimedOut, "rcvtimeo"));
+        assert!(t2.is_timeout());
+        let e = WireError::Truncated("header");
+        assert!(!e.is_timeout());
+    }
+}

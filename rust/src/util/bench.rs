@@ -130,20 +130,50 @@ pub fn quick_mode() -> bool {
 /// Machine-readable bench output: one flat-record JSON document per
 /// bench binary, written as `BENCH_<name>.json` so CI can upload the
 /// files as artifacts and later runs can diff them.
+///
+/// Every document carries an `engine` and `transport` context (which
+/// execution substrate produced the numbers), so bench trajectories
+/// stay comparable across lockstep / threaded / tcp runs; wire-level
+/// traffic goes into per-record `wire_bytes`/`logical_bytes` metrics
+/// via [`BenchJson::record_wire`].
 pub struct BenchJson {
     bench: String,
+    engine: String,
+    transport: String,
     records: Vec<(String, Vec<(String, f64)>)>,
 }
 
 impl BenchJson {
     pub fn new(bench: &str) -> BenchJson {
-        BenchJson { bench: bench.to_string(), records: Vec::new() }
+        BenchJson {
+            bench: bench.to_string(),
+            engine: "lockstep".into(),
+            transport: "inproc".into(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Tag the document with the execution substrate it measured
+    /// (engine: `lockstep` / `threaded`; transport: `inproc` / `tcp`).
+    pub fn set_context(&mut self, engine: &str, transport: &str) {
+        self.engine = engine.to_string();
+        self.transport = transport.to_string();
     }
 
     /// Append one record of named metrics.
     pub fn record(&mut self, name: &str, metrics: &[(&str, f64)]) {
         self.records
             .push((name.to_string(), metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect()));
+    }
+
+    /// Append one measured-traffic record: `wire_bytes` is what a
+    /// metered transport counted on the ring, `logical_bytes` the
+    /// per-worker `CommLog`/`message_bytes` unit.
+    pub fn record_wire(&mut self, name: &str, wire_bytes: u64, logical_bytes: u64) {
+        self.record(
+            name,
+            &[("wire_bytes", wire_bytes as f64), ("logical_bytes", logical_bytes as f64)],
+        );
     }
 
     /// Append every result of a runner as mean/p50/p95 records.
@@ -160,6 +190,8 @@ impl BenchJson {
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        out.push_str(&format!("  \"engine\": \"{}\",\n", json_escape(&self.engine)));
+        out.push_str(&format!("  \"transport\": \"{}\",\n", json_escape(&self.transport)));
         out.push_str(&format!("  \"quick\": {},\n", quick_mode()));
         out.push_str("  \"records\": [\n");
         for (i, (name, metrics)) in self.records.iter().enumerate() {
@@ -238,6 +270,9 @@ mod tests {
         j.record("case_b", &[("mean_ms", f64::NAN)]);
         let doc = j.to_json();
         assert!(doc.contains("\"bench\": \"unit\""));
+        // Context defaults: comparable across engine/transport runs.
+        assert!(doc.contains("\"engine\": \"lockstep\""));
+        assert!(doc.contains("\"transport\": \"inproc\""));
         assert!(doc.contains("\"case \\\"a\\\"\", \"mean_ms\": 1.5, \"n\": 3"));
         assert!(doc.contains("\"case_b\", \"mean_ms\": null"));
         // Balanced braces/brackets — a cheap structural validity check.
@@ -263,6 +298,18 @@ mod tests {
         let mut j = BenchJson::new("runner");
         j.record_runner(&r);
         assert!(j.to_json().contains("\"tiny\""));
+    }
+
+    #[test]
+    fn context_and_wire_records_land_in_the_document() {
+        let mut j = BenchJson::new("wire");
+        j.set_context("threaded", "tcp");
+        j.record_wire("all_reduce/w4", 1536, 1024);
+        let doc = j.to_json();
+        assert!(doc.contains("\"engine\": \"threaded\""));
+        assert!(doc.contains("\"transport\": \"tcp\""));
+        assert!(doc.contains("\"wire_bytes\": 1536"));
+        assert!(doc.contains("\"logical_bytes\": 1024"));
     }
 
     #[test]

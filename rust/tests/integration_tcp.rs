@@ -1,0 +1,225 @@
+//! Integration: the multi-process TCP ring transport against the
+//! lockstep oracle.
+//!
+//! Two layers of coverage:
+//!
+//! - **True multi-process** — spawn the `powersgd` binary's `launch`
+//!   subcommand, which forks W `powersgd worker` OS processes,
+//!   rendezvouses them into a localhost ring, runs a PowerSGD EF-SGD
+//!   trajectory over real sockets, and verifies it bitwise against the
+//!   in-process oracle. The launch exits non-zero on any divergence,
+//!   dead worker, or byte-accounting mismatch, so a passing exit status
+//!   *is* the equivalence assertion.
+//! - **In-process, real sockets** — the same harness driven by threads
+//!   in this test process (one `run_worker` per thread against a
+//!   `coordinate` call), which lets us assert on the returned
+//!   [`LaunchOutcome`] directly: per-rank measured wire bytes and the
+//!   exact `Scheme::message_bytes` cross-check.
+
+use powersgd::simulate::Scheme;
+use powersgd::transport::tcp::{
+    coordinate, harness_registry, run_worker, HarnessConfig, LaunchOutcome, Rendezvous,
+};
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Rendezvous `world` worker threads over real localhost sockets and
+/// run the full harness; panics (via the Results) on any divergence.
+fn run_socket_ring(world: usize, cfg: &HarnessConfig) -> LaunchOutcome {
+    let rendezvous = Rendezvous::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = rendezvous.addr().expect("rendezvous addr");
+    let workers: Vec<_> = (0..world)
+        .map(|_| {
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_worker(&addr, &cfg, TIMEOUT))
+        })
+        .collect();
+    let outcome = coordinate(&rendezvous, world, cfg, TIMEOUT);
+    for (idx, handle) in workers.into_iter().enumerate() {
+        handle
+            .join()
+            .expect("worker thread panicked")
+            .unwrap_or_else(|e| panic!("worker #{idx}: {e:#}"));
+    }
+    outcome.unwrap_or_else(|e| panic!("coordinate: {e:#}"))
+}
+
+/// Acceptance: a full multi-process PowerSGD EF-SGD run over `TcpRing`
+/// on localhost is bitwise-identical to the lockstep oracle at
+/// W ∈ {2, 4} — real `powersgd worker` OS processes, spawned by the
+/// binary's `launch` subcommand.
+#[test]
+fn multiprocess_powersgd_launch_is_bitwise_identical_at_w2_and_w4() {
+    let exe = env!("CARGO_BIN_EXE_powersgd");
+    for workers in [2usize, 4] {
+        let output = std::process::Command::new(exe)
+            .args([
+                "launch",
+                "--workers",
+                &workers.to_string(),
+                "--transport",
+                "tcp",
+                "--compressor",
+                "powersgd",
+                "--rank",
+                "2",
+                "--steps",
+                "3",
+                "--seed",
+                "7",
+            ])
+            .output()
+            .expect("spawning powersgd launch");
+        let stdout = String::from_utf8_lossy(&output.stdout);
+        let stderr = String::from_utf8_lossy(&output.stderr);
+        assert!(
+            output.status.success(),
+            "launch --workers {workers} failed ({}):\nstdout:\n{stdout}\nstderr:\n{stderr}",
+            output.status
+        );
+        assert!(
+            stdout.contains("bitwise-identical to the lockstep oracle"),
+            "launch --workers {workers}: missing verification line in:\n{stdout}"
+        );
+    }
+}
+
+/// The same equivalence for every scheme with a per-worker
+/// implementation, over real sockets (threads in this process so the
+/// sweep stays fast), at W ∈ {2, 4}. `coordinate` bails unless every
+/// worker's final parameters are bit-identical to the oracle and all
+/// three byte-accounting layers agree, so success is the assertion.
+#[test]
+fn socket_ring_equivalence_across_schemes() {
+    for name in ["powersgd", "unbiased-rank", "sign-norm", "top-k", "none"] {
+        for world in [2usize, 4] {
+            let cfg = HarnessConfig {
+                compressor: name.into(),
+                rank: 2,
+                seed: 11,
+                steps: 3,
+                ..HarnessConfig::default()
+            };
+            let outcome = run_socket_ring(world, &cfg);
+            assert_eq!(outcome.reports.len(), world, "{name} w={world}");
+            assert!(
+                outcome.reports.iter().all(|r| r.bitwise),
+                "{name} w={world}: non-bitwise report"
+            );
+        }
+    }
+}
+
+/// Measured-bytes acceptance: the per-step logical bytes of the TCP run
+/// equal `Scheme::message_bytes` **exactly** for the rank-r and sign
+/// schemes, and the measured wire bytes are consistent across workers
+/// (each worker's sends are its predecessor's receives; the worker-side
+/// cross-check against the `ring_wire_bytes` expansion already ran
+/// inside `run_worker`).
+#[test]
+fn metered_wire_bytes_match_scheme_message_bytes_model() {
+    let reg = harness_registry();
+    let cases: [(&str, Scheme); 2] =
+        [("powersgd", Scheme::PowerSgd { rank: 2 }), ("sign-norm", Scheme::SignNorm)];
+    for (name, scheme) in cases {
+        for world in [2usize, 4] {
+            let steps = 3usize;
+            let cfg = HarnessConfig {
+                compressor: name.into(),
+                rank: 2,
+                seed: 23,
+                steps,
+                ..HarnessConfig::default()
+            };
+            let outcome = run_socket_ring(world, &cfg);
+            let model = scheme.message_bytes(&reg);
+            assert_eq!(
+                outcome.model_bytes_per_step, model,
+                "{name} w={world}: worker model vs simulator scheme model"
+            );
+            for report in &outcome.reports {
+                assert_eq!(
+                    report.logical_bytes,
+                    model * steps as u64,
+                    "{name} w={world} rank {}: logical bytes must equal \
+                     Scheme::message_bytes × steps exactly",
+                    report.rank
+                );
+                assert!(
+                    report.wire_bytes > 0,
+                    "{name} w={world} rank {}: nothing crossed the wire?",
+                    report.rank
+                );
+            }
+            // The ring moves strictly more than the logical unit for
+            // W > 1 all-reduce (2(W−1)/W ≥ 1 only at W = 2, where the
+            // expansion equals the logical volume for even splits).
+            let total_wire: u64 = outcome.reports.iter().map(|r| r.wire_bytes).sum();
+            let total_logical: u64 = outcome.reports.iter().map(|r| r.logical_bytes).sum();
+            if scheme.all_reduce() {
+                // Σ_ranks wire = 2(W−1)/W × Σ_ranks logical per op.
+                assert_eq!(
+                    total_wire * world as u64,
+                    total_logical * 2 * (world as u64 - 1),
+                    "{name} w={world}: aggregate ring bandwidth identity"
+                );
+            } else {
+                // Gather schemes mix one packed all-reduce (vectors)
+                // with the gather; just require the gather expansion to
+                // dominate the logical volume at W > 2.
+                assert!(total_wire >= total_logical, "{name} w={world}");
+            }
+        }
+    }
+}
+
+/// Graceful failure: a worker that dies mid-run surfaces as a
+/// contextual error on the coordinator (naming the dead worker), not a
+/// hang. Uses a 2-worker launch where one worker is killed right after
+/// rendezvous by giving it an impossible compressor — it exits before
+/// its first collective, and the survivor's recv times out or sees the
+/// closed connection.
+#[test]
+fn coordinator_reports_death_instead_of_hanging() {
+    let rendezvous = Rendezvous::bind("127.0.0.1:0").expect("bind");
+    let addr = rendezvous.addr().expect("addr");
+    let cfg = HarnessConfig { steps: 2, ..HarnessConfig::default() };
+
+    // Worker A runs the real harness with a short timeout; worker B
+    // joins the ring, then dies before compressing anything.
+    let short = Duration::from_millis(500);
+    let a = {
+        let addr = addr.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || run_worker(&addr, &cfg, short))
+    };
+    let b = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let joined = powersgd::transport::tcp::join(&addr, short)?;
+            drop(joined); // dies: all sockets close
+            Ok::<(), anyhow::Error>(())
+        })
+    };
+
+    let outcome = coordinate(&rendezvous, 2, &cfg, Duration::from_secs(5));
+    b.join().unwrap().unwrap();
+    let worker_err = a.join().unwrap().expect_err("survivor must error, not hang");
+    let msg = format!("{worker_err:#}");
+    assert!(
+        msg.contains("ring collective failed") || msg.contains("rank"),
+        "unhelpful worker error: {msg}"
+    );
+    // The survivor names its dead peer.
+    assert!(
+        msg.contains("closed the connection") || msg.contains("timed out") || msg.contains("cannot send"),
+        "error does not explain the dead peer: {msg}"
+    );
+    let coord_err = outcome.expect_err("coordinator must notice the dead worker");
+    assert!(
+        format!("{coord_err:#}").contains("died before reporting"),
+        "unhelpful coordinator error: {coord_err:#}"
+    );
+}
