@@ -12,6 +12,12 @@
 //! ```text
 //! cargo run --release -- launch --workers 4 --transport tcp --compressor powersgd --rank 2
 //! ```
+//!
+//! Add `--threads N` (or set `POWERSGD_THREADS`) to any subcommand to
+//! fan the compression kernels (GEMMs + Gram–Schmidt) out over the
+//! kernel pool (DESIGN.md §11). Results are bitwise identical at every
+//! thread count, so this is purely a wall-clock knob — and it composes
+//! with `--engine threaded` / `launch`: W workers × N kernel threads.
 
 use anyhow::Result;
 use powersgd::compress::PowerSgd;

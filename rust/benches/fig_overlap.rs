@@ -83,7 +83,9 @@ fn main() {
     let mut json = BenchJson::new("fig_overlap");
     // This bench models the threaded engine's bucketed schedule over
     // in-process rings; tag the trajectory so it stays comparable with
-    // lockstep and tcp runs of the same cases.
+    // lockstep and tcp runs of the same cases. (BenchJson records the
+    // ambient kernel thread count automatically — simulation-only
+    // here, but it keeps the schema aligned with kernel_hotpath.)
     json.set_context("threaded", "inproc");
 
     for backend in backends {

@@ -7,6 +7,15 @@
 //! PowerSGD step). This bench is also the profiling entry point for the
 //! performance pass (EXPERIMENTS.md §Perf).
 //!
+//! Every kernel case now runs a **thread sweep** over the kernel pool
+//! (DESIGN.md §11): 1/2/4/8 threads in full mode, 1 vs 4 in
+//! `BENCH_QUICK=1` (the CI `bench-smoke` comparison artifact). The
+//! 1-thread rows keep the historical case names so the JSON trajectory
+//! stays comparable; t>1 rows append ` [t=N]` and every row carries a
+//! `threads` metric. Kernel results are bitwise identical across the
+//! sweep — only the wall-clock moves — and the headline records are
+//! `powersgd_step/threads/N` with `speedup_x` vs the 1-thread step.
+//!
 //! Emits `BENCH_kernel_hotpath.json` for the CI `bench-smoke` artifact
 //! trail. `BENCH_QUICK=1` shrinks shapes and iteration budgets (the SVD
 //! drops to a smaller matrix) so the smoke job stays fast.
@@ -14,7 +23,8 @@
 use powersgd::collectives::CommLog;
 use powersgd::compress::{Compressor, PowerSgd};
 use powersgd::linalg::{gram_schmidt_in_place, svd};
-use powersgd::tensor::{matmul, matmul_at_b, Tensor};
+use powersgd::runtime::pool::set_threads;
+use powersgd::tensor::{matmul, matmul_at_b, matmul_nt_into, Tensor};
 use powersgd::util::{black_box, quick_mode, BenchJson, BenchRunner, Rng};
 
 fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
@@ -26,9 +36,10 @@ fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
 fn main() {
     let quick = quick_mode();
     let mut rng = Rng::new(55);
-    let mut runner = BenchRunner::from_env();
     let mut json = BenchJson::new("kernel_hotpath");
     json.set_context("lockstep", "inproc");
+
+    let sweep: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
 
     // --- the paper's dominant layer shapes ---
     let shapes: &[(usize, usize)] = if quick {
@@ -37,36 +48,11 @@ fn main() {
         &[(512, 4608), (2600, 650), (128, 1152)]
     };
     let ranks: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
-    for &(n, m) in shapes {
-        let a = rand_tensor(&[n, m], &mut rng);
-        for &r in ranks {
-            let q = rand_tensor(&[m, r], &mut rng);
-            runner.bench(&format!("matmul M[{n}x{m}]·Q[r={r}]"), || {
-                black_box(matmul(&a, &q));
-            });
-        }
-        let p = rand_tensor(&[n, 2], &mut rng);
-        runner.bench(&format!("matmul_tn Mᵀ[{n}x{m}]·P[r=2]"), || {
-            black_box(matmul_at_b(&a, &p));
-        });
-    }
-
-    // --- Gram–Schmidt (the paper's "most expensive part") ---
     let gs_shapes: &[(usize, usize)] = if quick {
         &[(512, 2)]
     } else {
         &[(512, 2), (2600, 4), (28869, 4)]
     };
-    for &(n, r) in gs_shapes {
-        let p0 = rand_tensor(&[n, r], &mut rng);
-        runner.bench(&format!("gram_schmidt [{n}x{r}]"), || {
-            let mut p = p0.clone();
-            gram_schmidt_in_place(&mut p);
-            black_box(p);
-        });
-    }
-
-    // --- full PowerSGD step over the ResNet18-scale matrix set ---
     let step_shapes: Vec<(usize, usize)> = if quick {
         vec![(512, 4608)]
     } else {
@@ -75,14 +61,74 @@ fn main() {
     let updates: Vec<Vec<Tensor>> = (0..1)
         .map(|_| step_shapes.iter().map(|&(n, m)| rand_tensor(&[n, m], &mut rng)).collect())
         .collect();
-    let mut comp = PowerSgd::new(2, 1);
     let nlayers = step_shapes.len();
-    let step_summary = runner.bench(&format!("PowerSGD rank-2 full step ({nlayers} layers)"), || {
-        let mut log = CommLog::default();
-        black_box(comp.compress_aggregate(&updates, &mut log));
-    });
 
-    // --- the Atomo cost: full SVD of the dominant layer ---
+    let mut step_means: Vec<(usize, f64)> = Vec::new();
+    for &t in sweep {
+        set_threads(t);
+        let tag = if t == 1 { String::new() } else { format!(" [t={t}]") };
+        let mut runner = BenchRunner::from_env();
+
+        let mut shape_rng = Rng::new(56);
+        for &(n, m) in shapes {
+            let a = rand_tensor(&[n, m], &mut shape_rng);
+            for &r in ranks {
+                let q = rand_tensor(&[m, r], &mut shape_rng);
+                runner.bench(&format!("matmul M[{n}x{m}]·Q[r={r}]{tag}"), || {
+                    black_box(matmul(&a, &q));
+                });
+            }
+            let p = rand_tensor(&[n, 2], &mut shape_rng);
+            runner.bench(&format!("matmul_tn Mᵀ[{n}x{m}]·P[r=2]{tag}"), || {
+                black_box(matmul_at_b(&a, &p));
+            });
+            // The reconstruction (decompress) kernel.
+            let phat = rand_tensor(&[n, 2], &mut shape_rng);
+            let qn = rand_tensor(&[m, 2], &mut shape_rng);
+            let mut rec = Tensor::zeros(&[n, m]);
+            runner.bench(&format!("matmul_nt P̂[{n}x2]·Qᵀ[{m}]{tag}"), || {
+                matmul_nt_into(&phat, &qn, &mut rec);
+                black_box(rec.data()[0]);
+            });
+        }
+
+        // --- Gram–Schmidt (the paper's "most expensive part") ---
+        for &(n, r) in gs_shapes {
+            let p0 = rand_tensor(&[n, r], &mut shape_rng);
+            runner.bench(&format!("gram_schmidt [{n}x{r}]{tag}"), || {
+                let mut p = p0.clone();
+                gram_schmidt_in_place(&mut p);
+                black_box(p);
+            });
+        }
+
+        // --- full PowerSGD step over the ResNet18-scale matrix set ---
+        let mut comp = PowerSgd::new(2, 1);
+        let step_summary =
+            runner.bench(&format!("PowerSGD rank-2 full step ({nlayers} layers){tag}"), || {
+                let mut log = CommLog::default();
+                black_box(comp.compress_aggregate(&updates, &mut log));
+            });
+        step_means.push((t, step_summary.mean));
+
+        json.record_runner_tagged(&runner, &[("threads", t as f64)]);
+    }
+
+    // Thread-scaling headline: the rank-2 full-step speedup curve.
+    let base = step_means[0].1;
+    println!();
+    for &(t, mean) in &step_means {
+        let speedup = base / mean;
+        println!("PowerSGD full step at {t} thread(s): {mean:.2} ms ({speedup:.2}x vs 1 thread)");
+        json.record(
+            &format!("powersgd_step/threads/{t}"),
+            &[("threads", t as f64), ("mean_ms", mean), ("speedup_x", speedup)],
+        );
+    }
+
+    // --- the Atomo cost: full SVD of the dominant layer (serial; the
+    // Jacobi SVD is not pool-parallel) ---
+    set_threads(1);
     let (svd_n, svd_m) = if quick { (128, 1152) } else { (512, 4608) };
     let a = rand_tensor(&[svd_n, svd_m], &mut rng);
     let mut svd_runner = BenchRunner::once(if quick { 1 } else { 2 });
@@ -94,15 +140,14 @@ fn main() {
     println!(
         "\n§4.2 reproduction: SVD {:.0} ms vs PowerSGD step {:.1} ms — {:.0}x gap (paper: 673 vs 105 ms, 6.4x)",
         svd_summary.mean,
-        step_summary.mean,
-        svd_summary.mean / step_summary.mean
+        base,
+        svd_summary.mean / base
     );
 
-    json.record_runner(&runner);
     json.record_runner(&svd_runner);
     json.record(
         "svd_vs_powersgd_step",
-        &[("gap_x", svd_summary.mean / step_summary.mean)],
+        &[("gap_x", svd_summary.mean / base)],
     );
     json.write().expect("write BENCH_kernel_hotpath.json");
 }

@@ -111,11 +111,11 @@ pub trait Compressor: Send {
         true
     }
 
-    /// Tensor allocations made by reusable scratch buffers so far, when
-    /// the operator runs the decentralized per-worker path with a
-    /// [`ScratchArena`] (`None` for the centralized oracles). On a
-    /// shape-stable workload the count must stop moving after step 1 —
-    /// the zero-alloc regression hook.
+    /// Tensor allocations made by reusable scratch buffers so far —
+    /// the decentralized per-worker path's [`ScratchArena`]s, or the
+    /// centralized PowerSGD oracle's factor arena (`None` for oracles
+    /// without reusable scratch). On a shape-stable workload the count
+    /// must stop moving after step 1 — the zero-alloc regression hook.
     fn scratch_allocations(&self) -> Option<u64> {
         None
     }

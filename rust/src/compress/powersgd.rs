@@ -1,14 +1,58 @@
 //! PowerSGD (Algorithm 1) and the best-approximation reference (App. G.7).
 
+use super::scratch::TensorPool;
 use super::{
     aggregate_vectors_uncompressed, all_reduce_mean_packed, split_kinds, Aggregated, Compressor,
     Locals,
 };
-use crate::collectives::CommLog;
+use crate::collectives::{all_reduce_mean, CommLog};
 use crate::grad::ParamRegistry;
 use crate::linalg::gram_schmidt_in_place;
 use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
 use crate::util::Rng;
+
+/// Reusable buffers for the centralized oracle's per-worker P/Q GEMM
+/// sweeps — the [`super::ScratchArena`] pattern applied to the
+/// all-workers-in-one-call view. Factor tensors are slot-addressed
+/// `w·k + slot` (worker-major); the flat per-worker buffers feed the
+/// packed all-reduces. Everything is claimed on the first step of a
+/// shape-stable workload and reused verbatim afterwards
+/// ([`TensorPool::allocations`] is the regression counter).
+#[derive(Debug, Default)]
+struct OracleScratch {
+    /// Left factors `P_w = M_w·Q`; slots `0..k` double as the shared
+    /// mean `P̂` after the all-reduce unpacks into them.
+    p: TensorPool,
+    /// Right factors `Q_w = M_wᵀ·P̂`; slots `0..k` hold the shared mean.
+    q: TensorPool,
+    /// One packed flat buffer per worker for the all-reduces.
+    bufs: Vec<Vec<f32>>,
+}
+
+/// Pack each worker's `k` factor tensors (slots `w·k..w·k+k`) into one
+/// reusable flat buffer per worker.
+fn pack_workers(bufs: &mut Vec<Vec<f32>>, pool: &TensorPool, w: usize, k: usize) {
+    if bufs.len() < w {
+        bufs.resize_with(w, Vec::new);
+    }
+    for (wi, buf) in bufs.iter_mut().enumerate().take(w) {
+        buf.clear();
+        for slot in 0..k {
+            buf.extend_from_slice(pool.at(wi * k + slot).data());
+        }
+    }
+}
+
+/// Unpack the reduced flat buffer back into worker 0's slots (which
+/// then hold the shared mean).
+fn unpack_first_worker(buf: &[f32], tensors: &mut [Tensor]) {
+    let mut off = 0;
+    for t in tensors {
+        let len = t.len();
+        t.data_mut().copy_from_slice(&buf[off..off + len]);
+        off += len;
+    }
+}
 
 /// Rank-r PowerSGD compression (Algorithm 1).
 ///
@@ -25,12 +69,20 @@ pub struct PowerSgd {
     /// Per-matrix-parameter `Q ∈ R^{m×r}` state, lazily initialized.
     qs: Vec<Option<Tensor>>,
     rng: Rng,
+    /// Reusable per-worker P/Q factors + packed collective buffers.
+    scratch: OracleScratch,
 }
 
 impl PowerSgd {
     pub fn new(rank: usize, seed: u64) -> PowerSgd {
         assert!(rank >= 1, "rank must be >= 1");
-        PowerSgd { rank, warm_start: true, qs: Vec::new(), rng: Rng::new(seed) }
+        PowerSgd {
+            rank,
+            warm_start: true,
+            qs: Vec::new(),
+            rng: Rng::new(seed),
+            scratch: OracleScratch::default(),
+        }
     }
 
     /// Disable warm start (Table 2 ablation).
@@ -77,6 +129,7 @@ impl Compressor for PowerSgd {
         let w = updates.len();
         assert!(w > 0);
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
+        let k = mat_idx.len();
         // Matrix slots are fully overwritten by the reconstruction below;
         // allocate empty placeholders instead of zeroed n×m buffers
         // (perf pass: saves one full-gradient memset per step).
@@ -88,64 +141,65 @@ impl Compressor for PowerSgd {
 
         // --- Stage 1: P_w = M_w · Q for every matrix, packed all-reduce.
         // Ensure every warm-start Q exists first (one RNG pass in slot
-        // order), then borrow them for the GEMM sweep.
+        // order); the GEMM sweep then writes into arena slots (worker-
+        // major `w·k + slot`) so the steady-state step allocates no
+        // fresh factor tensors.
         for (slot, &p) in mat_idx.iter().enumerate() {
             self.ensure_q(slot, updates[0][p].cols());
         }
         let rank = self.rank;
-        let qs = &self.qs;
-        let per_worker_p: Vec<Vec<Tensor>> = updates
-            .iter()
-            .map(|wu| {
-                mat_idx
-                    .iter()
-                    .zip(qs.iter())
-                    .map(|(&p, q)| {
-                        let q = q.as_ref().expect("warm-start Q ensured above");
-                        let mut out = Tensor::zeros(&[wu[p].rows(), rank]);
-                        matmul_into(&wu[p], q, &mut out);
-                        out
-                    })
-                    .collect()
-            })
-            .collect();
-        let mut p_mean = all_reduce_mean_packed(&per_worker_p, log);
+        for (wi, wu) in updates.iter().enumerate() {
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let q = self.qs[slot].as_ref().expect("warm-start Q ensured above");
+                let out = self.scratch.p.get(wi * k + slot, &[wu[p].rows(), rank]);
+                matmul_into(&wu[p], q, out);
+            }
+        }
+        pack_workers(&mut self.scratch.bufs, &self.scratch.p, w, k);
+        all_reduce_mean(&mut self.scratch.bufs[..w], log);
+        unpack_first_worker(&self.scratch.bufs[0], self.scratch.p.first_mut(k));
 
-        // --- Orthogonalize (Gram–Schmidt; paper §3).
-        for p in p_mean.iter_mut() {
-            gram_schmidt_in_place(p);
+        // --- Orthogonalize the shared mean (Gram–Schmidt; paper §3) in
+        // worker 0's slots, which now hold P̂.
+        for phat in self.scratch.p.first_mut(k) {
+            gram_schmidt_in_place(phat);
         }
 
-        // --- Stage 2: Q_w = M_wᵀ · P̂, packed all-reduce.
-        let per_worker_q: Vec<Vec<Tensor>> = updates
-            .iter()
-            .map(|wu| {
-                mat_idx
-                    .iter()
-                    .zip(p_mean.iter())
-                    .map(|(&p, phat)| {
-                        let mut out = Tensor::zeros(&[wu[p].cols(), self.rank]);
-                        matmul_tn_into(&wu[p], phat, &mut out);
-                        out
-                    })
-                    .collect()
-            })
-            .collect();
-        let q_mean = all_reduce_mean_packed(&per_worker_q, log);
+        // --- Stage 2: Q_w = M_wᵀ · P̂, same arena slots + packed all-reduce.
+        for (wi, wu) in updates.iter().enumerate() {
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let scratch = &mut self.scratch;
+                let out = scratch.q.get(wi * k + slot, &[wu[p].cols(), rank]);
+                matmul_tn_into(&wu[p], scratch.p.at(slot), out);
+            }
+        }
+        pack_workers(&mut self.scratch.bufs, &self.scratch.q, w, k);
+        all_reduce_mean(&mut self.scratch.bufs[..w], log);
+        unpack_first_worker(&self.scratch.bufs[0], self.scratch.q.first_mut(k));
 
-        // --- Reconstruct P̂·Qᵀ and persist warm-start state.
-        for ((slot, &p), (phat, qn)) in
-            mat_idx.iter().enumerate().zip(p_mean.iter().zip(q_mean.iter()))
-        {
+        // --- Reconstruct P̂·Qᵀ directly into the returned aggregate (the
+        // API hands ownership out, so this is the one per-step tensor
+        // allocation left) and persist warm-start Q without cloning.
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let phat = self.scratch.p.at(slot);
+            let qn = self.scratch.q.at(slot);
             let mut rec = Tensor::zeros(&[phat.rows(), qn.rows()]);
             matmul_nt_into(phat, qn, &mut rec);
             mean[p] = rec;
             if self.warm_start {
-                self.qs[slot] = Some(qn.clone());
+                self.qs[slot]
+                    .as_mut()
+                    .expect("warm-start Q ensured above")
+                    .data_mut()
+                    .copy_from_slice(self.scratch.q.at(slot).data());
             }
         }
 
         Aggregated { mean, locals: Locals::SharedAggregate }
+    }
+
+    fn scratch_allocations(&self) -> Option<u64> {
+        Some(self.scratch.p.allocations() + self.scratch.q.allocations())
     }
 
     fn message_bytes(&self, registry: &ParamRegistry) -> u64 {

@@ -9,7 +9,24 @@
 //! (epfml/powersgd `orthogonalize`): substituting an arbitrary unit
 //! direction instead would hand that direction real mass in the
 //! subsequent `Q = MᵀP̂` and corrupt the reconstruction.
+//!
+//! **Determinism policy (DESIGN.md §11).** The column dots and norms
+//! are [`deterministic_sum`] reductions: fixed chunks of
+//! [`REDUCE_CHUNK`] rows summed serially in f64, partials combined in a
+//! pairwise tree whose shape depends only on `n` — never on the thread
+//! count. The projection/normalization sweeps shard disjoint row bands
+//! with unchanged per-element arithmetic. Together this makes the
+//! kernel bitwise identical at every thread count. Adopting the fixed
+//! chunking changed the serial numerics *once* (only for `n >
+//! REDUCE_CHUNK`, where the old code summed all `n` rows in one f64
+//! stream); no pinned golden in the repo depends on those bits — every
+//! equivalence suite compares two paths running this same kernel, and
+//! accuracy tests use tolerances.
+//!
+//! [`deterministic_sum`]: crate::runtime::pool::deterministic_sum
+//! [`REDUCE_CHUNK`]: crate::runtime::pool::REDUCE_CHUNK
 
+use crate::runtime::pool::{deterministic_sum, parallel_ranges, DisjointSlice};
 use crate::tensor::Tensor;
 
 const EPS: f64 = 1e-30;
@@ -17,35 +34,45 @@ const EPS: f64 = 1e-30;
 /// numerically rank-deficient (f32 inputs carry ~1e-7 relative noise).
 const REL_TOL: f64 = 1e-4;
 
+/// Minimum rows per parallel band (elementwise sweeps only; the
+/// reductions chunk by `REDUCE_CHUNK` regardless).
+const MIN_PAR_ROWS: usize = 4096;
+
+/// Column L2 norm of column `col` of row-major `d[n×r]`, via the
+/// fixed-chunk deterministic reduction.
+fn col_norm(d: &[f32], n: usize, r: usize, col: usize) -> f64 {
+    deterministic_sum(n, |i| {
+        let v = d[i * r + col] as f64;
+        v * v
+    })
+    .sqrt()
+}
+
 /// Orthonormalize the columns of `p` (row-major `n×r`) in place.
+/// Bitwise identical at every kernel thread count.
 pub fn gram_schmidt_in_place(p: &mut Tensor) {
     let (n, r) = (p.rows(), p.cols());
     let d = p.data_mut();
     for col in 0..r {
         // Original column norm: the yardstick for numerical dependence.
-        let mut orig = 0.0f64;
-        for i in 0..n {
-            let v = d[i * r + col] as f64;
-            orig += v * v;
-        }
-        let orig = orig.sqrt();
+        let orig = col_norm(d, n, r, col);
         // Subtract projections onto the previous (already orthonormal) cols.
         for prev in 0..col {
-            let mut dot = 0.0f64;
-            for i in 0..n {
-                dot += d[i * r + col] as f64 * d[i * r + prev] as f64;
-            }
-            let dot = dot as f32;
-            for i in 0..n {
-                d[i * r + col] -= dot * d[i * r + prev];
-            }
+            let dot = {
+                let dd: &[f32] = d;
+                deterministic_sum(n, |i| dd[i * r + col] as f64 * dd[i * r + prev] as f64) as f32
+            };
+            let rows = DisjointSlice::new(&mut *d);
+            parallel_ranges(n, MIN_PAR_ROWS, move |i0, i1| {
+                // SAFETY: row bands are disjoint across tasks; each
+                // element reads only its own row.
+                let band = unsafe { rows.range_mut(i0 * r, i1 * r) };
+                for ii in 0..(i1 - i0) {
+                    band[ii * r + col] -= dot * band[ii * r + prev];
+                }
+            });
         }
-        let mut norm = 0.0f64;
-        for i in 0..n {
-            let v = d[i * r + col] as f64;
-            norm += v * v;
-        }
-        let norm = norm.sqrt();
+        let norm = col_norm(d, n, r, col);
         // A column whose residual collapsed relative to its original norm
         // is numerically inside the span of the previous columns. It MUST
         // be zeroed, not normalized: the residual is f32 cancellation
@@ -56,16 +83,26 @@ pub fn gram_schmidt_in_place(p: &mut Tensor) {
         // low-rank gradients; observable as 0.9 relative error at rank 8
         // on rank-1 inputs).
         if norm <= REL_TOL * orig + EPS {
-            for i in 0..n {
-                d[i * r + col] = 0.0;
-            }
+            set_col(d, n, r, col, |_| 0.0);
         } else {
             let inv = (1.0 / norm) as f32;
-            for i in 0..n {
-                d[i * r + col] *= inv;
-            }
+            set_col(d, n, r, col, move |v| v * inv);
         }
     }
+}
+
+/// Overwrite every element of column `col` with `f(old)`, sharded over
+/// disjoint row bands.
+fn set_col(d: &mut [f32], n: usize, r: usize, col: usize, f: impl Fn(f32) -> f32 + Sync) {
+    let rows = DisjointSlice::new(d);
+    parallel_ranges(n, MIN_PAR_ROWS, move |i0, i1| {
+        // SAFETY: row bands are disjoint across tasks.
+        let band = unsafe { rows.range_mut(i0 * r, i1 * r) };
+        for ii in 0..(i1 - i0) {
+            let x = &mut band[ii * r + col];
+            *x = f(*x);
+        }
+    });
 }
 
 /// Max deviation of `PᵀP` from the identity — 0 for perfectly orthonormal
@@ -90,6 +127,7 @@ pub fn orthonormal_error(p: &Tensor) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::pool::{set_threads, test_guard};
     use crate::util::Rng;
 
     #[test]
@@ -146,5 +184,28 @@ mod tests {
         gram_schmidt_in_place(&mut p);
         assert!(p.data().iter().all(|v| v.is_finite()));
         assert!(p.norm() < 1e-3, "zero input must stay ~zero");
+    }
+
+    /// Unit-scale determinism check, including an `n > REDUCE_CHUNK`
+    /// shape that exercises the multi-chunk pairwise reduction. The
+    /// full sweep over paper shapes lives in
+    /// `tests/integration_kernels.rs`.
+    #[test]
+    fn parallel_gram_schmidt_bitwise_matches_serial() {
+        let _g = test_guard();
+        let mut rng = Rng::new(23);
+        for &(n, r) in &[(1, 1), (513, 4), (9000, 3)] {
+            let mut p0 = Tensor::zeros(&[n, r]);
+            rng.fill_normal(p0.data_mut(), 1.0);
+            set_threads(1);
+            let mut want = p0.clone();
+            gram_schmidt_in_place(&mut want);
+            for t in [2usize, 4, 8] {
+                set_threads(t);
+                let mut got = p0.clone();
+                gram_schmidt_in_place(&mut got);
+                assert_eq!(got.data(), want.data(), "n={n} r={r} t={t}");
+            }
+        }
     }
 }

@@ -19,12 +19,20 @@
 //! ```text
 //! powersgd train --model mlp --compressor powersgd --rank 2 --workers 4 --steps 200
 //! powersgd train --model mlp --engine threaded --bucket-mb 4 --straggler 1.5
+//! powersgd train --model mlp --engine threaded --threads 4
 //! powersgd simulate --profile resnet18 --scheme rank2 --workers 16 --backend nccl
 //! powersgd simulate --profile resnet18 --bucket-mb 4 --overlap
 //! powersgd simulate --profile resnet18 --scheme rank2 --engine threaded
 //! powersgd launch --workers 4 --transport tcp --compressor powersgd --rank 2 --steps 3
-//! powersgd launch --workers 2 --compressor sign-norm --steps 5
+//! powersgd launch --workers 2 --compressor sign-norm --steps 5 --threads 4
 //! ```
+//!
+//! `--threads N` (default `$POWERSGD_THREADS`, else 1) sizes the
+//! kernel pool (DESIGN.md §11) that parallelizes the compression
+//! GEMMs and Gram–Schmidt. Kernel results are **bitwise identical at
+//! every thread count**, so `--threads` only changes wall-clock. It
+//! composes with `--engine threaded`: W worker threads each dispatch
+//! onto the shared pool (W workers × N kernel threads).
 //!
 //! With `--engine threaded`, `train` runs compression decentralized
 //! (per-worker `WorkerCompressor` instances over the `InProcRing`) for
@@ -48,6 +56,20 @@ use powersgd::util::{Args, Table};
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    if args.flag("help") || args.subcommand() == Some("help") {
+        print_help();
+        return Ok(());
+    }
+    // Kernel pool size, before any subcommand touches a kernel. The
+    // env default (POWERSGD_THREADS) is resolved lazily by the pool;
+    // an explicit --threads wins.
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse().context("--threads must be a positive integer")?;
+        if n == 0 {
+            bail!("--threads must be >= 1");
+        }
+        powersgd::runtime::pool::set_threads(n);
+    }
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -55,13 +77,41 @@ fn main() -> Result<()> {
         Some("worker") => cmd_worker(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
-            eprintln!(
-                "usage: powersgd <train|simulate|launch|worker|artifacts> [--help]\n\
-                 see README.md for options"
-            );
+            print_help();
             Ok(())
         }
     }
+}
+
+/// `powersgd --help` / bare invocation: subcommands and shared options.
+fn print_help() {
+    eprintln!(
+        "powersgd — PowerSGD distributed-training coordinator\n\
+         \n\
+         usage: powersgd <train|simulate|launch|worker|artifacts> [options]\n\
+         \n\
+         subcommands:\n\
+         \x20 train      train an AOT-compiled model over W simulated workers\n\
+         \x20 simulate   shape-profile timing simulator (paper Tables 3-7)\n\
+         \x20 launch     spawn W worker processes on a localhost TCP ring\n\
+         \x20 worker     one rank of a launch (normally spawned by `launch`)\n\
+         \x20 artifacts  list available compiled artifacts\n\
+         \n\
+         shared options:\n\
+         \x20 --threads N      kernel-pool threads for the compression GEMMs\n\
+         \x20                  and Gram-Schmidt (default: $POWERSGD_THREADS,\n\
+         \x20                  else 1). Results are bitwise identical at every\n\
+         \x20                  thread count. Composes with --engine threaded:\n\
+         \x20                  W worker threads x N kernel threads.\n\
+         \x20 --engine E       collective engine: lockstep | threaded\n\
+         \x20 --compressor C   powersgd | powersgd-cold | unbiased-rank |\n\
+         \x20                  sign-norm | top-k | none | ... (see README.md)\n\
+         \x20 --rank R         compression rank (default 2)\n\
+         \x20 --workers W      simulated/spawned worker count\n\
+         \x20 --seed S         deterministic seed\n\
+         \n\
+         see README.md and DESIGN.md for the full option list."
+    );
 }
 
 /// Build the optimizer selected by `--compressor` (+ `--rank`). Under
@@ -69,7 +119,11 @@ fn main() -> Result<()> {
 /// decentralized — each worker thread compresses its own gradient and
 /// aggregates over the `InProcRing`, bitwise-identical to the oracle —
 /// while the rest fall back to the centralized path (whose collectives
-/// still run on the threaded ring via the engine switch).
+/// still run on the threaded ring via the engine switch). Either way
+/// the compression GEMMs and Gram–Schmidt dispatch onto the kernel
+/// pool sized by `--threads` / `POWERSGD_THREADS` (set by `main`
+/// before this runs); kernel results are bitwise identical at every
+/// thread count.
 pub fn build_optimizer(
     name: &str,
     rank: usize,
@@ -431,8 +485,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
     );
     let mut children = Vec::with_capacity(workers);
     for _ in 0..workers {
-        let child = Command::new(&exe)
-            .arg("worker")
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
             .arg("--coordinator")
             .arg(&addr)
             .arg("--compressor")
@@ -448,9 +502,14 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .arg("--momentum")
             .arg(cfg.momentum.to_string())
             .arg("--timeout-s")
-            .arg(timeout.as_secs_f64().to_string())
-            .spawn()
-            .context("spawning a worker process")?;
+            .arg(timeout.as_secs_f64().to_string());
+        // Kernel threads compose across processes too: every worker
+        // process gets the coordinator's --threads (kernels are bitwise
+        // thread-count invariant, so this only changes wall-clock).
+        if let Some(t) = args.get("threads") {
+            cmd.arg("--threads").arg(t);
+        }
+        let child = cmd.spawn().context("spawning a worker process")?;
         children.push(child);
     }
 

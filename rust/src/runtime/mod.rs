@@ -13,6 +13,7 @@
 //! /opt/xla-example/README.md).
 
 mod manifest;
+pub mod pool;
 pub use manifest::{ArtifactManifest, DType, Init, IoSpec};
 
 use crate::tensor::Tensor;

@@ -1,0 +1,430 @@
+//! Persistent kernel thread pool: deterministic parallelism for the
+//! compute hot path (DESIGN.md §11).
+//!
+//! PowerSGD's pitch (§4.2) is that compression is cheap enough to win
+//! wall-clock; that only holds if the encode/decode kernels run as fast
+//! as the hardware allows (Agarwal et al., Zhang et al. — PAPERS.md).
+//! This module is the execution layer under `tensor::matmul` and
+//! `linalg::gram_schmidt`: a process-wide pool of worker threads,
+//! spawned once and reused for every kernel dispatch, with **bitwise
+//! determinism across thread counts** as the hard invariant.
+//!
+//! The determinism contract, kernel by kernel:
+//!
+//! - Output-sharded kernels (`matmul_into`, `matmul_nt_into` over rows;
+//!   `matmul_tn_into` over accumulator columns) partition *disjoint*
+//!   output ranges. Every output element is produced by exactly one
+//!   task with exactly the serial loop's per-element operation order,
+//!   so the partition — and therefore the thread count — can never
+//!   change a bit.
+//! - Reductions ([`deterministic_sum`]) use a **fixed** chunk size
+//!   ([`REDUCE_CHUNK`], never derived from the thread count): partials
+//!   are exact serial sums over fixed element ranges, combined in a
+//!   pairwise tree whose shape depends only on the input length.
+//!   Inputs of ≤ `REDUCE_CHUNK` elements reduce in one chunk and are
+//!   bit-identical to a plain serial sum.
+//!
+//! Thread count comes from `--threads` / `POWERSGD_THREADS`
+//! ([`set_threads`] / [`threads`]); the default of 1 keeps every
+//! kernel on the calling thread (and `run` short-circuits without
+//! touching the pool at all). Worker threads are spawned lazily up to
+//! the highest count ever requested and then live for the process
+//! lifetime; concurrent dispatches from multiple caller threads (the
+//! decentralized engine runs one compressor per worker thread) simply
+//! queue on the same workers.
+//!
+//! Chunk tasks must be pure compute: a task that itself dispatched
+//! pool work could deadlock two workers against each other. All
+//! kernels in this crate dispatch only from caller threads.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Mutex, OnceLock};
+
+/// Fixed element-chunk size of every deterministic reduction. Never
+/// derived from the thread count, so the reduction tree is identical
+/// at every thread count — and identical to the plain serial f64 sum
+/// for inputs of at most this many elements.
+pub const REDUCE_CHUNK: usize = 4096;
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The kernel thread count: `--threads` / [`set_threads`] if set,
+/// otherwise `POWERSGD_THREADS`, otherwise 1 (serial).
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::SeqCst) {
+        0 => {
+            let n = std::env::var("POWERSGD_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(1);
+            THREADS.store(n, Ordering::SeqCst);
+            n
+        }
+        n => n,
+    }
+}
+
+/// Select the process-wide kernel thread count (clamped to ≥ 1).
+/// Kernel results are bitwise-identical at every count, so this only
+/// changes wall-clock, never training trajectories.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::SeqCst);
+}
+
+/// Lifetime-erased shared task: the pool waits for every chunk's ack
+/// before `run` returns, so the erased borrow never outlives the
+/// caller's closure.
+struct Task(&'static (dyn Fn(usize) + Sync));
+
+struct Job {
+    task: Task,
+    start: usize,
+    end: usize,
+    /// `true` = all chunks ran to completion; `false` = a chunk panicked.
+    ack: Sender<bool>,
+}
+
+/// The persistent pool. One per process ([`pool`]); worker threads are
+/// spawned on first demand and reused for every later dispatch.
+pub struct KernelPool {
+    senders: Mutex<Vec<Sender<Job>>>,
+}
+
+static POOL: OnceLock<KernelPool> = OnceLock::new();
+
+/// The process-wide kernel pool.
+pub fn pool() -> &'static KernelPool {
+    POOL.get_or_init(|| KernelPool { senders: Mutex::new(Vec::new()) })
+}
+
+impl KernelPool {
+    /// Run `f(chunk)` for every `chunk ∈ [0, chunks)`, split over at
+    /// most [`threads`] participants (the caller is one of them). Every
+    /// chunk runs exactly once; the call returns only after all chunks
+    /// finished, so `f` may borrow locals. Panics inside `f` propagate
+    /// to the caller after every other chunk completed.
+    pub fn run<F: Fn(usize) + Sync>(&self, chunks: usize, f: F) {
+        self.run_dyn(chunks, &f)
+    }
+
+    fn run_dyn(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let k = threads().min(chunks);
+        if k <= 1 {
+            for c in 0..chunks {
+                f(c);
+            }
+            return;
+        }
+        // SAFETY: the erased reference is only used by jobs whose acks
+        // are drained below before this frame returns (even when the
+        // caller's own share panics), so it never outlives `f`.
+        let raw: *const (dyn Fn(usize) + Sync) = f;
+        let helpers = self.helper_senders(k - 1);
+        let (ack, ack_rx) = mpsc::channel();
+        let mut sent = 0usize;
+        let mut send_failed = false;
+        for (j, s) in helpers.iter().enumerate() {
+            let job = Job {
+                task: Task(unsafe { &*raw }),
+                start: (j + 1) * chunks / k,
+                end: (j + 2) * chunks / k,
+                ack: ack.clone(),
+            };
+            if s.send(job).is_ok() {
+                sent += 1;
+            } else {
+                send_failed = true;
+            }
+        }
+        // The caller takes the first range; its panic (if any) must not
+        // unwind past the outstanding borrows, so it is deferred until
+        // every helper acked.
+        let mine = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for c in 0..chunks / k {
+                f(c);
+            }
+        }));
+        let mut ok = true;
+        for _ in 0..sent {
+            ok &= ack_rx.recv().expect("kernel pool worker thread died");
+        }
+        if let Err(p) = mine {
+            std::panic::resume_unwind(p);
+        }
+        assert!(!send_failed, "kernel pool worker thread died");
+        assert!(ok, "a kernel pool task panicked");
+    }
+
+    /// Clones of the first `n` worker senders, spawning missing workers.
+    fn helper_senders(&self, n: usize) -> Vec<Sender<Job>> {
+        let mut senders = self.senders.lock().expect("kernel pool poisoned");
+        while senders.len() < n {
+            let (tx, rx) = mpsc::channel();
+            let id = senders.len();
+            std::thread::Builder::new()
+                .name(format!("powersgd-kernel-{id}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawning a kernel pool thread");
+            senders.push(tx);
+        }
+        senders[..n].to_vec()
+    }
+}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for c in job.start..job.end {
+                (job.task.0)(c);
+            }
+        }))
+        .is_ok();
+        let _ = job.ack.send(ok);
+    }
+}
+
+/// Run `f(start, end)` over a partition of `[0, total)` into contiguous
+/// ranges — at most [`threads`] of them, each covering at least
+/// `min_per` items (so tiny inputs stay on the calling thread). The
+/// partition decides only *who* computes, never *what*: callers whose
+/// per-element work is partition-independent are bitwise deterministic
+/// at every thread count.
+pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(total: usize, min_per: usize, f: F) {
+    if total == 0 {
+        return;
+    }
+    let parts = total.div_ceil(min_per.max(1)).min(threads()).max(1);
+    if parts <= 1 {
+        f(0, total);
+        return;
+    }
+    pool().run(parts, |j| {
+        let start = j * total / parts;
+        let end = (j + 1) * total / parts;
+        if start < end {
+            f(start, end);
+        }
+    });
+}
+
+/// Deterministic parallel sum of `value(i)` for `i ∈ [0, n)`:
+/// fixed chunks of [`REDUCE_CHUNK`] elements, each summed serially in
+/// f64, partials combined pairwise. The tree shape depends only on `n`
+/// — bitwise identical at every thread count, and equal to a plain
+/// serial f64 sum whenever `n ≤ REDUCE_CHUNK`.
+pub fn deterministic_sum<F: Fn(usize) -> f64 + Sync>(n: usize, value: F) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let chunks = n.div_ceil(REDUCE_CHUNK);
+    if chunks == 1 {
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += value(i);
+        }
+        return acc;
+    }
+    // Partials live on the stack for every realistic n (the largest
+    // paper layer has 28 869 rows → 8 chunks); huge inputs spill.
+    let mut stack = [0.0f64; 64];
+    let mut heap = Vec::new();
+    let partials: &mut [f64] = if chunks <= stack.len() {
+        &mut stack[..chunks]
+    } else {
+        heap.resize(chunks, 0.0);
+        &mut heap[..]
+    };
+    {
+        let slots = DisjointSlice::new(partials);
+        let value = &value;
+        parallel_ranges(chunks, 1, move |c0, c1| {
+            // SAFETY: parallel_ranges hands out disjoint chunk ranges.
+            let out = unsafe { slots.range_mut(c0, c1) };
+            for (slot, c) in out.iter_mut().zip(c0..c1) {
+                let start = c * REDUCE_CHUNK;
+                let end = ((c + 1) * REDUCE_CHUNK).min(n);
+                let mut acc = 0.0;
+                for i in start..end {
+                    acc += value(i);
+                }
+                *slot = acc;
+            }
+        });
+    }
+    pairwise_sum(partials)
+}
+
+/// Pairwise (tree) combination; the shape depends only on the length.
+fn pairwise_sum(xs: &[f64]) -> f64 {
+    match xs.len() {
+        0 => 0.0,
+        1 => xs[0],
+        n => {
+            let mid = n / 2;
+            pairwise_sum(&xs[..mid]) + pairwise_sum(&xs[mid..])
+        }
+    }
+}
+
+/// Shared handle over a mutable slice for writers that own disjoint
+/// ranges — the sharding pattern of every parallel kernel. The borrow
+/// of the underlying slice lives as long as the handle, so the usual
+/// aliasing guarantees hold *between* concurrent `range_mut` calls
+/// only if their ranges do not overlap (the caller's obligation).
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is only through `range_mut`, whose contract requires
+// disjoint ranges across concurrent users; T crosses threads by &mut.
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> DisjointSlice<'a, T> {
+        DisjointSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    /// Mutable subslice `[start, end)` of the underlying slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must request non-overlapping ranges.
+    #[allow(clippy::mut_from_ref)] // the whole point: disjoint &mut views
+    pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [T] {
+        assert!(start <= end && end <= self.len, "disjoint range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+/// Serializes tests that assert on the process-wide thread count (the
+/// kernels themselves are thread-count invariant, so everything else
+/// can race freely) and restores the ambient count on drop — so a
+/// `POWERSGD_THREADS=4` CI run keeps the rest of the suite at 4
+/// threads after a sweep finishes.
+#[cfg(test)]
+pub(crate) struct TestGuard {
+    _lock: std::sync::MutexGuard<'static, ()>,
+    ambient: usize,
+}
+
+#[cfg(test)]
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        set_threads(self.ambient);
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_guard() -> TestGuard {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    TestGuard { _lock: lock, ambient: threads() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_resolves_and_clamps() {
+        let _g = test_guard();
+        assert!(threads() >= 1);
+        set_threads(0);
+        assert_eq!(threads(), 1);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+    }
+
+    #[test]
+    fn run_covers_every_chunk_exactly_once() {
+        let _g = test_guard();
+        set_threads(4);
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        pool().run(23, |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_ranges_partition_is_disjoint_and_complete() {
+        let _g = test_guard();
+        set_threads(8);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_ranges(1000, 16, |s, e| {
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // min_per keeps small totals inline: one covering range.
+        let mut calls = Vec::new();
+        {
+            let calls = Mutex::new(&mut calls);
+            parallel_ranges(10, 100, |s, e| calls.lock().unwrap().push((s, e)));
+        }
+        assert_eq!(calls, vec![(0, 10)]);
+    }
+
+    #[test]
+    fn deterministic_sum_matches_serial_below_one_chunk() {
+        let _g = test_guard();
+        set_threads(4);
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37 + 11) as f64).sin()).collect();
+        let serial: f64 = xs.iter().sum();
+        let got = deterministic_sum(xs.len(), |i| xs[i]);
+        assert_eq!(got.to_bits(), serial.to_bits());
+    }
+
+    #[test]
+    fn deterministic_sum_is_thread_count_invariant() {
+        let _g = test_guard();
+        let n = 3 * REDUCE_CHUNK + 17;
+        let xs: Vec<f64> = (0..n).map(|i| ((i * 13 + 7) as f64).cos()).collect();
+        set_threads(1);
+        let want = deterministic_sum(n, |i| xs[i]);
+        for t in [2usize, 4, 8] {
+            set_threads(t);
+            let got = deterministic_sum(n, |i| xs[i]);
+            assert_eq!(got.to_bits(), want.to_bits(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn disjoint_slice_writes_land() {
+        let mut data = vec![0u32; 100];
+        let s = DisjointSlice::new(&mut data);
+        unsafe { s.range_mut(0, 50) }.fill(1);
+        unsafe { s.range_mut(50, 100) }.fill(2);
+        drop(s);
+        assert!(data[..50].iter().all(|&v| v == 1));
+        assert!(data[50..].iter().all(|&v| v == 2));
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let _g = test_guard();
+        set_threads(4);
+        let r = std::panic::catch_unwind(|| {
+            pool().run(8, |c| {
+                assert!(c != 7, "boom");
+            });
+        });
+        assert!(r.is_err(), "panic in a chunk must propagate");
+        // The pool keeps working after a task panicked.
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool().run(8, |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

@@ -11,10 +11,56 @@
 //! - `matmul_tn` accumulates into an r×m transposed scratch so the inner
 //!   loop is a contiguous axpy, then transposes back once.
 //!
+//! All three `_into` kernels run on the kernel pool
+//! ([`crate::runtime::pool`], DESIGN.md §11) when `--threads` /
+//! `POWERSGD_THREADS` asks for more than one thread:
+//!
+//! - `matmul_into` / `matmul_nt_into` shard over **output rows**; every
+//!   output element keeps the serial kernel's exact operation order, so
+//!   results are bitwise identical at every thread count.
+//! - `matmul_tn_into` shards over the **m dimension** of its r×m
+//!   accumulator: each task owns a column band of the accumulator and
+//!   streams all rows of A through it in the serial order, so every
+//!   accumulator element again sums in the serial order.
+//!
+//! The per-call transpose/accumulator scratch (`bt`/`qt`/the tn band)
+//! lives in per-thread buffers that grow once and are reused by every
+//! later call on that thread — the steady-state step allocates nothing
+//! here (`tests/integration_kernels.rs` pins both properties).
+//!
 //! Perf history in EXPERIMENTS.md §Perf (multi-accumulator + layout
 //! change ≈ 2–3× over the naive blocked loop).
 
 use super::Tensor;
+use crate::runtime::pool::{parallel_ranges, DisjointSlice};
+use std::cell::RefCell;
+
+/// Minimum per-range elements touched before a kernel fans out; tiny
+/// layers stay on the calling thread (the partition never changes
+/// results, only who computes them).
+const MIN_PAR_ELEMS: usize = 16 * 1024;
+
+thread_local! {
+    /// Per-thread kernel scratch (`bt`/`qt` transposes, the tn
+    /// accumulator band): grows to the step maximum once, then every
+    /// later call on this thread reuses it — the zero-alloc steady
+    /// state. Worker threads of the kernel pool persist for the
+    /// process lifetime, so their buffers amortize the same way.
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Borrow this thread's kernel scratch at `len` elements (contents are
+/// stale; callers overwrite). Never nested — each kernel either uses
+/// the scratch on the calling thread *or* inside its chunk tasks.
+fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
 
 /// Contiguous dot product with 8 independent accumulators (ILP + SIMD).
 #[inline]
@@ -52,7 +98,9 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
-/// out[n×r] = A[n×m] · B[m×r]; `out` is overwritten.
+/// out[n×r] = A[n×m] · B[m×r]; `out` is overwritten. Sharded over
+/// output rows on the kernel pool — bitwise identical to the serial
+/// kernel at every thread count.
 pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let (n, m) = (a.rows(), a.cols());
     let (mb, r) = (b.rows(), b.cols());
@@ -61,19 +109,27 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let ad = a.data();
     let bd = b.data();
     // Transpose skinny B once: column c becomes a contiguous row.
-    let mut bt = vec![0.0f32; m * r];
-    for k in 0..m {
-        for c in 0..r {
-            bt[c * m + k] = bd[k * r + c];
+    with_scratch(m * r, |bt| {
+        for k in 0..m {
+            for c in 0..r {
+                bt[c * m + k] = bd[k * r + c];
+            }
         }
-    }
-    let od = out.data_mut();
-    for i in 0..n {
-        let arow = &ad[i * m..(i + 1) * m];
-        for c in 0..r {
-            od[i * r + c] = dot8(arow, &bt[c * m..(c + 1) * m]);
-        }
-    }
+        let bt: &[f32] = bt;
+        let od = DisjointSlice::new(out.data_mut());
+        let min_rows = (MIN_PAR_ELEMS / m.max(1)).max(1);
+        parallel_ranges(n, min_rows, move |i0, i1| {
+            // SAFETY: row bands are disjoint across tasks.
+            let band = unsafe { od.range_mut(i0 * r, i1 * r) };
+            for i in i0..i1 {
+                let arow = &ad[i * m..(i + 1) * m];
+                let orow = &mut band[(i - i0) * r..(i - i0 + 1) * r];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o = dot8(arow, &bt[c * m..(c + 1) * m]);
+                }
+            }
+        });
+    });
 }
 // NOTE (perf pass, EXPERIMENTS.md §Perf): a fused two-column dot with
 // 4-wide accumulators was tried and REVERTED — it broke 8-lane (AVX2)
@@ -83,7 +139,12 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
 ///
 /// This is the second GEMM of the PowerSGD step (`Q = Mᵀ·P̂`). We stream
 /// rows of A once and accumulate into an r×m transposed scratch so every
-/// inner loop is a contiguous axpy over the A row.
+/// inner loop is a contiguous axpy over the A row. Parallelism shards
+/// the **m dimension** of the accumulator: each task owns a column band
+/// `[j0, j1)`, streams all n rows through its band in row order, and
+/// transposes its band into `out` — every accumulator element keeps the
+/// serial summation order, so results are bitwise identical at every
+/// thread count.
 pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
     let (n, m) = (a.rows(), a.cols());
     let (np, r) = (p.rows(), p.cols());
@@ -91,23 +152,30 @@ pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
     assert_eq!(out.shape(), &[m, r], "matmul_tn output shape");
     let ad = a.data();
     let pd = p.data();
-    let mut scratch = vec![0.0f32; r * m];
-    for i in 0..n {
-        let arow = &ad[i * m..(i + 1) * m];
-        let prow = &pd[i * r..(i + 1) * r];
-        for c in 0..r {
-            let s = prow[c];
-            if s != 0.0 {
-                axpy_slice(&mut scratch[c * m..(c + 1) * m], s, arow);
+    let od = DisjointSlice::new(out.data_mut());
+    let min_cols = (MIN_PAR_ELEMS / n.max(1)).max(1);
+    parallel_ranges(m, min_cols, move |j0, j1| {
+        let width = j1 - j0;
+        with_scratch(r * width, |scratch| {
+            scratch.fill(0.0);
+            for i in 0..n {
+                let arow = &ad[i * m + j0..i * m + j1];
+                let prow = &pd[i * r..(i + 1) * r];
+                for (c, &s) in prow.iter().enumerate() {
+                    if s != 0.0 {
+                        axpy_slice(&mut scratch[c * width..(c + 1) * width], s, arow);
+                    }
+                }
             }
-        }
-    }
-    let od = out.data_mut();
-    for j in 0..m {
-        for c in 0..r {
-            od[j * r + c] = scratch[c * m + j];
-        }
-    }
+            // SAFETY: column bands are disjoint across tasks.
+            let band = unsafe { od.range_mut(j0 * r, j1 * r) };
+            for j in 0..width {
+                for c in 0..r {
+                    band[j * r + c] = scratch[c * width + j];
+                }
+            }
+        });
+    });
 }
 
 /// out[n×m] = P[n×r] · Qᵀ where Q is m×r — the PowerSGD *reconstruction*
@@ -115,7 +183,8 @@ pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
 /// `matmul` path would pay its per-output-dot overhead on n·m outputs;
 /// here we instead transpose Q once and emit each output row as r
 /// contiguous scaled-accumulate passes (perf pass: 4.4 ms → 1.0 ms per
-/// 512×4608 layer, see EXPERIMENTS.md §Perf).
+/// 512×4608 layer, see EXPERIMENTS.md §Perf). Sharded over output rows
+/// like `matmul_into` — bitwise identical at every thread count.
 pub fn matmul_nt_into(p: &Tensor, q: &Tensor, out: &mut Tensor) {
     let (n, r) = (p.rows(), p.cols());
     let (m, rq) = (q.rows(), q.cols());
@@ -124,25 +193,32 @@ pub fn matmul_nt_into(p: &Tensor, q: &Tensor, out: &mut Tensor) {
     let pd = p.data();
     let qd = q.data();
     // Qᵀ: column c contiguous.
-    let mut qt = vec![0.0f32; r * m];
-    for j in 0..m {
-        for c in 0..r {
-            qt[c * m + j] = qd[j * r + c];
+    with_scratch(r * m, |qt| {
+        for j in 0..m {
+            for c in 0..r {
+                qt[c * m + j] = qd[j * r + c];
+            }
         }
-    }
-    let od = out.data_mut();
-    for i in 0..n {
-        let orow = &mut od[i * m..(i + 1) * m];
-        // first term overwrites, the rest accumulate
-        let s0 = pd[i * r];
-        let q0 = &qt[..m];
-        for (o, &v) in orow.iter_mut().zip(q0.iter()) {
-            *o = s0 * v;
-        }
-        for c in 1..r {
-            axpy_slice(orow, pd[i * r + c], &qt[c * m..(c + 1) * m]);
-        }
-    }
+        let qt: &[f32] = qt;
+        let od = DisjointSlice::new(out.data_mut());
+        let min_rows = (MIN_PAR_ELEMS / m.max(1)).max(1);
+        parallel_ranges(n, min_rows, move |i0, i1| {
+            // SAFETY: row bands are disjoint across tasks.
+            let band = unsafe { od.range_mut(i0 * m, i1 * m) };
+            for i in i0..i1 {
+                let orow = &mut band[(i - i0) * m..(i - i0 + 1) * m];
+                // first term overwrites, the rest accumulate
+                let s0 = pd[i * r];
+                let q0 = &qt[..m];
+                for (o, &v) in orow.iter_mut().zip(q0.iter()) {
+                    *o = s0 * v;
+                }
+                for c in 1..r {
+                    axpy_slice(orow, pd[i * r + c], &qt[c * m..(c + 1) * m]);
+                }
+            }
+        });
+    });
 }
 
 /// Allocating wrapper for [`matmul_nt_into`].
@@ -162,6 +238,7 @@ pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::pool::{set_threads, test_guard};
     use crate::util::Rng;
 
     fn naive(a: &Tensor, b: &Tensor) -> Tensor {
@@ -240,6 +317,41 @@ mod tests {
             eye.set(i, i, 1.0);
         }
         assert!(matmul(&a, &eye).allclose(&a, 1e-6, 1e-6));
+    }
+
+    /// The determinism invariant at unit scale: every GEMM kernel is
+    /// bitwise identical to its serial (1-thread) run at 2/4/8 threads.
+    /// The full property suite over the paper's layer shapes lives in
+    /// `tests/integration_kernels.rs`.
+    #[test]
+    fn parallel_kernels_bitwise_match_serial() {
+        let _g = test_guard();
+        let mut rng = Rng::new(15);
+        for &(n, m, r) in &[(1, 1, 1), (257, 129, 2), (640, 384, 4)] {
+            let a = random(&[n, m], &mut rng);
+            let b = random(&[m, r], &mut rng);
+            let p = random(&[n, r], &mut rng);
+            let q = random(&[m, r], &mut rng);
+            set_threads(1);
+            let mut ab = Tensor::zeros(&[n, r]);
+            matmul_into(&a, &b, &mut ab);
+            let mut atp = Tensor::zeros(&[m, r]);
+            matmul_tn_into(&a, &p, &mut atp);
+            let mut pqt = Tensor::zeros(&[n, m]);
+            matmul_nt_into(&p, &q, &mut pqt);
+            for t in [2usize, 4, 8] {
+                set_threads(t);
+                let mut got = Tensor::zeros(&[n, r]);
+                matmul_into(&a, &b, &mut got);
+                assert_eq!(got.data(), ab.data(), "matmul n={n} m={m} r={r} t={t}");
+                let mut got = Tensor::zeros(&[m, r]);
+                matmul_tn_into(&a, &p, &mut got);
+                assert_eq!(got.data(), atp.data(), "matmul_tn n={n} m={m} r={r} t={t}");
+                let mut got = Tensor::zeros(&[n, m]);
+                matmul_nt_into(&p, &q, &mut got);
+                assert_eq!(got.data(), pqt.data(), "matmul_nt n={n} m={m} r={r} t={t}");
+            }
+        }
     }
 
     #[test]

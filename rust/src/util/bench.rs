@@ -140,6 +140,11 @@ pub struct BenchJson {
     bench: String,
     engine: String,
     transport: String,
+    /// Ambient kernel-pool thread count
+    /// ([`crate::runtime::pool::threads`]) at construction; sweeps that
+    /// vary the count per case additionally tag each record with a
+    /// `threads` metric ([`BenchJson::record_runner_tagged`]).
+    threads: usize,
     records: Vec<(String, Vec<(String, f64)>)>,
 }
 
@@ -149,6 +154,7 @@ impl BenchJson {
             bench: bench.to_string(),
             engine: "lockstep".into(),
             transport: "inproc".into(),
+            threads: crate::runtime::pool::threads(),
             records: Vec::new(),
         }
     }
@@ -158,6 +164,12 @@ impl BenchJson {
     pub fn set_context(&mut self, engine: &str, transport: &str) {
         self.engine = engine.to_string();
         self.transport = transport.to_string();
+    }
+
+    /// Override the document-level kernel thread count (benches that
+    /// sweep thread counts record per-row `threads` metrics instead).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
     }
 
     /// Append one record of named metrics.
@@ -178,11 +190,22 @@ impl BenchJson {
 
     /// Append every result of a runner as mean/p50/p95 records.
     pub fn record_runner(&mut self, runner: &BenchRunner) {
+        self.record_runner_tagged(runner, &[]);
+    }
+
+    /// Like [`BenchJson::record_runner`], with extra metrics appended
+    /// to every record — how thread-count sweeps tag their per-count
+    /// rows (`("threads", t)`).
+    pub fn record_runner_tagged(&mut self, runner: &BenchRunner, extra: &[(&str, f64)]) {
         for (name, s) in runner.results() {
-            self.record(
-                name,
-                &[("mean_ms", s.mean), ("p50_ms", s.p50), ("p95_ms", s.p95), ("n", s.n as f64)],
-            );
+            let mut metrics: Vec<(String, f64)> = vec![
+                ("mean_ms".into(), s.mean),
+                ("p50_ms".into(), s.p50),
+                ("p95_ms".into(), s.p95),
+                ("n".into(), s.n as f64),
+            ];
+            metrics.extend(extra.iter().map(|(k, v)| (k.to_string(), *v)));
+            self.records.push((name.clone(), metrics));
         }
     }
 
@@ -192,6 +215,7 @@ impl BenchJson {
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
         out.push_str(&format!("  \"engine\": \"{}\",\n", json_escape(&self.engine)));
         out.push_str(&format!("  \"transport\": \"{}\",\n", json_escape(&self.transport)));
+        out.push_str(&format!("  \"threads\": {},\n", self.threads));
         out.push_str(&format!("  \"quick\": {},\n", quick_mode()));
         out.push_str("  \"records\": [\n");
         for (i, (name, metrics)) in self.records.iter().enumerate() {
@@ -273,6 +297,9 @@ mod tests {
         // Context defaults: comparable across engine/transport runs.
         assert!(doc.contains("\"engine\": \"lockstep\""));
         assert!(doc.contains("\"transport\": \"inproc\""));
+        // Kernel thread count always lands in the document (ambient
+        // value; don't pin it — CI runs the suite at several counts).
+        assert!(doc.contains("\"threads\": "));
         assert!(doc.contains("\"case \\\"a\\\"\", \"mean_ms\": 1.5, \"n\": 3"));
         assert!(doc.contains("\"case_b\", \"mean_ms\": null"));
         // Balanced braces/brackets — a cheap structural validity check.
@@ -310,6 +337,30 @@ mod tests {
         assert!(doc.contains("\"transport\": \"tcp\""));
         assert!(doc.contains("\"wire_bytes\": 1536"));
         assert!(doc.contains("\"logical_bytes\": 1024"));
+    }
+
+    #[test]
+    fn tagged_runner_records_carry_extra_metrics() {
+        let mut r = BenchRunner {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: Duration::from_millis(0),
+            results: Vec::new(),
+        };
+        r.bench("case", || {
+            black_box(1 + 1);
+        });
+        let mut j = BenchJson::new("tagged");
+        j.set_threads(4);
+        j.record_runner_tagged(&r, &[("threads", 4.0)]);
+        let doc = j.to_json();
+        assert!(doc.contains("\"threads\": 4,"), "document-level threads:\n{doc}");
+        // The per-record tag lands at the end of the record line — this
+        // is what the kernel_hotpath sweep relies on to distinguish
+        // thread counts, so pin it independently of the header.
+        assert!(doc.contains(", \"threads\": 4}"), "record-level threads tag:\n{doc}");
+        assert!(doc.contains("\"mean_ms\":"), "{doc}");
     }
 
     #[test]

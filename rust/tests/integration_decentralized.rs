@@ -209,8 +209,39 @@ fn scratch_arena_stops_allocating_after_first_step() {
     assert_eq!(Compressor::scratch_allocations(&dec), Some(after_first));
     let opt = EfSgd::new(Box::new(dec), LrSchedule::constant(0.1), 0.0);
     assert_eq!(DistOptimizer::scratch_allocations(&opt), Some(after_first));
+    // The centralized PowerSGD oracle is arena-backed too now (its own
+    // zero-alloc counter test lives in tests/integration_kernels.rs);
+    // before the first step its arena is empty.
     let centralized = EfSgd::new(Box::new(PowerSgd::new(2, 1)), LrSchedule::constant(0.1), 0.0);
-    assert_eq!(DistOptimizer::scratch_allocations(&centralized), None);
+    assert_eq!(DistOptimizer::scratch_allocations(&centralized), Some(0));
+}
+
+#[test]
+fn per_worker_equivalence_holds_with_multithreaded_kernels() {
+    // Engine-equivalence with the kernel pool fanned out: the
+    // decentralized path must stay bitwise-identical to the oracle when
+    // every worker thread dispatches its GEMMs/Gram–Schmidt onto 4
+    // kernel threads (W workers × T kernel threads composition). The
+    // thread count is process-global, but kernels are bitwise
+    // thread-count invariant, so this cannot perturb the other tests in
+    // this binary (only their wall-clock); restore the ambient count so
+    // a POWERSGD_THREADS=4 CI pass keeps the rest of the suite fanned
+    // out.
+    let ambient = powersgd::runtime::pool::threads();
+    powersgd::runtime::pool::set_threads(4);
+    for (name, oracle) in [
+        ("powersgd", Box::new(PowerSgd::new(2, 19)) as Box<dyn Compressor>),
+        ("unbiased-rank", Box::new(UnbiasedRank::new(2, 19))),
+    ] {
+        check_equivalence(
+            decentralized_by_name(name, 2, 19).unwrap(),
+            oracle,
+            4,
+            3,
+            1100,
+        );
+    }
+    powersgd::runtime::pool::set_threads(ambient);
 }
 
 #[test]

@@ -1,0 +1,243 @@
+//! Integration: the kernel execution layer (DESIGN.md §11).
+//!
+//! Property suite pinning the pool's hard invariant: every parallel
+//! kernel — the three GEMMs and Gram–Schmidt — is **bitwise identical**
+//! to its serial (1-thread) run at threads ∈ {1, 2, 4, 8}, across the
+//! paper's layer shapes and the degenerate edges (n=1, m=1, r=1,
+//! rank-deficient Gram–Schmidt columns, zero matrices). On top of the
+//! per-kernel properties, a full rank-2 PowerSGD
+//! `compress_aggregate` step (warm start included) must produce
+//! identical bits at every thread count — the acceptance invariant that
+//! makes `--threads` a pure wall-clock knob.
+//!
+//! Plus the zero-alloc steady state of the centralized oracle: after
+//! step 1 of a shape-stable workload, `PowerSgd`'s factor arena must
+//! stop allocating (the per-worker `ScratchArena` counterpart lives in
+//! `tests/integration_decentralized.rs`).
+//!
+//! The thread count is process-global, so tests that flip it serialize
+//! on a local lock. (The kernels themselves are thread-count invariant
+//! — that is the property under test — so a racing reader could never
+//! observe different *bits*, only different wall-clock.)
+
+use powersgd::collectives::CommLog;
+use powersgd::compress::{Compressor, PowerSgd};
+use powersgd::linalg::{gram_schmidt_in_place, orthonormal_error};
+use powersgd::runtime::pool::{set_threads, threads, REDUCE_CHUNK};
+use powersgd::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
+use powersgd::util::Rng;
+use std::sync::{Mutex, MutexGuard};
+
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes the thread-sweeping tests and remembers the ambient
+/// thread count so teardown restores it — hardcoding 1 would silently
+/// downgrade the rest of the binary during the CI `POWERSGD_THREADS=4`
+/// pass.
+struct ThreadSweep {
+    _guard: MutexGuard<'static, ()>,
+    ambient: usize,
+}
+
+impl Drop for ThreadSweep {
+    fn drop(&mut self) {
+        set_threads(self.ambient);
+    }
+}
+
+fn lock() -> ThreadSweep {
+    let guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    ThreadSweep { _guard: guard, ambient: threads() }
+}
+
+const SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// The paper's dominant layer shapes plus degenerate edges.
+const GEMM_SHAPES: [(usize, usize); 7] =
+    [(512, 4608), (2600, 650), (128, 1152), (1, 1), (1, 7), (7, 1), (40, 300)];
+
+#[test]
+fn gemms_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    let mut rng = Rng::new(301);
+    for &(n, m) in &GEMM_SHAPES {
+        // Full rank sweep on the small shapes; the two big paper layers
+        // only need the rank extremes (debug-mode CI time).
+        let ranks: &[usize] = if n * m > 500_000 { &[1, 4] } else { &[1, 2, 4, 8] };
+        for &r in ranks {
+            let a = rand_tensor(&[n, m], &mut rng);
+            let b = rand_tensor(&[m, r], &mut rng);
+            let p = rand_tensor(&[n, r], &mut rng);
+            let q = rand_tensor(&[m, r], &mut rng);
+
+            set_threads(1);
+            let mut ab = Tensor::zeros(&[n, r]);
+            matmul_into(&a, &b, &mut ab);
+            let mut atp = Tensor::zeros(&[m, r]);
+            matmul_tn_into(&a, &p, &mut atp);
+            let mut pqt = Tensor::zeros(&[n, m]);
+            matmul_nt_into(&p, &q, &mut pqt);
+
+            for &t in &SWEEP[1..] {
+                set_threads(t);
+                let mut got = Tensor::zeros(&[n, r]);
+                matmul_into(&a, &b, &mut got);
+                assert_eq!(got.data(), ab.data(), "matmul n={n} m={m} r={r} t={t}");
+                let mut got = Tensor::zeros(&[m, r]);
+                matmul_tn_into(&a, &p, &mut got);
+                assert_eq!(got.data(), atp.data(), "matmul_tn n={n} m={m} r={r} t={t}");
+                let mut got = Tensor::zeros(&[n, m]);
+                matmul_nt_into(&p, &q, &mut got);
+                assert_eq!(got.data(), pqt.data(), "matmul_nt n={n} m={m} r={r} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_schmidt_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    let mut rng = Rng::new(302);
+    // Includes n spanning the REDUCE_CHUNK boundary (the fixed-chunk
+    // pairwise reduction must not care) and the paper's largest GS
+    // input (the 28869-row LSTM embedding factor).
+    let shapes: [(usize, usize); 8] = [
+        (1, 1),
+        (4, 1),
+        (513, 8),
+        (REDUCE_CHUNK, 2),
+        (REDUCE_CHUNK + 1, 3),
+        (2600, 4),
+        (8192, 4),
+        (28869, 2),
+    ];
+    for &(n, r) in &shapes {
+        let p0 = rand_tensor(&[n, r], &mut rng);
+        set_threads(1);
+        let mut want = p0.clone();
+        gram_schmidt_in_place(&mut want);
+        for &t in &SWEEP[1..] {
+            set_threads(t);
+            let mut got = p0.clone();
+            gram_schmidt_in_place(&mut got);
+            assert_eq!(got.data(), want.data(), "gram_schmidt n={n} r={r} t={t}");
+        }
+        // And it still does its job at the highest thread count.
+        set_threads(8);
+        let mut p = p0.clone();
+        gram_schmidt_in_place(&mut p);
+        assert!(orthonormal_error(&p) < 1e-3, "n={n} r={r}");
+    }
+}
+
+#[test]
+fn rank_deficient_gram_schmidt_is_deterministic_and_stays_zero() {
+    let _g = lock();
+    // Duplicate columns across a reduction-chunk boundary: the
+    // dependent column must collapse to exact zeros (not an arbitrary
+    // unit direction) at every thread count, with identical bits.
+    let n = REDUCE_CHUNK + 37;
+    let mut rng = Rng::new(303);
+    let mut p0 = Tensor::zeros(&[n, 3]);
+    rng.fill_normal(p0.data_mut(), 1.0);
+    for i in 0..n {
+        let v = p0.at(i, 0);
+        p0.set(i, 2, v); // column 2 duplicates column 0
+    }
+    set_threads(1);
+    let mut want = p0.clone();
+    gram_schmidt_in_place(&mut want);
+    let dep_norm: f64 = (0..n).map(|i| (want.at(i, 2) as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(dep_norm < 0.1, "dependent column must stay small: {dep_norm}");
+    for &t in &SWEEP[1..] {
+        set_threads(t);
+        let mut got = p0.clone();
+        gram_schmidt_in_place(&mut got);
+        assert_eq!(got.data(), want.data(), "rank-deficient GS t={t}");
+    }
+    // Zero matrix edge: finite and zero everywhere, at every count.
+    for &t in &SWEEP {
+        set_threads(t);
+        let mut z = Tensor::zeros(&[REDUCE_CHUNK + 5, 2]);
+        gram_schmidt_in_place(&mut z);
+        assert!(z.data().iter().all(|v| *v == 0.0), "zero matrix t={t}");
+    }
+}
+
+/// The acceptance invariant: a full warm-started rank-2 PowerSGD
+/// compress step (GEMM sweeps, all-reduces, Gram–Schmidt,
+/// reconstruction) produces bitwise-identical aggregates at
+/// threads ∈ {1, 2, 4, 8}, across multiple steps so the warm-start `Q`
+/// state is covered too. One matrix is taller than REDUCE_CHUNK so the
+/// chunked Gram–Schmidt reductions are genuinely multi-chunk.
+#[test]
+fn powersgd_full_step_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    let shapes: [&[usize]; 4] = [&[4500, 64], &[12, 8], &[5], &[64, 80]];
+    let steps = 3;
+    let workers = 2;
+    let updates_for = |step: usize| -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(900 + step as u64);
+        (0..workers)
+            .map(|_| shapes.iter().map(|s| rand_tensor(s, &mut rng)).collect())
+            .collect()
+    };
+
+    set_threads(1);
+    let mut reference = PowerSgd::new(2, 17);
+    let mut want: Vec<Vec<Tensor>> = Vec::new();
+    for step in 0..steps {
+        let mut log = CommLog::default();
+        want.push(reference.compress_aggregate(&updates_for(step), &mut log).mean);
+    }
+
+    for &t in &SWEEP[1..] {
+        set_threads(t);
+        let mut comp = PowerSgd::new(2, 17);
+        for step in 0..steps {
+            let mut log = CommLog::default();
+            let got = comp.compress_aggregate(&updates_for(step), &mut log);
+            for (p, (a, b)) in got.mean.iter().zip(want[step].iter()).enumerate() {
+                assert_eq!(a.shape(), b.shape(), "step {step} mean[{p}] shape t={t}");
+                assert_eq!(a.data(), b.data(), "step {step} mean[{p}] bits t={t}");
+            }
+        }
+    }
+}
+
+/// Zero-alloc steady state of the *centralized* oracle: the factor
+/// arena claims every buffer on step 1 of a shape-stable workload and
+/// never allocates again (the satellite to the per-worker ScratchArena
+/// counter test).
+#[test]
+fn centralized_powersgd_arena_stops_allocating_after_first_step() {
+    let shapes: [&[usize]; 4] = [&[12, 8], &[5], &[6, 10], &[3]];
+    let updates_for = |seed: u64| -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..4).map(|_| shapes.iter().map(|s| rand_tensor(s, &mut rng)).collect()).collect()
+    };
+    let mut comp = PowerSgd::new(2, 31);
+    assert_eq!(
+        Compressor::scratch_allocations(&comp),
+        Some(0),
+        "fresh oracle has an empty arena"
+    );
+    let mut log = CommLog::default();
+    comp.compress_aggregate(&updates_for(1000), &mut log);
+    let after_first = Compressor::scratch_allocations(&comp).expect("arena-backed oracle");
+    assert!(after_first > 0, "step 1 must claim the factor buffers");
+    for step in 0..5u64 {
+        comp.compress_aggregate(&updates_for(1001 + step), &mut log);
+        assert_eq!(
+            Compressor::scratch_allocations(&comp),
+            Some(after_first),
+            "step {step} allocated new factor tensors"
+        );
+    }
+}

@@ -86,6 +86,62 @@ fn multiprocess_powersgd_launch_is_bitwise_identical_at_w2_and_w4() {
     }
 }
 
+/// Multi-threaded-kernels variant: the same multi-process launch with
+/// the kernel pool fanned out to 4 threads in the coordinator *and*
+/// every worker process (`--threads` is forwarded; W worker processes
+/// × 4 kernel threads each). Kernels are bitwise identical at every
+/// thread count, so the launch's built-in oracle verification must
+/// still pass — transport-level bitwise equivalence is preserved.
+#[test]
+fn multiprocess_launch_with_kernel_threads_is_bitwise_identical() {
+    let exe = env!("CARGO_BIN_EXE_powersgd");
+    let output = std::process::Command::new(exe)
+        .args([
+            "launch",
+            "--workers",
+            "2",
+            "--transport",
+            "tcp",
+            "--compressor",
+            "powersgd",
+            "--rank",
+            "2",
+            "--steps",
+            "3",
+            "--seed",
+            "7",
+            "--threads",
+            "4",
+        ])
+        .output()
+        .expect("spawning powersgd launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "launch --threads 4 failed ({}):\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stdout.contains("bitwise-identical to the lockstep oracle"),
+        "launch --threads 4: missing verification line in:\n{stdout}"
+    );
+}
+
+/// In-process socket-ring variant of the same composition: worker
+/// threads over real localhost sockets, each dispatching kernels onto
+/// the shared 4-thread pool; `coordinate` still verifies every worker
+/// bitwise against the oracle.
+#[test]
+fn socket_ring_equivalence_with_kernel_threads() {
+    let ambient = powersgd::runtime::pool::threads();
+    powersgd::runtime::pool::set_threads(4);
+    let cfg = HarnessConfig { seed: 29, steps: 3, ..HarnessConfig::default() };
+    let outcome = run_socket_ring(2, &cfg);
+    assert!(outcome.reports.iter().all(|r| r.bitwise), "non-bitwise report at 4 kernel threads");
+    powersgd::runtime::pool::set_threads(ambient);
+}
+
 /// The same equivalence for every scheme with a per-worker
 /// implementation, over real sockets (threads in this process so the
 /// sweep stays fast), at W ∈ {2, 4}. `coordinate` bails unless every
