@@ -1,17 +1,29 @@
-//! Quickstart: train a small classifier on 2 simulated workers with
-//! rank-2 PowerSGD and compare the bytes on the wire against plain SGD.
+//! Quickstart: a narrated walkthrough of the three ways to drive this
+//! reproduction, smallest first. Linked from `powersgd --help`.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! For the *multi-process* quickstart — W real OS processes over a
-//! localhost TCP ring, verified bitwise against the in-process oracle
-//! (DESIGN.md §10) — no artifacts are needed:
+//! Part 1 needs nothing but the crate: it runs a miniature
+//! `scheme-compare` experiment scenario on the calibrated simulator and
+//! prints the paper-style table (the full version is
+//! `powersgd experiment --suite scheme-compare`, which also writes
+//! `EXPERIMENTS_scheme-compare.json` and the deterministic `REPORT.md`).
+//!
+//! Part 2 runs a *real* threaded-engine round: per-worker compression
+//! over a metered in-process ring, measured wire bytes cross-checked
+//! against the analytic model and the final parameters verified bitwise
+//! against the centralized lockstep oracle — the in-process twin of
 //!
 //! ```text
 //! cargo run --release -- launch --workers 4 --transport tcp --compressor powersgd --rank 2
 //! ```
+//!
+//! Part 3 trains a small classifier on 2 simulated workers with rank-2
+//! PowerSGD; it needs the AOT-compiled artifacts (`make artifacts`) and
+//! is skipped with a note when they are absent, so this example always
+//! runs to completion.
 //!
 //! Add `--threads N` (or set `POWERSGD_THREADS`) to any subcommand to
 //! fan the compression kernels (GEMMs + Gram–Schmidt) out over the
@@ -23,22 +35,78 @@ use anyhow::Result;
 use powersgd::compress::PowerSgd;
 use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
 use powersgd::data::Classification;
+use powersgd::experiments::{measured_wire_check, run_scenario, scenarios_for};
 use powersgd::optim::{EfSgd, LrSchedule};
 use powersgd::runtime::Runtime;
+use powersgd::util::Table;
 
 fn main() -> Result<()> {
-    // 1. Load the AOT-compiled model (lowered once by `make artifacts`;
-    //    no Python anywhere in this process).
-    let mut rt = Runtime::cpu("artifacts")?;
-    let train = rt.load("mlp_train")?;
-    let eval = rt.load("mlp_eval")?;
+    // ------------------------------------------------------------------
+    // Part 1 — a miniature scheme-compare scenario (pure simulator).
+    //
+    // The experiment registry names every scenario `powersgd experiment`
+    // can run; here we evaluate just its quick tier for ResNet18 and
+    // print the Table 4-style rows ourselves.
+    // ------------------------------------------------------------------
+    let mut table = Table::new(
+        "Miniature scheme-compare (ResNet18, 16 workers, NCCL)",
+        &["Scenario", "Msg bytes/step", "Data/epoch", "Time/batch", "Speedup vs 1x SGD"],
+    );
+    for spec in scenarios_for("scheme-compare", /*quick=*/ true) {
+        if spec.profile != "resnet18" {
+            continue;
+        }
+        let record = run_scenario(&spec)?;
+        let metric = |key: &str| {
+            record.metrics.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        table.row(&[
+            record.name.clone(),
+            format!("{}", metric("msg_bytes") as u64),
+            format!("{:.1} MiB", metric("data_epoch_mb")),
+            format!("{:.0} ms", metric("total_ms")),
+            format!("{:.1}x", metric("speedup_vs_single_sgd")),
+        ]);
+    }
+    table.print();
+    println!();
 
-    // 2. PowerSGD rank-2 compression inside error-feedback SGD
-    //    (Algorithms 1 + 2 of the paper).
+    // ------------------------------------------------------------------
+    // Part 2 — one real threaded-engine run with measured wire bytes.
+    // ------------------------------------------------------------------
+    let wire = measured_wire_check("powersgd", 2, /*workers=*/ 2, /*steps=*/ 2, /*seed=*/ 42)?;
+    for r in &wire.per_rank {
+        println!(
+            "rank {}: measured {} wire bytes == analytic {} (logical {}, bitwise vs oracle)",
+            r.rank, r.measured, r.analytic, r.logical
+        );
+    }
+    println!();
+
+    // ------------------------------------------------------------------
+    // Part 3 — train a small classifier end-to-end (needs artifacts).
+    // ------------------------------------------------------------------
+    let mut rt = match Runtime::cpu("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping the training walkthrough (no PJRT runtime: {e})");
+            println!("run `make artifacts` first to enable it");
+            return Ok(());
+        }
+    };
+    let (train, eval) = match (rt.load("mlp_train"), rt.load("mlp_eval")) {
+        (Ok(t), Ok(e)) => (t, e),
+        _ => {
+            println!("skipping the training walkthrough (mlp artifacts not found)");
+            println!("run `make artifacts` first to enable it");
+            return Ok(());
+        }
+    };
+
+    // PowerSGD rank-2 compression inside error-feedback SGD
+    // (Algorithms 1 + 2 of the paper), two simulated workers.
     let compressor = Box::new(PowerSgd::new(2, /*seed=*/ 1));
     let opt = Box::new(EfSgd::new(compressor, LrSchedule::constant(0.05), 0.9));
-
-    // 3. Two simulated workers, NCCL-like network model.
     let cfg = TrainerConfig {
         workers: 2,
         eval_every: 50,
@@ -56,7 +124,10 @@ fn main() -> Result<()> {
     println!("\n--- quickstart summary ---");
     println!("test accuracy:        {:.1}%", trainer.evaluate(&mut data)?);
     println!("gradient size:        {full} bytes/step");
-    println!("transmitted:          {sent} bytes/step ({:.0}x compression)", full as f64 / sent as f64);
+    println!(
+        "transmitted:          {sent} bytes/step ({:.0}x compression)",
+        full as f64 / sent as f64
+    );
     println!("loss (mean last 10):  {:.4}", trainer.metrics.mean_loss_last(10));
     Ok(())
 }

@@ -4,8 +4,8 @@
 //! one full step of rank-2 PowerSGD, including communication between 16
 //! workers, takes only 105 ms." We measure our native substrate on the
 //! same shapes: the *ordering and the gap* must reproduce (SVD ≫
-//! PowerSGD step). This bench is also the profiling entry point for the
-//! performance pass (EXPERIMENTS.md §Perf).
+//! PowerSGD step). This bench is also the profiling entry point for
+//! performance passes over the kernel hot path.
 //!
 //! Every kernel case now runs a **thread sweep** over the kernel pool
 //! (DESIGN.md §11): 1/2/4/8 threads in full mode, 1 vs 4 in

@@ -30,14 +30,37 @@
 //! calls the per-worker collective halves in
 //! [`crate::transport::ring`] directly from each worker thread, with
 //! identical chunk schedules and identical [`CommLog`] accounting.
+//!
+//! # Worked example
+//!
+//! Average three workers' buffers with a real chunked ring all-reduce
+//! and read the traffic off the log:
+//!
+//! ```
+//! use powersgd::collectives::{all_reduce_mean, CollKind, CommLog};
+//!
+//! let mut bufs = vec![vec![1.0f32, 3.0], vec![2.0, 4.0], vec![3.0, 5.0]];
+//! let mut log = CommLog::default();
+//! all_reduce_mean(&mut bufs, &mut log);
+//! // Every worker holds the identical mean afterwards.
+//! assert_eq!(bufs[0], vec![2.0, 4.0]);
+//! assert_eq!(bufs[1], bufs[0]);
+//! // The log records the *logical* per-worker message (the paper's
+//! // data-volume unit): one all-reduce of two f32s.
+//! assert_eq!(log.ops[0].kind, CollKind::AllReduce);
+//! assert_eq!(log.bytes_sent(), 2 * 4);
+//! ```
 
 use std::sync::Arc;
 
 /// What kind of collective an operation used.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollKind {
+    /// Ring all-reduce (linear compressors, uncompressed vectors).
     AllReduce,
+    /// Ring all-gather (sign/top-K/Atomo messages).
     AllGather,
+    /// Parameter-server style reduce + broadcast (priced, not executed).
     ReduceBroadcast,
 }
 
@@ -45,17 +68,21 @@ pub enum CollKind {
 /// size (the paper's "data sent per epoch" accounting unit).
 #[derive(Debug, Clone, Copy)]
 pub struct CollOp {
+    /// Which collective ran.
     pub kind: CollKind,
+    /// Per-worker message bytes (logical, not the ring expansion).
     pub bytes: u64,
 }
 
 /// Log of collective traffic for one step (or one epoch).
 #[derive(Debug, Clone, Default)]
 pub struct CommLog {
+    /// Logged operations, in execution order.
     pub ops: Vec<CollOp>,
 }
 
 impl CommLog {
+    /// Append one collective operation.
     pub fn record(&mut self, kind: CollKind, bytes: u64) {
         self.ops.push(CollOp { kind, bytes });
     }
@@ -65,6 +92,7 @@ impl CommLog {
         self.ops.iter().map(|o| o.bytes).sum()
     }
 
+    /// Forget every logged operation.
     pub fn clear(&mut self) {
         self.ops.clear();
     }

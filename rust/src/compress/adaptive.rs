@@ -21,7 +21,9 @@ use crate::tensor::Tensor;
 pub struct AdaptivePowerSgd {
     inner: PowerSgd,
     seed: u64,
+    /// Smallest rank the controller may shrink to.
     pub min_rank: usize,
+    /// Largest rank the controller may grow to.
     pub max_rank: usize,
     /// Grow when relative residual exceeds this.
     pub grow_threshold: f64,
@@ -35,6 +37,8 @@ pub struct AdaptivePowerSgd {
 }
 
 impl AdaptivePowerSgd {
+    /// Controller starting at `initial_rank`, bounded to
+    /// `[min_rank, max_rank]`.
     pub fn new(initial_rank: usize, min_rank: usize, max_rank: usize, seed: u64) -> Self {
         assert!(min_rank >= 1 && min_rank <= initial_rank && initial_rank <= max_rank);
         AdaptivePowerSgd {
@@ -51,14 +55,17 @@ impl AdaptivePowerSgd {
         }
     }
 
+    /// Current compression rank.
     pub fn rank(&self) -> usize {
         self.inner.rank()
     }
 
+    /// Rank after every step so far (the adaptation trace).
     pub fn rank_history(&self) -> &[usize] {
         &self.rank_history
     }
 
+    /// Most recent relative reconstruction residual.
     pub fn last_residual(&self) -> f64 {
         self.last_residual
     }

@@ -22,6 +22,7 @@ pub struct Atomo {
 }
 
 impl Atomo {
+    /// Atomo sampling `rank` singular components per matrix.
     pub fn new(rank: usize, seed: u64) -> Atomo {
         assert!(rank >= 1);
         Atomo { rank, rng: Rng::new(seed) }

@@ -11,6 +11,7 @@ use crate::tensor::Tensor;
 pub struct NoCompression;
 
 impl NoCompression {
+    /// The identity compressor.
     pub fn new() -> NoCompression {
         NoCompression
     }

@@ -74,6 +74,7 @@ pub struct PowerSgd {
 }
 
 impl PowerSgd {
+    /// Rank-`rank` PowerSGD with warm start, shared-seed `Q` draws.
     pub fn new(rank: usize, seed: u64) -> PowerSgd {
         assert!(rank >= 1, "rank must be >= 1");
         PowerSgd {
@@ -91,6 +92,7 @@ impl PowerSgd {
         self
     }
 
+    /// The compression rank `r`.
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -218,12 +220,15 @@ pub struct BestRankR {
 }
 
 impl BestRankR {
+    /// Best-rank-`rank` reference with the paper's 4 subspace
+    /// iterations per step.
     pub fn new(rank: usize, seed: u64) -> BestRankR {
         // Paper: "4 steps of subspace iterations (8 matrix multiplications)
         // is enough to converge to the best low-rank approximation".
         BestRankR { rank, iters: 4, rng: Rng::new(seed) }
     }
 
+    /// Override the subspace iteration count (≥ 1).
     pub fn with_iters(mut self, iters: usize) -> BestRankR {
         assert!(iters >= 1);
         self.iters = iters;

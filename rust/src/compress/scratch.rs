@@ -28,6 +28,7 @@ pub struct TensorPool {
 }
 
 impl TensorPool {
+    /// Empty pool with a zeroed allocation counter.
     pub fn new() -> TensorPool {
         TensorPool { items: Vec::new(), allocs: 0 }
     }
@@ -88,6 +89,7 @@ pub struct ScratchArena {
 }
 
 impl ScratchArena {
+    /// Empty arena (buffers grow to the workload's steady state once).
     pub fn new() -> ScratchArena {
         ScratchArena::default()
     }

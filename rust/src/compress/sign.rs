@@ -35,6 +35,7 @@ pub(crate) fn unpack_signs(bytes: &[u8], n: usize) -> Vec<f32> {
 pub struct SignNorm;
 
 impl SignNorm {
+    /// The sign + L1-norm compressor.
     pub fn new() -> SignNorm {
         SignNorm
     }
@@ -125,6 +126,7 @@ impl Compressor for SignNorm {
 pub struct Signum;
 
 impl Signum {
+    /// The majority-vote sign compressor.
     pub fn new() -> Signum {
         Signum
     }

@@ -23,6 +23,7 @@ pub struct RandomBlock {
 }
 
 impl RandomBlock {
+    /// Budget matched to rank-`rank_equiv` PowerSGD (`(n+m)·r` values).
     pub fn new(rank_equiv: usize, seed: u64) -> RandomBlock {
         RandomBlock { rank_equiv, rng: Rng::new(seed) }
     }
@@ -118,6 +119,7 @@ pub struct RandomK {
 }
 
 impl RandomK {
+    /// Budget matched to rank-`rank_equiv` PowerSGD (`(n+m)·r` values).
     pub fn new(rank_equiv: usize, seed: u64) -> RandomK {
         RandomK { rank_equiv, rng: Rng::new(seed) }
     }
@@ -203,6 +205,7 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// Budget matched to rank-`rank_equiv` PowerSGD (`(n+m)·r` values).
     pub fn new(rank_equiv: usize) -> TopK {
         TopK { rank_equiv }
     }

@@ -22,6 +22,7 @@ pub struct UnbiasedRank {
 }
 
 impl UnbiasedRank {
+    /// Unbiased rank-`rank` sketching with shared-seed `U` draws.
     pub fn new(rank: usize, seed: u64) -> UnbiasedRank {
         assert!(rank >= 1);
         UnbiasedRank { rank, rng: Rng::new(seed) }

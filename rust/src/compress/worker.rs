@@ -23,6 +23,35 @@
 //! Worker state (warm-start `Q`, scratch arenas) persists across steps;
 //! changing the worker count between calls re-initializes it, like
 //! re-building a process group.
+//!
+//! # Worked example
+//!
+//! Run one decentralized rank-2 PowerSGD round (one compressor instance
+//! per worker, aggregating over an in-process ring) and check it
+//! against the centralized oracle — the bitwise-equivalence contract:
+//!
+//! ```
+//! use powersgd::collectives::CommLog;
+//! use powersgd::compress::{decentralized_by_name, oracle_by_name, Compressor};
+//! use powersgd::tensor::Tensor;
+//!
+//! // Two workers' updates: a 4×3 matrix parameter and a bias vector.
+//! let updates: Vec<Vec<Tensor>> = (0..2)
+//!     .map(|w| {
+//!         let data: Vec<f32> = (0..12).map(|i| ((w * 12 + i) as f32).sin()).collect();
+//!         vec![Tensor::from_vec(&[4, 3], data), Tensor::full(&[2], 0.5)]
+//!     })
+//!     .collect();
+//! let mut fleet = decentralized_by_name("powersgd", 2, 7).unwrap();
+//! let mut oracle = oracle_by_name("powersgd", 2, 7).unwrap();
+//! let (mut dlog, mut olog) = (CommLog::default(), CommLog::default());
+//! let dec = fleet.compress_aggregate(&updates, &mut dlog);
+//! let ora = oracle.compress_aggregate(&updates, &mut olog);
+//! for (a, b) in dec.mean.iter().zip(ora.mean.iter()) {
+//!     assert_eq!(a.data(), b.data()); // identical bits, not just close
+//! }
+//! assert_eq!(dlog.bytes_sent(), olog.bytes_sent());
+//! ```
 
 use super::scratch::ScratchArena;
 use super::sign::pack_signs_into;
@@ -221,6 +250,7 @@ pub struct PowerSgdWorker {
 }
 
 impl PowerSgdWorker {
+    /// One worker's rank-`rank` PowerSGD half, warm start on.
     pub fn new(rank: usize, seed: u64) -> PowerSgdWorker {
         assert!(rank >= 1, "rank must be >= 1");
         PowerSgdWorker { rank, warm_start: true, qs: Vec::new(), rng: Rng::new(seed) }
@@ -338,6 +368,7 @@ pub struct UnbiasedRankWorker {
 }
 
 impl UnbiasedRankWorker {
+    /// One worker's unbiased rank-`rank` half.
     pub fn new(rank: usize, seed: u64) -> UnbiasedRankWorker {
         assert!(rank >= 1);
         UnbiasedRankWorker { rank, rng: Rng::new(seed) }
@@ -414,6 +445,7 @@ impl WorkerCompressor for UnbiasedRankWorker {
 pub struct SignNormWorker;
 
 impl SignNormWorker {
+    /// One worker's sign+norm half.
     pub fn new() -> SignNormWorker {
         SignNormWorker
     }
@@ -510,6 +542,7 @@ pub struct TopKWorker {
 }
 
 impl TopKWorker {
+    /// One worker's top-K half, budget matched to rank `rank_equiv`.
     pub fn new(rank_equiv: usize) -> TopKWorker {
         TopKWorker { rank_equiv }
     }
@@ -593,6 +626,7 @@ impl WorkerCompressor for TopKWorker {
 pub struct NoCompressionWorker;
 
 impl NoCompressionWorker {
+    /// One worker's identity half.
     pub fn new() -> NoCompressionWorker {
         NoCompressionWorker
     }
@@ -831,6 +865,7 @@ impl<E> EndpointCompressor<E>
 where
     E: Transport<Vec<f32>> + Transport<Vec<u8>>,
 {
+    /// Wrap a connected endpoint and one worker's compressor half.
     pub fn new(endpoint: E, comp: Box<dyn WorkerCompressor>) -> EndpointCompressor<E> {
         EndpointCompressor { endpoint, comp, scratch: ScratchArena::new() }
     }
@@ -932,49 +967,13 @@ mod tests {
         assert!(oracle_by_name("random-k", 2, 1).is_none());
     }
 
-    /// Two-typed endpoint over a pair of InProcRing nodes — the shape a
-    /// multi-process endpoint has (TcpRing multiplexes both types over
-    /// one connection; here each type gets its own channel ring).
-    struct PairEndpoint {
-        f: crate::transport::RingNode<Vec<f32>>,
-        b: crate::transport::RingNode<Vec<u8>>,
-    }
-
-    impl Transport<Vec<f32>> for PairEndpoint {
-        fn rank(&self) -> usize {
-            self.f.rank()
-        }
-        fn world(&self) -> usize {
-            self.f.world()
-        }
-        fn send_next(&self, msg: Vec<f32>) {
-            self.f.send_next(msg);
-        }
-        fn recv_prev(&self) -> Vec<f32> {
-            self.f.recv_prev()
-        }
-    }
-
-    impl Transport<Vec<u8>> for PairEndpoint {
-        fn rank(&self) -> usize {
-            Transport::<Vec<u8>>::rank(&self.b)
-        }
-        fn world(&self) -> usize {
-            Transport::<Vec<u8>>::world(&self.b)
-        }
-        fn send_next(&self, msg: Vec<u8>) {
-            self.b.send_next(msg);
-        }
-        fn recv_prev(&self) -> Vec<u8> {
-            self.b.recv_prev()
-        }
-    }
-
-    /// The endpoint adapter, one instance per "process" (thread here),
+    /// The endpoint adapter, one instance per "process" (thread here)
+    /// over a dual-typed [`crate::transport::InProcDuplex`] endpoint,
     /// must reproduce the centralized oracle bitwise — aggregate,
     /// per-worker locals, and logged traffic.
     #[test]
     fn endpoint_compressor_matches_oracle_bitwise() {
+        use crate::transport::InProcDuplex;
         use crate::util::Rng;
         let world = 2;
         let shapes: [&[usize]; 3] = [&[6, 4], &[3], &[5, 5]];
@@ -996,16 +995,13 @@ mod tests {
             let mut olog = CommLog::default();
             let want = oracle.compress_aggregate(&updates, &mut olog);
 
-            let fnodes = InProcRing::endpoints::<Vec<f32>>(world);
-            let bnodes = InProcRing::endpoints::<Vec<u8>>(world);
+            let endpoints = InProcDuplex::endpoints(world);
             let results: Vec<(Aggregated, CommLog)> = std::thread::scope(|scope| {
-                let handles: Vec<_> = fnodes
+                let handles: Vec<_> = endpoints
                     .into_iter()
-                    .zip(bnodes)
                     .zip(updates.iter())
-                    .map(|((f, b), up)| {
+                    .map(|(endpoint, up)| {
                         scope.spawn(move || {
-                            let endpoint = PairEndpoint { f, b };
                             let mut comp = EndpointCompressor::new(
                                 endpoint,
                                 worker_by_name(name, 2, 5).unwrap(),

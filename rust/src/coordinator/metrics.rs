@@ -7,7 +7,9 @@ use crate::util::stats;
 /// One training step's record.
 #[derive(Debug, Clone, Copy)]
 pub struct StepRecord {
+    /// 0-based step index.
     pub step: usize,
+    /// Mean worker loss this step.
     pub loss: f64,
     /// Measured per-worker gradient computation time (fwd+bwd), seconds.
     pub grad_s: f64,
@@ -23,12 +25,14 @@ pub struct StepRecord {
     /// already includes executing the collectives in memory (see
     /// `Trainer::train_step`).
     pub sim_step_s: f64,
+    /// Learning rate used this step.
     pub lr: f64,
 }
 
 /// Accumulated run metrics.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Per-step records, in order.
     pub steps: Vec<StepRecord>,
     /// (step, eval metric) pairs; meaning depends on the task
     /// (accuracy for classification, perplexity for LM).
@@ -36,28 +40,34 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Append one step record.
     pub fn record(&mut self, r: StepRecord) {
         self.steps.push(r);
     }
 
+    /// Append one evaluation result.
     pub fn record_eval(&mut self, step: usize, value: f64) {
         self.evals.push((step, value));
     }
 
+    /// Total per-worker bytes transmitted over the run.
     pub fn total_bytes(&self) -> u64 {
         self.steps.iter().map(|s| s.bytes).sum()
     }
 
+    /// Mean loss over the last `n` steps.
     pub fn mean_loss_last(&self, n: usize) -> f64 {
         let tail: Vec<f64> =
             self.steps.iter().rev().take(n).map(|s| s.loss).collect();
         stats::mean(&tail)
     }
 
+    /// Most recent evaluation value, if any.
     pub fn last_eval(&self) -> Option<f64> {
         self.evals.last().map(|&(_, v)| v)
     }
 
+    /// Best evaluation value over the run.
     pub fn best_eval(&self, higher_is_better: bool) -> Option<f64> {
         let vals: Vec<f64> = self.evals.iter().map(|&(_, v)| v).collect();
         if vals.is_empty() {
@@ -85,7 +95,7 @@ impl Metrics {
         stats::mean(&c)
     }
 
-    /// Render the loss curve as step/loss CSV (for EXPERIMENTS.md).
+    /// Render the loss curve as step/loss CSV (`train --loss-curve`).
     pub fn loss_curve_csv(&self, every: usize) -> String {
         let mut out = String::from("step,loss\n");
         for r in self.steps.iter().filter(|r| r.step % every == 0) {

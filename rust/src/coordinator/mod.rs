@@ -51,11 +51,15 @@ pub enum EvalKind {
 
 /// Trainer configuration.
 pub struct TrainerConfig {
+    /// Number of simulated data-parallel workers.
     pub workers: usize,
+    /// α–β backend pricing the collectives.
     pub backend: Backend,
+    /// Seed for parameter init and data sharding.
     pub seed: u64,
     /// Evaluate every this many steps (0 = never).
     pub eval_every: usize,
+    /// How evaluation output is interpreted.
     pub eval_kind: EvalKind,
     /// Print a progress line every this many steps (0 = never).
     pub log_every: usize,
@@ -94,10 +98,12 @@ impl Default for TrainerConfig {
 pub struct Trainer {
     train_step: Arc<Artifact>,
     eval_step: Option<Arc<Artifact>>,
+    /// Current model parameters (original shapes).
     pub params: Vec<Tensor>,
     registry: ParamRegistry,
     opt: Box<dyn DistOptimizer>,
     cfg: TrainerConfig,
+    /// Accumulated run metrics (times, bytes, losses, evals).
     pub metrics: Metrics,
     step: usize,
     /// Simulated cluster pricing the collectives (per-link α/β from the
@@ -172,14 +178,17 @@ impl Trainer {
         })
     }
 
+    /// The model's parameter registry (matricization view).
     pub fn registry(&self) -> &ParamRegistry {
         &self.registry
     }
 
+    /// The optimizer's display name.
     pub fn optimizer_name(&self) -> String {
         self.opt.name()
     }
 
+    /// Number of completed training steps.
     pub fn steps_done(&self) -> usize {
         self.step
     }

@@ -29,8 +29,11 @@ pub trait DataSource: Send {
 
 /// K-class Gaussian-mixture classification task.
 pub struct Classification {
+    /// Input dimensionality (flattened "image" size).
     pub dim: usize,
+    /// Number of classes K.
     pub classes: usize,
+    /// Samples per worker per batch.
     pub batch_per_worker: usize,
     prototypes: Vec<Vec<f32>>, // classes × protos_per_class flattened
     protos_per_class: usize,
@@ -42,6 +45,8 @@ pub struct Classification {
 }
 
 impl Classification {
+    /// Deterministic task: `classes` Gaussian clusters in `dim`
+    /// dimensions, sharded over `workers` disjoint streams from `seed`.
     pub fn new(
         dim: usize,
         classes: usize,
@@ -141,8 +146,11 @@ impl DataSource for Classification {
 
 /// Zipf + Markov-bigram synthetic language corpus.
 pub struct LmCorpus {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequences per worker per batch.
     pub batch_per_worker: usize,
+    /// Tokens per sequence.
     pub seq_len: usize,
     /// Per-token successor tables: `succ[t]` lists plausible next tokens.
     succ: Vec<Vec<u32>>,
@@ -155,6 +163,8 @@ pub struct LmCorpus {
 }
 
 impl LmCorpus {
+    /// Deterministic corpus: Zipf(1.1) unigrams with bigram successor
+    /// structure, sharded over `workers` disjoint streams from `seed`.
     pub fn new(
         vocab: usize,
         batch_per_worker: usize,

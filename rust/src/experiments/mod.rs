@@ -1,0 +1,413 @@
+//! Experiment registry and report generator (DESIGN.md §12): reproduce
+//! the paper's §5 sweeps end-to-end with one command.
+//!
+//! The rest of the crate can *price* any single configuration
+//! ([`crate::simulate`]) and *execute* any single run
+//! ([`crate::transport`]); this module composes them into the paper's
+//! multi-axis sweeps. A declarative registry ([`registry()`]) names
+//! suites of scenarios (scheme × rank × workers × backend × model
+//! profile × engine); [`run_suite`] evaluates a suite into flat
+//! records; each run is written as a versioned `EXPERIMENTS_<suite>.json`
+//! artifact (the `util/bench.rs` BenchJson conventions: hand-rolled
+//! writer, stable key order, flat records), and
+//! [`generate_report`](report::generate_report) renders the whole
+//! registry — plus one *measured* threaded-engine run per
+//! [`WireConfig`] — into a deterministic `REPORT.md` with paper-style
+//! tables. The CLI entry point is `powersgd experiment`.
+//!
+//! Determinism is a hard requirement: for a fixed seed the report is
+//! byte-for-byte reproducible (pinned by
+//! `tests/integration_experiments.rs`), so a diff of `REPORT.md` is a
+//! diff of the model, never of the run.
+//!
+//! # Worked example
+//!
+//! Expand a registered suite and evaluate one of its scenarios:
+//!
+//! ```
+//! use powersgd::experiments::{registry, run_scenario, scenarios_for};
+//!
+//! assert!(registry().iter().any(|s| s.name == "scheme-compare"));
+//! let scenarios = scenarios_for("scheme-compare", /*quick=*/ true);
+//! let record = run_scenario(&scenarios[0]).unwrap();
+//! // Flat record: a stable name plus numeric metrics.
+//! assert!(record.name.starts_with("scheme-compare/resnet18/"));
+//! assert!(record.metrics.iter().any(|(k, _)| *k == "total_ms"));
+//! ```
+
+pub mod registry;
+pub mod report;
+
+pub use registry::{
+    registry, scenarios_for, suite_by_name, wire_configs, ScenarioSpec, Suite, WireConfig,
+    DEFAULT_WORKERS, PROFILES, SCALING_WORKERS, SUITES,
+};
+pub use report::{generate_report, write_report};
+
+use crate::collectives::ring_wire_bytes;
+use crate::net::backend_by_name;
+use crate::profiles;
+use crate::simulate::{data_per_epoch_mb, epoch_speedup_vs_single_sgd, simulate_step};
+use crate::transport::tcp::{
+    harness_registry, oracle_trajectory, worker_trajectory, HarnessConfig, MeteredTransport,
+};
+use crate::transport::InProcDuplex;
+use crate::util::bench::{json_escape, json_num};
+use crate::util::Table;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Schema version stamped into every `EXPERIMENTS_*.json` document.
+/// Bump when a record field changes meaning, so downstream consumers of
+/// the uploaded CI artifacts can dispatch on it.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One flat result record of a suite run: a stable name, string tags
+/// (axis values), and numeric metrics.
+pub struct Record {
+    /// Stable identifier ([`ScenarioSpec::id`] or the wire-check slug).
+    pub name: String,
+    /// String-valued axes (profile, scheme, backend, engine, ...).
+    pub tags: Vec<(&'static str, String)>,
+    /// Numeric results, in a stable order.
+    pub metrics: Vec<(&'static str, f64)>,
+}
+
+/// One executed suite: the input axes plus every record it produced.
+pub struct SuiteRun {
+    /// The registry entry that was run.
+    pub suite: Suite,
+    /// Seed the run (and its measured parts) used.
+    pub seed: u64,
+    /// Whether the quick (CI smoke) axes were used.
+    pub quick: bool,
+    /// Flat results, in registry order.
+    pub records: Vec<Record>,
+}
+
+/// Evaluate one analytic scenario on the calibrated simulator.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<Record> {
+    let profile = profiles::by_name(spec.profile)
+        .ok_or_else(|| anyhow!("scenario {}: unknown profile {:?}", spec.id(), spec.profile))?;
+    let backend = backend_by_name(spec.backend)
+        .ok_or_else(|| anyhow!("scenario {}: unknown backend {:?}", spec.id(), spec.backend))?;
+    let b = simulate_step(&profile, spec.scheme, spec.workers, &backend);
+    let speedup = epoch_speedup_vs_single_sgd(&profile, spec.scheme, spec.workers, &backend);
+    Ok(Record {
+        name: spec.id(),
+        tags: vec![
+            ("suite", spec.suite.to_string()),
+            ("profile", spec.profile.to_string()),
+            ("scheme", spec.scheme.name()),
+            ("backend", spec.backend.to_string()),
+            ("engine", spec.engine.to_string()),
+        ],
+        metrics: vec![
+            ("workers", spec.workers as f64),
+            ("msg_bytes", spec.scheme.message_bytes(&profile.registry) as f64),
+            ("data_epoch_mb", data_per_epoch_mb(&profile, spec.scheme)),
+            ("encode_ms", b.encode * 1e3),
+            ("comm_ms", b.comm * 1e3),
+            ("decode_ms", b.decode * 1e3),
+            ("total_ms", b.total() * 1e3),
+            ("speedup_vs_single_sgd", speedup),
+        ],
+    })
+}
+
+/// Run a named suite: analytic suites expand via [`scenarios_for`] and
+/// evaluate on the simulator; `wire-check` executes one real threaded
+/// run per [`WireConfig`] ([`measured_wire_check`]).
+pub fn run_suite(name: &str, seed: u64, quick: bool) -> Result<SuiteRun> {
+    let suite = suite_by_name(name).ok_or_else(|| {
+        anyhow!("unknown suite {name:?}; `powersgd experiment --list` shows the registry")
+    })?;
+    let mut records = Vec::new();
+    if suite.name == "wire-check" {
+        for cfg in wire_configs(quick) {
+            let outcome =
+                measured_wire_check(cfg.compressor, cfg.rank, cfg.workers, cfg.steps, seed)?;
+            records.extend(outcome.records());
+        }
+    } else {
+        for spec in scenarios_for(suite.name, quick) {
+            records.push(run_scenario(&spec)?);
+        }
+    }
+    Ok(SuiteRun { suite, seed, quick, records })
+}
+
+impl SuiteRun {
+    /// Serialize the run as one flat-record JSON document (the
+    /// `BenchJson` conventions: hand-rolled writer, stable key order,
+    /// tags as strings, metrics as numbers, non-finite → null).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema_version\": {},\n", SCHEMA_VERSION));
+        out.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(self.suite.name)));
+        out.push_str(&format!("  \"title\": \"{}\",\n", json_escape(self.suite.title)));
+        out.push_str(&format!("  \"paper_ref\": \"{}\",\n", json_escape(self.suite.paper_ref)));
+        out.push_str(&format!("  \"seed\": {},\n", self.seed));
+        out.push_str(&format!("  \"quick\": {},\n", self.quick));
+        out.push_str(&format!("  \"threads\": {},\n", crate::runtime::pool::threads()));
+        out.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!("    {{\"name\": \"{}\"", json_escape(&r.name)));
+            for (k, v) in &r.tags {
+                out.push_str(&format!(", \"{}\": \"{}\"", json_escape(k), json_escape(v)));
+            }
+            for (k, v) in &r.metrics {
+                out.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+            }
+            out.push_str(if i + 1 < self.records.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `EXPERIMENTS_<suite>.json` into `dir`; returns the path.
+    pub fn write_json(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("EXPERIMENTS_{}.json", self.suite.name));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Summary table of every record (scenario id + metrics), for the
+    /// CLI's stdout. Metric columns come from the first record; suites
+    /// produce homogeneous records, and a missing metric renders `-`.
+    pub fn table(&self) -> Table {
+        let metric_keys: Vec<&'static str> = self
+            .records
+            .first()
+            .map(|r| r.metrics.iter().map(|(k, _)| *k).collect())
+            .unwrap_or_default();
+        let mut header: Vec<&str> = vec!["Scenario"];
+        header.extend(metric_keys.iter().copied());
+        let mut t =
+            Table::new(&format!("{} ({})", self.suite.title, self.suite.paper_ref), &header);
+        for r in &self.records {
+            let mut cells = vec![r.name.clone()];
+            for key in &metric_keys {
+                let cell = match r.metrics.iter().find(|(k, _)| k == key) {
+                    Some((_, v)) if v.fract() == 0.0 && v.abs() < 1e15 => {
+                        format!("{}", *v as i64)
+                    }
+                    Some((_, v)) => format!("{v:.3}"),
+                    None => "-".into(),
+                };
+                cells.push(cell);
+            }
+            t.row(&cells);
+        }
+        t
+    }
+}
+
+/// One rank's measured vs analytic wire traffic in a
+/// [`measured_wire_check`] run.
+pub struct RankWire {
+    /// Ring rank.
+    pub rank: usize,
+    /// Payload bytes the metered transport counted on the wire.
+    pub measured: u64,
+    /// The [`ring_wire_bytes`] expansion of every collective the run
+    /// logged — the closed-form prediction of `measured`.
+    pub analytic: u64,
+    /// Logical per-worker bytes (the paper's data-volume unit).
+    pub logical: u64,
+}
+
+/// A verified measured run of the threaded engine.
+pub struct WireCheckOutcome {
+    /// Compressor CLI name the run used.
+    pub compressor: String,
+    /// Compression rank where applicable.
+    pub rank: usize,
+    /// Worker threads in the ring.
+    pub workers: usize,
+    /// EF-SGD steps run.
+    pub steps: usize,
+    /// Per-rank traffic, rank-ordered.
+    pub per_rank: Vec<RankWire>,
+    /// Closed-form per-worker message bytes per step (the
+    /// `message_bytes` model on the harness registry).
+    pub model_bytes_per_step: u64,
+}
+
+impl WireCheckOutcome {
+    /// Short scheme slug for table titles and record names
+    /// (`powersgd-r2`, `sign-norm`).
+    pub fn slug(&self) -> String {
+        if self.rank > 0 {
+            format!("{}-r{}", self.compressor, self.rank)
+        } else {
+            self.compressor.clone()
+        }
+    }
+
+    /// Flat per-rank records in the artifact schema.
+    pub fn records(&self) -> Vec<Record> {
+        self.per_rank
+            .iter()
+            .map(|r| Record {
+                name: format!("wire-check/{}/w{}/rank{}", self.slug(), self.workers, r.rank),
+                tags: vec![
+                    ("suite", "wire-check".to_string()),
+                    ("compressor", self.compressor.clone()),
+                    ("engine", "threaded".to_string()),
+                    ("transport", "inproc-metered".to_string()),
+                ],
+                metrics: vec![
+                    ("rank", r.rank as f64),
+                    ("workers", self.workers as f64),
+                    ("steps", self.steps as f64),
+                    ("measured_wire_bytes", r.measured as f64),
+                    ("analytic_wire_bytes", r.analytic as f64),
+                    ("logical_bytes", r.logical as f64),
+                    ("model_bytes_per_step", self.model_bytes_per_step as f64),
+                ],
+            })
+            .collect()
+    }
+}
+
+/// Execute one **real** threaded-engine EF-SGD run and verify its byte
+/// accounting end to end.
+///
+/// Spawns `workers` OS threads, each running the *same* per-worker
+/// trajectory the multi-process TCP harness runs
+/// ([`worker_trajectory`]) — an unmodified `EfSgd` whose compressor
+/// aggregates over a metered [`InProcDuplex`] ring. The verification
+/// chain, every link checked on every run:
+///
+/// 1. measured wire bytes == the [`ring_wire_bytes`] expansion of every
+///    logged collective (checked inside `worker_trajectory`, and
+///    recomputed here into [`RankWire::analytic`]);
+/// 2. logged logical bytes == the closed-form `message_bytes` model;
+/// 3. every worker's final parameters are **bit-identical** to the
+///    centralized lockstep oracle's.
+///
+/// This is the "measured wire bytes from a real `--engine threaded`
+/// run" artifact of the generated report; byte counts are independent
+/// of thread scheduling, so the outcome is deterministic.
+pub fn measured_wire_check(
+    compressor: &str,
+    rank: usize,
+    workers: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<WireCheckOutcome> {
+    let cfg = HarnessConfig {
+        compressor: compressor.to_string(),
+        rank,
+        seed,
+        steps,
+        ..HarnessConfig::default()
+    };
+    let endpoints = InProcDuplex::endpoints(workers);
+    let reports = std::thread::scope(|scope| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let cfg = cfg.clone();
+                scope.spawn(move || worker_trajectory(MeteredTransport::new(ep), &cfg))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("wire-check worker thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })
+    .context("wire-check: a worker trajectory failed")?;
+
+    // The same cross-checks `powersgd launch` runs over real sockets:
+    // bitwise parameters and logical bytes against the lockstep oracle.
+    let (oracle_params, oracle_logical) = oracle_trajectory(workers, &cfg)?;
+    let mut per_rank = Vec::with_capacity(workers);
+    for report in &reports {
+        let bitwise = report.params.len() == oracle_params.len()
+            && report.params.iter().zip(oracle_params.iter()).all(|(a, b)| {
+                a.data().len() == b.data().len()
+                    && a.data()
+                        .iter()
+                        .zip(b.data().iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            });
+        if !bitwise {
+            bail!("wire-check: rank {} diverged from the lockstep oracle", report.rank);
+        }
+        if report.logical_bytes != oracle_logical {
+            bail!(
+                "wire-check: rank {} logged {} logical bytes, oracle logged {}",
+                report.rank,
+                report.logical_bytes,
+                oracle_logical
+            );
+        }
+        let analytic: u64 = report
+            .ops
+            .iter()
+            .map(|op| ring_wire_bytes(op.kind, op.bytes, workers, report.rank))
+            .sum();
+        per_rank.push(RankWire {
+            rank: report.rank,
+            measured: report.wire_bytes,
+            analytic,
+            logical: report.logical_bytes,
+        });
+    }
+    per_rank.sort_by_key(|r| r.rank);
+    let model_bytes_per_step = crate::compress::worker_by_name(compressor, rank, seed)
+        .map(|w| w.message_bytes(&harness_registry()))
+        .unwrap_or(0);
+    Ok(WireCheckOutcome {
+        compressor: compressor.to_string(),
+        rank,
+        workers,
+        steps,
+        per_rank,
+        model_bytes_per_step,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_json_is_well_formed() {
+        let run = run_suite("rank-sweep", 42, true).unwrap();
+        assert!(!run.records.is_empty());
+        let doc = run.to_json();
+        assert!(doc.contains("\"schema_version\": 1"));
+        assert!(doc.contains("\"suite\": \"rank-sweep\""));
+        assert!(doc.contains("\"profile\": \"resnet18\""));
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(doc.matches(open).count(), doc.matches(close).count());
+        }
+    }
+
+    #[test]
+    fn rank_sweep_pins_hand_computed_resnet_bytes() {
+        // Independently hand-computed from the Appendix F shapes:
+        // rank-2 PowerSGD on ResNet18 transmits 329 512 bytes/step,
+        // SGD 44 696 320. A regression in any per-spec byte formula
+        // cannot hide in the aggregate.
+        let run = run_suite("rank-sweep", 42, false).unwrap();
+        let metric = |name: &str, key: &str| -> f64 {
+            let r = run
+                .records
+                .iter()
+                .find(|r| r.name == name)
+                .unwrap_or_else(|| panic!("record {name}"));
+            r.metrics.iter().find(|(k, _)| *k == key).expect(key).1
+        };
+        assert_eq!(metric("rank-sweep/resnet18/rank2/w16/nccl", "msg_bytes"), 329_512.0);
+        assert_eq!(metric("rank-sweep/resnet18/sgd/w16/nccl", "msg_bytes"), 44_696_320.0);
+    }
+
+    #[test]
+    fn unknown_suite_is_a_clean_error() {
+        assert!(run_suite("bogus", 1, false).is_err());
+    }
+}

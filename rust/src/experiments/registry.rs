@@ -1,0 +1,280 @@
+//! Declarative scenario registry: which (suite × profile × scheme ×
+//! workers × backend × engine) points `powersgd experiment` runs.
+//!
+//! A [`Suite`] names a group of scenarios reproducing one paper
+//! artifact; [`scenarios_for`] expands a suite name into concrete
+//! [`ScenarioSpec`]s. Every axis value is expressed in its CLI spelling
+//! — `tests/integration_experiments.rs` pins that each registered
+//! scenario round-trips through the CLI parsers
+//! ([`crate::simulate::scheme_by_name`], [`crate::profiles::by_name`],
+//! [`crate::net::backend_by_name`],
+//! [`crate::transport::engine_by_name`]), so nothing can be registered
+//! that a user could not also run by hand.
+//!
+//! The `wire-check` suite has no analytic scenarios: its points are
+//! real measured runs of the threaded engine, described by
+//! [`WireConfig`] and executed by
+//! [`measured_wire_check`](crate::experiments::measured_wire_check).
+
+use crate::simulate::Scheme;
+
+/// One registered experiment suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Suite {
+    /// CLI name (`powersgd experiment --suite <name>`).
+    pub name: &'static str,
+    /// Human-readable title for reports and logs.
+    pub title: &'static str,
+    /// The paper artifact(s) the suite reproduces.
+    pub paper_ref: &'static str,
+}
+
+/// Every registered suite, in report order.
+pub const SUITES: [Suite; 5] = [
+    Suite {
+        name: "rank-sweep",
+        title: "Rank sweep",
+        paper_ref: "Table 3 / Table 7 / Appendix D",
+    },
+    Suite { name: "scheme-compare", title: "Scheme compare", paper_ref: "Table 4" },
+    Suite { name: "scaling", title: "Worker scaling", paper_ref: "Figure 3" },
+    Suite { name: "backend-compare", title: "Backend compare", paper_ref: "Appendix B" },
+    Suite {
+        name: "wire-check",
+        title: "Measured wire bytes",
+        paper_ref: "Section 3 aggregation / DESIGN.md par. 10",
+    },
+];
+
+/// The full registry, in report order.
+pub fn registry() -> &'static [Suite] {
+    &SUITES
+}
+
+/// Suite by CLI name.
+pub fn suite_by_name(name: &str) -> Option<Suite> {
+    SUITES.iter().copied().find(|s| s.name == name)
+}
+
+/// One fully-specified analytic experiment point.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Owning suite's CLI name.
+    pub suite: &'static str,
+    /// Model profile CLI name ([`crate::profiles::by_name`]).
+    pub profile: &'static str,
+    /// Compression scheme.
+    pub scheme: Scheme,
+    /// Worker count `W`.
+    pub workers: usize,
+    /// Backend CLI name ([`crate::net::backend_by_name`]).
+    pub backend: &'static str,
+    /// Engine CLI name ([`crate::transport::engine_by_name`]); analytic
+    /// scenarios price the lockstep schedule.
+    pub engine: &'static str,
+}
+
+impl ScenarioSpec {
+    /// Stable identifier, used as the JSON record name:
+    /// `suite/profile/scheme/wW/backend`.
+    pub fn id(&self) -> String {
+        let (name, rank) = self.scheme.cli_spelling();
+        let scheme = if rank > 0 { format!("{name}-r{rank}") } else { name };
+        format!("{}/{}/{}/w{}/{}", self.suite, self.profile, scheme, self.workers, self.backend)
+    }
+}
+
+/// Model profiles every suite covers (all three of the paper's §5
+/// workloads).
+pub const PROFILES: [&str; 3] = ["resnet18", "lstm", "transformer"];
+
+/// Ranks the rank sweep visits for `profile`: Table 3's 1/2/4 for the
+/// CNN and LSTM, Appendix D's 4–32 for the transformer (whose adaptive
+/// embeddings need higher ranks for the same quality).
+pub fn sweep_ranks(profile: &str) -> &'static [usize] {
+    match profile {
+        "transformer" => &[4, 8, 16, 32],
+        _ => &[1, 2, 4],
+    }
+}
+
+/// The Table 4 compressor zoo at PowerSGD-equivalent rank 2.
+pub fn scheme_zoo() -> Vec<Scheme> {
+    vec![
+        Scheme::Sgd,
+        Scheme::PowerSgd { rank: 2 },
+        Scheme::UnbiasedRank { rank: 2 },
+        Scheme::RandomBlock { rank: 2 },
+        Scheme::RandomK { rank: 2 },
+        Scheme::TopK { rank: 2 },
+        Scheme::SignNorm,
+        Scheme::Signum,
+        Scheme::Atomo { rank: 2 },
+    ]
+}
+
+/// Worker counts of the scaling suite (Figure 3's x axis).
+pub const SCALING_WORKERS: [usize; 5] = [2, 4, 8, 16, 32];
+
+/// Schemes Figure 3 tracks across worker counts.
+pub fn scaling_schemes() -> Vec<Scheme> {
+    vec![Scheme::Sgd, Scheme::PowerSgd { rank: 2 }, Scheme::Signum]
+}
+
+/// Schemes the backend-compare suite prices on both backends — shared
+/// by the suite expansion and the report section so the two published
+/// artifacts cannot drift apart.
+pub fn backend_compare_schemes() -> Vec<Scheme> {
+    vec![Scheme::Sgd, Scheme::PowerSgd { rank: 2 }, Scheme::SignNorm]
+}
+
+/// Worker count of the single-point suites (the paper's 16-GPU testbed).
+pub const DEFAULT_WORKERS: usize = 16;
+
+/// One measured-run configuration of the `wire-check` suite: a real
+/// threaded-engine EF-SGD trajectory over a metered in-process ring.
+#[derive(Debug, Clone, Copy)]
+pub struct WireConfig {
+    /// Compressor CLI name (must have a per-worker implementation,
+    /// [`crate::compress::worker_by_name`]).
+    pub compressor: &'static str,
+    /// Compression rank where applicable (0 for rank-free schemes).
+    pub rank: usize,
+    /// Worker threads in the ring.
+    pub workers: usize,
+    /// EF-SGD steps.
+    pub steps: usize,
+}
+
+/// Measured-run configurations: one all-reduce scheme (PowerSGD) and
+/// one gather scheme (Sign+Norm), so both ring expansions are
+/// exercised. `quick` keeps a single small config for the CI smoke
+/// tier.
+pub fn wire_configs(quick: bool) -> Vec<WireConfig> {
+    if quick {
+        vec![WireConfig { compressor: "powersgd", rank: 2, workers: 2, steps: 2 }]
+    } else {
+        vec![
+            WireConfig { compressor: "powersgd", rank: 2, workers: 4, steps: 3 },
+            WireConfig { compressor: "sign-norm", rank: 0, workers: 2, steps: 3 },
+        ]
+    }
+}
+
+/// Expand a suite name into its analytic scenarios. Unknown names and
+/// the measured-only `wire-check` suite yield an empty list (the latter
+/// is driven by [`wire_configs`] instead). `quick` shrinks every axis
+/// for the CI `experiment-smoke` tier without changing its shape.
+pub fn scenarios_for(suite: &str, quick: bool) -> Vec<ScenarioSpec> {
+    let mut out = Vec::new();
+    let suite_name = suite_by_name(suite).map(|s| s.name).unwrap_or("");
+    let spec = |profile: &'static str, scheme: Scheme, workers: usize, backend: &'static str| {
+        ScenarioSpec { suite: suite_name, profile, scheme, workers, backend, engine: "lockstep" }
+    };
+    match suite {
+        "rank-sweep" => {
+            for &profile in &PROFILES {
+                let ranks = sweep_ranks(profile);
+                let ranks = if quick { &ranks[..2] } else { ranks };
+                out.push(spec(profile, Scheme::Sgd, DEFAULT_WORKERS, "nccl"));
+                for &r in ranks {
+                    out.push(spec(profile, Scheme::PowerSgd { rank: r }, DEFAULT_WORKERS, "nccl"));
+                }
+            }
+        }
+        "scheme-compare" => {
+            for &profile in &PROFILES {
+                let schemes = if quick {
+                    vec![Scheme::Sgd, Scheme::PowerSgd { rank: 2 }, Scheme::SignNorm]
+                } else {
+                    scheme_zoo()
+                };
+                for &scheme in &schemes {
+                    out.push(spec(profile, scheme, DEFAULT_WORKERS, "nccl"));
+                }
+            }
+        }
+        "scaling" => {
+            let workers: &[usize] = if quick { &[4, 16] } else { &SCALING_WORKERS };
+            let backends: &[&'static str] = if quick { &["nccl"] } else { &["nccl", "gloo"] };
+            for &profile in &PROFILES {
+                let schemes = scaling_schemes();
+                for &scheme in &schemes {
+                    for &backend in backends {
+                        for &w in workers {
+                            out.push(spec(profile, scheme, w, backend));
+                        }
+                    }
+                }
+            }
+        }
+        "backend-compare" => {
+            let schemes = backend_compare_schemes();
+            let schemes: &[Scheme] = if quick { &schemes[..2] } else { &schemes };
+            for &profile in &PROFILES {
+                for &scheme in schemes {
+                    for backend in ["nccl", "gloo"] {
+                        out.push(spec(profile, scheme, DEFAULT_WORKERS, backend));
+                    }
+                }
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        for s in registry() {
+            assert_eq!(suite_by_name(s.name), Some(*s));
+        }
+        let mut names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), registry().len(), "duplicate suite names");
+        assert!(suite_by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn analytic_suites_expand_and_quick_shrinks() {
+        for s in registry() {
+            let full = scenarios_for(s.name, false);
+            let quick = scenarios_for(s.name, true);
+            if s.name == "wire-check" {
+                assert!(full.is_empty(), "wire-check is measured-only");
+                assert_eq!(wire_configs(false).len(), 2);
+                assert_eq!(wire_configs(true).len(), 1);
+            } else {
+                assert!(!full.is_empty(), "{} expanded to nothing", s.name);
+                assert!(quick.len() < full.len(), "{}: quick must shrink", s.name);
+                // Every profile appears in every analytic suite.
+                for profile in PROFILES {
+                    assert!(full.iter().any(|sp| sp.profile == profile), "{}/{profile}", s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_ids_are_unique_within_a_suite() {
+        for s in registry() {
+            let ids: Vec<String> = scenarios_for(s.name, false).iter().map(|x| x.id()).collect();
+            let mut sorted = ids.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(sorted.len(), ids.len(), "{}: duplicate scenario ids", s.name);
+        }
+    }
+
+    #[test]
+    fn backend_axis_is_exercised() {
+        let scaling = scenarios_for("scaling", false);
+        assert!(scaling.iter().any(|s| s.backend == "gloo"));
+        assert!(scaling.iter().any(|s| s.workers == 32));
+    }
+}

@@ -10,6 +10,27 @@
 
 use crate::tensor::Tensor;
 
+/// Bytes per transmitted element: every wire format in this crate is
+/// **f32** (the paper's setup — no fp16/bf16 path exists). This is the
+/// single home of that assumption on the *model* side: all analytic
+/// byte accounting derives from it — [`ParamSpec::bytes`], the
+/// per-scheme message models
+/// ([`crate::simulate::Scheme::spec_message_bytes`] and the per-worker
+/// [`crate::compress::WorkerCompressor::message_bytes`] implementations),
+/// and everything downstream of them
+/// ([`crate::simulate::Scheme::layer_timings`],
+/// [`crate::simulate::data_per_epoch_mb`]).
+///
+/// The *transport* side frames f32 payloads independently (the ring
+/// chunk arithmetic in [`crate::collectives::ring_wire_bytes`], the
+/// packed all-reduce buffers, the `WireSized` impls), and the
+/// measured-vs-analytic cross-checks pin the two sides to each other
+/// on every metered run. A future mixed-precision wire format must
+/// therefore replace this constant with a per-spec element size *and*
+/// revisit those framing sites — the cross-checks will fail loudly
+/// until both sides agree.
+pub const ELEM_BYTES: u64 = 4;
+
 /// How a parameter participates in compression.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CompressKind {
@@ -22,8 +43,11 @@ pub enum CompressKind {
 /// One model parameter: name, original tensor shape, compression view.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name (e.g. `layer4.1.conv2`), as the profile declares it.
     pub name: String,
+    /// Original tensor shape, before matricization.
     pub shape: Vec<usize>,
+    /// How the parameter participates in compression.
     pub kind: CompressKind,
 }
 
@@ -39,12 +63,14 @@ impl ParamSpec {
         ParamSpec { name: name.to_string(), shape: shape.to_vec(), kind }
     }
 
+    /// Element count of the original tensor.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Uncompressed size in bytes ([`ELEM_BYTES`] per element — f32).
     pub fn bytes(&self) -> u64 {
-        (self.numel() * 4) as u64
+        self.numel() as u64 * ELEM_BYTES
     }
 
     /// Matrix view dims, if compressed.
@@ -68,8 +94,8 @@ impl ParamSpec {
     /// matrix size.
     pub fn rank_r_bytes_uncapped(&self, r: usize) -> u64 {
         match self.kind {
-            CompressKind::Matrix { rows, cols } => ((rows + cols) * r * 4) as u64,
-            CompressKind::Vector { len } => (len * 4) as u64,
+            CompressKind::Matrix { rows, cols } => ((rows + cols) * r) as u64 * ELEM_BYTES,
+            CompressKind::Vector { len } => len as u64 * ELEM_BYTES,
         }
     }
 }
@@ -77,14 +103,18 @@ impl ParamSpec {
 /// Ordered set of parameters for one model.
 #[derive(Debug, Clone, Default)]
 pub struct ParamRegistry {
+    /// Per-parameter specs, in declaration (optimizer) order.
     pub specs: Vec<ParamSpec>,
 }
 
 impl ParamRegistry {
+    /// Registry over pre-built specs.
     pub fn new(specs: Vec<ParamSpec>) -> ParamRegistry {
         ParamRegistry { specs }
     }
 
+    /// Registry from `(name, shape)` pairs, applying the paper's
+    /// matricization rule to each ([`ParamSpec::new`]).
     pub fn from_shapes(named_shapes: &[(&str, Vec<usize>)]) -> ParamRegistry {
         ParamRegistry {
             specs: named_shapes
@@ -94,14 +124,17 @@ impl ParamRegistry {
         }
     }
 
+    /// Number of parameters.
     pub fn len(&self) -> usize {
         self.specs.len()
     }
 
+    /// True when the registry declares no parameters.
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
 
+    /// Total element count over all parameters.
     pub fn numel(&self) -> usize {
         self.specs.iter().map(|s| s.numel()).sum()
     }

@@ -16,11 +16,18 @@
 //!   executed from Rust via PJRT (`runtime`).
 //! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the
 //!   compression hot-spot, verified against pure-jnp oracles.
+//! - **Experiments (`experiments`)** — declarative scenario registry
+//!   reproducing the paper's §5 sweeps (`powersgd experiment`):
+//!   versioned `EXPERIMENTS_*.json` artifacts plus a deterministic
+//!   generated `REPORT.md` with paper-style tables, including measured
+//!   wire bytes from real threaded-engine runs.
 //!
 //! See DESIGN.md for the system inventory and per-experiment index.
+#![warn(missing_docs)]
 pub mod collectives;
 pub mod coordinator;
 pub mod data;
+pub mod experiments;
 pub mod runtime;
 pub mod compress;
 pub mod grad;

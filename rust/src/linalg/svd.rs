@@ -18,8 +18,11 @@ use crate::tensor::Tensor;
 /// in descending order. `U` is `n×k`, `V` is `m×k` with `k = min(n, m)`.
 #[derive(Debug, Clone)]
 pub struct Svd {
+    /// Left singular vectors, `n×k`.
     pub u: Tensor,
+    /// Singular values, descending.
     pub s: Vec<f32>,
+    /// Right singular vectors, `m×k`.
     pub v: Tensor,
 }
 

@@ -13,6 +13,11 @@
 //!   measured-wire-bytes vs. the analytic `message_bytes` model.
 //! - `worker`   — one rank of a launch (spawned by `launch`; can also
 //!   be started by hand against a known coordinator address).
+//! - `experiment` — run a registered suite of the paper's §5 sweeps
+//!   (DESIGN.md §12): emits a versioned `EXPERIMENTS_<suite>.json`
+//!   artifact per suite plus a deterministic `REPORT.md` with
+//!   paper-style tables, including measured wire bytes from a real
+//!   threaded-engine run.
 //! - `artifacts`— list available compiled artifacts.
 //!
 //! Examples:
@@ -25,6 +30,8 @@
 //! powersgd simulate --profile resnet18 --scheme rank2 --engine threaded
 //! powersgd launch --workers 4 --transport tcp --compressor powersgd --rank 2 --steps 3
 //! powersgd launch --workers 2 --compressor sign-norm --steps 5 --threads 4
+//! powersgd experiment --suite scheme-compare
+//! powersgd experiment --all --out-dir target/experiments
 //! ```
 //!
 //! `--threads N` (default `$POWERSGD_THREADS`, else 1) sizes the
@@ -75,6 +82,7 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("launch") => cmd_launch(&args),
         Some("worker") => cmd_worker(&args),
+        Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             print_help();
@@ -95,6 +103,9 @@ fn print_help() {
          \x20 simulate   shape-profile timing simulator (paper Tables 3-7)\n\
          \x20 launch     spawn W worker processes on a localhost TCP ring\n\
          \x20 worker     one rank of a launch (normally spawned by `launch`)\n\
+         \x20 experiment run a registered suite of the paper's sweeps and\n\
+         \x20            generate EXPERIMENTS_<suite>.json + REPORT.md\n\
+         \x20            (--suite NAME | --all | --list; --quick; --out-dir D)\n\
          \x20 artifacts  list available compiled artifacts\n\
          \n\
          shared options:\n\
@@ -105,12 +116,15 @@ fn print_help() {
          \x20                  W worker threads x N kernel threads.\n\
          \x20 --engine E       collective engine: lockstep | threaded\n\
          \x20 --compressor C   powersgd | powersgd-cold | unbiased-rank |\n\
-         \x20                  sign-norm | top-k | none | ... (see README.md)\n\
+         \x20                  sign-norm | top-k | none | ... (see DESIGN.md)\n\
          \x20 --rank R         compression rank (default 2)\n\
          \x20 --workers W      simulated/spawned worker count\n\
          \x20 --seed S         deterministic seed\n\
          \n\
-         see README.md and DESIGN.md for the full option list."
+         see DESIGN.md for the full option list, and\n\
+         examples/quickstart.rs for a narrated walkthrough (it runs a\n\
+         miniature scheme-compare scenario and prints the table):\n\
+         \x20 cargo run --release --example quickstart"
     );
 }
 
@@ -263,12 +277,8 @@ fn parse_scheme(s: &str, rank: usize) -> Result<Scheme> {
 }
 
 fn profile_by_name(name: &str) -> Result<powersgd::profiles::ModelProfile> {
-    Ok(match name {
-        "resnet18" => powersgd::profiles::resnet18(),
-        "lstm" => powersgd::profiles::lstm_wikitext2(),
-        "transformer" => powersgd::profiles::transformer_wikitext103(),
-        other => bail!("unknown profile {other:?} (resnet18|lstm|transformer)"),
-    })
+    powersgd::profiles::by_name(name)
+        .with_context(|| format!("unknown profile {name:?} (resnet18|lstm|transformer)"))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -560,6 +570,60 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .get("coordinator")
         .context("worker needs --coordinator host:port (normally passed by `launch`)")?;
     powersgd::transport::tcp::run_worker(coordinator, &harness_config(args), harness_timeout(args))
+}
+
+/// `powersgd experiment`: run a registered suite (or `--all`) of the
+/// paper's §5 sweeps and write the artifacts — one
+/// `EXPERIMENTS_<suite>.json` per suite plus the deterministic
+/// `REPORT.md` (DESIGN.md §12). `--quick` shrinks every axis for the CI
+/// smoke tier (also triggered by `BENCH_QUICK=1`); `--list` prints the
+/// registry.
+fn cmd_experiment(args: &Args) -> Result<()> {
+    use powersgd::experiments::{registry, run_suite, suite_by_name, write_report};
+
+    let seed = args.get_parsed_or("seed", 42u64);
+    let quick = args.flag("quick") || powersgd::util::quick_mode();
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "."));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating --out-dir {}", out_dir.display()))?;
+
+    if args.flag("list") {
+        for s in registry() {
+            println!("{:<16} {} ({})", s.name, s.title, s.paper_ref);
+        }
+        return Ok(());
+    }
+
+    let suites: Vec<&str> = if args.flag("all") {
+        registry().iter().map(|s| s.name).collect()
+    } else {
+        let name = args.get_or("suite", "scheme-compare");
+        vec![
+            suite_by_name(name)
+                .with_context(|| {
+                    format!("unknown suite {name:?}; `powersgd experiment --list` shows all")
+                })?
+                .name,
+        ]
+    };
+
+    for name in suites {
+        let run = run_suite(name, seed, quick)?;
+        run.table().print();
+        let path = run.write_json(&out_dir).context("writing the experiments JSON artifact")?;
+        println!("wrote {} ({} records)", path.display(), run.records.len());
+    }
+
+    // The report always covers the full registry (the analytic tables
+    // are cheap) plus the measured threaded-engine section, so any
+    // single-suite invocation still yields the complete document;
+    // `quick` only shrinks the measured configs. When the wire-check
+    // suite itself was selected above, its measured runs execute a
+    // second time here — the harness model is tiny (141 params, ≤ 3
+    // steps), so re-running beats threading outcomes through the API.
+    let report = write_report(&out_dir, seed, quick)?;
+    println!("wrote {}", report.display());
+    Ok(())
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

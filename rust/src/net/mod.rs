@@ -4,7 +4,8 @@
 //! Ethernet, PyTorch NCCL and GLOO backends. We price each collective
 //! with the standard latency–bandwidth model and calibrate the constants
 //! so the end-to-end per-batch times of Tables 3–7 are reproduced (see
-//! `calibration` tests below and EXPERIMENTS.md):
+//! the `calibration` tests below and the generated `REPORT.md` from
+//! `powersgd experiment`, DESIGN.md §12):
 //!
 //! - ring all-reduce: `t = 2(W−1)·α + 2·(W−1)/W · S/β`
 //! - all-gather:      `t = (W−1)·α + (W−1) · S/β`  (S = per-worker msg)
@@ -21,6 +22,7 @@ use crate::collectives::{CollKind, CollOp};
 // derive it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Backend {
+    /// Display name ("NCCL" / "GLOO").
     pub name: &'static str,
     /// Per-hop latency, seconds.
     pub alpha: f64,

@@ -21,6 +21,7 @@ use crate::tensor::Tensor;
 /// performs compression + aggregation + state updates, and returns the
 /// parameter delta to subtract (`x ← x − delta`), in compression shapes.
 pub trait DistOptimizer: Send {
+    /// Human-readable optimizer name (for logs and tables).
     fn name(&self) -> String;
 
     /// One optimization step. `grads[w][p]` = worker w's gradient for
@@ -53,6 +54,7 @@ pub struct EfSgd {
 }
 
 impl EfSgd {
+    /// EF-SGD over `compressor` with the given schedule and momentum λ.
     pub fn new(compressor: Box<dyn Compressor>, schedule: LrSchedule, momentum: f32) -> EfSgd {
         EfSgd {
             schedule,
@@ -70,6 +72,7 @@ impl EfSgd {
         self
     }
 
+    /// Name of the wrapped compressor (for logs).
     pub fn compressor_name(&self) -> String {
         self.compressor.name()
     }
@@ -155,6 +158,7 @@ pub struct Sgd {
 }
 
 impl Sgd {
+    /// Momentum SGD with the given schedule.
     pub fn new(schedule: LrSchedule, momentum: f32) -> Sgd {
         Sgd { schedule, momentum, m: Vec::new(), agg: NoCompression::new() }
     }
@@ -199,6 +203,7 @@ pub struct SignumOpt {
 }
 
 impl SignumOpt {
+    /// Signum with momentum parameter `beta`.
     pub fn new(schedule: LrSchedule, beta: f32) -> SignumOpt {
         SignumOpt {
             schedule,

@@ -25,6 +25,7 @@ pub struct LrSchedule {
     /// Warmup duration in steps (0 = none). Warmup goes from `base_lr`
     /// to `base_lr × workers` linearly, per Goyal et al. (2017).
     pub warmup_steps: usize,
+    /// Decay shape after warmup.
     pub kind: ScheduleKind,
 }
 
@@ -50,7 +51,14 @@ impl LrSchedule {
         }
     }
 
-    pub fn cosine(base_lr: f64, workers: usize, warmup_steps: usize, total_steps: usize) -> LrSchedule {
+    /// Cosine decay to zero at `total_steps` (Appendix D's transformer
+    /// recipe), with linear warmup and worker scaling.
+    pub fn cosine(
+        base_lr: f64,
+        workers: usize,
+        warmup_steps: usize,
+        total_steps: usize,
+    ) -> LrSchedule {
         LrSchedule {
             base_lr,
             workers,

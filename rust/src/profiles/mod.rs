@@ -11,7 +11,9 @@ use crate::grad::ParamRegistry;
 /// A workload profile: model shapes + measured compute constants.
 #[derive(Debug, Clone)]
 pub struct ModelProfile {
+    /// Display name matching the paper's table captions.
     pub name: &'static str,
+    /// Exact layer shapes (Appendix F), matricized per §3.
     pub registry: ParamRegistry,
     /// Forward-pass time per batch, seconds (constant across algorithms —
     /// Table 5 "the time spent in the forward and backward pass is
@@ -131,9 +133,30 @@ pub fn transformer_wikitext103() -> ModelProfile {
     }
 }
 
+/// Profile by (CLI) name: `resnet18`, `lstm`, `transformer`. The single
+/// name→profile mapping shared by the `simulate`/`experiment`
+/// subcommands and the experiment registry, so registered scenario
+/// names always parse.
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "lstm" => Some(lstm_wikitext2()),
+        "transformer" => Some(transformer_wikitext103()),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn profile_lookup_by_cli_name() {
+        assert_eq!(by_name("resnet18").unwrap().name, "ResNet18/CIFAR10");
+        assert_eq!(by_name("lstm").unwrap().name, "LSTM/WikiText-2");
+        assert_eq!(by_name("transformer").unwrap().name, "Transformer/WikiText-103");
+        assert!(by_name("vgg").is_none());
+    }
 
     #[test]
     fn resnet18_total_matches_table10() {

@@ -24,7 +24,9 @@ use std::collections::HashMap;
 /// Element type of an artifact input/output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (labels, token ids).
     I32,
 }
 
@@ -41,13 +43,16 @@ impl DType {
 /// One input or output tensor description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IoSpec {
+    /// Tensor name as the manifest declares it.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
     /// Empty = scalar.
     pub shape: Vec<usize>,
 }
 
 impl IoSpec {
+    /// Element count (1 for scalars).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -57,7 +62,9 @@ impl IoSpec {
 /// trainer replays exactly what the model author intended).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Init {
+    /// All zeros (biases).
     Zero,
+    /// All ones (norm scales).
     One,
     /// N(0, sigma²) i.i.d.
     Normal(f32),
@@ -80,13 +87,17 @@ impl Init {
 /// Parsed manifest for one artifact.
 #[derive(Debug, Clone, Default)]
 pub struct ArtifactManifest {
+    /// Artifact name (the `artifact` line).
     pub name: String,
+    /// Declared inputs, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Declared outputs, in return order.
     pub outputs: Vec<IoSpec>,
     /// Names of inputs that are trainable parameters, in order.
     pub params: Vec<String>,
     /// Per-parameter init directives, same order as `params`.
     pub inits: Vec<Init>,
+    /// Free-form key/value metadata (`meta` lines).
     pub meta: HashMap<String, String>,
 }
 
@@ -155,6 +166,7 @@ impl ArtifactManifest {
         Ok(m)
     }
 
+    /// Read and parse a manifest file.
     pub fn load(path: &std::path::Path) -> Result<ArtifactManifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {}", path.display()))?;

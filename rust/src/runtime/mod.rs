@@ -24,11 +24,14 @@ use std::path::{Path, PathBuf};
 /// An input value for artifact execution.
 #[derive(Debug, Clone)]
 pub enum Value {
+    /// An f32 tensor (parameters, features).
     F32(Tensor),
+    /// An i32 tensor as `(shape, data)` (labels, token ids).
     I32(Vec<usize>, Vec<i32>),
 }
 
 impl Value {
+    /// The value's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(t) => t.shape(),
@@ -54,6 +57,7 @@ impl From<Tensor> for Value {
 
 /// One compiled artifact: PJRT executable + manifest.
 pub struct Artifact {
+    /// The artifact's parsed I/O contract.
     pub manifest: ArtifactManifest,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -122,6 +126,7 @@ impl Runtime {
         Ok(Runtime { client, dir: artifacts_dir.as_ref().to_path_buf(), cache: HashMap::new() })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -36,6 +36,24 @@
 //! Chunk tasks must be pure compute: a task that itself dispatched
 //! pool work could deadlock two workers against each other. All
 //! kernels in this crate dispatch only from caller threads.
+//!
+//! # Worked example
+//!
+//! The determinism contract, demonstrated: a multi-chunk reduction is
+//! **bitwise identical** at every thread count (doctests run in their
+//! own process, so flipping the global count here races nothing):
+//!
+//! ```
+//! use powersgd::runtime::pool::{deterministic_sum, set_threads, REDUCE_CHUNK};
+//!
+//! let n = 3 * REDUCE_CHUNK + 17;
+//! let xs: Vec<f64> = (0..n).map(|i| ((i * 13 + 7) as f64).cos()).collect();
+//! set_threads(1);
+//! let serial = deterministic_sum(n, |i| xs[i]);
+//! set_threads(4);
+//! let parallel = deterministic_sum(n, |i| xs[i]);
+//! assert_eq!(serial.to_bits(), parallel.to_bits());
+//! ```
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -286,6 +304,7 @@ unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
 unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
 
 impl<'a, T> DisjointSlice<'a, T> {
+    /// Wrap a mutable slice for disjoint-range concurrent writes.
     pub fn new(slice: &'a mut [T]) -> DisjointSlice<'a, T> {
         DisjointSlice {
             ptr: slice.as_mut_ptr(),

@@ -12,7 +12,7 @@
 
 use crate::collectives::CollKind;
 use crate::compress::{decentralized_by_name, Compressor, DecentralizedCompressor};
-use crate::grad::{CompressKind, ParamRegistry, ParamSpec};
+use crate::grad::{CompressKind, ParamRegistry, ParamSpec, ELEM_BYTES};
 use crate::net::Backend;
 use crate::profiles::ModelProfile;
 use crate::transport::{schedule_step, Bucketer, Cluster, ComputePhases, LayerTiming, OverlapOutcome};
@@ -20,18 +20,47 @@ use crate::transport::{schedule_step, Bucketer, Cluster, ComputePhases, LayerTim
 /// Compression scheme, as the simulator sees it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
+    /// Uncompressed baseline (full-gradient all-reduce).
     Sgd,
-    PowerSgd { rank: usize },
-    UnbiasedRank { rank: usize },
-    RandomBlock { rank: usize },
-    RandomK { rank: usize },
-    TopK { rank: usize },
+    /// Rank-`rank` PowerSGD (Algorithm 1).
+    PowerSgd {
+        /// Compression rank `r`.
+        rank: usize,
+    },
+    /// Unbiased rank-`rank` sketching (§4.1).
+    UnbiasedRank {
+        /// Compression rank `r`.
+        rank: usize,
+    },
+    /// Random contiguous block, `(n+m)·rank` values (Appendix G.1).
+    RandomBlock {
+        /// PowerSGD-equivalent rank setting the value budget.
+        rank: usize,
+    },
+    /// Random coordinates without replacement (Appendix G.2).
+    RandomK {
+        /// PowerSGD-equivalent rank setting the value budget.
+        rank: usize,
+    },
+    /// Largest-magnitude coordinates, gathered (Appendix G.3).
+    TopK {
+        /// PowerSGD-equivalent rank setting the value budget.
+        rank: usize,
+    },
+    /// Sign + L1 norm (Algorithm 5), gathered.
     SignNorm,
+    /// Signum majority vote (Appendix G.5), gathered.
     Signum,
-    Atomo { rank: usize },
+    /// Rank-`rank` Spectral Atomo (Appendix G.6): full SVD per step.
+    Atomo {
+        /// Number of sampled singular components.
+        rank: usize,
+    },
 }
 
 impl Scheme {
+    /// Display name matching the paper's table rows ("Rank 2",
+    /// "Sign+Norm", ...).
     pub fn name(&self) -> String {
         match self {
             Scheme::Sgd => "SGD".into(),
@@ -60,35 +89,42 @@ impl Scheme {
 
     /// Per-worker message bytes one parameter contributes per step (the
     /// per-layer granularity the bucketer packs).
+    ///
+    /// Every value on the wire is an f32 ([`ELEM_BYTES`] — the single
+    /// home of that assumption); sign schemes pack one bit per
+    /// coordinate plus one f32 scale, and top-K sends `(index, value)`
+    /// pairs at `2·ELEM_BYTES` each.
     pub fn spec_message_bytes(&self, s: &ParamSpec) -> u64 {
         let budget = |r: usize, per_val: u64| -> u64 {
             match s.kind {
                 CompressKind::Matrix { rows, cols } => {
                     (((rows + cols) * r).min(rows * cols) as u64) * per_val
                 }
-                CompressKind::Vector { len } => (len * 4) as u64,
+                CompressKind::Vector { len } => len as u64 * ELEM_BYTES,
             }
         };
         match self {
             Scheme::Sgd => s.bytes(),
             Scheme::PowerSgd { rank } => s.rank_r_bytes_uncapped(*rank),
             Scheme::UnbiasedRank { rank } => match s.kind {
-                CompressKind::Matrix { rows, .. } => (rows * rank * 4) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
+                CompressKind::Matrix { rows, .. } => (rows * rank) as u64 * ELEM_BYTES,
+                CompressKind::Vector { len } => len as u64 * ELEM_BYTES,
             },
-            Scheme::RandomBlock { rank } | Scheme::RandomK { rank } => budget(*rank, 4),
-            Scheme::TopK { rank } => budget(*rank, 8),
+            Scheme::RandomBlock { rank } | Scheme::RandomK { rank } => budget(*rank, ELEM_BYTES),
+            Scheme::TopK { rank } => budget(*rank, 2 * ELEM_BYTES),
             Scheme::SignNorm => match s.kind {
-                CompressKind::Matrix { rows, cols } => 4 + ((rows * cols).div_ceil(8)) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
+                CompressKind::Matrix { rows, cols } => {
+                    ELEM_BYTES + ((rows * cols).div_ceil(8)) as u64
+                }
+                CompressKind::Vector { len } => len as u64 * ELEM_BYTES,
             },
             Scheme::Signum => match s.kind {
                 CompressKind::Matrix { rows, cols } => ((rows * cols).div_ceil(8)) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
+                CompressKind::Vector { len } => len as u64 * ELEM_BYTES,
             },
             Scheme::Atomo { rank } => match s.kind {
-                CompressKind::Matrix { rows, cols } => ((rows + cols) * rank * 4) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
+                CompressKind::Matrix { rows, cols } => ((rows + cols) * rank) as u64 * ELEM_BYTES,
+                CompressKind::Vector { len } => len as u64 * ELEM_BYTES,
             },
         }
     }
@@ -99,11 +135,35 @@ impl Scheme {
     }
 
     /// Per-layer sizing for the bucketer/overlap scheduler.
+    ///
+    /// Both byte columns assume f32 elements
+    /// ([`ELEM_BYTES`](crate::grad::ELEM_BYTES)): `msg_bytes` via
+    /// [`Scheme::spec_message_bytes`], `raw_bytes` via
+    /// [`ParamSpec::bytes`].
     pub fn layer_timings(&self, reg: &ParamRegistry) -> Vec<LayerTiming> {
         reg.specs
             .iter()
             .map(|s| LayerTiming { msg_bytes: self.spec_message_bytes(s), raw_bytes: s.bytes() })
             .collect()
+    }
+
+    /// Canonical CLI spelling as a `(scheme, rank)` argument pair that
+    /// round-trips through [`scheme_by_name`]:
+    /// `scheme_by_name(&name, rank) == Some(*self)` for every scheme.
+    /// Used by the experiment registry so every registered scenario is
+    /// reachable from the command line.
+    pub fn cli_spelling(&self) -> (String, usize) {
+        match self {
+            Scheme::Sgd => ("sgd".into(), 0),
+            Scheme::PowerSgd { rank } => (format!("rank{rank}"), 0),
+            Scheme::UnbiasedRank { rank } => ("unbiased-rank".into(), *rank),
+            Scheme::RandomBlock { rank } => ("random-block".into(), *rank),
+            Scheme::RandomK { rank } => ("random-k".into(), *rank),
+            Scheme::TopK { rank } => ("top-k".into(), *rank),
+            Scheme::SignNorm => ("sign-norm".into(), 0),
+            Scheme::Signum => ("signum".into(), 0),
+            Scheme::Atomo { rank } => ("atomo".into(), *rank),
+        }
     }
 }
 
@@ -190,14 +250,20 @@ const SVD_FLOPS: f64 = 2.9e10;
 /// One simulated step's time breakdown, seconds.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepBreakdown {
+    /// Forward pass (constant per profile).
     pub fwd: f64,
+    /// Backward pass (constant per profile).
     pub bwd: f64,
+    /// Gradient compression (encode) time.
     pub encode: f64,
+    /// Collective communication time (α–β model).
     pub comm: f64,
+    /// Decompression (decode) time.
     pub decode: f64,
 }
 
 impl StepBreakdown {
+    /// End-to-end step time: the paper's "time per batch" column.
     pub fn total(&self) -> f64 {
         self.fwd + self.bwd + self.encode + self.comm + self.decode
     }
@@ -353,7 +419,9 @@ pub fn simulate_step_overlapped(
 }
 
 /// Data sent per epoch in the paper's "MB" (actually MiB — Table 10's
-/// 9216 KB for a 512×4608 f32 tensor is KiB).
+/// 9216 KB for a 512×4608 f32 tensor is KiB). Assumes f32 elements
+/// throughout, via [`Scheme::message_bytes`] and the crate-wide
+/// [`ELEM_BYTES`](crate::grad::ELEM_BYTES) constant it is built on.
 pub fn data_per_epoch_mb(profile: &ModelProfile, scheme: Scheme) -> f64 {
     scheme.message_bytes(&profile.registry) as f64 * profile.steps_per_epoch / (1024.0 * 1024.0)
 }
@@ -391,6 +459,25 @@ mod tests {
         assert!(decentralized_for_scheme(Scheme::Signum, 1).is_none());
         assert!(centralized_for_scheme(Scheme::SignNorm, 1).is_some());
         assert!(centralized_for_scheme(Scheme::Atomo { rank: 2 }, 1).is_none());
+    }
+
+    #[test]
+    fn cli_spelling_round_trips_every_scheme() {
+        let all = [
+            Scheme::Sgd,
+            Scheme::PowerSgd { rank: 4 },
+            Scheme::UnbiasedRank { rank: 2 },
+            Scheme::RandomBlock { rank: 2 },
+            Scheme::RandomK { rank: 7 },
+            Scheme::TopK { rank: 2 },
+            Scheme::SignNorm,
+            Scheme::Signum,
+            Scheme::Atomo { rank: 2 },
+        ];
+        for scheme in all {
+            let (name, rank) = scheme.cli_spelling();
+            assert_eq!(scheme_by_name(&name, rank), Some(scheme), "{name}");
+        }
     }
 
     #[test]

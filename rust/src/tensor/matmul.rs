@@ -28,8 +28,8 @@
 //! later call on that thread — the steady-state step allocates nothing
 //! here (`tests/integration_kernels.rs` pins both properties).
 //!
-//! Perf history in EXPERIMENTS.md §Perf (multi-accumulator + layout
-//! change ≈ 2–3× over the naive blocked loop).
+//! Perf history: multi-accumulator + layout change ≈ 2–3× over the
+//! naive blocked loop (`benches/kernel_hotpath.rs` tracks the numbers).
 
 use super::Tensor;
 use crate::runtime::pool::{parallel_ranges, DisjointSlice};
@@ -131,7 +131,7 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
         });
     });
 }
-// NOTE (perf pass, EXPERIMENTS.md §Perf): a fused two-column dot with
+// NOTE (perf pass): a fused two-column dot with
 // 4-wide accumulators was tried and REVERTED — it broke 8-lane (AVX2)
 // auto-vectorization and ran 2x slower than one 8-wide dot per column.
 
@@ -183,8 +183,9 @@ pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
 /// `matmul` path would pay its per-output-dot overhead on n·m outputs;
 /// here we instead transpose Q once and emit each output row as r
 /// contiguous scaled-accumulate passes (perf pass: 4.4 ms → 1.0 ms per
-/// 512×4608 layer, see EXPERIMENTS.md §Perf). Sharded over output rows
-/// like `matmul_into` — bitwise identical at every thread count.
+/// 512×4608 layer, tracked by `benches/kernel_hotpath.rs`). Sharded
+/// over output rows like `matmul_into` — bitwise identical at every
+/// thread count.
 pub fn matmul_nt_into(p: &Tensor, q: &Tensor, out: &mut Tensor) {
     let (n, r) = (p.rows(), p.cols());
     let (m, rq) = (q.rows(), q.cols());

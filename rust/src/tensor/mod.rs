@@ -38,26 +38,32 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data: vec![value; n] }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Flat row-major view of the elements.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major view of the elements.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its flat buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -81,6 +87,7 @@ impl Tensor {
         self.data[i * self.shape[1] + j]
     }
 
+    /// Matrix element write (rank-2 only, debug-friendly).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         let cols = self.shape[1];

@@ -44,6 +44,29 @@
 //! and the CLI exposes it as `--engine {lockstep,threaded}`. Both engines
 //! produce identical bytes, so concurrent tests that race on the switch
 //! can differ only in thread schedule, never in results.
+//!
+//! # Worked example
+//!
+//! One ring all-reduce on the threaded substrate — one OS thread per
+//! worker, chunks really moving through channels — summing three
+//! workers' buffers in place:
+//!
+//! ```
+//! use powersgd::transport::{ring_all_reduce_worker, InProcRing};
+//!
+//! let mut bufs = vec![vec![1.0f32, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+//! let nodes = InProcRing::endpoints::<Vec<f32>>(bufs.len());
+//! std::thread::scope(|scope| {
+//!     for (node, buf) in nodes.into_iter().zip(bufs.iter_mut()) {
+//!         scope.spawn(move || ring_all_reduce_worker(&node, buf));
+//!     }
+//! });
+//! // Every worker holds the identical elementwise sum — and the bits
+//! // match the sequential lockstep reference exactly.
+//! for buf in &bufs {
+//!     assert_eq!(buf, &vec![111.0, 222.0]);
+//! }
+//! ```
 
 mod bucket;
 pub mod overlap;
@@ -54,7 +77,7 @@ pub use bucket::{bytes_from_mb, Bucket, Bucketer, LayerTiming};
 pub use overlap::{schedule_step, Cluster, ComputePhases, Link, OverlapOutcome};
 pub use ring::{
     ring_all_gather_threaded, ring_all_gather_worker, ring_all_reduce_sum_threaded,
-    ring_all_reduce_worker, InProcRing, RingNode, Transport,
+    ring_all_reduce_worker, InProcDuplex, InProcRing, RingNode, Transport,
 };
 pub use tcp::{MeteredTransport, TcpRing, WireCounters};
 

@@ -26,7 +26,9 @@ use crate::net::Backend;
 /// bandwidth β (bytes/s).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Link {
+    /// Per-hop latency α, seconds.
     pub alpha: f64,
+    /// Effective bandwidth β, bytes/second.
     pub beta: f64,
 }
 
@@ -74,6 +76,7 @@ impl Cluster {
         c
     }
 
+    /// Number of workers (= ring links) in the cluster.
     pub fn workers(&self) -> usize {
         self.links.len()
     }
@@ -119,9 +122,13 @@ impl Cluster {
 /// scaling) for one training step.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ComputePhases {
+    /// Forward pass, seconds.
     pub fwd_s: f64,
+    /// Backward pass, seconds (apportioned per bucket by raw bytes).
     pub bwd_s: f64,
+    /// Compression encode, seconds (apportioned per bucket by msg bytes).
     pub encode_s: f64,
+    /// Decompression decode, seconds (runs after both streams drain).
     pub decode_s: f64,
 }
 

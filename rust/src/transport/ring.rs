@@ -91,6 +91,71 @@ impl InProcRing {
     }
 }
 
+/// A dual-typed in-process endpoint: one f32 ring and one byte ring
+/// with the same rank assignment, behind a single value.
+///
+/// This is the in-process shape of a multi-process endpoint
+/// (`transport::tcp::TcpRing` multiplexes both message types over one
+/// connection pair; here each type gets its own channel ring), so code
+/// written against `Transport<Vec<f32>> + Transport<Vec<u8>>` — the
+/// per-worker compression rounds, the metered TCP-harness trajectory —
+/// runs unmodified on threads without sockets. The experiment
+/// subsystem's measured wire-byte check
+/// ([`crate::experiments::measured_wire_check`]) and the endpoint-
+/// compressor tests are the main users.
+pub struct InProcDuplex {
+    f32s: RingNode<Vec<f32>>,
+    bytes: RingNode<Vec<u8>>,
+}
+
+impl InProcDuplex {
+    /// Build `world` connected dual-typed endpoints (rank `i` sends to
+    /// rank `(i+1) % world` on both rings).
+    pub fn endpoints(world: usize) -> Vec<InProcDuplex> {
+        InProcRing::endpoints::<Vec<f32>>(world)
+            .into_iter()
+            .zip(InProcRing::endpoints::<Vec<u8>>(world))
+            .map(|(f32s, bytes)| InProcDuplex { f32s, bytes })
+            .collect()
+    }
+}
+
+impl Transport<Vec<f32>> for InProcDuplex {
+    fn rank(&self) -> usize {
+        self.f32s.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.f32s.world()
+    }
+
+    fn send_next(&self, msg: Vec<f32>) {
+        self.f32s.send_next(msg);
+    }
+
+    fn recv_prev(&self) -> Vec<f32> {
+        self.f32s.recv_prev()
+    }
+}
+
+impl Transport<Vec<u8>> for InProcDuplex {
+    fn rank(&self) -> usize {
+        Transport::<Vec<u8>>::rank(&self.bytes)
+    }
+
+    fn world(&self) -> usize {
+        Transport::<Vec<u8>>::world(&self.bytes)
+    }
+
+    fn send_next(&self, msg: Vec<u8>) {
+        self.bytes.send_next(msg);
+    }
+
+    fn recv_prev(&self) -> Vec<u8> {
+        self.bytes.recv_prev()
+    }
+}
+
 /// The per-worker half of ring all-reduce (sum), run by one thread per
 /// worker against its [`Transport`] endpoint. `buf` is this worker's
 /// full-length buffer; on return it holds the elementwise sum over all

@@ -28,7 +28,7 @@ use super::metered::MeteredTransport;
 use super::rendezvous::{join, Rendezvous};
 use super::wire::{read_frame, write_frame, Frame};
 use super::TcpRing;
-use crate::collectives::{ring_wire_bytes, CommLog};
+use crate::collectives::{ring_wire_bytes, CollOp, CommLog};
 use crate::compress::{oracle_by_name, worker_by_name, EndpointCompressor};
 use crate::grad::ParamRegistry;
 use crate::optim::{DistOptimizer, EfSgd, LrSchedule};
@@ -47,9 +47,14 @@ pub struct HarnessConfig {
     pub compressor: String,
     /// Compression rank `r` where applicable.
     pub rank: usize,
+    /// Shared seed for parameters, gradients and compressor state.
     pub seed: u64,
+    /// EF-SGD steps to run.
     pub steps: usize,
+    /// Constant learning rate.
     pub lr: f64,
+    /// Momentum λ (an f32 so coordinator and forwarded worker values
+    /// are bit-identical — see `harness_config` in `main.rs`).
     pub momentum: f32,
 }
 
@@ -138,12 +143,18 @@ pub fn oracle_trajectory(world: usize, cfg: &HarnessConfig) -> Result<(Vec<Tenso
 
 /// One worker's finished run.
 pub struct WorkerRunReport {
+    /// This worker's ring rank.
     pub rank: usize,
+    /// Final parameters after the EF-SGD trajectory.
     pub params: Vec<Tensor>,
     /// Per-worker logical bytes (the `CommLog` unit), summed over steps.
     pub logical_bytes: u64,
     /// Payload bytes this worker actually put on the wire.
     pub wire_bytes: u64,
+    /// Every collective the run logged, in execution order — the input
+    /// to the analytic [`ring_wire_bytes`] expansion (the experiment
+    /// report recomputes and publishes it per rank).
+    pub ops: Vec<CollOp>,
 }
 
 /// Run this process's half of the EF-SGD trajectory over a connected,
@@ -210,7 +221,7 @@ where
              logged collectives predicts {expected_wire}"
         );
     }
-    Ok(WorkerRunReport { rank, params, logical_bytes, wire_bytes })
+    Ok(WorkerRunReport { rank, params, logical_bytes, wire_bytes, ops: log.ops })
 }
 
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -246,8 +257,11 @@ pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> 
 
 /// One worker's verified outcome, as the coordinator sees it.
 pub struct WorkerWireReport {
+    /// The reporting worker's ring rank.
     pub rank: usize,
+    /// Payload bytes the worker measured on its metered transport.
     pub wire_bytes: u64,
+    /// Logical per-worker bytes the worker logged.
     pub logical_bytes: u64,
     /// Final parameters bit-identical to the oracle's.
     pub bitwise: bool,
@@ -255,7 +269,9 @@ pub struct WorkerWireReport {
 
 /// A verified launch.
 pub struct LaunchOutcome {
+    /// Number of worker processes in the ring.
     pub world: usize,
+    /// EF-SGD steps every worker ran.
     pub steps: usize,
     /// Per-rank reports (rank-indexed).
     pub reports: Vec<WorkerWireReport>,

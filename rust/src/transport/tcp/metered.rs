@@ -25,6 +25,7 @@ use std::sync::Arc;
 /// (frame headers excluded: the accounting unit is payload bytes, the
 /// same unit as `Scheme::message_bytes`).
 pub trait WireSized {
+    /// Payload bytes this message occupies on the wire.
     fn wire_bytes(&self) -> u64;
 }
 
@@ -68,6 +69,7 @@ pub struct MeteredTransport<T> {
 }
 
 impl<T> MeteredTransport<T> {
+    /// Wrap a transport with zeroed counters.
     pub fn new(inner: T) -> MeteredTransport<T> {
         MeteredTransport {
             inner,

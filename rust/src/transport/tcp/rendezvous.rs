@@ -97,7 +97,9 @@ impl Rendezvous {
 /// connections (control to the coordinator, ring edge to the successor,
 /// ring edge from the predecessor).
 pub struct JoinedRing {
+    /// The rank the coordinator assigned this worker.
     pub rank: usize,
+    /// Total number of workers in the ring.
     pub world: usize,
     /// The original `Hello` connection; carries the final `Report`.
     pub control: TcpStream,

@@ -25,9 +25,14 @@ pub fn black_box<T>(x: T) -> T {
 
 /// Configuration for one benchmark runner.
 pub struct BenchRunner {
+    /// Unmeasured iterations run before sampling starts.
     pub warmup_iters: usize,
+    /// Minimum measured iterations per case.
     pub min_iters: usize,
+    /// Hard cap on measured iterations per case.
     pub max_iters: usize,
+    /// Minimum measured wall-clock per case (with `min_iters`, whichever
+    /// is hit later — unless `max_iters` caps first).
     pub min_time: Duration,
     results: Vec<(String, Summary)>,
 }
@@ -45,6 +50,7 @@ impl Default for BenchRunner {
 }
 
 impl BenchRunner {
+    /// Default runner (full measurement budget).
     pub fn new() -> Self {
         Self::default()
     }
@@ -149,6 +155,7 @@ pub struct BenchJson {
 }
 
 impl BenchJson {
+    /// Empty document for the named bench binary.
     pub fn new(bench: &str) -> BenchJson {
         BenchJson {
             bench: bench.to_string(),
@@ -240,7 +247,9 @@ impl BenchJson {
     }
 }
 
-fn json_escape(s: &str) -> String {
+/// JSON string escaping shared by the hand-rolled writers ([`BenchJson`]
+/// and the experiment artifact writer in [`crate::experiments`]).
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -255,7 +264,7 @@ fn json_escape(s: &str) -> String {
 
 /// JSON number: f64 `Display` never uses exponent notation; non-finite
 /// values (which JSON cannot carry) become null.
-fn json_num(v: f64) -> String {
+pub(crate) fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {

@@ -44,14 +44,17 @@ impl Args {
         Args::parse_from(std::env::args().skip(1))
     }
 
+    /// True when `--name` was given as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name value` / `--name=value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Like [`Args::get`] with a default for absent options.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
@@ -70,10 +73,12 @@ impl Args {
         }
     }
 
+    /// All positional (non-`--`) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
 
+    /// The first positional argument, by convention the subcommand.
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }

@@ -48,16 +48,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Summary of a set of timing samples, in the unit of the samples.
 #[derive(Debug, Clone, Copy)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median (50th percentile, interpolated).
     pub p50: f64,
+    /// 95th percentile (interpolated).
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample set (all-zero summary for empty input).
     pub fn of(xs: &[f64]) -> Summary {
         Summary {
             n: xs.len(),

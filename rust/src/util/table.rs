@@ -1,5 +1,11 @@
-//! Paper-style ASCII table printer used by the bench harness to emit
-//! rows matching the layout of the tables in the PowerSGD paper.
+//! Paper-style table printer used by the bench harness and the
+//! experiment report generator to emit rows matching the layout of the
+//! tables in the PowerSGD paper.
+//!
+//! Two renderings of the same rows: [`Table::render`] produces the
+//! column-aligned ASCII form printed to terminals, [`Table::markdown`]
+//! the GitHub-flavored pipe table embedded in the generated `REPORT.md`
+//! (`powersgd experiment`, DESIGN.md §12).
 
 /// Column-aligned table with a title, built row by row.
 #[derive(Debug, Default)]
@@ -10,6 +16,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -18,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row; the cell count must match the header width.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -36,6 +44,8 @@ impl Table {
         self.row(&owned)
     }
 
+    /// Render the column-aligned ASCII form (`== title ==`, padded
+    /// columns, a dashed rule under the header).
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -67,6 +77,33 @@ impl Table {
         out
     }
 
+    /// Render as a GitHub-flavored-markdown pipe table: a bold title
+    /// line, a blank line, then `| header |`, the `|---|` separator,
+    /// and one `| cell |` line per row. This is the building block of
+    /// the generated `REPORT.md` — byte-deterministic given the rows.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("**{}**\n\n", self.title));
+        out.push('|');
+        for h in &self.header {
+            out.push_str(&format!(" {h} |"));
+        }
+        out.push_str("\n|");
+        for _ in &self.header {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for cell in row {
+                out.push_str(&format!(" {cell} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print the ASCII rendering to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
@@ -93,5 +130,17 @@ mod tests {
     fn wrong_width_panics() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn markdown_pipe_table() {
+        let mut t = Table::new("Demo", &["Algorithm", "Acc"]);
+        t.row_str(&["SGD", "94.3%"]);
+        t.row_str(&["Rank 2", "94.4%"]);
+        let md = t.markdown();
+        assert_eq!(
+            md,
+            "**Demo**\n\n| Algorithm | Acc |\n|---|---|\n| SGD | 94.3% |\n| Rank 2 | 94.4% |\n"
+        );
     }
 }

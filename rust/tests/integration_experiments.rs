@@ -1,0 +1,153 @@
+//! Experiment registry + report generator integration suite
+//! (DESIGN.md §12).
+//!
+//! Pins the three contracts the `powersgd experiment` subcommand rests
+//! on:
+//!
+//! 1. **Snapshot determinism** — `REPORT.md` generation is
+//!    byte-for-byte reproducible for a fixed seed (and therefore
+//!    diffable across commits: the CI `experiment-smoke` job
+//!    regenerates and diffs it on every push);
+//! 2. **CLI round-trip** — every registered scenario's axes parse back
+//!    through the CLI parsers (`scheme_by_name`, `profiles::by_name`,
+//!    `backend_by_name`, `engine_by_name`), so nothing can be
+//!    registered that a user could not also run by hand;
+//! 3. **Measured == analytic** — the wire-check really executes the
+//!    threaded engine and its measured byte counters equal the
+//!    closed-form ring expansion on every rank.
+
+use powersgd::experiments::{
+    generate_report, measured_wire_check, registry, run_suite, scenarios_for, suite_by_name,
+    wire_configs, write_report,
+};
+use powersgd::net::backend_by_name;
+use powersgd::profiles;
+use powersgd::simulate::scheme_by_name;
+use powersgd::transport::engine_by_name;
+
+#[test]
+fn report_generation_is_byte_for_byte_deterministic() {
+    let first = generate_report(42, /*quick=*/ false).expect("report generation");
+    let second = generate_report(42, /*quick=*/ false).expect("report generation");
+    assert_eq!(first, second, "REPORT.md must be byte-for-byte deterministic for a fixed seed");
+    // Structure snapshot: every section and every profile present, and
+    // the measured section verified.
+    for needle in [
+        "# PowerSGD experiment report",
+        "## Rank sweep",
+        "## Scheme compare",
+        "## Worker scaling",
+        "## Backend compare",
+        "## Measured wire bytes (threaded engine)",
+        "ResNet18/CIFAR10",
+        "LSTM/WikiText-2",
+        "Transformer/WikiText-103",
+        "Measured == analytic on every rank: **yes**",
+    ] {
+        assert!(first.contains(needle), "report is missing {needle:?}");
+    }
+    // Value snapshot, hand-computed from the Appendix F shapes: rank-2
+    // PowerSGD on ResNet18 transmits 329 512 bytes/step and SGD
+    // 44 696 320 — the table rows must carry exactly these bytes.
+    assert!(first.contains("| Rank 2 | 329512 |"), "rank-2 ResNet18 bytes row changed");
+    assert!(first.contains("| SGD | 44696320 |"), "SGD ResNet18 bytes row changed");
+}
+
+#[test]
+fn report_file_round_trips_through_write_report() {
+    let dir = std::env::temp_dir().join(format!("powersgd-report-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = write_report(&dir, 42, /*quick=*/ true).expect("write_report");
+    let on_disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(on_disk, generate_report(42, /*quick=*/ true).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_registered_scenario_round_trips_through_the_cli_parser() {
+    for suite in registry() {
+        assert_eq!(suite_by_name(suite.name).map(|s| s.name), Some(suite.name));
+        for quick in [false, true] {
+            for spec in scenarios_for(suite.name, quick) {
+                let (name, rank) = spec.scheme.cli_spelling();
+                assert_eq!(
+                    scheme_by_name(&name, rank),
+                    Some(spec.scheme),
+                    "{}: scheme spelling {name:?} does not round-trip",
+                    spec.id()
+                );
+                assert!(
+                    profiles::by_name(spec.profile).is_some(),
+                    "{}: unknown profile",
+                    spec.id()
+                );
+                assert!(
+                    backend_by_name(spec.backend).is_some(),
+                    "{}: unknown backend",
+                    spec.id()
+                );
+                assert!(engine_by_name(spec.engine).is_some(), "{}: unknown engine", spec.id());
+            }
+        }
+    }
+    // The measured configs must name real per-worker compressors.
+    for quick in [false, true] {
+        for cfg in wire_configs(quick) {
+            assert!(
+                powersgd::compress::worker_by_name(cfg.compressor, cfg.rank.max(1), 0).is_some(),
+                "wire config {:?} has no per-worker implementation",
+                cfg.compressor
+            );
+        }
+    }
+}
+
+#[test]
+fn measured_wire_bytes_match_analytic_on_the_threaded_ring() {
+    let outcome = measured_wire_check("powersgd", 2, 2, 2, 7).expect("wire check");
+    assert_eq!(outcome.per_rank.len(), 2);
+    for r in &outcome.per_rank {
+        assert_eq!(r.measured, r.analytic, "rank {}", r.rank);
+        assert!(r.measured > 0, "rank {} sent nothing", r.rank);
+        // Logical bytes follow the closed-form model exactly:
+        // (12+8)·2·4 + 5·4 + (6+10)·2·4 + 3·4 = 320 bytes/step.
+        assert_eq!(r.logical, 320 * 2, "rank {} logical bytes", r.rank);
+    }
+    assert_eq!(outcome.model_bytes_per_step, 320);
+}
+
+#[test]
+fn gather_scheme_wire_check_passes_too() {
+    // Sign+Norm takes the all-gather path; its ring expansion is
+    // (W−1)·msg per gather rather than the two-phase chunk schedule.
+    let outcome = measured_wire_check("sign-norm", 0, 2, 2, 7).expect("wire check");
+    for r in &outcome.per_rank {
+        assert_eq!(r.measured, r.analytic, "rank {}", r.rank);
+    }
+}
+
+#[test]
+fn suite_runs_produce_artifacts_for_every_registered_suite() {
+    let dir = std::env::temp_dir().join(format!("powersgd-suites-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for suite in registry() {
+        let run = run_suite(suite.name, 42, /*quick=*/ true).expect(suite.name);
+        assert!(!run.records.is_empty(), "{}: no records", suite.name);
+        let doc = run.to_json();
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(
+                doc.matches(open).count(),
+                doc.matches(close).count(),
+                "{}: unbalanced {open}{close}",
+                suite.name
+            );
+        }
+        let path = run.write_json(&dir).unwrap();
+        assert_eq!(
+            path.file_name().unwrap().to_str().unwrap(),
+            format!("EXPERIMENTS_{}.json", suite.name)
+        );
+        assert!(path.exists());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
