@@ -30,12 +30,21 @@
 //! kernel pool (DESIGN.md §11). Results are bitwise identical at every
 //! thread count, so this is purely a wall-clock knob — and it composes
 //! with `--engine threaded` / `launch`: W workers × N kernel threads.
+//!
+//! Add `--trace TRACE.json` to any subcommand to record the run with
+//! the span recorder (DESIGN.md §13) and open the file at
+//! <https://ui.perfetto.dev>: one track per worker and ring thread,
+//! phase-tagged spans from gradient to decompress. `launch` writes
+//! per-rank `TRACE_r<k>.json` parts and merges them into one timeline.
+//! Tracing never changes computed values — traced runs stay bitwise
+//! identical to untraced ones.
 
 use anyhow::Result;
 use powersgd::compress::PowerSgd;
 use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
 use powersgd::data::Classification;
 use powersgd::experiments::{measured_wire_check, run_scenario, scenarios_for};
+use powersgd::obs::Phase;
 use powersgd::optim::{EfSgd, LrSchedule};
 use powersgd::runtime::Runtime;
 use powersgd::util::Table;
@@ -81,6 +90,16 @@ fn main() -> Result<()> {
             r.rank, r.measured, r.analytic, r.logical
         );
     }
+    // The same run was captured by the span recorder (DESIGN.md §13):
+    // per-phase counts are deterministic for the workload. Add
+    // `--trace TRACE.json` to any CLI run for the Perfetto timeline.
+    println!(
+        "spans: {} compress, {} collective, {} ring sends on tracks {:?}",
+        wire.spans.count(Phase::Compress),
+        wire.spans.count(Phase::Collective),
+        wire.spans.count(Phase::RingSend),
+        wire.spans.tracks
+    );
     println!();
 
     // ------------------------------------------------------------------

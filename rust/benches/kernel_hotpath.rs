@@ -16,6 +16,11 @@
 //! sweep — only the wall-clock moves — and the headline records are
 //! `powersgd_step/threads/N` with `speedup_x` vs the 1-thread step.
 //!
+//! The full step also runs with the span recorder off vs fully on
+//! (`powersgd_step/tracing/{off,on}` plus an `overhead_x` record), so
+//! the trace layer's hot-path cost has a standing trajectory next to
+//! the thread-scaling one.
+//!
 //! Emits `BENCH_kernel_hotpath.json` for the CI `bench-smoke` artifact
 //! trail. `BENCH_QUICK=1` shrinks shapes and iteration budgets (the SVD
 //! drops to a smaller matrix) so the smoke job stays fast.
@@ -125,6 +130,40 @@ fn main() {
             &[("threads", t as f64), ("mean_ms", mean), ("speedup_x", speedup)],
         );
     }
+
+    // --- tracing overhead: the identical full step with the span
+    // recorder off vs fully on (timing + trace). The disabled path is
+    // one relaxed atomic load per span site (DESIGN.md §13), so this
+    // off-vs-on pair is the standing record of what observability
+    // costs on the hot path.
+    set_threads(1);
+    let mut traced_means: Vec<f64> = Vec::new();
+    for (label, on) in [("off", false), ("on", true)] {
+        powersgd::obs::enable_timing(on);
+        powersgd::obs::enable_trace(on);
+        let mut comp = PowerSgd::new(2, 1);
+        let mut runner = BenchRunner::from_env();
+        let summary =
+            runner.bench(&format!("PowerSGD rank-2 full step [tracing={label}]"), || {
+                let mut log = CommLog::default();
+                black_box(comp.compress_aggregate(&updates, &mut log));
+            });
+        traced_means.push(summary.mean);
+        json.record_runner(&runner);
+        json.record(
+            &format!("powersgd_step/tracing/{label}"),
+            &[("traced", if on { 1.0 } else { 0.0 }), ("mean_ms", summary.mean)],
+        );
+    }
+    powersgd::obs::enable_timing(false);
+    powersgd::obs::enable_trace(false);
+    powersgd::obs::drain_tracks(); // free the recorded span buffers
+    let overhead = traced_means[1] / traced_means[0];
+    println!(
+        "tracing overhead on the full step: {overhead:.3}x (off {:.2} ms, on {:.2} ms)",
+        traced_means[0], traced_means[1]
+    );
+    json.record("powersgd_step/tracing/overhead", &[("overhead_x", overhead)]);
 
     // --- the Atomo cost: full SVD of the dominant layer (serial; the
     // Jacobi SVD is not pool-parallel) ---

@@ -211,6 +211,7 @@ pub fn all_reduce_mean(buffers: &mut [Vec<f32>], log: &mut CommLog) {
     if buffers.is_empty() {
         return;
     }
+    let _span = crate::obs::span(crate::obs::Phase::Collective);
     let w = buffers.len() as f32;
     let bytes = (buffers[0].len() * 4) as u64;
     ring_all_reduce_sum(buffers);
@@ -245,6 +246,7 @@ pub fn all_gather(messages: &[Vec<f32>], log: &mut CommLog) -> Vec<Arc<Vec<Vec<f
     if messages.is_empty() {
         return Vec::new();
     }
+    let _span = crate::obs::span(crate::obs::Phase::Collective);
     let bytes = (messages[0].len() * 4) as u64;
     log.record(CollKind::AllGather, bytes);
     let view = Arc::new(gathered_view(messages));
@@ -257,6 +259,7 @@ pub fn all_gather_bytes(messages: &[Vec<u8>], log: &mut CommLog) -> Vec<Arc<Vec<
     if messages.is_empty() {
         return Vec::new();
     }
+    let _span = crate::obs::span(crate::obs::Phase::Collective);
     let bytes = messages[0].len() as u64;
     log.record(CollKind::AllGather, bytes);
     let view = Arc::new(gathered_view(messages));

@@ -119,6 +119,16 @@ pub trait Compressor: Send {
     fn scratch_allocations(&self) -> Option<u64> {
         None
     }
+
+    /// How many threads record a `Collective` span for one logical
+    /// collective: 1 for centralized oracles (the calling thread times
+    /// it), W for the decentralized driver (every worker thread times
+    /// the same collective, so summed span seconds are W × wall time).
+    /// `Trainer::train_step` divides by this to recover per-worker
+    /// wall time in its step-time split.
+    fn collective_span_threads(&self) -> usize {
+        1
+    }
 }
 
 /// Indices of matrix-kind (compressed) and vector-kind (uncompressed)

@@ -93,6 +93,7 @@ impl WorkerLink<'_> {
     /// [`crate::collectives::all_reduce_mean`], so results are bitwise
     /// identical to the lockstep oracle.
     pub fn all_reduce_mean(&self, buf: &mut [f32], log: &mut CommLog) {
+        let _span = crate::obs::span(crate::obs::Phase::Collective);
         let bytes = (buf.len() * 4) as u64;
         ring_all_reduce_worker(self.f32s, buf);
         let w = self.world() as f32;
@@ -105,12 +106,14 @@ impl WorkerLink<'_> {
     /// All-gather this worker's byte message; the returned view is
     /// indexed by source rank (identical on every worker).
     pub fn all_gather_bytes(&self, msg: Vec<u8>, log: &mut CommLog) -> Vec<Vec<u8>> {
+        let _span = crate::obs::span(crate::obs::Phase::Collective);
         log.record(CollKind::AllGather, msg.len() as u64);
         ring_all_gather_worker(self.bytes, msg)
     }
 
     /// All-gather this worker's f32 message (top-K index/value pairs).
     pub fn all_gather_f32(&self, msg: Vec<f32>, log: &mut CommLog) -> Vec<Vec<f32>> {
+        let _span = crate::obs::span(crate::obs::Phase::Collective);
         log.record(CollKind::AllGather, (msg.len() * 4) as u64);
         ring_all_gather_worker(self.f32s, msg)
     }
@@ -320,29 +323,36 @@ impl WorkerCompressor for PowerSgdWorker {
         // Stage 1: P = M·Q into the arena, packed all-reduce-mean; the
         // reduced buffer unpacks back into the same slots, which then
         // hold the shared mean and are orthogonalized in place.
-        for (slot, &p) in mat_idx.iter().enumerate() {
-            let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
-            matmul_into(&update[p], &self.qs[slot], out);
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
+                matmul_into(&update[p], &self.qs[slot], out);
+            }
+            pack(&mut scratch.buf, scratch.p.first(k));
         }
-        pack(&mut scratch.buf, scratch.p.first(k));
         link.all_reduce_mean(&mut scratch.buf, log);
-        unpack(&scratch.buf, scratch.p.first_mut(k));
-        for phat in scratch.p.first_mut(k) {
-            gram_schmidt_in_place(phat);
-        }
 
         // Stage 2: Q = Mᵀ·P̂, packed all-reduce-mean, same slot reuse.
-        for (slot, &p) in mat_idx.iter().enumerate() {
-            let out = scratch.q.get(slot, &[update[p].cols(), self.rank]);
-            matmul_tn_into(&update[p], scratch.p.at(slot), out);
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            unpack(&scratch.buf, scratch.p.first_mut(k));
+            for phat in scratch.p.first_mut(k) {
+                gram_schmidt_in_place(phat);
+            }
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let out = scratch.q.get(slot, &[update[p].cols(), self.rank]);
+                matmul_tn_into(&update[p], scratch.p.at(slot), out);
+            }
+            pack(&mut scratch.buf, scratch.q.first(k));
         }
-        pack(&mut scratch.buf, scratch.q.first(k));
         link.all_reduce_mean(&mut scratch.buf, log);
-        unpack(&scratch.buf, scratch.q.first_mut(k));
 
         // Reconstruct P̂·Qᵀ directly into the returned aggregate (the
         // API hands ownership out, so this is the one per-step tensor
         // allocation left on the hot path) and persist warm-start Q.
+        let _d = crate::obs::span(crate::obs::Phase::Decompress);
+        unpack(&scratch.buf, scratch.q.first_mut(k));
         for (slot, &p) in mat_idx.iter().enumerate() {
             let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
             matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
@@ -413,19 +423,23 @@ impl WorkerCompressor for UnbiasedRankWorker {
 
         // Shared sketching matrices: same seed on every worker, drawn
         // in matrix order — E[U·Uᵀ] = I via N(0, 1/r) entries.
-        let sigma = (1.0 / self.rank as f64).sqrt() as f32;
-        for (slot, &p) in mat_idx.iter().enumerate() {
-            let u = scratch.q.get(slot, &[update[p].cols(), self.rank]);
-            self.rng.fill_normal(u.data_mut(), sigma);
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            let sigma = (1.0 / self.rank as f64).sqrt() as f32;
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let u = scratch.q.get(slot, &[update[p].cols(), self.rank]);
+                self.rng.fill_normal(u.data_mut(), sigma);
+            }
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
+                matmul_into(&update[p], scratch.q.at(slot), out);
+            }
+            pack(&mut scratch.buf, scratch.p.first(k));
         }
-        for (slot, &p) in mat_idx.iter().enumerate() {
-            let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
-            matmul_into(&update[p], scratch.q.at(slot), out);
-        }
-        pack(&mut scratch.buf, scratch.p.first(k));
         link.all_reduce_mean(&mut scratch.buf, log);
-        unpack(&scratch.buf, scratch.p.first_mut(k));
 
+        let _d = crate::obs::span(crate::obs::Phase::Decompress);
+        unpack(&scratch.buf, scratch.p.first_mut(k));
         for (slot, &p) in mat_idx.iter().enumerate() {
             let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
             matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
@@ -486,12 +500,15 @@ impl WorkerCompressor for SignNormWorker {
         reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
 
         // Own message: per matrix, 4-byte scale then packed sign bits.
-        scratch.bytes.clear();
-        for &p in &mat_idx {
-            let nm = update[p].len() as f64;
-            let scale = (update[p].norm_l1() / nm) as f32;
-            scratch.bytes.extend_from_slice(&scale.to_le_bytes());
-            pack_signs_into(update[p].data(), &mut scratch.bytes);
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            scratch.bytes.clear();
+            for &p in &mat_idx {
+                let nm = update[p].len() as f64;
+                let scale = (update[p].norm_l1() / nm) as f32;
+                scratch.bytes.extend_from_slice(&scale.to_le_bytes());
+                pack_signs_into(update[p].data(), &mut scratch.bytes);
+            }
         }
         // Hand the scratch buffer itself to the gather (it lands in the
         // view at our own rank) and reclaim it below — no per-step copy.
@@ -500,6 +517,7 @@ impl WorkerCompressor for SignNormWorker {
         // Decode every worker's message in rank order — the same
         // accumulation order as the centralized oracle, so the mean
         // agrees bitwise. Only our own message feeds the EF local.
+        let _d = crate::obs::span(crate::obs::Phase::Decompress);
         let me = link.rank();
         let mut local: Vec<Tensor> = update.iter().map(|t| Tensor::zeros(t.shape())).collect();
         for &p in &vec_idx {
@@ -574,21 +592,25 @@ impl WorkerCompressor for TopKWorker {
         reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
 
         // Own message: (index bits, value) pairs, f32-encoded.
-        scratch.buf.clear();
-        for &p in &mat_idx {
-            let (n, m) = (update[p].rows(), update[p].cols());
-            let budget = sparsify_budget(n, m, self.rank_equiv);
-            let idx = TopK::top_indices(update[p].data(), budget);
-            let d = update[p].data();
-            for &i in &idx {
-                scratch.buf.push(f32::from_bits(i as u32));
-                scratch.buf.push(d[i]);
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            scratch.buf.clear();
+            for &p in &mat_idx {
+                let (n, m) = (update[p].rows(), update[p].cols());
+                let budget = sparsify_budget(n, m, self.rank_equiv);
+                let idx = TopK::top_indices(update[p].data(), budget);
+                let d = update[p].data();
+                for &i in &idx {
+                    scratch.buf.push(f32::from_bits(i as u32));
+                    scratch.buf.push(d[i]);
+                }
             }
         }
         // As in the sign path: move the scratch buffer into the gather
         // and reclaim it from our own slot of the view afterwards.
         let mut gathered = link.all_gather_f32(std::mem::take(&mut scratch.buf), log);
 
+        let _d = crate::obs::span(crate::obs::Phase::Decompress);
         let me = link.rank();
         let mut local: Vec<Tensor> = update.iter().map(|t| Tensor::zeros(t.shape())).collect();
         for &p in &vec_idx {
@@ -656,8 +678,12 @@ impl WorkerCompressor for NoCompressionWorker {
         scratch: &mut ScratchArena,
         log: &mut CommLog,
     ) -> WorkerRound {
-        pack(&mut scratch.buf, update);
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            pack(&mut scratch.buf, update);
+        }
         link.all_reduce_mean(&mut scratch.buf, log);
+        let _d = crate::obs::span(crate::obs::Phase::Decompress);
         let mut mean = Vec::with_capacity(update.len());
         let mut off = 0;
         for t in update {
@@ -741,6 +767,13 @@ impl Compressor for DecentralizedCompressor {
         Some(DecentralizedCompressor::scratch_allocations(self))
     }
 
+    fn collective_span_threads(&self) -> usize {
+        // One Collective span per worker thread. The slots exist after
+        // the first round (the trainer reads this after `step`); before
+        // that the centralized default of 1 is harmless.
+        self.workers.len().max(1)
+    }
+
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         assert!(w > 0, "decentralized compressor needs at least one worker");
@@ -756,6 +789,10 @@ impl Compressor for DecentralizedCompressor {
                 .map(|((slot, update), (fnode, bnode))| {
                     scope.spawn(move || {
                         let link = WorkerLink { f32s: &fnode, bytes: &bnode };
+                        // One trace track per rank: the fleet re-spawns
+                        // these threads every step, and rank-keyed
+                        // tracks keep each worker on one timeline.
+                        crate::obs::set_track(&format!("worker-{}", link.rank()));
                         let mut wlog = CommLog::default();
                         let round = slot.comp.round(update, &link, &mut slot.scratch, &mut wlog);
                         (round, wlog)

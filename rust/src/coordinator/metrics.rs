@@ -13,17 +13,28 @@ pub struct StepRecord {
     pub loss: f64,
     /// Measured per-worker gradient computation time (fwd+bwd), seconds.
     pub grad_s: f64,
-    /// Measured compression + aggregation + decompression time, seconds.
+    /// Measured compression (encode) time, seconds: optimizer wall time
+    /// minus the collective and decompress span time, so the three
+    /// parts sum back to the measured `opt.step` wall clock.
     pub compress_s: f64,
+    /// Measured collective (aggregation) time inside the optimizer
+    /// step, seconds — from obs spans, normalized to a per-worker mean
+    /// on the threaded engine.
+    pub collective_s: f64,
+    /// Measured decompression (decode/reconstruct) time, seconds — from
+    /// obs spans, same normalization as `collective_s`. Zero on paths
+    /// without dedicated decompress spans (the centralized oracle folds
+    /// decode into `compress_s`).
+    pub decompress_s: f64,
     /// Per-worker bytes transmitted this step.
     pub bytes: u64,
     /// Simulated network busy time on the configured cluster, seconds.
     pub sim_comm_s: f64,
     /// Simulated end-to-end step time (compute + exposed communication;
     /// the threaded engine overlaps bucketed collectives with backprop),
-    /// seconds. An upper bound: the measured compress time it folds in
-    /// already includes executing the collectives in memory (see
-    /// `Trainer::train_step`).
+    /// seconds. The encode/decode phases it folds in come from the
+    /// span-based split, so the in-memory execution of the collectives
+    /// is priced once, by the cluster model (see `Trainer::train_step`).
     pub sim_step_s: f64,
     /// Learning rate used this step.
     pub lr: f64,
@@ -76,11 +87,14 @@ impl Metrics {
         Some(if higher_is_better { stats::max(&vals) } else { stats::min(&vals) })
     }
 
-    /// Mean measured per-step times (grad, compress) in seconds.
-    pub fn mean_times(&self) -> (f64, f64) {
+    /// Mean measured per-step times (grad, compress, collective,
+    /// decompress) in seconds.
+    pub fn mean_times(&self) -> (f64, f64, f64, f64) {
         let g: Vec<f64> = self.steps.iter().map(|s| s.grad_s).collect();
         let c: Vec<f64> = self.steps.iter().map(|s| s.compress_s).collect();
-        (stats::mean(&g), stats::mean(&c))
+        let a: Vec<f64> = self.steps.iter().map(|s| s.collective_s).collect();
+        let d: Vec<f64> = self.steps.iter().map(|s| s.decompress_s).collect();
+        (stats::mean(&g), stats::mean(&c), stats::mean(&a), stats::mean(&d))
     }
 
     /// Mean simulated communication time per step, seconds.
@@ -115,6 +129,8 @@ mod tests {
             loss,
             grad_s: 0.01,
             compress_s: 0.002,
+            collective_s: 0.0005,
+            decompress_s: 0.0003,
             bytes: 100,
             sim_comm_s: 0.001,
             sim_step_s: 0.013,
@@ -130,8 +146,9 @@ mod tests {
         assert_eq!(m.total_bytes(), 200);
         assert!((m.mean_loss_last(2) - 1.5).abs() < 1e-12);
         assert!((m.mean_loss_last(1) - 1.0).abs() < 1e-12);
-        let (g, c) = m.mean_times();
+        let (g, c, a, d) = m.mean_times();
         assert!((g - 0.01).abs() < 1e-12 && (c - 0.002).abs() < 1e-12);
+        assert!((a - 0.0005).abs() < 1e-12 && (d - 0.0003).abs() < 1e-12);
     }
 
     #[test]

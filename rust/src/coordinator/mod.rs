@@ -152,6 +152,11 @@ impl Trainer {
         // The engine is process-wide (like a torch.distributed backend):
         // every collective in this process follows the trainer's choice.
         crate::transport::set_engine(cfg.engine);
+        // Phase accumulators feed the per-step time split
+        // (compress/collective/decompress); they only read clocks, never
+        // data, so trajectories are identical with or without them
+        // (DESIGN.md §13).
+        crate::obs::enable_timing(true);
         let cluster = Cluster::with_straggler(cfg.workers, &cfg.backend, cfg.straggler);
         // Bucket by raw gradient bytes (readiness is governed by
         // backprop). Wire bytes per bucket are apportioned from the
@@ -195,12 +200,14 @@ impl Trainer {
 
     /// Run one distributed step; returns the mean worker loss.
     pub fn train_step(&mut self, data: &mut dyn DataSource) -> Result<f64> {
+        let _step_span = crate::obs::span(crate::obs::Phase::Step);
         let w = self.cfg.workers;
         let t0 = Instant::now();
 
         // 1. per-worker fwd/bwd via PJRT (simulated workers execute
         //    sequentially on the shared CPU client; grad_s reports the
         //    per-worker mean, which is what a real worker would spend).
+        let grad_span = crate::obs::span(crate::obs::Phase::Grad);
         let mut losses = 0.0f64;
         let mut per_worker_grads: Vec<Vec<Tensor>> = Vec::with_capacity(w);
         for worker in 0..w {
@@ -216,14 +223,31 @@ impl Trainer {
             losses += loss.data()[0] as f64;
             per_worker_grads.push(self.registry.matricize(outs));
         }
+        drop(grad_span);
         let grad_s = t0.elapsed().as_secs_f64() / w as f64;
         let loss = losses / w as f64;
 
-        // 2–3. compress + aggregate + optimize.
+        // 2–3. compress + aggregate + optimize. Obs span deltas split
+        // the optimizer wall time into encode / collective / decode.
+        // Span time sums across recording threads, so it is normalized
+        // by how many threads the optimizer says time each collective
+        // (W on the decentralized per-worker path, 1 for centralized
+        // compressors — even on the threaded engine, whose ring threads
+        // record ring spans, not Collective ones); encode is the
+        // remainder, so the three parts always sum back to the
+        // measured wall clock.
         let t1 = Instant::now();
+        let before = crate::obs::phase_totals();
         let mut log = CommLog::default();
         let delta = self.opt.step(&per_worker_grads, self.step, &mut log);
-        let compress_s = t1.elapsed().as_secs_f64();
+        let opt_s = t1.elapsed().as_secs_f64();
+        let spans = crate::obs::phase_totals().delta_since(&before);
+        let scale = self.opt.collective_span_threads().max(1) as f64;
+        let collective_s =
+            (spans.seconds(crate::obs::Phase::Collective) / scale).min(opt_s);
+        let decompress_s = (spans.seconds(crate::obs::Phase::Decompress) / scale)
+            .min(opt_s - collective_s);
+        let compress_s = (opt_s - collective_s - decompress_s).max(0.0);
 
         // 4. apply the (de-matricized) delta.
         let delta = self.registry.dematricize(delta);
@@ -239,13 +263,14 @@ impl Trainer {
         // the end-to-end step time: the threaded engine overlaps each
         // bucket's collective with the remaining backprop.
         //
-        // Caveat (documented, deliberate): `compress_s` is wall time
-        // around `opt.step`, which also *executes* the collectives
-        // in memory, so feeding it in as encode time double-counts a
-        // memcpy-speed version of the traffic the cluster model prices
-        // at network speed — `sim_step_s` is an upper bound, and
-        // `compress_s` itself differs slightly between engines (thread
-        // spawns). The exact per-scheme model lives in
+        // The span-based split keeps the in-memory execution of the
+        // collectives *out* of the encode/decode phases fed to the
+        // cluster model (the old whole-wall `compress_s` double-counted
+        // a memcpy-speed version of the traffic the model prices at
+        // network speed). `compress_s` still differs slightly between
+        // engines (thread spawns), and on the lockstep engine decode
+        // stays folded into encode for oracle compressors without
+        // decompress spans. The exact per-scheme model lives in
         // `simulate::simulate_step_overlapped`; this projection is for
         // trend-level comparison on measured runs.
         let cluster = &self.cluster;
@@ -261,7 +286,7 @@ impl Trainer {
             fwd_s: grad_s * (1.0 - BWD_FRACTION),
             bwd_s: grad_s * BWD_FRACTION,
             encode_s: compress_s,
-            decode_s: 0.0,
+            decode_s: decompress_s,
         };
         let overlap = self.cfg.engine == EngineKind::Threaded;
         let outcome =
@@ -272,6 +297,8 @@ impl Trainer {
             loss,
             grad_s,
             compress_s,
+            collective_s,
+            decompress_s,
             bytes,
             sim_comm_s,
             sim_step_s: outcome.total,
@@ -287,7 +314,8 @@ impl Trainer {
                 None => String::new(),
             };
             eprintln!(
-                "[{}] step {:>5} loss {:.4} lr {:.4} bytes/step {} grad {:.1} ms compress {:.1} ms{}",
+                "[{}] step {:>5} loss {:.4} lr {:.4} bytes/step {} grad {:.1} ms \
+                 compress {:.1} ms coll {:.1} ms decode {:.1} ms{}",
                 self.opt.name(),
                 self.step,
                 loss,
@@ -295,6 +323,8 @@ impl Trainer {
                 bytes,
                 grad_s * 1e3,
                 compress_s * 1e3,
+                collective_s * 1e3,
+                decompress_s * 1e3,
                 scratch,
             );
         }

@@ -15,10 +15,15 @@
 //! [`WireConfig`] — into a deterministic `REPORT.md` with paper-style
 //! tables. The CLI entry point is `powersgd experiment`.
 //!
-//! Determinism is a hard requirement: for a fixed seed the report is
-//! byte-for-byte reproducible (pinned by
-//! `tests/integration_experiments.rs`), so a diff of `REPORT.md` is a
-//! diff of the model, never of the run.
+//! Determinism is a hard requirement: for a fixed seed every report
+//! cell except the `~`-prefixed measured durations is byte-for-byte
+//! reproducible (pinned by `tests/integration_experiments.rs` under the
+//! [`report::redact_measured`] projection, which maps every `~`-number
+//! to `~X`), so a diff of `REPORT.md` is a diff of the model, never of
+//! the run. The time-attribution section follows the obs-layer policy
+//! (DESIGN.md §13): span *counts* and byte counters are deterministic
+//! and compared exactly; wall-clock durations are published but marked
+//! volatile.
 //!
 //! # Worked example
 //!
@@ -42,16 +47,17 @@ pub use registry::{
     registry, scenarios_for, suite_by_name, wire_configs, ScenarioSpec, Suite, WireConfig,
     DEFAULT_WORKERS, PROFILES, SCALING_WORKERS, SUITES,
 };
-pub use report::{generate_report, write_report};
+pub use report::{generate_report, redact_measured, write_report};
 
-use crate::collectives::ring_wire_bytes;
+use crate::collectives::{ring_wire_bytes, CollOp};
 use crate::net::backend_by_name;
+use crate::obs::{self, Phase};
 use crate::profiles;
 use crate::simulate::{data_per_epoch_mb, epoch_speedup_vs_single_sgd, simulate_step};
 use crate::transport::tcp::{
     harness_registry, oracle_trajectory, worker_trajectory, HarnessConfig, MeteredTransport,
 };
-use crate::transport::InProcDuplex;
+use crate::transport::{Cluster, InProcDuplex};
 use crate::util::bench::{json_escape, json_num};
 use crate::util::Table;
 use anyhow::{anyhow, bail, Context, Result};
@@ -232,9 +238,25 @@ pub struct WireCheckOutcome {
     /// Closed-form per-worker message bytes per step (the
     /// `message_bytes` model on the harness registry).
     pub model_bytes_per_step: u64,
+    /// Span summary of the traced run, restricted to the `worker-*`
+    /// tracks: per-phase counts, track names, and wire counters are
+    /// deterministic for the workload; durations are wall-clock.
+    pub spans: obs::Summary,
+    /// The α/β overlap model's exposed-communication price for this
+    /// traffic on the calibrated NCCL cluster, seconds per step
+    /// (deterministic). The harness trajectory is strictly sequential,
+    /// so its lockstep schedule exposes every collective second.
+    pub analytic_exposed_s: f64,
 }
 
 impl WireCheckOutcome {
+    /// Mean measured seconds per worker per step spent blocked in ring
+    /// `recv_prev` during the traced run — the run's actually-exposed
+    /// communication on the in-process ring. Volatile wall-clock.
+    pub fn measured_recv_blocked_s(&self) -> f64 {
+        self.spans.seconds(Phase::RingRecv) / (self.workers * self.steps.max(1)) as f64
+    }
+
     /// Short scheme slug for table titles and record names
     /// (`powersgd-r2`, `sign-norm`).
     pub fn slug(&self) -> String {
@@ -290,6 +312,12 @@ impl WireCheckOutcome {
 /// This is the "measured wire bytes from a real `--engine threaded`
 /// run" artifact of the generated report; byte counts are independent
 /// of thread scheduling, so the outcome is deterministic.
+///
+/// The run executes under an [`obs::capture`]: every worker thread
+/// records onto a `worker-<rank>` span track, and the resulting
+/// [`obs::Summary`] feeds the report's time-attribution section. The
+/// capture lock also serializes concurrent wire checks, so summaries
+/// never interleave.
 pub fn measured_wire_check(
     compressor: &str,
     rank: usize,
@@ -305,20 +333,27 @@ pub fn measured_wire_check(
         ..HarnessConfig::default()
     };
     let endpoints = InProcDuplex::endpoints(workers);
-    let reports = std::thread::scope(|scope| {
-        let handles: Vec<_> = endpoints
-            .into_iter()
-            .map(|ep| {
-                let cfg = cfg.clone();
-                scope.spawn(move || worker_trajectory(MeteredTransport::new(ep), &cfg))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("wire-check worker thread panicked"))
-            .collect::<Result<Vec<_>>>()
-    })
-    .context("wire-check: a worker trajectory failed")?;
+    let (reports, cap) = obs::capture(|| {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let cfg = cfg.clone();
+                    scope.spawn(move || {
+                        obs::set_track(&format!("worker-{rank}"));
+                        worker_trajectory(MeteredTransport::new(ep), &cfg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("wire-check worker thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })
+    });
+    let reports = reports.context("wire-check: a worker trajectory failed")?;
+    let spans = cap.summary(&["worker-"]);
 
     // The same cross-checks `powersgd launch` runs over real sockets:
     // bitwise parameters and logical bytes against the lockstep oracle.
@@ -360,6 +395,9 @@ pub fn measured_wire_check(
     let model_bytes_per_step = crate::compress::worker_by_name(compressor, rank, seed)
         .map(|w| w.message_bytes(&harness_registry()))
         .unwrap_or(0);
+    let nccl = backend_by_name("nccl").expect("nccl backend registered");
+    let analytic_exposed_s =
+        analytic_exposed_comm(&reports[0].ops, &Cluster::uniform(workers, &nccl), steps);
     Ok(WireCheckOutcome {
         compressor: compressor.to_string(),
         rank,
@@ -367,7 +405,22 @@ pub fn measured_wire_check(
         steps,
         per_rank,
         model_bytes_per_step,
+        spans,
+        analytic_exposed_s,
     })
+}
+
+/// Price one harness run's logged collectives on the α/β cluster model
+/// and return the exposed-communication seconds per step. The
+/// per-worker trajectory is strictly sequential — compress, collective,
+/// decompress, with nothing overlapping the collectives — so *every*
+/// priced collective second is exposed and the price is the plain sum
+/// of [`Cluster::time`] over the logged ops (exactly what the overlap
+/// scheduler computes with `overlap = false`, without the detour
+/// through its bucket machinery).
+fn analytic_exposed_comm(ops: &[CollOp], cluster: &Cluster, steps: usize) -> f64 {
+    let total: f64 = ops.iter().map(|op| cluster.time(op.kind, op.bytes)).sum();
+    total / steps.max(1) as f64
 }
 
 #[cfg(test)]

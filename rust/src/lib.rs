@@ -33,6 +33,7 @@ pub mod compress;
 pub mod grad;
 pub mod linalg;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod profiles;
 pub mod simulate;

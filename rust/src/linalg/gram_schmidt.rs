@@ -51,6 +51,7 @@ fn col_norm(d: &[f32], n: usize, r: usize, col: usize) -> f64 {
 /// Orthonormalize the columns of `p` (row-major `n×r`) in place.
 /// Bitwise identical at every kernel thread count.
 pub fn gram_schmidt_in_place(p: &mut Tensor) {
+    let _span = crate::obs::span(crate::obs::Phase::GramSchmidt);
     let (n, r) = (p.rows(), p.cols());
     let d = p.data_mut();
     for col in 0..r {

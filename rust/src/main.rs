@@ -30,6 +30,7 @@
 //! powersgd simulate --profile resnet18 --scheme rank2 --engine threaded
 //! powersgd launch --workers 4 --transport tcp --compressor powersgd --rank 2 --steps 3
 //! powersgd launch --workers 2 --compressor sign-norm --steps 5 --threads 4
+//! powersgd launch --workers 2 --steps 3 --trace TRACE.json
 //! powersgd experiment --suite scheme-compare
 //! powersgd experiment --all --out-dir target/experiments
 //! ```
@@ -40,6 +41,14 @@
 //! every thread count**, so `--threads` only changes wall-clock. It
 //! composes with `--engine threaded`: W worker threads each dispatch
 //! onto the shared pool (W workers × N kernel threads).
+//!
+//! `--trace PATH` records the span timeline (step phases, compression
+//! kernels, ring collectives, wire codec; DESIGN.md §13) and writes
+//! Chrome-trace-event JSON openable at <https://ui.perfetto.dev>. On
+//! `launch` each worker process writes a rank-suffixed part
+//! (`TRACE_r<k>.json`) and the coordinator merges the parts into one
+//! file with a track per worker and kernel-pool thread. Tracing only
+//! reads clocks — computed values stay bitwise identical.
 //!
 //! With `--engine threaded`, `train` runs compression decentralized
 //! (per-worker `WorkerCompressor` instances over the `InProcRing`) for
@@ -77,7 +86,16 @@ fn main() -> Result<()> {
         }
         powersgd::runtime::pool::set_threads(n);
     }
-    match args.subcommand() {
+    // `--trace PATH` turns the span recorder fully on (timing + track
+    // capture) before any subcommand runs. Tracing only reads clocks —
+    // computed values stay bitwise identical (DESIGN.md §13).
+    let trace = args.get("trace").map(std::path::PathBuf::from);
+    if trace.is_some() {
+        powersgd::obs::enable_timing(true);
+        powersgd::obs::enable_trace(true);
+    }
+    let sub = args.subcommand();
+    let result = match sub {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("launch") => cmd_launch(&args),
@@ -88,7 +106,35 @@ fn main() -> Result<()> {
             print_help();
             Ok(())
         }
+    };
+    // `worker` writes its own rank-suffixed part and `launch` merges the
+    // per-rank parts itself; every other subcommand is a single process
+    // whose whole timeline is written here.
+    if let (Some(path), Ok(())) = (&trace, &result) {
+        match sub {
+            Some("launch") | Some("worker") => {}
+            // The experiment runner's scoped captures consume the span
+            // buffers as they record, so a whole-process trace here
+            // would be empty — refuse rather than write a misleading
+            // file.
+            Some("experiment") => eprintln!(
+                "warning: --trace is a no-op for `experiment` (its scoped captures consume \
+                 the spans); see the time-attribution section of REPORT.md instead"
+            ),
+            _ => write_trace(path, 0, &format!("powersgd {}", sub.unwrap_or("")))?,
+        }
     }
+    result
+}
+
+/// Drain the recorded span tracks into one Chrome-trace-event JSON file
+/// (openable at <https://ui.perfetto.dev>).
+fn write_trace(path: &std::path::Path, pid: u32, process_name: &str) -> Result<()> {
+    let tracks = powersgd::obs::drain_tracks();
+    let doc = powersgd::obs::chrome::chrome_trace_json(pid, process_name, &tracks);
+    std::fs::write(path, doc).with_context(|| format!("writing trace {}", path.display()))?;
+    eprintln!("wrote trace {} (open at https://ui.perfetto.dev)", path.display());
+    Ok(())
 }
 
 /// `powersgd --help` / bare invocation: subcommands and shared options.
@@ -120,6 +166,12 @@ fn print_help() {
          \x20 --rank R         compression rank (default 2)\n\
          \x20 --workers W      simulated/spawned worker count\n\
          \x20 --seed S         deterministic seed\n\
+         \x20 --trace PATH     write a Chrome-trace (Perfetto) span timeline\n\
+         \x20                  to PATH; open it at https://ui.perfetto.dev.\n\
+         \x20                  `launch` forwards the flag and merges the\n\
+         \x20                  per-rank worker parts (PATH -> TRACE_r<k>\n\
+         \x20                  naming) into one file. Tracing never changes\n\
+         \x20                  computed values (see DESIGN.md).\n\
          \n\
          see DESIGN.md for the full option list, and\n\
          examples/quickstart.rs for a narrated walkthrough (it runs a\n\
@@ -253,16 +305,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     trainer.train(data.as_mut(), steps)?;
 
-    let (grad_s, comp_s) = trainer.metrics.mean_times();
+    let (grad_s, comp_s, coll_s, dec_s) = trainer.metrics.mean_times();
     println!("final loss (mean last 10): {:.4}", trainer.metrics.mean_loss_last(10));
     if let Some(e) = trainer.metrics.last_eval() {
         println!("final eval: {:.3}", e);
     }
     println!(
-        "bytes/step: {}   grad: {:.1} ms   compress: {:.1} ms   sim-comm: {:.2} ms   sim-step: {:.2} ms",
+        "bytes/step: {}   grad: {:.1} ms   compress: {:.1} ms   collective: {:.1} ms   \
+         decompress: {:.1} ms   sim-comm: {:.2} ms   sim-step: {:.2} ms",
         trainer.metrics.total_bytes() / steps as u64,
         grad_s * 1e3,
         comp_s * 1e3,
+        coll_s * 1e3,
+        dec_s * 1e3,
         trainer.metrics.mean_sim_comm() * 1e3,
         trainer.metrics.mean_sim_step() * 1e3,
     );
@@ -519,6 +574,11 @@ fn cmd_launch(args: &Args) -> Result<()> {
         if let Some(t) = args.get("threads") {
             cmd.arg("--threads").arg(t);
         }
+        // Workers inherit the coordinator's cwd, so a relative --trace
+        // base resolves to the same per-rank part paths merged below.
+        if let Some(trace) = args.get("trace") {
+            cmd.arg("--trace").arg(trace);
+        }
         let child = cmd.spawn().context("spawning a worker process")?;
         children.push(child);
     }
@@ -560,6 +620,43 @@ fn cmd_launch(args: &Args) -> Result<()> {
          the analytic message_bytes model",
         outcome.world
     );
+    if let Some(base) = args.get("trace") {
+        merge_launch_traces(std::path::Path::new(base), workers)?;
+    }
+    Ok(())
+}
+
+/// Merge the per-rank worker traces (written by `cmd_worker` under
+/// rank-suffixed names) with the coordinator's own tracks into one
+/// Chrome-trace file at `base`. A rank whose part is missing or
+/// unreadable (dead peer) is skipped with a warning — the merge still
+/// succeeds on the surviving parts.
+fn merge_launch_traces(base: &std::path::Path, workers: usize) -> Result<()> {
+    use powersgd::obs::chrome::{chrome_trace_json, merge_chrome_traces, rank_trace_path};
+    let mut parts = Vec::with_capacity(workers + 1);
+    for rank in 0..workers {
+        let path = rank_trace_path(base, rank);
+        match std::fs::read_to_string(&path) {
+            Ok(doc) => parts.push(doc),
+            Err(e) => eprintln!("warning: skipping trace part {} ({e})", path.display()),
+        }
+    }
+    // The coordinator's own timeline (rendezvous + report collection)
+    // gets the pid after the last worker rank.
+    parts.push(chrome_trace_json(workers as u32, "coordinator", &powersgd::obs::drain_tracks()));
+    match merge_chrome_traces(&parts) {
+        Some(doc) => {
+            std::fs::write(base, doc)
+                .with_context(|| format!("writing merged trace {}", base.display()))?;
+            eprintln!(
+                "wrote merged trace {} (open at https://ui.perfetto.dev)",
+                base.display()
+            );
+        }
+        None => {
+            eprintln!("warning: no valid trace parts; {} not written", base.display());
+        }
+    }
     Ok(())
 }
 
@@ -569,7 +666,19 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let coordinator = args
         .get("coordinator")
         .context("worker needs --coordinator host:port (normally passed by `launch`)")?;
-    powersgd::transport::tcp::run_worker(coordinator, &harness_config(args), harness_timeout(args))
+    let rank = powersgd::transport::tcp::run_worker(
+        coordinator,
+        &harness_config(args),
+        harness_timeout(args),
+    )?;
+    // Each worker process writes its own rank-suffixed trace part
+    // (TRACE.json -> TRACE_r<k>.json); the launching coordinator merges
+    // the parts into the base path.
+    if let Some(base) = args.get("trace") {
+        let path = powersgd::obs::chrome::rank_trace_path(std::path::Path::new(base), rank);
+        write_trace(&path, rank as u32, &format!("worker rank {rank}"))?;
+    }
+    Ok(())
 }
 
 /// `powersgd experiment`: run a registered suite (or `--all`) of the

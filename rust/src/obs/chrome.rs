@@ -1,0 +1,304 @@
+//! Chrome-trace-event (Perfetto-compatible) export, rank-suffixed
+//! artifact naming, and the coordinator-side trace merge.
+//!
+//! The output follows the Trace Event Format's JSON-object flavor:
+//! `{"traceEvents": [...]}` with duration events emitted as balanced
+//! `B`/`E` pairs (`ph`, `ts` in microseconds, `pid` = rank, `tid` =
+//! track index) plus `M` metadata events naming each process and
+//! track. Open the file at <https://ui.perfetto.dev> or
+//! `chrome://tracing`.
+//!
+//! Everything here is hand-rolled string assembly (serde is unavailable
+//! offline) in a fixed line-oriented layout: one event per line inside
+//! the `traceEvents` array. [`merge_chrome_traces`] relies on that
+//! layout to splice per-rank files into one document without a JSON
+//! parser, and [`validate_chrome_trace`] re-checks the structural
+//! invariants (balanced begin/end, per-track timestamp monotonicity)
+//! that `tests/integration_obs.rs` pins.
+
+use super::SpanEvent;
+use crate::util::bench::json_escape;
+use std::path::{Path, PathBuf};
+
+/// Serialize named tracks into one Chrome-trace JSON document.
+///
+/// `pid` groups every track under one process row (the worker rank in
+/// multi-process runs; 0 for single-process `train`/`simulate`), and
+/// `process_name` labels it. Spans on one track may nest but — by the
+/// RAII span discipline — never partially overlap; the begin/end pairs
+/// are emitted from a stack so the output is always balanced even if a
+/// clock hiccup produced a crossing interval (the child is clamped to
+/// its enclosing span).
+pub fn chrome_trace_json(
+    pid: u32,
+    process_name: &str,
+    tracks: &[(String, Vec<SpanEvent>)],
+) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    lines.push(format!(
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \
+         \"args\": {{\"name\": \"{}\"}}}}",
+        json_escape(process_name)
+    ));
+    for (tid, (name, events)) in tracks.iter().enumerate() {
+        lines.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": {tid}, \
+             \"args\": {{\"name\": \"{}\"}}}}",
+            json_escape(name)
+        ));
+        // Events arrive sorted by (start asc, end desc) from
+        // `drain_tracks`; a stack of end timestamps turns the nesting
+        // into balanced B/E pairs. A child end is clamped to its
+        // enclosing span's end, so even a crossing interval (clock
+        // hiccup) emits monotone, balanced output.
+        let mut stack: Vec<u64> = Vec::new();
+        for e in events {
+            while stack.last().is_some_and(|&top| top <= e.start_ns) {
+                let top = stack.pop().expect("checked non-empty");
+                lines.push(end_line(pid, tid, top));
+            }
+            lines.push(format!(
+                "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"B\", \"pid\": {pid}, \
+                 \"tid\": {tid}, \"ts\": {}}}",
+                e.phase.name(),
+                e.phase.category(),
+                micros(e.start_ns)
+            ));
+            let end = stack.last().map_or(e.end_ns, |&parent| e.end_ns.min(parent));
+            stack.push(end.max(e.start_ns));
+        }
+        while let Some(top) = stack.pop() {
+            lines.push(end_line(pid, tid, top));
+        }
+    }
+    let mut out = String::from(EVENTS_OPEN);
+    out.push_str(&lines.join(",\n"));
+    out.push_str(EVENTS_CLOSE);
+    out.push('\n');
+    out
+}
+
+/// One `E` (span end) event line.
+fn end_line(pid: u32, tid: usize, end_ns: u64) -> String {
+    format!("{{\"ph\": \"E\", \"pid\": {pid}, \"tid\": {tid}, \"ts\": {}}}", micros(end_ns))
+}
+
+/// Timestamp in microseconds with nanosecond precision (Perfetto
+/// accepts fractional `ts`).
+fn micros(ns: u64) -> String {
+    let micros = ns / 1000;
+    let frac = ns % 1000;
+    if frac == 0 {
+        format!("{micros}")
+    } else {
+        format!("{micros}.{frac:03}")
+    }
+}
+
+/// Rank-suffixed artifact path: `TRACE.json` → `TRACE_r3.json`. The
+/// per-rank naming convention every multi-process artifact follows.
+pub fn rank_trace_path(base: &Path, rank: usize) -> PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("TRACE");
+    let ext = base.extension().and_then(|s| s.to_str()).unwrap_or("json");
+    base.with_file_name(format!("{stem}_r{rank}.{ext}"))
+}
+
+const EVENTS_OPEN: &str = "{\"traceEvents\": [\n";
+const EVENTS_CLOSE: &str = "\n], \"displayTimeUnit\": \"ms\"}";
+
+/// Merge documents produced by [`chrome_trace_json`] into one. Ranks
+/// whose file is missing simply contribute nothing (the dead-peer-safe
+/// partial merge: `launch` merges whatever per-rank files survived).
+/// Returns `None` when a part does not follow the writer's layout.
+pub fn merge_chrome_traces(parts: &[String]) -> Option<String> {
+    let mut events: Vec<&str> = Vec::new();
+    for part in parts {
+        let body = part
+            .strip_prefix(EVENTS_OPEN)?
+            .split(EVENTS_CLOSE)
+            .next()?;
+        if !body.is_empty() {
+            events.push(body);
+        }
+    }
+    let mut out = String::from(EVENTS_OPEN);
+    out.push_str(&events.join(",\n"));
+    out.push_str(EVENTS_CLOSE);
+    out.push('\n');
+    Some(out)
+}
+
+/// Structural validation of a [`chrome_trace_json`] document: every
+/// `B` has a matching `E` on its `(pid, tid)` track and timestamps are
+/// monotone per track. Returns the number of complete `B`/`E` pairs.
+///
+/// This is a checker for the writer's own line-oriented layout, not a
+/// general JSON parser — exactly what the well-formedness tests and
+/// the `launch` merge path need.
+pub fn validate_chrome_trace(doc: &str) -> Result<usize, String> {
+    let body = doc
+        .strip_prefix(EVENTS_OPEN)
+        .ok_or("missing traceEvents header")?
+        .split(EVENTS_CLOSE)
+        .next()
+        .ok_or("missing traceEvents close")?;
+    let mut pairs = 0usize;
+    // (pid, tid) -> (open B count, last ts seen)
+    let mut tracks: std::collections::HashMap<(u64, u64), (usize, f64)> =
+        std::collections::HashMap::new();
+    for (i, line) in body.lines().enumerate() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() {
+            continue;
+        }
+        let ph = field_str(line, "ph").ok_or_else(|| format!("line {i}: no ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = field_num(line, "pid").ok_or_else(|| format!("line {i}: no pid"))?;
+        let tid = field_num(line, "tid").ok_or_else(|| format!("line {i}: no tid"))?;
+        let ts = field_num(line, "ts").ok_or_else(|| format!("line {i}: no ts"))?;
+        let entry = tracks.entry((pid as u64, tid as u64)).or_insert((0, f64::MIN));
+        if ts < entry.1 {
+            return Err(format!(
+                "line {i}: ts {ts} decreases on track ({pid}, {tid}) (last {})",
+                entry.1
+            ));
+        }
+        entry.1 = ts;
+        match ph {
+            "B" => entry.0 += 1,
+            "E" => {
+                if entry.0 == 0 {
+                    return Err(format!("line {i}: E without open B on ({pid}, {tid})"));
+                }
+                entry.0 -= 1;
+                pairs += 1;
+            }
+            other => return Err(format!("line {i}: unexpected ph {other:?}")),
+        }
+    }
+    for ((pid, tid), (open, _)) in tracks {
+        if open != 0 {
+            return Err(format!("track ({pid}, {tid}): {open} unclosed B events"));
+        }
+    }
+    Ok(pairs)
+}
+
+/// Value of a `"key": "string"` field on one event line.
+fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let end = line[start..].find('"')?;
+    Some(&line[start..start + end])
+}
+
+/// Value of a `"key": number` field on one event line.
+fn field_num(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Phase;
+
+    fn ev(phase: Phase, start_ns: u64, end_ns: u64) -> SpanEvent {
+        SpanEvent { phase, start_ns, end_ns }
+    }
+
+    fn sample_tracks() -> Vec<(String, Vec<SpanEvent>)> {
+        vec![
+            (
+                "worker-0".into(),
+                vec![
+                    ev(Phase::Step, 0, 10_000),
+                    ev(Phase::Compress, 1_000, 4_000),
+                    ev(Phase::Collective, 4_500, 9_000),
+                ],
+            ),
+            ("ring-0".into(), vec![ev(Phase::RingSend, 2_000, 2_500)]),
+        ]
+    }
+
+    #[test]
+    fn export_is_balanced_and_monotone() {
+        let doc = chrome_trace_json(0, "rank 0", &sample_tracks());
+        let pairs = validate_chrome_trace(&doc).expect("valid trace");
+        assert_eq!(pairs, 4);
+        assert!(doc.contains("\"name\": \"step\""));
+        assert!(doc.contains("\"cat\": \"kernel\"") || doc.contains("\"cat\": \"compress\""));
+        assert!(doc.contains("\"thread_name\""));
+        // Fractional-microsecond timestamps survive.
+        assert!(doc.contains("\"ts\": 4.500"), "{doc}");
+    }
+
+    #[test]
+    fn nested_spans_emit_inner_end_first() {
+        let tracks = vec![(
+            "t".to_string(),
+            vec![ev(Phase::Step, 0, 5_000), ev(Phase::Compress, 1_000, 2_000)],
+        )];
+        let doc = chrome_trace_json(0, "p", &tracks);
+        validate_chrome_trace(&doc).expect("valid");
+        let inner_end = doc.find("\"ts\": 2}").expect("inner E at 2µs");
+        let outer_end = doc.find("\"ts\": 5}").expect("outer E at 5µs");
+        assert!(inner_end < outer_end);
+    }
+
+    #[test]
+    fn crossing_interval_is_clamped_not_unbalanced() {
+        // A child whose end crosses its parent's end (clock hiccup):
+        // the export must still balance.
+        let tracks = vec![(
+            "t".to_string(),
+            vec![ev(Phase::Step, 0, 3_000), ev(Phase::Compress, 1_000, 9_000)],
+        )];
+        let doc = chrome_trace_json(0, "p", &tracks);
+        validate_chrome_trace(&doc).expect("clamped trace stays valid");
+    }
+
+    #[test]
+    fn empty_tracks_export_and_validate() {
+        let doc = chrome_trace_json(3, "rank 3", &[]);
+        assert_eq!(validate_chrome_trace(&doc).unwrap(), 0);
+    }
+
+    #[test]
+    fn rank_paths_insert_suffix_before_extension() {
+        assert_eq!(
+            rank_trace_path(Path::new("TRACE.json"), 0),
+            PathBuf::from("TRACE_r0.json")
+        );
+        assert_eq!(
+            rank_trace_path(Path::new("/tmp/out/trace.json"), 12),
+            PathBuf::from("/tmp/out/trace_r12.json")
+        );
+    }
+
+    #[test]
+    fn merge_concatenates_and_stays_valid() {
+        let a = chrome_trace_json(0, "rank 0", &sample_tracks());
+        let b = chrome_trace_json(1, "rank 1", &sample_tracks());
+        let merged = merge_chrome_traces(&[a.clone(), b]).expect("merge");
+        let pairs = validate_chrome_trace(&merged).expect("merged trace valid");
+        assert_eq!(pairs, 8);
+        assert!(merged.contains("\"pid\": 0"));
+        assert!(merged.contains("\"pid\": 1"));
+        // Partial merge (a dead peer's file missing) still validates.
+        let partial = merge_chrome_traces(&[a]).expect("partial merge");
+        assert_eq!(validate_chrome_trace(&partial).unwrap(), 4);
+    }
+
+    #[test]
+    fn merge_rejects_foreign_layout() {
+        assert!(merge_chrome_traces(&["not a trace".to_string()]).is_none());
+    }
+}

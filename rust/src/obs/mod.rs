@@ -1,0 +1,621 @@
+//! Structured tracing and phase attribution (DESIGN.md §13).
+//!
+//! The paper's headline claim is wall-clock speedup, and whether
+//! compression wins is decided by the *timeline*: how much communication
+//! is exposed versus hidden behind compute (arXiv:2103.00543), and how
+//! much of "compression" is really encode/pack overhead
+//! (arXiv:2306.08881). This module is the crate-wide instrumentation
+//! layer that makes that timeline observable: phase-tagged spans through
+//! the coordinator step, the GEMM/Gram–Schmidt kernels, the per-worker
+//! compressors, and both ring transports.
+//!
+//! # Design constraints
+//!
+//! 1. **No value perturbation.** A span only reads clocks and bumps
+//!    atomics; it never touches the data a kernel computes. The bitwise
+//!    determinism contract of DESIGN.md §11 therefore holds with tracing
+//!    on or off — pinned by `tests/integration_obs.rs`.
+//! 2. **Near-zero cost when disabled.** [`span`] loads one relaxed
+//!    atomic and, when every mode bit is clear, returns an inert guard
+//!    without ever reading a clock. The hot path pays one predictable
+//!    branch.
+//! 3. **Deterministic counts, volatile durations.** Span *counts* and
+//!    byte counters are functions of the workload and are reproducible
+//!    run to run; wall-clock durations are not. Every consumer
+//!    (summaries, REPORT.md) keeps the two separated so deterministic
+//!    artifacts stay byte-for-byte stable.
+//!
+//! # Two recording modes
+//!
+//! - **Timing** ([`enable_timing`]): closed spans fold their duration
+//!   into global per-phase accumulators ([`phase_totals`]). This is how
+//!   [`crate::coordinator::Trainer`] splits the old `compress_s` wall
+//!   interval into compress / collective / decompress attribution.
+//! - **Tracing** ([`enable_trace`]): closed spans are additionally
+//!   appended to a per-thread track buffer, exported as a
+//!   Chrome-trace-event/Perfetto JSON by [`chrome::chrome_trace_json`]
+//!   (the `--trace <path>` CLI flag).
+//!
+//! Both modes are process-wide switches, like the
+//! [`crate::transport::set_engine`] backend selector: a trainer or CLI
+//! run flips them once at startup. [`capture`] serializes scoped
+//! recordings (tests, the experiment report) behind a global lock so
+//! concurrent captures cannot interleave.
+
+pub mod chrome;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Recording-mode bit: fold closed spans into the per-phase totals.
+pub const MODE_TIMING: u8 = 1;
+/// Recording-mode bit: append closed spans to per-thread track buffers.
+pub const MODE_TRACE: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Every instrumented phase, the span taxonomy of DESIGN.md §13.
+///
+/// The discriminant indexes the global accumulator table; the order is
+/// part of the deterministic-summary format and new phases append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Phase {
+    /// One full `Trainer::train_step`.
+    Step,
+    /// Forward+backward gradient computation (per step, all workers).
+    Grad,
+    /// Compressor encode work (GEMMs, orthogonalization, packing).
+    Compress,
+    /// A ring collective (all-reduce / all-gather), entry to exit.
+    Collective,
+    /// Compressor decode work (reconstruction from factors/messages).
+    Decompress,
+    /// One transport `send_next` (in-process channel or TCP frame).
+    RingSend,
+    /// One transport `recv_prev` — blocked time is recv wait.
+    RingRecv,
+    /// Wire-codec frame encode (TCP backend only).
+    WireEncode,
+    /// Wire-codec frame decode (TCP backend only).
+    WireDecode,
+    /// Multi-process rendezvous handshake (bind/hello/welcome/connect).
+    Rendezvous,
+    /// `matmul_into` (`P = M·Q`) kernel.
+    MatmulNn,
+    /// `matmul_tn_into` (`Q = Mᵀ·P̂`) kernel.
+    MatmulTn,
+    /// `matmul_nt_into` (reconstruction `P̂·Qᵀ`) kernel.
+    MatmulNt,
+    /// `gram_schmidt_in_place` orthogonalization.
+    GramSchmidt,
+    /// One sharded job slice on a kernel-pool worker thread.
+    PoolChunk,
+}
+
+/// Number of phases (size of the accumulator table).
+pub const PHASE_COUNT: usize = 15;
+
+/// All phases in discriminant order (the deterministic-summary order).
+pub const PHASES: [Phase; PHASE_COUNT] = [
+    Phase::Step,
+    Phase::Grad,
+    Phase::Compress,
+    Phase::Collective,
+    Phase::Decompress,
+    Phase::RingSend,
+    Phase::RingRecv,
+    Phase::WireEncode,
+    Phase::WireDecode,
+    Phase::Rendezvous,
+    Phase::MatmulNn,
+    Phase::MatmulTn,
+    Phase::MatmulNt,
+    Phase::GramSchmidt,
+    Phase::PoolChunk,
+];
+
+impl Phase {
+    /// Stable snake_case name (trace event name, summary table key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Step => "step",
+            Phase::Grad => "grad",
+            Phase::Compress => "compress",
+            Phase::Collective => "collective",
+            Phase::Decompress => "decompress",
+            Phase::RingSend => "ring_send",
+            Phase::RingRecv => "ring_recv",
+            Phase::WireEncode => "wire_encode",
+            Phase::WireDecode => "wire_decode",
+            Phase::Rendezvous => "rendezvous",
+            Phase::MatmulNn => "matmul_nn",
+            Phase::MatmulTn => "matmul_tn",
+            Phase::MatmulNt => "matmul_nt",
+            Phase::GramSchmidt => "gram_schmidt",
+            Phase::PoolChunk => "pool_chunk",
+        }
+    }
+
+    /// Trace-event category: which layer of the system the span lives in.
+    pub fn category(self) -> &'static str {
+        match self {
+            Phase::Step | Phase::Grad => "coordinator",
+            Phase::Compress | Phase::Collective | Phase::Decompress => "compress",
+            Phase::RingSend | Phase::RingRecv | Phase::Rendezvous => "transport",
+            Phase::WireEncode | Phase::WireDecode => "wire",
+            Phase::MatmulNn | Phase::MatmulTn | Phase::MatmulNt | Phase::GramSchmidt
+            | Phase::PoolChunk => "kernel",
+        }
+    }
+}
+
+/// Enable or disable timing mode (per-phase accumulators).
+pub fn enable_timing(on: bool) {
+    set_mode_bit(MODE_TIMING, on);
+}
+
+/// Enable or disable trace mode (per-thread span buffers). Implies that
+/// durations are being recorded; timing totals still require
+/// [`enable_timing`].
+pub fn enable_trace(on: bool) {
+    set_mode_bit(MODE_TRACE, on);
+}
+
+fn set_mode_bit(bit: u8, on: bool) {
+    if on {
+        MODE.fetch_or(bit, Ordering::SeqCst);
+    } else {
+        MODE.fetch_and(!bit, Ordering::SeqCst);
+    }
+}
+
+/// Current mode bits ([`MODE_TIMING`] | [`MODE_TRACE`]).
+pub fn mode() -> u8 {
+    MODE.load(Ordering::Relaxed)
+}
+
+/// Process-wide epoch all trace timestamps are relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------
+// Per-phase accumulators (timing mode).
+// ---------------------------------------------------------------------
+
+struct PhaseCell {
+    count: AtomicU64,
+    nanos: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init template
+const PHASE_CELL_INIT: PhaseCell =
+    PhaseCell { count: AtomicU64::new(0), nanos: AtomicU64::new(0) };
+
+static PHASE_CELLS: [PhaseCell; PHASE_COUNT] = [PHASE_CELL_INIT; PHASE_COUNT];
+
+/// Wire bytes sent / received, folded in from
+/// [`crate::transport::tcp::MeteredTransport`] endpoints that opted in
+/// via [`add_wire_bytes`].
+static WIRE_SENT: AtomicU64 = AtomicU64::new(0);
+static WIRE_RECEIVED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of every phase accumulator plus the global wire counters.
+///
+/// `counts` are deterministic for a fixed workload; `nanos` are
+/// wall-clock and vary run to run. Indexed in [`PHASES`] order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseTotals {
+    /// Closed spans per phase.
+    pub counts: [u64; PHASE_COUNT],
+    /// Accumulated span nanoseconds per phase (volatile).
+    pub nanos: [u64; PHASE_COUNT],
+    /// Wire bytes sent through metered transports.
+    pub wire_sent: u64,
+    /// Wire bytes received through metered transports.
+    pub wire_received: u64,
+}
+
+impl PhaseTotals {
+    /// Seconds accumulated in `phase` (volatile wall-clock).
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.nanos[phase as usize] as f64 * 1e-9
+    }
+
+    /// Closed spans in `phase`.
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.counts[phase as usize]
+    }
+
+    /// Elementwise difference `self − earlier` (saturating), for
+    /// before/after interval attribution.
+    pub fn delta_since(&self, earlier: &PhaseTotals) -> PhaseTotals {
+        let mut out = *self;
+        for i in 0..PHASE_COUNT {
+            out.counts[i] = self.counts[i].saturating_sub(earlier.counts[i]);
+            out.nanos[i] = self.nanos[i].saturating_sub(earlier.nanos[i]);
+        }
+        out.wire_sent = self.wire_sent.saturating_sub(earlier.wire_sent);
+        out.wire_received = self.wire_received.saturating_sub(earlier.wire_received);
+        out
+    }
+}
+
+/// Snapshot the global per-phase accumulators and wire counters.
+pub fn phase_totals() -> PhaseTotals {
+    let mut counts = [0u64; PHASE_COUNT];
+    let mut nanos = [0u64; PHASE_COUNT];
+    for (i, cell) in PHASE_CELLS.iter().enumerate() {
+        counts[i] = cell.count.load(Ordering::SeqCst);
+        nanos[i] = cell.nanos.load(Ordering::SeqCst);
+    }
+    PhaseTotals {
+        counts,
+        nanos,
+        wire_sent: WIRE_SENT.load(Ordering::SeqCst),
+        wire_received: WIRE_RECEIVED.load(Ordering::SeqCst),
+    }
+}
+
+/// Fold transport-level byte counts into the global wire counters
+/// (no-op unless a recording mode is on). Called by metered transports
+/// so trace summaries carry bytes next to span counts.
+pub fn add_wire_bytes(sent: u64, received: u64) {
+    if mode() == 0 {
+        return;
+    }
+    if sent > 0 {
+        WIRE_SENT.fetch_add(sent, Ordering::SeqCst);
+    }
+    if received > 0 {
+        WIRE_RECEIVED.fetch_add(received, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tracks (trace mode): one named event buffer per recording thread.
+// ---------------------------------------------------------------------
+
+/// One closed span on a track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// What the span measured.
+    pub phase: Phase,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// End, nanoseconds since the process trace epoch.
+    pub end_ns: u64,
+}
+
+/// A named event buffer. Tracks are keyed by *name*, not by thread id:
+/// ephemeral threads re-created every step (the decentralized engine's
+/// per-worker threads, the threaded ring's collective threads) adopt
+/// the same track via [`set_track`], so a trace shows one stable row
+/// per logical worker instead of thousands of one-shot threads.
+struct Track {
+    name: String,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Track>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Track>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static CURRENT_TRACK: RefCell<Option<Arc<Track>>> = const { RefCell::new(None) };
+}
+
+fn track_named(name: &str) -> Arc<Track> {
+    let mut tracks = registry().lock().expect("obs track registry poisoned");
+    if let Some(t) = tracks.iter().find(|t| t.name == name) {
+        return Arc::clone(t);
+    }
+    let t = Arc::new(Track { name: name.to_string(), events: Mutex::new(Vec::new()) });
+    tracks.push(Arc::clone(&t));
+    t
+}
+
+/// Bind the current thread's spans to the track called `name`,
+/// creating it on first use. A no-op outside trace mode, so hot paths
+/// (the threaded ring and the worker fleet re-bind on every spawned
+/// thread) may call it unconditionally without touching the registry
+/// lock. Threads that never call this record onto a track named after
+/// the OS thread name (e.g. `powersgd-kernel-0`), or `main` for the
+/// unnamed main thread.
+pub fn set_track(name: &str) {
+    if mode() & MODE_TRACE == 0 {
+        return;
+    }
+    let t = track_named(name);
+    CURRENT_TRACK.with(|cur| *cur.borrow_mut() = Some(t));
+}
+
+fn current_track() -> Arc<Track> {
+    CURRENT_TRACK.with(|cur| {
+        let mut cur = cur.borrow_mut();
+        if let Some(t) = cur.as_ref() {
+            return Arc::clone(t);
+        }
+        let name = std::thread::current().name().unwrap_or("main").to_string();
+        let t = track_named(&name);
+        *cur = Some(Arc::clone(&t));
+        t
+    })
+}
+
+/// All tracks with their events, sorted by track name then span start —
+/// the input to [`chrome::chrome_trace_json`] and [`Summary::from_tracks`].
+pub fn drain_tracks() -> Vec<(String, Vec<SpanEvent>)> {
+    let tracks = registry().lock().expect("obs track registry poisoned");
+    let mut out: Vec<(String, Vec<SpanEvent>)> = tracks
+        .iter()
+        .map(|t| {
+            let mut events =
+                std::mem::take(&mut *t.events.lock().expect("obs track poisoned"));
+            events.sort_by_key(|e| (e.start_ns, std::cmp::Reverse(e.end_ns)));
+            (t.name.clone(), events)
+        })
+        .filter(|(_, events)| !events.is_empty())
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+// ---------------------------------------------------------------------
+// Spans.
+// ---------------------------------------------------------------------
+
+/// RAII span guard: records on drop. Inert (no clock read) when every
+/// recording mode is off at [`span`] time.
+pub struct SpanGuard {
+    live: Option<(Phase, u64)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some((phase, start_ns)) = self.live else { return };
+        let end_ns = now_ns();
+        let m = mode();
+        if m & MODE_TIMING != 0 {
+            let cell = &PHASE_CELLS[phase as usize];
+            cell.count.fetch_add(1, Ordering::SeqCst);
+            cell.nanos.fetch_add(end_ns.saturating_sub(start_ns), Ordering::SeqCst);
+        }
+        if m & MODE_TRACE != 0 {
+            let track = current_track();
+            track
+                .events
+                .lock()
+                .expect("obs track poisoned")
+                .push(SpanEvent { phase, start_ns, end_ns });
+        }
+    }
+}
+
+/// Open a span for `phase`. The returned guard records when dropped;
+/// when no recording mode is enabled this is one relaxed atomic load.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    if mode() == 0 {
+        return SpanGuard { live: None };
+    }
+    SpanGuard { live: Some((phase, now_ns())) }
+}
+
+// ---------------------------------------------------------------------
+// Scoped capture (tests, experiment report).
+// ---------------------------------------------------------------------
+
+/// A finished scoped recording: the traced workload's tracks plus the
+/// phase-total delta over the captured interval.
+pub struct Capture {
+    /// Tracks recorded during the capture, name-sorted.
+    pub tracks: Vec<(String, Vec<SpanEvent>)>,
+    /// Per-phase totals accumulated during the capture.
+    pub totals: PhaseTotals,
+}
+
+impl Capture {
+    /// Deterministic/volatile summary restricted to tracks whose name
+    /// starts with one of `prefixes` (empty = all tracks). Restricting
+    /// by prefix keeps parallel test binaries from polluting each
+    /// other's counts: a capture of `worker-*` tracks is blind to spans
+    /// another test records on `main`.
+    pub fn summary(&self, prefixes: &[&str]) -> Summary {
+        let filtered: Vec<&(String, Vec<SpanEvent>)> = self
+            .tracks
+            .iter()
+            .filter(|(name, _)| {
+                prefixes.is_empty() || prefixes.iter().any(|p| name.starts_with(p))
+            })
+            .collect();
+        let mut counts = [0u64; PHASE_COUNT];
+        let mut nanos = [0u64; PHASE_COUNT];
+        for (_, events) in &filtered {
+            for e in events.iter() {
+                counts[e.phase as usize] += 1;
+                nanos[e.phase as usize] += e.end_ns - e.start_ns;
+            }
+        }
+        Summary {
+            counts,
+            nanos,
+            tracks: filtered.iter().map(|(name, _)| name.clone()).collect(),
+            wire_sent: self.totals.wire_sent,
+            wire_received: self.totals.wire_received,
+        }
+    }
+}
+
+/// Per-phase aggregation of a capture's tracks. `counts`, `tracks`,
+/// `wire_*` are deterministic for a fixed workload; `nanos` are not.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Summary {
+    /// Spans per phase ([`PHASES`] order) — deterministic.
+    pub counts: [u64; PHASE_COUNT],
+    /// Nanoseconds per phase — volatile wall-clock.
+    pub nanos: [u64; PHASE_COUNT],
+    /// Names of the tracks aggregated, sorted — deterministic.
+    pub tracks: Vec<String>,
+    /// Wire bytes sent during the capture — deterministic.
+    pub wire_sent: u64,
+    /// Wire bytes received during the capture — deterministic.
+    pub wire_received: u64,
+}
+
+impl Summary {
+    /// Seconds spent in `phase` (volatile).
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.nanos[phase as usize] as f64 * 1e-9
+    }
+
+    /// Span count for `phase` (deterministic).
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.counts[phase as usize]
+    }
+
+    /// The deterministic projection: per-phase counts plus byte
+    /// counters, with every duration dropped. Two captures of the same
+    /// workload must agree on this exactly
+    /// (`tests/integration_obs.rs`).
+    pub fn deterministic_key(&self) -> (Vec<(String, u64)>, Vec<String>, u64, u64) {
+        let counts = PHASES
+            .iter()
+            .map(|&p| (p.name().to_string(), self.counts[p as usize]))
+            .collect();
+        (counts, self.tracks.clone(), self.wire_sent, self.wire_received)
+    }
+}
+
+fn capture_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Run `f` with tracing + timing enabled and return its result together
+/// with everything recorded while it ran.
+///
+/// Captures are serialized behind a global lock (two concurrent
+/// captures in one process would otherwise interleave their spans);
+/// the previous mode bits are restored on exit, so a capture inside an
+/// always-timing trainer process leaves timing on. Spans recorded by
+/// *other* threads during the capture do land in the capture's tracks —
+/// filter with [`Capture::summary`] prefixes where that matters.
+pub fn capture<T>(f: impl FnOnce() -> T) -> (T, Capture) {
+    let _guard = capture_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let before_mode = MODE.load(Ordering::SeqCst);
+    drain_tracks(); // discard anything stale from before the capture
+    let before = phase_totals();
+    MODE.store(MODE_TIMING | MODE_TRACE, Ordering::SeqCst);
+    let out = f();
+    MODE.store(before_mode, Ordering::SeqCst);
+    let totals = phase_totals().delta_since(&before);
+    let tracks = drain_tracks();
+    (out, Capture { tracks, totals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracks created by tests in this module, distinct per test so
+    /// parallel test threads cannot collide on a track name.
+    fn spin(track: &str, phase: Phase, n: usize) {
+        set_track(track);
+        for _ in 0..n {
+            let _s = span(phase);
+            std::hint::black_box(2 + 2);
+        }
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        // No capture lock needed: this asserts on the *absence* of
+        // recording for a unique track name.
+        let before = phase_totals();
+        {
+            let _s = span(Phase::GramSchmidt);
+        }
+        // Another test may have a capture live; only assert when the
+        // mode really was off at span time.
+        if mode() == 0 {
+            let after = phase_totals();
+            assert_eq!(after.counts, before.counts);
+        }
+    }
+
+    #[test]
+    fn capture_counts_are_deterministic() {
+        let work = || spin("obs-unit-a", Phase::Compress, 7);
+        let ((), cap1) = capture(work);
+        let ((), cap2) = capture(work);
+        let s1 = cap1.summary(&["obs-unit-a"]);
+        let s2 = cap2.summary(&["obs-unit-a"]);
+        assert_eq!(s1.count(Phase::Compress), 7);
+        assert_eq!(s1.deterministic_key(), s2.deterministic_key());
+        assert_eq!(s1.tracks, vec!["obs-unit-a".to_string()]);
+    }
+
+    #[test]
+    fn summary_prefix_filter_excludes_other_tracks() {
+        let ((), cap) = capture(|| {
+            spin("obs-unit-b1", Phase::Collective, 3);
+            spin("obs-unit-b2", Phase::Collective, 2);
+        });
+        assert_eq!(cap.summary(&["obs-unit-b1"]).count(Phase::Collective), 3);
+        assert_eq!(cap.summary(&["obs-unit-b"]).count(Phase::Collective), 5);
+        assert_eq!(cap.summary(&["no-such-prefix"]).count(Phase::Collective), 0);
+    }
+
+    #[test]
+    fn wire_bytes_fold_into_the_capture() {
+        let ((), cap) = capture(|| add_wire_bytes(120, 64));
+        // `>=`, not `==`: the wire counters are process-global, and a
+        // concurrent test exercising a metered transport while this
+        // capture holds the mode on would fold its bytes in too.
+        assert!(cap.totals.wire_sent >= 120, "sent {}", cap.totals.wire_sent);
+        assert!(cap.totals.wire_received >= 64, "received {}", cap.totals.wire_received);
+    }
+
+    #[test]
+    fn span_durations_are_ordered_and_nested() {
+        let ((), cap) = capture(|| {
+            set_track("obs-unit-c");
+            let _outer = span(Phase::Step);
+            {
+                let _inner = span(Phase::Compress);
+                std::hint::black_box([0u8; 64]);
+            }
+        });
+        let track = cap
+            .tracks
+            .iter()
+            .find(|(name, _)| name == "obs-unit-c")
+            .expect("track recorded");
+        // Inner closes before outer; both are well-formed intervals.
+        let inner = track.1.iter().find(|e| e.phase == Phase::Compress).unwrap();
+        let outer = track.1.iter().find(|e| e.phase == Phase::Step).unwrap();
+        assert!(inner.start_ns <= inner.end_ns);
+        assert!(outer.start_ns <= inner.start_ns);
+        assert!(inner.end_ns <= outer.end_ns);
+    }
+
+    #[test]
+    fn phase_metadata_is_total() {
+        assert_eq!(PHASES.len(), PHASE_COUNT);
+        for (i, p) in PHASES.iter().enumerate() {
+            assert_eq!(*p as usize, i, "{}", p.name());
+            assert!(!p.name().is_empty());
+            assert!(!p.category().is_empty());
+        }
+    }
+}

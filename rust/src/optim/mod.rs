@@ -37,6 +37,13 @@ pub trait DistOptimizer: Send {
     fn scratch_allocations(&self) -> Option<u64> {
         None
     }
+
+    /// How many threads record a `Collective` span per logical
+    /// collective (see [`Compressor::collective_span_threads`]); 1 for
+    /// optimizers that run collectives on the calling thread.
+    fn collective_span_threads(&self) -> usize {
+        1
+    }
 }
 
 /// Distributed error-feedback SGD with momentum (Algorithm 2).
@@ -102,6 +109,10 @@ impl DistOptimizer for EfSgd {
 
     fn scratch_allocations(&self) -> Option<u64> {
         self.compressor.scratch_allocations()
+    }
+
+    fn collective_span_threads(&self) -> usize {
+        self.compressor.collective_span_threads()
     }
 
     fn step(&mut self, grads: &[Vec<Tensor>], step: usize, log: &mut CommLog) -> Vec<Tensor> {

@@ -195,6 +195,11 @@ impl KernelPool {
 fn worker_loop(rx: Receiver<Job>) {
     while let Ok(job) = rx.recv() {
         let ok = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // One span per dispatched job slice: pool threads show up
+            // as their own `powersgd-kernel-{id}` tracks in a trace
+            // (DESIGN.md §13); spans never touch the chunk data, so
+            // the bitwise-determinism contract above is unaffected.
+            let _span = crate::obs::span(crate::obs::Phase::PoolChunk);
             for c in job.start..job.end {
                 (job.task.0)(c);
             }

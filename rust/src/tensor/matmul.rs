@@ -32,6 +32,7 @@
 //! naive blocked loop (`benches/kernel_hotpath.rs` tracks the numbers).
 
 use super::Tensor;
+use crate::obs::{span, Phase};
 use crate::runtime::pool::{parallel_ranges, DisjointSlice};
 use std::cell::RefCell;
 
@@ -102,6 +103,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// output rows on the kernel pool — bitwise identical to the serial
 /// kernel at every thread count.
 pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let _span = span(Phase::MatmulNn);
     let (n, m) = (a.rows(), a.cols());
     let (mb, r) = (b.rows(), b.cols());
     assert_eq!(m, mb, "matmul inner-dim mismatch: {m} vs {mb}");
@@ -146,6 +148,7 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
 /// serial summation order, so results are bitwise identical at every
 /// thread count.
 pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
+    let _span = span(Phase::MatmulTn);
     let (n, m) = (a.rows(), a.cols());
     let (np, r) = (p.rows(), p.cols());
     assert_eq!(n, np, "matmul_tn inner-dim mismatch: {n} vs {np}");
@@ -187,6 +190,7 @@ pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
 /// over output rows like `matmul_into` — bitwise identical at every
 /// thread count.
 pub fn matmul_nt_into(p: &Tensor, q: &Tensor, out: &mut Tensor) {
+    let _span = span(Phase::MatmulNt);
     let (n, r) = (p.rows(), p.cols());
     let (m, rq) = (q.rows(), q.cols());
     assert_eq!(r, rq, "matmul_nt rank mismatch: {r} vs {rq}");

@@ -18,6 +18,7 @@
 //! *bitwise*, not just within associativity tolerance — see
 //! `tests/integration_transport.rs`.
 
+use crate::obs::{span, Phase};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 /// A worker's point-to-point endpoint in a directed ring.
@@ -54,10 +55,14 @@ impl<M: Send> Transport<M> for RingNode<M> {
     }
 
     fn send_next(&self, msg: M) {
+        let _span = span(Phase::RingSend);
         self.tx_next.send(msg).expect("ring successor hung up");
     }
 
     fn recv_prev(&self) -> M {
+        // The span covers blocked time: recv wait is exactly the
+        // exposed-communication gap the trace is meant to show.
+        let _span = span(Phase::RingRecv);
         self.rx_prev.recv().expect("ring predecessor hung up")
     }
 }
@@ -234,7 +239,14 @@ pub fn ring_all_reduce_sum_threaded(buffers: &mut [Vec<f32>]) {
     let nodes = InProcRing::endpoints::<Vec<f32>>(w);
     std::thread::scope(|scope| {
         for (node, buf) in nodes.into_iter().zip(buffers.iter_mut()) {
-            scope.spawn(move || ring_all_reduce_worker(&node, buf));
+            scope.spawn(move || {
+                // One stable trace track per ring position: these
+                // threads are re-spawned every collective, and keying
+                // by rank keeps a trace at one row per worker instead
+                // of one per short-lived thread.
+                crate::obs::set_track(&format!("ring-{}", node.rank()));
+                ring_all_reduce_worker(&node, buf)
+            });
         }
     });
 }
@@ -285,7 +297,12 @@ where
         let handles: Vec<_> = nodes
             .into_iter()
             .zip(messages.iter())
-            .map(|(node, msg)| scope.spawn(move || ring_all_gather_worker(&node, msg.clone())))
+            .map(|(node, msg)| {
+                scope.spawn(move || {
+                    crate::obs::set_track(&format!("ring-{}", node.rank()));
+                    ring_all_gather_worker(&node, msg.clone())
+                })
+            })
             .collect();
         handles
             .into_iter()

@@ -236,8 +236,10 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 
 /// Full worker process: rendezvous at `coordinator`, run the
 /// trajectory over a metered [`TcpRing`], report the final parameters
-/// and byte counters back on the control connection.
-pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> Result<()> {
+/// and byte counters back on the control connection. Returns the rank
+/// the rendezvous assigned (callers use it for rank-suffixed artifacts
+/// like per-rank trace files).
+pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> Result<usize> {
     let joined = join(coordinator, timeout)?;
     let (ring, mut control) = TcpRing::from_joined(joined, timeout)?;
     let report = worker_trajectory(MeteredTransport::new(ring), cfg)?;
@@ -252,7 +254,7 @@ pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> 
     )
     .map_err(|e| anyhow!(e))
     .with_context(|| format!("rank {}: reporting to the coordinator", report.rank))?;
-    Ok(())
+    Ok(report.rank)
 }
 
 /// One worker's verified outcome, as the coordinator sees it.

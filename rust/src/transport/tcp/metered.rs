@@ -113,13 +113,17 @@ where
     }
 
     fn send_next(&self, msg: M) {
-        self.sent.fetch_add(msg.wire_bytes(), Ordering::SeqCst);
+        let n = msg.wire_bytes();
+        self.sent.fetch_add(n, Ordering::SeqCst);
+        crate::obs::add_wire_bytes(n, 0);
         self.inner.send_next(msg);
     }
 
     fn recv_prev(&self) -> M {
         let msg = self.inner.recv_prev();
-        self.received.fetch_add(msg.wire_bytes(), Ordering::SeqCst);
+        let n = msg.wire_bytes();
+        self.received.fetch_add(n, Ordering::SeqCst);
+        crate::obs::add_wire_bytes(0, n);
         msg
     }
 }

@@ -131,6 +131,7 @@ impl TcpRing {
     }
 
     fn send_frame_checked(&self, frame: &Frame) -> Result<()> {
+        let _span = crate::obs::span(crate::obs::Phase::RingSend);
         fn write_and_flush(
             writer: &mut BufWriter<TcpStream>,
             frame: &Frame,
@@ -156,6 +157,8 @@ impl TcpRing {
     }
 
     fn recv_frame_checked(&self) -> Result<Frame> {
+        // Covers blocked socket time: the exposed-communication gap.
+        let _span = crate::obs::span(crate::obs::Phase::RingRecv);
         let mut reader = self.reader.borrow_mut();
         read_frame(&mut *reader).map_err(|e| {
             let (me, pred) = (self.rank, self.pred());

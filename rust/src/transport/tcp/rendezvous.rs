@@ -54,6 +54,7 @@ impl Rendezvous {
     /// each its `Welcome`. Returns the control streams indexed by rank;
     /// workers send their final `Report` frames on these.
     pub fn run(&self, world: usize, timeout: Duration) -> Result<Vec<TcpStream>> {
+        let _span = crate::obs::span(crate::obs::Phase::Rendezvous);
         assert!(world > 0, "rendezvous needs at least one worker");
         let mut joined: Vec<(TcpStream, String)> = Vec::with_capacity(world);
         let deadline = Instant::now() + timeout;
@@ -112,6 +113,7 @@ pub struct JoinedRing {
 /// The worker's half of the handshake: join the ring hosted by
 /// `coordinator` (a `host:port` string).
 pub fn join(coordinator: &str, timeout: Duration) -> Result<JoinedRing> {
+    let _span = crate::obs::span(crate::obs::Phase::Rendezvous);
     // Bind the ring listener *before* saying Hello, so the predecessor
     // can dial us the moment it learns our address.
     let listener =

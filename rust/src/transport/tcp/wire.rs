@@ -133,6 +133,7 @@ impl Frame {
     /// and surface on a *healthy* peer as a corrupt-stream error — a
     /// loud local failure at the sender is strictly better.
     pub fn encode(&self) -> Vec<u8> {
+        let _span = crate::obs::span(crate::obs::Phase::WireEncode);
         let payload = self.payload();
         assert!(
             payload.len() as u64 <= MAX_PAYLOAD as u64,
@@ -238,6 +239,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     }
     let mut payload = vec![0u8; len as usize];
     read_exact(r, &mut payload, "payload")?;
+    let _span = crate::obs::span(crate::obs::Phase::WireDecode);
     decode_payload(kind, &payload)
 }
 

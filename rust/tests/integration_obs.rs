@@ -1,0 +1,165 @@
+//! Observability integration suite (DESIGN.md §13).
+//!
+//! Pins the three contracts of the `obs` span recorder:
+//!
+//! 1. **No perturbation** — a fully traced run (timing + trace mode
+//!    both on) produces bitwise-identical results to an untraced run,
+//!    on both transport engines and at 1 and 4 kernel-pool threads;
+//! 2. **Valid export** — a capture of a real compression round
+//!    serializes to well-formed Chrome-trace JSON (balanced B/E pairs,
+//!    monotone per-track timestamps), and per-rank documents merge —
+//!    including the partial, dead-peer merge — without losing validity;
+//! 3. **Deterministic summary** — two captures of the same workload
+//!    agree exactly on the deterministic projection (per-phase span
+//!    counts, track names, wire bytes); only wall-clock durations may
+//!    differ.
+
+use powersgd::collectives::CommLog;
+use powersgd::compress::{Compressor, PowerSgd};
+use powersgd::obs::{self, chrome, Phase};
+use powersgd::runtime::pool::set_threads;
+use powersgd::tensor::Tensor;
+use powersgd::transport::{set_engine, EngineKind};
+use powersgd::util::Rng;
+use std::sync::Mutex;
+
+/// Every test here flips process-wide state (obs mode bits, the
+/// transport engine, the kernel-pool width); one lock serializes the
+/// whole binary so no test observes another's configuration.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-worker gradient-shaped updates (two matrices plus a bias
+/// vector), freshly seeded per call so consecutive steps differ.
+fn worker_updates(seed: u64, workers: usize) -> Vec<Vec<Tensor>> {
+    let mut rng = Rng::new(seed);
+    (0..workers)
+        .map(|_| {
+            [&[24usize, 16][..], &[7], &[9, 11]]
+                .into_iter()
+                .map(|shape| {
+                    let mut t = Tensor::zeros(shape);
+                    rng.fill_normal(t.data_mut(), 1.0);
+                    t
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Three full centralized PowerSGD rounds (rank 2, warm-started factor
+/// memory) over 4 workers; returns the final aggregated mean.
+fn powersgd_rounds() -> Vec<Tensor> {
+    let mut comp = PowerSgd::new(2, 1);
+    let mut mean = Vec::new();
+    for step in 0..3u64 {
+        let mut log = CommLog::default();
+        mean = comp.compress_aggregate(&worker_updates(900 + step, 4), &mut log).mean;
+    }
+    mean
+}
+
+/// Contract 1: tracing must never perturb computed values. The same
+/// seeded workload runs untraced and under a full capture, on every
+/// engine × thread-count combination, and every result must be
+/// bit-identical — to its untraced twin and across configurations
+/// (kernels are bitwise-deterministic at any thread count, DESIGN.md
+/// §11, so one reference covers all eight runs).
+#[test]
+fn traced_run_is_bitwise_identical_to_untraced() {
+    let _g = obs_guard();
+    let mut results: Vec<(String, Vec<Tensor>)> = Vec::new();
+    for engine in [EngineKind::Lockstep, EngineKind::Threaded] {
+        for threads in [1usize, 4] {
+            set_engine(engine);
+            set_threads(threads);
+            let untraced = powersgd_rounds();
+            let (traced, _cap) = obs::capture(powersgd_rounds);
+            set_engine(EngineKind::Lockstep);
+            set_threads(1);
+            assert_eq!(
+                traced, untraced,
+                "tracing perturbed the result ({engine:?}, {threads} threads)"
+            );
+            results.push((format!("{engine:?} x {threads} threads"), untraced));
+        }
+    }
+    let (first_label, first) = &results[0];
+    for (label, r) in &results[1..] {
+        assert_eq!(r, first, "{label} diverged from {first_label}");
+    }
+}
+
+/// Contract 2: a capture of a real threaded-engine compression round
+/// exports to valid Chrome-trace JSON, and the coordinator-side merge
+/// (full and dead-peer partial) preserves validity.
+#[test]
+fn captured_compression_round_exports_valid_chrome_trace() {
+    let _g = obs_guard();
+    set_engine(EngineKind::Threaded);
+    let (_, cap) = obs::capture(|| {
+        obs::set_track("worker-0");
+        let mut comp = PowerSgd::new(2, 1);
+        let mut log = CommLog::default();
+        std::hint::black_box(comp.compress_aggregate(&worker_updates(17, 4), &mut log));
+    });
+    set_engine(EngineKind::Lockstep);
+
+    // The round really hit the kernels and the ring.
+    let all = cap.summary(&[]);
+    assert!(all.count(Phase::MatmulNn) > 0, "no NN GEMM spans");
+    assert!(all.count(Phase::GramSchmidt) > 0, "no Gram-Schmidt spans");
+    assert!(all.count(Phase::Collective) > 0, "no collective spans");
+
+    let part0 = chrome::chrome_trace_json(0, "worker rank 0", &cap.tracks);
+    let pairs = chrome::validate_chrome_trace(&part0).expect("per-rank trace well-formed");
+    assert!(pairs > 0, "trace carried no spans");
+    assert!(part0.contains("\"thread_name\""), "tracks must be named");
+
+    // Merge two per-rank parts, then only one (a dead peer's file is
+    // simply absent) — both stay structurally valid.
+    let part1 = chrome::chrome_trace_json(1, "worker rank 1", &cap.tracks);
+    let merged = chrome::merge_chrome_traces(&[part0.clone(), part1]).expect("merge");
+    assert_eq!(chrome::validate_chrome_trace(&merged).expect("merged valid"), 2 * pairs);
+    assert!(merged.contains("\"pid\": 0") && merged.contains("\"pid\": 1"));
+    let partial = chrome::merge_chrome_traces(&[part0]).expect("partial merge");
+    assert_eq!(chrome::validate_chrome_trace(&partial).expect("partial valid"), pairs);
+}
+
+/// Contract 3: two captures of the same seeded workload agree exactly
+/// on the deterministic projection — per-phase span counts, sorted
+/// track names, wire-byte counters — while durations are free to vary.
+#[test]
+fn capture_summary_is_deterministic_for_a_fixed_workload() {
+    let _g = obs_guard();
+    let run = || {
+        set_engine(EngineKind::Threaded);
+        set_threads(1);
+        let (_, cap) = obs::capture(|| {
+            obs::set_track("worker-0");
+            let mut comp = PowerSgd::new(2, 1);
+            let mut log = CommLog::default();
+            std::hint::black_box(comp.compress_aggregate(&worker_updates(23, 4), &mut log));
+        });
+        set_engine(EngineKind::Lockstep);
+        // `worker-` catches the compressing thread, `ring-` the
+        // threaded collective threads; the prefix filter drops any
+        // track a concurrent non-workload thread might record.
+        cap.summary(&["worker-", "ring-"])
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(
+        first.deterministic_key(),
+        second.deterministic_key(),
+        "span counts / tracks / wire bytes must reproduce exactly"
+    );
+    assert!(first.tracks.contains(&"worker-0".to_string()), "tracks: {:?}", first.tracks);
+    assert!(first.count(Phase::RingSend) > 0, "threaded ring recorded no send spans");
+    assert!(first.count(Phase::RingRecv) > 0, "threaded ring recorded no recv spans");
+    // Modes were off before the captures and must be off after them.
+    assert_eq!(obs::mode(), 0, "capture leaked an enabled mode");
+}
