@@ -31,6 +31,14 @@
 //! thread count, so this is purely a wall-clock knob — and it composes
 //! with `--engine threaded` / `launch`: W workers × N kernel threads.
 //!
+//! Add `--pipeline overlap` to `train`/`launch` to post the vector
+//! all-reduce early and drain it behind the factor collectives
+//! (DESIGN.md §14) — traffic is reordered, bits are not, so results
+//! stay bitwise identical to `--pipeline off`. `--pipeline delayed`
+//! applies the previous step's aggregate instead (the PyTorch DDP
+//! PowerSGD-hook trick); it trades one step of staleness for a fully
+//! hidden collective and is verified against a delayed oracle.
+//!
 //! Add `--trace TRACE.json` to any subcommand to record the run with
 //! the span recorder (DESIGN.md §13) and open the file at
 //! <https://ui.perfetto.dev>: one track per worker and ring thread,
@@ -43,10 +51,13 @@ use anyhow::Result;
 use powersgd::compress::PowerSgd;
 use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
 use powersgd::data::Classification;
-use powersgd::experiments::{measured_wire_check, run_scenario, scenarios_for};
+use powersgd::experiments::{
+    measured_wire_check, measured_wire_check_pipelined, run_scenario, scenarios_for,
+};
 use powersgd::obs::Phase;
 use powersgd::optim::{EfSgd, LrSchedule};
 use powersgd::runtime::Runtime;
+use powersgd::transport::PipelineMode;
 use powersgd::util::Table;
 
 fn main() -> Result<()> {
@@ -99,6 +110,16 @@ fn main() -> Result<()> {
         wire.spans.count(Phase::Collective),
         wire.spans.count(Phase::RingSend),
         wire.spans.tracks
+    );
+    // The same workload under `--pipeline overlap`: identical bytes and
+    // bits (the check verifies both), but collectives are posted early —
+    // the in-flight spans are the communication the schedule hides.
+    let overlapped =
+        measured_wire_check_pipelined("powersgd", 2, 2, 2, 42, PipelineMode::Overlap)?;
+    println!(
+        "overlap: same {} wire bytes, {} in-flight collectives posted",
+        overlapped.per_rank.iter().map(|r| r.measured).sum::<u64>(),
+        overlapped.spans.count(Phase::InFlight),
     );
     println!();
 

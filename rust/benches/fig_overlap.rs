@@ -87,6 +87,10 @@ fn main() {
     // ambient kernel thread count automatically — simulation-only
     // here, but it keeps the schema aligned with kernel_hotpath.)
     json.set_context("threaded", "inproc");
+    // The document models the bucketed overlapped schedule; every
+    // record still carries the sequential baseline (`no_overlap_ms`)
+    // next to `overlapped_ms`, so both schedules stay in one artifact.
+    json.set_pipeline("overlap");
 
     for backend in backends {
         for scheme in schemes {

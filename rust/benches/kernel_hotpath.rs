@@ -43,6 +43,9 @@ fn main() {
     let mut rng = Rng::new(55);
     let mut json = BenchJson::new("kernel_hotpath");
     json.set_context("lockstep", "inproc");
+    // Kernel microbenches drive no collectives — pin the pipeline axis
+    // explicitly so the JSON stays diffable against fig_overlap's.
+    json.set_pipeline("off");
 
     let sweep: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
 

@@ -16,13 +16,16 @@
 //!   for comparison (Appendix B) but all algorithms in the paper's main
 //!   experiments use one of the two above.
 //!
-//! Every collective here dispatches on the process-wide engine
-//! ([`crate::transport::engine`]): `Lockstep` runs the sequential
-//! reference implementation on the caller's thread, `Threaded` runs the
-//! channel-based ring in [`crate::transport`] with one OS thread per
-//! worker. Both produce bitwise-identical results (the lockstep path is
-//! the oracle the threaded engine is tested against), so the switch
-//! never changes training trajectories.
+//! Every collective here dispatches on the engine carried by the
+//! [`CommLog`] it records into ([`CommLog::on`] selects it;
+//! `CommLog::default()` is the lockstep oracle): `Lockstep` runs the
+//! sequential reference implementation on the caller's thread,
+//! `Threaded` runs the channel-based ring in [`crate::transport`] with
+//! one OS thread per worker. The engine is per-run configuration, not
+//! process state — two logs with different engines coexist in one
+//! process. Both engines produce bitwise-identical results (the
+//! lockstep path is the oracle the threaded engine is tested against),
+//! so the switch never changes training trajectories.
 //!
 //! These entry points take *all* workers' buffers at once — the
 //! centralized view the oracle compressors use. The decentralized
@@ -51,6 +54,7 @@
 //! assert_eq!(log.bytes_sent(), 2 * 4);
 //! ```
 
+use crate::transport::EngineKind;
 use std::sync::Arc;
 
 /// What kind of collective an operation used.
@@ -74,14 +78,26 @@ pub struct CollOp {
     pub bytes: u64,
 }
 
-/// Log of collective traffic for one step (or one epoch).
+/// Log of collective traffic for one step (or one epoch), plus the
+/// engine its collectives execute on. `CommLog::default()` runs the
+/// lockstep oracle; [`CommLog::on`] selects explicitly. The engine
+/// rides on the log — the one value already threaded through every
+/// collective call — so engine choice is per-run configuration and two
+/// engines can coexist in one process.
 #[derive(Debug, Clone, Default)]
 pub struct CommLog {
     /// Logged operations, in execution order.
     pub ops: Vec<CollOp>,
+    /// Execution substrate for collectives recorded into this log.
+    pub engine: EngineKind,
 }
 
 impl CommLog {
+    /// An empty log whose collectives run on `engine`.
+    pub fn on(engine: EngineKind) -> CommLog {
+        CommLog { ops: Vec::new(), engine }
+    }
+
     /// Append one collective operation.
     pub fn record(&mut self, kind: CollKind, bytes: u64) {
         self.ops.push(CollOp { kind, bytes });
@@ -145,11 +161,12 @@ pub fn ring_wire_bytes(kind: CollKind, msg_bytes: u64, world: usize, rank: usize
 /// (each worker owns one chunk at the end) followed by W−1 all-gather
 /// steps. Real chunked data movement; O(2·(W−1)/W · N) values moved per
 /// worker — the ring's bandwidth term.
+///
+/// This entry point is the *sequential reference* (the lockstep
+/// oracle). Engine-dispatching callers go through [`all_reduce_mean`]
+/// with a [`CommLog::on`] log, or call
+/// [`crate::transport::ring_all_reduce_sum_threaded`] directly.
 pub fn ring_all_reduce_sum(buffers: &mut [Vec<f32>]) {
-    if crate::transport::engine() == crate::transport::EngineKind::Threaded {
-        crate::transport::ring_all_reduce_sum_threaded(buffers);
-        return;
-    }
     ring_all_reduce_sum_lockstep(buffers);
 }
 
@@ -214,7 +231,10 @@ pub fn all_reduce_mean(buffers: &mut [Vec<f32>], log: &mut CommLog) {
     let _span = crate::obs::span(crate::obs::Phase::Collective);
     let w = buffers.len() as f32;
     let bytes = (buffers[0].len() * 4) as u64;
-    ring_all_reduce_sum(buffers);
+    match log.engine {
+        EngineKind::Threaded => crate::transport::ring_all_reduce_sum_threaded(buffers),
+        EngineKind::Lockstep => ring_all_reduce_sum_lockstep(buffers),
+    }
     for b in buffers.iter_mut() {
         for v in b.iter_mut() {
             *v /= w;
@@ -223,15 +243,13 @@ pub fn all_reduce_mean(buffers: &mut [Vec<f32>], log: &mut CommLog) {
     log.record(CollKind::AllReduce, bytes);
 }
 
-/// Materialize the gathered view on the configured engine. On the
-/// lockstep engine this is a straight copy of the message list; on the
-/// threaded engine the messages really travel the channel ring.
-fn gathered_view<M: Clone + Send + Sync + Default>(messages: &[M]) -> Vec<M> {
-    match crate::transport::engine() {
-        crate::transport::EngineKind::Threaded => {
-            crate::transport::ring_all_gather_threaded(messages)
-        }
-        crate::transport::EngineKind::Lockstep => messages.to_vec(),
+/// Materialize the gathered view on the log's engine. On the lockstep
+/// engine this is a straight copy of the message list; on the threaded
+/// engine the messages really travel the channel ring.
+fn gathered_view<M: Clone + Send + Sync + Default>(messages: &[M], engine: EngineKind) -> Vec<M> {
+    match engine {
+        EngineKind::Threaded => crate::transport::ring_all_gather_threaded(messages),
+        EngineKind::Lockstep => messages.to_vec(),
     }
 }
 
@@ -249,7 +267,7 @@ pub fn all_gather(messages: &[Vec<f32>], log: &mut CommLog) -> Vec<Arc<Vec<Vec<f
     let _span = crate::obs::span(crate::obs::Phase::Collective);
     let bytes = (messages[0].len() * 4) as u64;
     log.record(CollKind::AllGather, bytes);
-    let view = Arc::new(gathered_view(messages));
+    let view = Arc::new(gathered_view(messages, log.engine));
     messages.iter().map(|_| Arc::clone(&view)).collect()
 }
 
@@ -262,7 +280,7 @@ pub fn all_gather_bytes(messages: &[Vec<u8>], log: &mut CommLog) -> Vec<Arc<Vec<
     let _span = crate::obs::span(crate::obs::Phase::Collective);
     let bytes = messages[0].len() as u64;
     log.record(CollKind::AllGather, bytes);
-    let view = Arc::new(gathered_view(messages));
+    let view = Arc::new(gathered_view(messages, log.engine));
     messages.iter().map(|_| Arc::clone(&view)).collect()
 }
 
@@ -401,6 +419,26 @@ mod tests {
         // Single worker: nothing crosses a wire.
         assert_eq!(ring_wire_bytes(CollKind::AllReduce, 400, 1, 0), 0);
         assert_eq!(ring_wire_bytes(CollKind::AllGather, 400, 1, 0), 0);
+    }
+
+    /// The engine rides on the log, so two engines run side by side in
+    /// one process (no global switch) and agree bitwise.
+    #[test]
+    fn engines_coexist_per_log() {
+        let mut rng = Rng::new(53);
+        let bufs = random_buffers(3, 37, &mut rng);
+        let mut on_lockstep = bufs.clone();
+        let mut on_threaded = bufs;
+        let mut lock_log = CommLog::default();
+        let mut thread_log = CommLog::on(EngineKind::Threaded);
+        all_reduce_mean(&mut on_lockstep, &mut lock_log);
+        all_reduce_mean(&mut on_threaded, &mut thread_log);
+        for (a, b) in on_lockstep.iter().zip(on_threaded.iter()) {
+            let a_bits: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let b_bits: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a_bits, b_bits);
+        }
+        assert_eq!(lock_log.bytes_sent(), thread_log.bytes_sent());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! columns are preserved on grow (new columns re-seeded) and truncated
 //! on shrink, so subspace tracking survives adaptation.
 
-use super::{Aggregated, Compressor, Locals, PowerSgd};
+use super::{Aggregated, Compressor, SchemeMeta, Locals, PowerSgd};
 use crate::collectives::CommLog;
 use crate::grad::ParamRegistry;
 use crate::tensor::Tensor;
@@ -94,7 +94,7 @@ impl AdaptivePowerSgd {
     }
 }
 
-impl Compressor for AdaptivePowerSgd {
+impl SchemeMeta for AdaptivePowerSgd {
     fn name(&self) -> String {
         format!("Adaptive Rank [{}..{}] (now {})", self.min_rank, self.max_rank, self.inner.rank())
     }
@@ -103,6 +103,12 @@ impl Compressor for AdaptivePowerSgd {
         true
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_rank_r_bytes_uncapped(self.inner.rank())
+    }
+}
+
+impl Compressor for AdaptivePowerSgd {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let agg = self.inner.compress_aggregate(updates, log);
         // Relative residual of the aggregate reconstruction vs the true
@@ -126,10 +132,6 @@ impl Compressor for AdaptivePowerSgd {
         self.rank_history.push(self.inner.rank());
         self.maybe_adapt(residual);
         Aggregated { mean: agg.mean, locals: Locals::SharedAggregate }
-    }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        registry.total_rank_r_bytes_uncapped(self.inner.rank())
     }
 }
 

@@ -8,7 +8,7 @@
 //! prohibitive (948 ms vs 239 ms per batch), which our `kernel_hotpath`
 //! bench reproduces with the Jacobi SVD substrate.
 
-use super::{aggregate_vectors_uncompressed, split_kinds, Aggregated, Compressor, Locals};
+use super::{aggregate_vectors_uncompressed, split_kinds, Aggregated, Compressor, SchemeMeta, Locals};
 use crate::collectives::{all_gather, CommLog};
 use crate::grad::{CompressKind, ParamRegistry};
 use crate::linalg::svd;
@@ -75,7 +75,7 @@ impl Atomo {
     }
 }
 
-impl Compressor for Atomo {
+impl SchemeMeta for Atomo {
     fn name(&self) -> String {
         format!("Atomo (rank {})", self.rank)
     }
@@ -88,6 +88,19 @@ impl Compressor for Atomo {
         false // unbiased by construction; the paper runs it without EF
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => ((rows + cols) * self.rank * 4) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+impl Compressor for Atomo {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
@@ -168,17 +181,6 @@ impl Compressor for Atomo {
         }
         let _ = msg_len;
         Aggregated { mean, locals: Locals::PerWorker(per_worker_recon) }
-    }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        registry
-            .specs
-            .iter()
-            .map(|s| match s.kind {
-                CompressKind::Matrix { rows, cols } => ((rows + cols) * self.rank * 4) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
-            })
-            .sum()
     }
 }
 

@@ -48,8 +48,8 @@ pub use sparsify::{RandomBlock, RandomK, TopK};
 pub use unbiased::UnbiasedRank;
 pub use worker::{
     decentralized_by_name, oracle_by_name, worker_by_name, DecentralizedCompressor,
-    EndpointCompressor, NoCompressionWorker, PowerSgdWorker, SignNormWorker, TopKWorker,
-    UnbiasedRankWorker, WorkerCompressor, WorkerLink, WorkerRound,
+    EndpointCompressor, InFlightMean, NoCompressionWorker, PowerSgdWorker, SignNormWorker,
+    TopKWorker, UnbiasedRankWorker, WorkerCompressor, WorkerLink, WorkerRound,
 };
 
 use crate::collectives::{all_reduce_mean, CommLog};
@@ -86,8 +86,16 @@ impl Aggregated {
     }
 }
 
-/// A gradient compression + aggregation operator.
-pub trait Compressor: Send {
+/// Compression-scheme metadata shared by the centralized oracle
+/// ([`Compressor`]) and the per-worker half ([`WorkerCompressor`]).
+///
+/// Both execution paths of one scheme must present identical metadata —
+/// the name the report prints, the collective the aggregation uses, the
+/// closed-form byte model the harness cross-checks, and the bias flag
+/// error feedback keys on. Factoring it into one supertrait removes
+/// the copy-paste surface that let the two paths drift (the
+/// `Scheme::cli_spelling` round-trip regression).
+pub trait SchemeMeta {
     /// Human-readable name ("Rank 2", "Sign+Norm", ...).
     fn name(&self) -> String;
 
@@ -95,21 +103,24 @@ pub trait Compressor: Send {
     /// (the "All-reduce" column of Table 4).
     fn supports_all_reduce(&self) -> bool;
 
-    /// Compress every worker's update, aggregate, decompress.
-    ///
-    /// `updates[w][p]` is worker `w`'s update for parameter `p` in
-    /// compression shape. All collective traffic must be recorded in
-    /// `log`.
-    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated;
-
     /// Closed-form per-worker message size in bytes per step for the
-    /// given model (must agree with what `compress_aggregate` logs).
+    /// given model (must agree with what the scheme's round logs).
     fn message_bytes(&self, registry: &ParamRegistry) -> u64;
 
     /// Whether this operator is biased (needs error feedback to converge).
     fn is_biased(&self) -> bool {
         true
     }
+}
+
+/// A gradient compression + aggregation operator.
+pub trait Compressor: SchemeMeta + Send {
+    /// Compress every worker's update, aggregate, decompress.
+    ///
+    /// `updates[w][p]` is worker `w`'s update for parameter `p` in
+    /// compression shape. All collective traffic must be recorded in
+    /// `log`.
+    fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated;
 
     /// Tensor allocations made by reusable scratch buffers so far —
     /// the decentralized per-worker path's [`ScratchArena`]s, or the

@@ -1,7 +1,7 @@
 //! Uncompressed baseline: plain all-reduce of the full gradient (the
 //! paper's "SGD" / "No compression" rows).
 
-use super::{Aggregated, Compressor, Locals};
+use super::{Aggregated, Compressor, SchemeMeta, Locals};
 use crate::collectives::CommLog;
 use crate::grad::ParamRegistry;
 use crate::tensor::Tensor;
@@ -17,7 +17,7 @@ impl NoCompression {
     }
 }
 
-impl Compressor for NoCompression {
+impl SchemeMeta for NoCompression {
     fn name(&self) -> String {
         "No compression".into()
     }
@@ -30,16 +30,18 @@ impl Compressor for NoCompression {
         false
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_bytes()
+    }
+}
+
+impl Compressor for NoCompression {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let mean = super::all_reduce_mean_packed(updates, log);
         // Identity compression: each worker's local reconstruction is its
         // own update, so EF error stays exactly zero.
         let locals = Locals::PerWorker(updates.to_vec());
         Aggregated { mean, locals }
-    }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        registry.total_bytes()
     }
 }
 

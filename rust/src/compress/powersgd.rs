@@ -3,7 +3,7 @@
 use super::scratch::TensorPool;
 use super::{
     aggregate_vectors_uncompressed, all_reduce_mean_packed, split_kinds, Aggregated, Compressor,
-    Locals,
+    Locals, SchemeMeta,
 };
 use crate::collectives::{all_reduce_mean, CommLog};
 use crate::grad::ParamRegistry;
@@ -114,7 +114,7 @@ impl PowerSgd {
     }
 }
 
-impl Compressor for PowerSgd {
+impl SchemeMeta for PowerSgd {
     fn name(&self) -> String {
         if self.warm_start {
             format!("Rank {}", self.rank)
@@ -127,6 +127,12 @@ impl Compressor for PowerSgd {
         true
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry.total_rank_r_bytes_uncapped(self.rank)
+    }
+}
+
+impl Compressor for PowerSgd {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         assert!(w > 0);
@@ -203,10 +209,6 @@ impl Compressor for PowerSgd {
     fn scratch_allocations(&self) -> Option<u64> {
         Some(self.scratch.p.allocations() + self.scratch.q.allocations())
     }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        registry.total_rank_r_bytes_uncapped(self.rank)
-    }
 }
 
 /// "Best rank-r approximation" reference compressor (Appendix G.7):
@@ -236,7 +238,7 @@ impl BestRankR {
     }
 }
 
-impl Compressor for BestRankR {
+impl SchemeMeta for BestRankR {
     fn name(&self) -> String {
         format!("Best rank {} ({} iters)", self.rank, self.iters)
     }
@@ -245,6 +247,20 @@ impl Compressor for BestRankR {
         true
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // matrices pay per iteration; vectors are all-reduced once
+        let vec_bytes: u64 = registry
+            .specs
+            .iter()
+            .filter(|s| s.matrix_dims().is_none())
+            .map(|s| s.bytes())
+            .sum();
+        let mat_bytes = registry.total_rank_r_bytes_uncapped(self.rank) - vec_bytes;
+        mat_bytes * self.iters as u64 + vec_bytes
+    }
+}
+
+impl Compressor for BestRankR {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
         let mut mean: Vec<Tensor> = updates[0].iter().map(|t| Tensor::zeros(t.shape())).collect();
@@ -303,18 +319,6 @@ impl Compressor for BestRankR {
             mean[p] = rec;
         }
         Aggregated { mean, locals: Locals::SharedAggregate }
-    }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        // matrices pay per iteration; vectors are all-reduced once
-        let vec_bytes: u64 = registry
-            .specs
-            .iter()
-            .filter(|s| s.matrix_dims().is_none())
-            .map(|s| s.bytes())
-            .sum();
-        let mat_bytes = registry.total_rank_r_bytes_uncapped(self.rank) - vec_bytes;
-        mat_bytes * self.iters as u64 + vec_bytes
     }
 }
 

@@ -84,6 +84,10 @@ pub struct ScratchArena {
     /// decode votes; capacity grows to the step maximum once and then
     /// amortizes every later use.
     pub buf: Vec<f32>,
+    /// Second flat f32 buffer for pipelined rounds, where the vector
+    /// reduction is still in flight while `buf` packs the factor
+    /// collectives; lockstep rounds leave it empty.
+    pub vbuf: Vec<f32>,
     /// Byte buffer for packed sign messages.
     pub bytes: Vec<u8>,
 }

@@ -5,7 +5,7 @@
 //! `⌈nm/8⌉` per matrix. Neither is linear, so aggregation uses
 //! all-gather and decode cost scales with W (Table 5's hatched bars).
 
-use super::{aggregate_vectors_uncompressed, split_kinds, Aggregated, Compressor, Locals};
+use super::{aggregate_vectors_uncompressed, split_kinds, Aggregated, Compressor, SchemeMeta, Locals};
 use crate::collectives::{all_gather_bytes, CommLog};
 use crate::grad::{CompressKind, ParamRegistry};
 use crate::tensor::Tensor;
@@ -47,7 +47,7 @@ impl Default for SignNorm {
     }
 }
 
-impl Compressor for SignNorm {
+impl SchemeMeta for SignNorm {
     fn name(&self) -> String {
         "Sign+Norm".into()
     }
@@ -56,6 +56,19 @@ impl Compressor for SignNorm {
         false
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => 4 + ((rows * cols).div_ceil(8)) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+impl Compressor for SignNorm {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
@@ -107,17 +120,6 @@ impl Compressor for SignNorm {
         }
         Aggregated { mean, locals: Locals::PerWorker(locals) }
     }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        registry
-            .specs
-            .iter()
-            .map(|s| match s.kind {
-                CompressKind::Matrix { rows, cols } => 4 + ((rows * cols).div_ceil(8)) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
-            })
-            .sum()
-    }
 }
 
 /// Signum compression (Algorithm 7, Bernstein et al. 2019): transmit
@@ -138,7 +140,7 @@ impl Default for Signum {
     }
 }
 
-impl Compressor for Signum {
+impl SchemeMeta for Signum {
     fn name(&self) -> String {
         "Signum".into()
     }
@@ -152,6 +154,19 @@ impl Compressor for Signum {
         true
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        registry
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                CompressKind::Matrix { rows, cols } => ((rows * cols).div_ceil(8)) as u64,
+                CompressKind::Vector { len } => (len * 4) as u64,
+            })
+            .sum()
+    }
+}
+
+impl Compressor for Signum {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
@@ -207,17 +222,6 @@ impl Compressor for Signum {
             }
         }
         Aggregated { mean, locals: Locals::PerWorker(locals) }
-    }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        registry
-            .specs
-            .iter()
-            .map(|s| match s.kind {
-                CompressKind::Matrix { rows, cols } => ((rows * cols).div_ceil(8)) as u64,
-                CompressKind::Vector { len } => (len * 4) as u64,
-            })
-            .sum()
     }
 }
 

@@ -3,7 +3,7 @@
 //! match rank-r PowerSGD".
 
 use super::{
-    aggregate_vectors_uncompressed, sparsify_budget, split_kinds, Aggregated, Compressor, Locals,
+    aggregate_vectors_uncompressed, sparsify_budget, split_kinds, Aggregated, Compressor, SchemeMeta, Locals,
 };
 use crate::collectives::{all_gather, all_reduce_mean, CommLog};
 use crate::grad::{CompressKind, ParamRegistry};
@@ -29,7 +29,7 @@ impl RandomBlock {
     }
 }
 
-impl Compressor for RandomBlock {
+impl SchemeMeta for RandomBlock {
     fn name(&self) -> String {
         format!("Random Block (r={})", self.rank_equiv)
     }
@@ -38,6 +38,12 @@ impl Compressor for RandomBlock {
         true
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        sparsified_bytes(registry, self.rank_equiv, 4)
+    }
+}
+
+impl Compressor for RandomBlock {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
@@ -103,10 +109,6 @@ impl Compressor for RandomBlock {
         }
         Aggregated { mean, locals: Locals::PerWorker(locals) }
     }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        sparsified_bytes(registry, self.rank_equiv, 4)
-    }
 }
 
 /// Random K compression (Algorithm 4): `(n+m)·r` random coordinates,
@@ -125,7 +127,7 @@ impl RandomK {
     }
 }
 
-impl Compressor for RandomK {
+impl SchemeMeta for RandomK {
     fn name(&self) -> String {
         format!("Random K (r={})", self.rank_equiv)
     }
@@ -134,6 +136,13 @@ impl Compressor for RandomK {
         true
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // values only: indices are derived from the shared seed
+        sparsified_bytes(registry, self.rank_equiv, 4)
+    }
+}
+
+impl Compressor for RandomK {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
@@ -189,11 +198,6 @@ impl Compressor for RandomK {
         }
         Aggregated { mean, locals: Locals::PerWorker(locals) }
     }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        // values only: indices are derived from the shared seed
-        sparsified_bytes(registry, self.rank_equiv, 4)
-    }
 }
 
 /// Top K compression (Algorithm 6): each worker's own largest-|value|
@@ -233,7 +237,7 @@ impl TopK {
     }
 }
 
-impl Compressor for TopK {
+impl SchemeMeta for TopK {
     fn name(&self) -> String {
         format!("Top K (r={})", self.rank_equiv)
     }
@@ -242,6 +246,13 @@ impl Compressor for TopK {
         false
     }
 
+    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
+        // values + indices, 4 bytes each
+        sparsified_bytes(registry, self.rank_equiv, 8)
+    }
+}
+
+impl Compressor for TopK {
     fn compress_aggregate(&mut self, updates: &[Vec<Tensor>], log: &mut CommLog) -> Aggregated {
         let w = updates.len();
         let (mat_idx, vec_idx) = split_kinds(&updates[0]);
@@ -296,11 +307,6 @@ impl Compressor for TopK {
             }
         }
         Aggregated { mean, locals: Locals::PerWorker(locals) }
-    }
-
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
-        // values + indices, 4 bytes each
-        sparsified_bytes(registry, self.rank_equiv, 8)
     }
 }
 

@@ -58,13 +58,16 @@ use super::sign::pack_signs_into;
 use super::sparsify::{sparsified_bytes, TopK};
 use super::{
     split_kinds, sparsify_budget, Aggregated, Compressor, Locals, NoCompression, PowerSgd,
-    SignNorm, UnbiasedRank,
+    SchemeMeta, SignNorm, UnbiasedRank,
 };
 use crate::collectives::{CollKind, CommLog};
 use crate::grad::{CompressKind, ParamRegistry};
 use crate::linalg::gram_schmidt_in_place;
 use crate::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
-use crate::transport::{ring_all_gather_worker, ring_all_reduce_worker, InProcRing, Transport};
+use crate::transport::{
+    ring_all_gather_worker, ring_all_reduce_worker, InProcRing, PipelineMode, PostedAllReduce,
+    Transport,
+};
 use crate::util::Rng;
 
 /// One worker's handle on the collective fabric: a typed [`Transport`]
@@ -119,6 +122,45 @@ impl WorkerLink<'_> {
     }
 }
 
+impl<'a> WorkerLink<'a> {
+    /// Post a packed all-reduce-mean and return the in-flight handle —
+    /// the pipelined counterpart of [`Self::all_reduce_mean`]. Traffic
+    /// is logged here, at the post, which is the program point the
+    /// blocking path occupies, so lockstep and overlap rounds produce
+    /// identical [`CommLog`]s. Phase attribution differs by design:
+    /// the posted window lands in `in_flight` (plus the per-wait
+    /// `ring_recv` the transport records) instead of `collective`.
+    pub fn post_reduce_mean(&self, buf: Vec<f32>, log: &mut CommLog) -> InFlightMean<'a> {
+        log.record(CollKind::AllReduce, (buf.len() * 4) as u64);
+        InFlightMean { inner: PostedAllReduce::start(self.f32s, buf), world: self.world() }
+    }
+}
+
+/// A packed all-reduce-mean in flight, from [`WorkerLink::post_reduce_mean`].
+///
+/// Must be drained with [`finish`](InFlightMean::finish) before the
+/// round ends — abandoning it mid-collective desynchronizes the ring
+/// for every later operation on the link.
+pub struct InFlightMean<'a> {
+    inner: PostedAllReduce<'a, dyn Transport<Vec<f32>> + 'a>,
+    world: usize,
+}
+
+impl InFlightMean<'_> {
+    /// Drain the remaining ring steps and return the mean buffer —
+    /// bit-for-bit what the blocking [`WorkerLink::all_reduce_mean`]
+    /// leaves in place (identical chunk schedule and fold order, then
+    /// the same elementwise divide).
+    pub fn finish(self) -> Vec<f32> {
+        let mut buf = self.inner.finish();
+        let w = self.world as f32;
+        for v in buf.iter_mut() {
+            *v /= w;
+        }
+        buf
+    }
+}
+
 /// Result of one per-worker compress → collective → decompress round.
 pub struct WorkerRound {
     /// Decompressed aggregate `Δ'` — identical bits on every worker.
@@ -135,22 +177,7 @@ pub struct WorkerRound {
 /// randomness is replicated: every worker is constructed with the same
 /// seed and draws the same sequence, so `Q`/`U` agree across workers
 /// without extra traffic — exactly the centralized oracle's convention.
-pub trait WorkerCompressor: Send {
-    /// Human-readable name ("Rank 2", "Sign+Norm", ...).
-    fn name(&self) -> String;
-
-    /// True iff aggregation is all-reduce (linear scheme).
-    fn supports_all_reduce(&self) -> bool;
-
-    /// Closed-form per-worker message bytes per step (must agree with
-    /// what `round` logs).
-    fn message_bytes(&self, registry: &ParamRegistry) -> u64;
-
-    /// Whether the scheme is biased (needs error feedback to converge).
-    fn is_biased(&self) -> bool {
-        true
-    }
-
+pub trait WorkerCompressor: SchemeMeta + Send {
     /// One round: compress `update` (this worker's tensors in
     /// compression shape), aggregate over `link`, decompress. All
     /// step-invariant intermediates live in `scratch`; traffic goes to
@@ -162,6 +189,14 @@ pub trait WorkerCompressor: Send {
         scratch: &mut ScratchArena,
         log: &mut CommLog,
     ) -> WorkerRound;
+
+    /// Choose how [`round`](Self::round) schedules its collectives.
+    /// The default ignores the mode: schemes with a single collective
+    /// per round have nothing to overlap, and `Off` is always correct.
+    /// Schemes that do overlap must keep the result bitwise identical
+    /// to `Off` (the delayed trajectory lives in the optimizer, not
+    /// here).
+    fn set_pipeline(&mut self, _mode: PipelineMode) {}
 }
 
 /// Pack tensors into one flat buffer (reusing its capacity).
@@ -247,6 +282,7 @@ fn sign_at(bits: &[u8], i: usize) -> f32 {
 pub struct PowerSgdWorker {
     rank: usize,
     warm_start: bool,
+    pipeline: PipelineMode,
     /// Warm-start `Q` per matrix slot (same bits on every worker).
     qs: Vec<Tensor>,
     rng: Rng,
@@ -256,7 +292,13 @@ impl PowerSgdWorker {
     /// One worker's rank-`rank` PowerSGD half, warm start on.
     pub fn new(rank: usize, seed: u64) -> PowerSgdWorker {
         assert!(rank >= 1, "rank must be >= 1");
-        PowerSgdWorker { rank, warm_start: true, qs: Vec::new(), rng: Rng::new(seed) }
+        PowerSgdWorker {
+            rank,
+            warm_start: true,
+            pipeline: PipelineMode::Off,
+            qs: Vec::new(),
+            rng: Rng::new(seed),
+        }
     }
 
     /// Disable warm start (Table 2 ablation): re-sample `Q` every step.
@@ -283,9 +325,103 @@ impl PowerSgdWorker {
             self.rng.fill_normal(q.data_mut(), 1.0);
         }
     }
+
+    /// The overlap-mode round: same arithmetic as the lockstep path in
+    /// [`WorkerCompressor::round`], different traffic schedule. The
+    /// uncompressed vector reduction is posted before the first GEMM
+    /// and drained only after `Q`'s reduction is posted, so its ring
+    /// steps ride under both matmuls and the orthogonalization; `P`'s
+    /// reduction still blocks (Gram–Schmidt needs its result). Every
+    /// collective reuses the lockstep chunk schedule and fold order,
+    /// so the round is bitwise identical to `Off` — asserted by
+    /// `tests/integration_pipeline.rs`. Post order (vectors, P, Q) is
+    /// a static schedule, identical on every worker, which is what the
+    /// positional receive matching of the completion-queue transports
+    /// requires.
+    fn round_overlapped(
+        &mut self,
+        update: &[Tensor],
+        link: &WorkerLink<'_>,
+        scratch: &mut ScratchArena,
+        log: &mut CommLog,
+    ) -> WorkerRound {
+        let (mat_idx, vec_idx) = split_kinds(update);
+        let mut mean = mean_placeholders(update);
+        let k = mat_idx.len();
+
+        // Post (don't drain) the vector reduction at the program point
+        // where the lockstep path runs it to completion.
+        let vecs = if vec_idx.is_empty() {
+            None
+        } else {
+            let mut vbuf = std::mem::take(&mut scratch.vbuf);
+            vbuf.clear();
+            for &i in &vec_idx {
+                vbuf.extend_from_slice(update[i].data());
+            }
+            Some(link.post_reduce_mean(vbuf, log))
+        };
+
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            self.ensure_q(slot, update[p].cols());
+        }
+
+        // Stage 1: P = M·Q. Its reduction gates Gram–Schmidt, so it is
+        // drained in place; the in-flight vector reduce overlaps it.
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let out = scratch.p.get(slot, &[update[p].rows(), self.rank]);
+                matmul_into(&update[p], &self.qs[slot], out);
+            }
+            pack(&mut scratch.buf, scratch.p.first(k));
+        }
+        link.all_reduce_mean(&mut scratch.buf, log);
+
+        // Stage 2: Q = Mᵀ·P̂, posted before the vector drain so the
+        // schedule stays static.
+        {
+            let _c = crate::obs::span(crate::obs::Phase::Compress);
+            unpack(&scratch.buf, scratch.p.first_mut(k));
+            for phat in scratch.p.first_mut(k) {
+                gram_schmidt_in_place(phat);
+            }
+            for (slot, &p) in mat_idx.iter().enumerate() {
+                let out = scratch.q.get(slot, &[update[p].cols(), self.rank]);
+                matmul_tn_into(&update[p], scratch.p.at(slot), out);
+            }
+            pack(&mut scratch.buf, scratch.q.first(k));
+        }
+        let q_reduce = link.post_reduce_mean(std::mem::take(&mut scratch.buf), log);
+
+        if let Some(in_flight) = vecs {
+            let vbuf = in_flight.finish();
+            let mut off = 0;
+            for &i in &vec_idx {
+                let n = update[i].len();
+                mean[i] = Tensor::from_vec(&[n], vbuf[off..off + n].to_vec());
+                off += n;
+            }
+            scratch.vbuf = vbuf;
+        }
+        let qbuf = q_reduce.finish();
+
+        let _d = crate::obs::span(crate::obs::Phase::Decompress);
+        unpack(&qbuf, scratch.q.first_mut(k));
+        scratch.buf = qbuf;
+        for (slot, &p) in mat_idx.iter().enumerate() {
+            let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
+            matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
+            mean[p] = rec;
+            if self.warm_start {
+                self.qs[slot].data_mut().copy_from_slice(scratch.q.at(slot).data());
+            }
+        }
+        WorkerRound { mean, local: None }
+    }
 }
 
-impl WorkerCompressor for PowerSgdWorker {
+impl SchemeMeta for PowerSgdWorker {
     fn name(&self) -> String {
         if self.warm_start {
             format!("Rank {}", self.rank)
@@ -301,7 +437,9 @@ impl WorkerCompressor for PowerSgdWorker {
     fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
         registry.total_rank_r_bytes_uncapped(self.rank)
     }
+}
 
+impl WorkerCompressor for PowerSgdWorker {
     fn round(
         &mut self,
         update: &[Tensor],
@@ -309,6 +447,11 @@ impl WorkerCompressor for PowerSgdWorker {
         scratch: &mut ScratchArena,
         log: &mut CommLog,
     ) -> WorkerRound {
+        // Delayed mode overlaps at the round level too — the one-step
+        // delay itself lives in the optimizer, not here.
+        if self.pipeline != PipelineMode::Off {
+            return self.round_overlapped(update, link, scratch, log);
+        }
         let (mat_idx, vec_idx) = split_kinds(update);
         let mut mean = mean_placeholders(update);
         reduce_vectors(update, &vec_idx, &mut mean, &mut scratch.buf, link, log);
@@ -363,6 +506,10 @@ impl WorkerCompressor for PowerSgdWorker {
         }
         WorkerRound { mean, local: None }
     }
+
+    fn set_pipeline(&mut self, mode: PipelineMode) {
+        self.pipeline = mode;
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -385,7 +532,7 @@ impl UnbiasedRankWorker {
     }
 }
 
-impl WorkerCompressor for UnbiasedRankWorker {
+impl SchemeMeta for UnbiasedRankWorker {
     fn name(&self) -> String {
         format!("Unbiased Rank {}", self.rank)
     }
@@ -408,7 +555,9 @@ impl WorkerCompressor for UnbiasedRankWorker {
     fn is_biased(&self) -> bool {
         false
     }
+}
 
+impl WorkerCompressor for UnbiasedRankWorker {
     fn round(
         &mut self,
         update: &[Tensor],
@@ -465,7 +614,7 @@ impl SignNormWorker {
     }
 }
 
-impl WorkerCompressor for SignNormWorker {
+impl SchemeMeta for SignNormWorker {
     fn name(&self) -> String {
         "Sign+Norm".into()
     }
@@ -484,7 +633,9 @@ impl WorkerCompressor for SignNormWorker {
             })
             .sum()
     }
+}
 
+impl WorkerCompressor for SignNormWorker {
     fn round(
         &mut self,
         update: &[Tensor],
@@ -566,7 +717,7 @@ impl TopKWorker {
     }
 }
 
-impl WorkerCompressor for TopKWorker {
+impl SchemeMeta for TopKWorker {
     fn name(&self) -> String {
         format!("Top K (r={})", self.rank_equiv)
     }
@@ -578,7 +729,9 @@ impl WorkerCompressor for TopKWorker {
     fn message_bytes(&self, registry: &ParamRegistry) -> u64 {
         sparsified_bytes(registry, self.rank_equiv, 8)
     }
+}
 
+impl WorkerCompressor for TopKWorker {
     fn round(
         &mut self,
         update: &[Tensor],
@@ -654,7 +807,7 @@ impl NoCompressionWorker {
     }
 }
 
-impl WorkerCompressor for NoCompressionWorker {
+impl SchemeMeta for NoCompressionWorker {
     fn name(&self) -> String {
         "No compression".into()
     }
@@ -670,7 +823,9 @@ impl WorkerCompressor for NoCompressionWorker {
     fn is_biased(&self) -> bool {
         false
     }
+}
 
+impl WorkerCompressor for NoCompressionWorker {
     fn round(
         &mut self,
         update: &[Tensor],
@@ -716,6 +871,7 @@ pub struct DecentralizedCompressor {
     factory: WorkerFactory,
     /// Prototype instance for name/byte metadata before the first round.
     proto: BoxedWorker,
+    pipeline: PipelineMode,
 }
 
 impl DecentralizedCompressor {
@@ -727,13 +883,33 @@ impl DecentralizedCompressor {
         F: Fn() -> BoxedWorker + Send + 'static,
     {
         let proto = factory();
-        DecentralizedCompressor { workers: Vec::new(), factory: Box::new(factory), proto }
+        DecentralizedCompressor {
+            workers: Vec::new(),
+            factory: Box::new(factory),
+            proto,
+            pipeline: PipelineMode::Off,
+        }
+    }
+
+    /// Set the collective scheduling mode for every worker in the
+    /// fleet, existing and future. Overlap keeps each round bitwise
+    /// identical, so the fleet stays a drop-in [`Compressor`].
+    pub fn with_pipeline(mut self, mode: PipelineMode) -> DecentralizedCompressor {
+        self.pipeline = mode;
+        for slot in &mut self.workers {
+            slot.comp.set_pipeline(mode);
+        }
+        self
     }
 
     fn ensure_workers(&mut self, w: usize) {
         if self.workers.len() != w {
             self.workers = (0..w)
-                .map(|_| WorkerSlot { comp: (self.factory)(), scratch: ScratchArena::new() })
+                .map(|_| {
+                    let mut comp = (self.factory)();
+                    comp.set_pipeline(self.pipeline);
+                    WorkerSlot { comp, scratch: ScratchArena::new() }
+                })
                 .collect();
         }
     }
@@ -746,7 +922,7 @@ impl DecentralizedCompressor {
     }
 }
 
-impl Compressor for DecentralizedCompressor {
+impl SchemeMeta for DecentralizedCompressor {
     fn name(&self) -> String {
         format!("{} (per-worker)", self.proto.name())
     }
@@ -762,7 +938,9 @@ impl Compressor for DecentralizedCompressor {
     fn is_biased(&self) -> bool {
         self.proto.is_biased()
     }
+}
 
+impl Compressor for DecentralizedCompressor {
     fn scratch_allocations(&self) -> Option<u64> {
         Some(DecentralizedCompressor::scratch_allocations(self))
     }
@@ -911,9 +1089,15 @@ where
     pub fn endpoint(&self) -> &E {
         &self.endpoint
     }
+
+    /// Set the collective scheduling mode for the wrapped worker.
+    pub fn with_pipeline(mut self, mode: PipelineMode) -> EndpointCompressor<E> {
+        self.comp.set_pipeline(mode);
+        self
+    }
 }
 
-impl<E> Compressor for EndpointCompressor<E>
+impl<E> SchemeMeta for EndpointCompressor<E>
 where
     E: Transport<Vec<f32>> + Transport<Vec<u8>>,
 {
@@ -932,7 +1116,12 @@ where
     fn is_biased(&self) -> bool {
         self.comp.is_biased()
     }
+}
 
+impl<E> Compressor for EndpointCompressor<E>
+where
+    E: Transport<Vec<f32>> + Transport<Vec<u8>>,
+{
     fn scratch_allocations(&self) -> Option<u64> {
         Some(self.scratch.allocations())
     }
@@ -1062,6 +1251,41 @@ mod tests {
                 {
                     assert_eq!(a.data(), b.data(), "{name}: local[{p}] (worker {wi})");
                 }
+            }
+        }
+    }
+
+    /// Overlap mode reorders traffic, never arithmetic: a fleet running
+    /// `--pipeline overlap` must reproduce the lockstep fleet bit for
+    /// bit across warm-started steps (matrix + vector params, so the
+    /// posted vector reduce really is in flight across both GEMMs).
+    #[test]
+    fn overlap_fleet_matches_lockstep_bitwise() {
+        use crate::util::Rng;
+        let world = 3;
+        let mut lock = decentralized_by_name("powersgd", 2, 9).unwrap();
+        let mut ovl =
+            decentralized_by_name("powersgd", 2, 9).unwrap().with_pipeline(PipelineMode::Overlap);
+        let mut rng = Rng::new(77);
+        for step in 0..4 {
+            let updates: Vec<Vec<Tensor>> = (0..world)
+                .map(|_| {
+                    [&[7, 5][..], &[4][..], &[6, 6][..]]
+                        .iter()
+                        .map(|s| {
+                            let mut t = Tensor::zeros(s);
+                            rng.fill_normal(t.data_mut(), 1.0);
+                            t
+                        })
+                        .collect()
+                })
+                .collect();
+            let (mut llog, mut olog) = (CommLog::default(), CommLog::default());
+            let want = lock.compress_aggregate(&updates, &mut llog);
+            let got = ovl.compress_aggregate(&updates, &mut olog);
+            assert_eq!(llog.bytes_sent(), olog.bytes_sent(), "step {step}: logged bytes");
+            for (p, (a, b)) in got.mean.iter().zip(want.mean.iter()).enumerate() {
+                assert_eq!(a.data(), b.data(), "step {step}: mean[{p}]");
             }
         }
     }

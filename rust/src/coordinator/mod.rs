@@ -29,6 +29,7 @@ use crate::runtime::{Artifact, Value};
 use crate::tensor::Tensor;
 use crate::transport::{
     schedule_step, Bucket, Bucketer, Cluster, ComputePhases, EngineKind, LayerTiming,
+    PipelineMode,
 };
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
@@ -70,6 +71,12 @@ pub struct TrainerConfig {
     /// and projects step time with comm/compute overlap; `Lockstep` is
     /// the sequential reference. Both produce identical gradients.
     pub engine: EngineKind,
+    /// Collective scheduling relative to compute: `Off` is the lockstep
+    /// reference, `Overlap` posts collectives early and drains them late
+    /// (bitwise-identical results), `Delayed` applies step *t−1*'s
+    /// aggregate while step *t*'s collective is in flight (one step of
+    /// staleness, the PyTorch DDP PowerSGD-hook trick).
+    pub pipeline: PipelineMode,
     /// DDP-style bucket capacity in raw gradient bytes (0 = a single
     /// bucket per step, i.e. no bucketing).
     pub bucket_bytes: u64,
@@ -88,6 +95,7 @@ impl Default for TrainerConfig {
             eval_kind: EvalKind::Accuracy,
             log_every: 0,
             engine: EngineKind::Lockstep,
+            pipeline: PipelineMode::default(),
             bucket_bytes: 0,
             straggler: 1.0,
         }
@@ -149,9 +157,10 @@ impl Trainer {
                 t
             })
             .collect();
-        // The engine is process-wide (like a torch.distributed backend):
-        // every collective in this process follows the trainer's choice.
-        crate::transport::set_engine(cfg.engine);
+        // The engine is per-run configuration: collectives dispatch on
+        // the CommLog built in `train_step` (CommLog::on), so nothing
+        // process-global is mutated and other trainers/tests in the
+        // same process are unaffected.
         // Phase accumulators feed the per-step time split
         // (compress/collective/decompress); they only read clocks, never
         // data, so trajectories are identical with or without them
@@ -238,7 +247,7 @@ impl Trainer {
         // measured wall clock.
         let t1 = Instant::now();
         let before = crate::obs::phase_totals();
-        let mut log = CommLog::default();
+        let mut log = CommLog::on(self.cfg.engine);
         let delta = self.opt.step(&per_worker_grads, self.step, &mut log);
         let opt_s = t1.elapsed().as_secs_f64();
         let spans = crate::obs::phase_totals().delta_since(&before);
@@ -288,7 +297,12 @@ impl Trainer {
             encode_s: compress_s,
             decode_s: decompress_s,
         };
-        let overlap = self.cfg.engine == EngineKind::Threaded;
+        // The cluster projection overlaps bucket collectives with the
+        // remaining backprop when either the threaded engine or an
+        // explicit pipelined mode is in play (delayed hides even more
+        // in practice; the projection models it like overlap).
+        let overlap = self.cfg.engine == EngineKind::Threaded
+            || self.cfg.pipeline != PipelineMode::Off;
         let outcome =
             schedule_step(&self.layers, &self.buckets, compute, &bucket_comm, cluster, overlap);
         let sim_comm_s = outcome.comm_busy;

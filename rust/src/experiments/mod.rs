@@ -50,14 +50,17 @@ pub use registry::{
 pub use report::{generate_report, redact_measured, write_report};
 
 use crate::collectives::{ring_wire_bytes, CollOp};
+use crate::compress::SchemeMeta;
 use crate::net::backend_by_name;
 use crate::obs::{self, Phase};
 use crate::profiles;
-use crate::simulate::{data_per_epoch_mb, epoch_speedup_vs_single_sgd, simulate_step};
+use crate::simulate::{
+    data_per_epoch_mb, epoch_speedup_vs_single_sgd, simulate_step, simulate_step_overlapped,
+};
 use crate::transport::tcp::{
     harness_registry, oracle_trajectory, worker_trajectory, HarnessConfig, MeteredTransport,
 };
-use crate::transport::{Cluster, InProcDuplex};
+use crate::transport::{Cluster, InProcDuplex, PipelineMode};
 use crate::util::bench::{json_escape, json_num};
 use crate::util::Table;
 use anyhow::{anyhow, bail, Context, Result};
@@ -67,6 +70,13 @@ use std::path::{Path, PathBuf};
 /// Bump when a record field changes meaning, so downstream consumers of
 /// the uploaded CI artifacts can dispatch on it.
 pub const SCHEMA_VERSION: u32 = 1;
+
+/// Bucket cap used when a suite prices the overlapped schedule
+/// (`pipeline = "overlap"`): 4 MiB of raw gradient per bucket, the
+/// crate's usual `--bucket-mb 4` working point (small enough that the
+/// first reduction launches early in the backward pass, large enough
+/// that per-bucket latency does not dominate).
+pub const OVERLAP_BUCKET_BYTES: u64 = 4 << 20;
 
 /// One flat result record of a suite run: a stable name, string tags
 /// (axis values), and numeric metrics.
@@ -99,6 +109,32 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<Record> {
         .ok_or_else(|| anyhow!("scenario {}: unknown backend {:?}", spec.id(), spec.backend))?;
     let b = simulate_step(&profile, spec.scheme, spec.workers, &backend);
     let speedup = epoch_speedup_vs_single_sgd(&profile, spec.scheme, spec.workers, &backend);
+    let mut metrics = vec![
+        ("workers", spec.workers as f64),
+        ("msg_bytes", spec.scheme.message_bytes(&profile.registry) as f64),
+        ("data_epoch_mb", data_per_epoch_mb(&profile, spec.scheme)),
+        ("encode_ms", b.encode * 1e3),
+        ("comm_ms", b.comm * 1e3),
+        ("decode_ms", b.decode * 1e3),
+        ("total_ms", b.total() * 1e3),
+        ("speedup_vs_single_sgd", speedup),
+    ];
+    // The backend-compare suite carries the pipeline axis: price the
+    // bucketed schedule too, with overlap on or off per the spec, so the
+    // sequential and pipelined points of one (profile, scheme, backend)
+    // differ only in what the scheduler hides.
+    if spec.suite == "backend-compare" {
+        let cluster = Cluster::uniform(spec.workers, &backend);
+        let ov = simulate_step_overlapped(
+            &profile,
+            spec.scheme,
+            &cluster,
+            OVERLAP_BUCKET_BYTES,
+            spec.pipeline == "overlap",
+        );
+        metrics.push(("exposed_comm_ms", ov.exposed_comm * 1e3));
+        metrics.push(("pipelined_total_ms", ov.total * 1e3));
+    }
     Ok(Record {
         name: spec.id(),
         tags: vec![
@@ -107,17 +143,9 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<Record> {
             ("scheme", spec.scheme.name()),
             ("backend", spec.backend.to_string()),
             ("engine", spec.engine.to_string()),
+            ("pipeline", spec.pipeline.to_string()),
         ],
-        metrics: vec![
-            ("workers", spec.workers as f64),
-            ("msg_bytes", spec.scheme.message_bytes(&profile.registry) as f64),
-            ("data_epoch_mb", data_per_epoch_mb(&profile, spec.scheme)),
-            ("encode_ms", b.encode * 1e3),
-            ("comm_ms", b.comm * 1e3),
-            ("decode_ms", b.decode * 1e3),
-            ("total_ms", b.total() * 1e3),
-            ("speedup_vs_single_sgd", speedup),
-        ],
+        metrics,
     })
 }
 
@@ -227,6 +255,10 @@ pub struct RankWire {
 pub struct WireCheckOutcome {
     /// Compressor CLI name the run used.
     pub compressor: String,
+    /// Collective schedule the workers ran
+    /// (`--pipeline {off,overlap}`; byte counts are schedule-invariant,
+    /// blocked-time attribution is not).
+    pub pipeline: PipelineMode,
     /// Compression rank where applicable.
     pub rank: usize,
     /// Worker threads in the ring.
@@ -272,12 +304,23 @@ impl WireCheckOutcome {
         self.per_rank
             .iter()
             .map(|r| Record {
-                name: format!("wire-check/{}/w{}/rank{}", self.slug(), self.workers, r.rank),
+                name: if self.pipeline == PipelineMode::Off {
+                    format!("wire-check/{}/w{}/rank{}", self.slug(), self.workers, r.rank)
+                } else {
+                    format!(
+                        "wire-check/{}/w{}/rank{}/{}",
+                        self.slug(),
+                        self.workers,
+                        r.rank,
+                        self.pipeline.cli_name()
+                    )
+                },
                 tags: vec![
                     ("suite", "wire-check".to_string()),
                     ("compressor", self.compressor.clone()),
                     ("engine", "threaded".to_string()),
                     ("transport", "inproc-metered".to_string()),
+                    ("pipeline", self.pipeline.cli_name().to_string()),
                 ],
                 metrics: vec![
                     ("rank", r.rank as f64),
@@ -325,11 +368,31 @@ pub fn measured_wire_check(
     steps: usize,
     seed: u64,
 ) -> Result<WireCheckOutcome> {
+    measured_wire_check_pipelined(compressor, rank, workers, steps, seed, PipelineMode::Off)
+}
+
+/// [`measured_wire_check`] with an explicit collective schedule. With
+/// [`PipelineMode::Overlap`] the workers post the vector reduction
+/// early and drain it behind the factor collectives — the bitwise and
+/// byte-accounting verification chain is unchanged (overlap reorders
+/// traffic, it never changes bits), but the traced run's ring-recv
+/// blocked time drops and `Phase::InFlight` spans appear. The report's
+/// overlap-vs-lockstep section runs this on the same [`WireConfig`]
+/// twice to show exactly that.
+pub fn measured_wire_check_pipelined(
+    compressor: &str,
+    rank: usize,
+    workers: usize,
+    steps: usize,
+    seed: u64,
+    pipeline: PipelineMode,
+) -> Result<WireCheckOutcome> {
     let cfg = HarnessConfig {
         compressor: compressor.to_string(),
         rank,
         seed,
         steps,
+        pipeline,
         ..HarnessConfig::default()
     };
     let endpoints = InProcDuplex::endpoints(workers);
@@ -400,6 +463,7 @@ pub fn measured_wire_check(
         analytic_exposed_comm(&reports[0].ops, &Cluster::uniform(workers, &nccl), steps);
     Ok(WireCheckOutcome {
         compressor: compressor.to_string(),
+        pipeline,
         rank,
         workers,
         steps,

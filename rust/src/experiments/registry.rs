@@ -1,5 +1,6 @@
 //! Declarative scenario registry: which (suite × profile × scheme ×
-//! workers × backend × engine) points `powersgd experiment` runs.
+//! workers × backend × engine × pipeline) points `powersgd experiment`
+//! runs.
 //!
 //! A [`Suite`] names a group of scenarios reproducing one paper
 //! artifact; [`scenarios_for`] expands a suite name into concrete
@@ -72,15 +73,30 @@ pub struct ScenarioSpec {
     /// Engine CLI name ([`crate::transport::engine_by_name`]); analytic
     /// scenarios price the lockstep schedule.
     pub engine: &'static str,
+    /// Pipeline CLI name ([`crate::transport::pipeline_by_name`]):
+    /// `"off"` prices the sequential schedule, `"overlap"` the
+    /// bucketed comm/compute-overlapped one (the backend-compare
+    /// suite's extra axis — the analytic counterpart of
+    /// `--pipeline overlap`).
+    pub pipeline: &'static str,
 }
 
 impl ScenarioSpec {
     /// Stable identifier, used as the JSON record name:
-    /// `suite/profile/scheme/wW/backend`.
+    /// `suite/profile/scheme/wW/backend`, with a `/overlap` suffix on
+    /// pipelined points (so pre-existing record names never change).
     pub fn id(&self) -> String {
         let (name, rank) = self.scheme.cli_spelling();
         let scheme = if rank > 0 { format!("{name}-r{rank}") } else { name };
-        format!("{}/{}/{}/w{}/{}", self.suite, self.profile, scheme, self.workers, self.backend)
+        let base = format!(
+            "{}/{}/{}/w{}/{}",
+            self.suite, self.profile, scheme, self.workers, self.backend
+        );
+        if self.pipeline == "off" {
+            base
+        } else {
+            format!("{base}/{}", self.pipeline)
+        }
     }
 }
 
@@ -169,7 +185,15 @@ pub fn scenarios_for(suite: &str, quick: bool) -> Vec<ScenarioSpec> {
     let mut out = Vec::new();
     let suite_name = suite_by_name(suite).map(|s| s.name).unwrap_or("");
     let spec = |profile: &'static str, scheme: Scheme, workers: usize, backend: &'static str| {
-        ScenarioSpec { suite: suite_name, profile, scheme, workers, backend, engine: "lockstep" }
+        ScenarioSpec {
+            suite: suite_name,
+            profile,
+            scheme,
+            workers,
+            backend,
+            engine: "lockstep",
+            pipeline: "off",
+        }
     };
     match suite {
         "rank-sweep" => {
@@ -214,7 +238,15 @@ pub fn scenarios_for(suite: &str, quick: bool) -> Vec<ScenarioSpec> {
             for &profile in &PROFILES {
                 for &scheme in schemes {
                     for backend in ["nccl", "gloo"] {
-                        out.push(spec(profile, scheme, DEFAULT_WORKERS, backend));
+                        // The pipeline axis: each point is priced both
+                        // sequentially and with bucketed overlap, so
+                        // the report can show what `--pipeline overlap`
+                        // is predicted to hide on each backend.
+                        for pipeline in ["off", "overlap"] {
+                            let mut s = spec(profile, scheme, DEFAULT_WORKERS, backend);
+                            s.pipeline = pipeline;
+                            out.push(s);
+                        }
                     }
                 }
             }
@@ -276,5 +308,22 @@ mod tests {
         let scaling = scenarios_for("scaling", false);
         assert!(scaling.iter().any(|s| s.backend == "gloo"));
         assert!(scaling.iter().any(|s| s.workers == 32));
+    }
+
+    #[test]
+    fn backend_compare_carries_the_pipeline_axis() {
+        for quick in [false, true] {
+            let specs = scenarios_for("backend-compare", quick);
+            assert!(specs.iter().any(|s| s.pipeline == "overlap"), "quick={quick}");
+            assert!(specs.iter().any(|s| s.pipeline == "off"), "quick={quick}");
+            // Overlap points suffix their ids; sequential ids are
+            // unchanged from before the axis existed.
+            let overlap = specs.iter().find(|s| s.pipeline == "overlap").unwrap();
+            assert!(overlap.id().ends_with("/overlap"), "{}", overlap.id());
+            let off = specs.iter().find(|s| s.pipeline == "off").unwrap();
+            assert!(!off.id().contains("overlap"), "{}", off.id());
+        }
+        // Other suites stay on the sequential schedule.
+        assert!(scenarios_for("scaling", false).iter().all(|s| s.pipeline == "off"));
     }
 }

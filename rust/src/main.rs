@@ -67,7 +67,9 @@ use powersgd::runtime::Runtime;
 use powersgd::simulate::{
     data_per_epoch_mb, scheme_by_name, simulate_step, simulate_step_overlapped, Scheme,
 };
-use powersgd::transport::{bytes_from_mb, engine_by_name, Cluster, EngineKind};
+use powersgd::transport::{
+    bytes_from_mb, engine_by_name, pipeline_by_name, Cluster, EngineKind, PipelineMode,
+};
 use powersgd::util::{Args, Table};
 
 fn main() -> Result<()> {
@@ -161,6 +163,11 @@ fn print_help() {
          \x20                  thread count. Composes with --engine threaded:\n\
          \x20                  W worker threads x N kernel threads.\n\
          \x20 --engine E       collective engine: lockstep | threaded\n\
+         \x20 --pipeline P     collective scheduling: off | overlap | delayed\n\
+         \x20                  (default off). overlap posts collectives early\n\
+         \x20                  and drains late -- bitwise identical to off;\n\
+         \x20                  delayed applies step t-1's aggregate at step t\n\
+         \x20                  (the DDP PowerSGD-hook trick; new trajectory).\n\
          \x20 --compressor C   powersgd | powersgd-cold | unbiased-rank |\n\
          \x20                  sign-norm | top-k | none | ... (see DESIGN.md)\n\
          \x20 --rank R         compression rank (default 2)\n\
@@ -198,17 +205,24 @@ pub fn build_optimizer(
     seed: u64,
     error_feedback: bool,
     engine: EngineKind,
+    pipeline: PipelineMode,
 ) -> Result<Box<dyn DistOptimizer>> {
     use powersgd::compress::{decentralized_by_name, Compressor};
     let boxed: Box<dyn Compressor> = match name {
         "none" | "sgd" => return Ok(Box::new(Sgd::new(schedule, momentum))),
         "signum" => return Ok(Box::new(SignumOpt::new(schedule, momentum))),
         _ => match (engine, decentralized_by_name(name, rank, seed)) {
-            (EngineKind::Threaded, Some(dec)) => Box::new(dec),
+            // Pipelined scheduling needs the per-worker path; the
+            // centralized oracle has no collectives to overlap, so the
+            // mode only reaches compressors through the fleet.
+            (EngineKind::Threaded, Some(dec)) => Box::new(dec.with_pipeline(pipeline)),
             _ => centralized_compressor(name, rank, seed)?,
         },
     };
-    let ef = EfSgd::new(boxed, schedule, momentum);
+    let mut ef = EfSgd::new(boxed, schedule, momentum);
+    if pipeline == PipelineMode::Delayed {
+        ef = ef.with_delayed_aggregate();
+    }
     Ok(Box::new(if error_feedback { ef } else { ef.without_error_feedback() }))
 }
 
@@ -273,6 +287,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let no_ef = args.flag("no-error-feedback");
     let engine = engine_by_name(args.get_or("engine", "lockstep"))
         .context("unknown engine (lockstep|threaded)")?;
+    let pipeline = pipeline_by_name(args.get_or("pipeline", "off"))
+        .context("unknown pipeline mode (off|overlap|delayed)")?;
     let bucket_mb = args.get_parsed_or("bucket-mb", 0.0f64);
     let straggler = args.get_parsed_or("straggler", 1.0f64);
 
@@ -282,7 +298,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let is_lm = model.starts_with("lstm") || model.starts_with("transformer");
     let schedule = LrSchedule::paper_step(lr, workers, warmup, vec![]);
-    let opt = build_optimizer(&compressor, rank, schedule, momentum, seed, !no_ef, engine)?;
+    let opt =
+        build_optimizer(&compressor, rank, schedule, momentum, seed, !no_ef, engine, pipeline)?;
     let cfg = TrainerConfig {
         workers,
         backend,
@@ -291,6 +308,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_kind: if is_lm { EvalKind::Perplexity } else { EvalKind::Accuracy },
         log_every: args.get_parsed_or("log-every", 10usize),
         engine,
+        pipeline,
         bucket_bytes: bytes_from_mb(bucket_mb),
         straggler,
     };
@@ -510,15 +528,17 @@ fn run_decentralized_check(
 /// Shared `launch`/`worker` options → the TCP harness config. The
 /// momentum parses as f32 directly (not via f64) so the coordinator's
 /// value and the string-forwarded worker values are bit-identical.
-fn harness_config(args: &Args) -> powersgd::transport::tcp::HarnessConfig {
-    powersgd::transport::tcp::HarnessConfig {
+fn harness_config(args: &Args) -> Result<powersgd::transport::tcp::HarnessConfig> {
+    Ok(powersgd::transport::tcp::HarnessConfig {
         compressor: args.get_or("compressor", "powersgd").to_string(),
         rank: args.get_parsed_or("rank", 2usize),
         seed: args.get_parsed_or("seed", 42u64),
         steps: args.get_parsed_or("steps", 3usize),
         lr: args.get_parsed_or("lr", 0.05f64),
         momentum: args.get_parsed_or("momentum", 0.9f32),
-    }
+        pipeline: pipeline_by_name(args.get_or("pipeline", "off"))
+            .context("unknown pipeline mode (off|overlap|delayed)")?,
+    })
 }
 
 fn harness_timeout(args: &Args) -> std::time::Duration {
@@ -538,15 +558,17 @@ fn cmd_launch(args: &Args) -> Result<()> {
     if transport != "tcp" {
         bail!("unknown transport {transport:?} (tcp)");
     }
-    let cfg = harness_config(args);
+    let cfg = harness_config(args)?;
     let timeout = harness_timeout(args);
 
     let rendezvous = Rendezvous::bind(args.get_or("bind", "127.0.0.1:0"))?;
     let addr = rendezvous.addr()?;
     let exe = std::env::current_exe().context("cannot locate the powersgd binary")?;
     eprintln!(
-        "launching {workers} worker processes (rendezvous {addr}, {} rank {}, {} steps)",
-        cfg.compressor, cfg.rank, cfg.steps
+        "launching {workers} worker processes (rendezvous {addr}, {} rank {}, {} steps, \
+         pipeline {})",
+        cfg.compressor, cfg.rank, cfg.steps,
+        cfg.pipeline.cli_name()
     );
     let mut children = Vec::with_capacity(workers);
     for _ in 0..workers {
@@ -566,6 +588,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .arg(cfg.lr.to_string())
             .arg("--momentum")
             .arg(cfg.momentum.to_string())
+            .arg("--pipeline")
+            .arg(cfg.pipeline.cli_name())
             .arg("--timeout-s")
             .arg(timeout.as_secs_f64().to_string());
         // Kernel threads compose across processes too: every worker
@@ -668,7 +692,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .context("worker needs --coordinator host:port (normally passed by `launch`)")?;
     let rank = powersgd::transport::tcp::run_worker(
         coordinator,
-        &harness_config(args),
+        &harness_config(args)?,
         harness_timeout(args),
     )?;
     // Each worker process writes its own rank-suffixed trace part

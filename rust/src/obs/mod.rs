@@ -36,9 +36,10 @@
 //!   Chrome-trace-event/Perfetto JSON by [`chrome::chrome_trace_json`]
 //!   (the `--trace <path>` CLI flag).
 //!
-//! Both modes are process-wide switches, like the
-//! [`crate::transport::set_engine`] backend selector: a trainer or CLI
-//! run flips them once at startup. [`capture`] serializes scoped
+//! Both modes are process-wide switches: a trainer or CLI run flips
+//! them once at startup. (Engine selection, by contrast, is explicit
+//! per-run configuration — see
+//! [`crate::transport::EngineKind`] and `CommLog::on`.) [`capture`] serializes scoped
 //! recordings (tests, the experiment report) behind a global lock so
 //! concurrent captures cannot interleave.
 
@@ -73,9 +74,11 @@ pub enum Phase {
     Collective,
     /// Compressor decode work (reconstruction from factors/messages).
     Decompress,
-    /// One transport `send_next` (in-process channel or TCP frame).
+    /// One posted transport send (`post_send`; `send_next` is its
+    /// blocking wrapper) — in-process channel or TCP frame handoff.
     RingSend,
-    /// One transport `recv_prev` — blocked time is recv wait.
+    /// One blocking wait on a posted receive (`wait`; `recv_prev` is
+    /// its wrapper) — blocked time is exposed recv wait.
     RingRecv,
     /// Wire-codec frame encode (TCP backend only).
     WireEncode,
@@ -93,10 +96,14 @@ pub enum Phase {
     GramSchmidt,
     /// One sharded job slice on a kernel-pool worker thread.
     PoolChunk,
+    /// A posted collective's in-flight window: first post to final
+    /// drain (pipelined modes) — comm hidden behind compute shows up
+    /// here instead of in `RingRecv`.
+    InFlight,
 }
 
 /// Number of phases (size of the accumulator table).
-pub const PHASE_COUNT: usize = 15;
+pub const PHASE_COUNT: usize = 16;
 
 /// All phases in discriminant order (the deterministic-summary order).
 pub const PHASES: [Phase; PHASE_COUNT] = [
@@ -115,6 +122,7 @@ pub const PHASES: [Phase; PHASE_COUNT] = [
     Phase::MatmulNt,
     Phase::GramSchmidt,
     Phase::PoolChunk,
+    Phase::InFlight,
 ];
 
 impl Phase {
@@ -136,6 +144,7 @@ impl Phase {
             Phase::MatmulNt => "matmul_nt",
             Phase::GramSchmidt => "gram_schmidt",
             Phase::PoolChunk => "pool_chunk",
+            Phase::InFlight => "in_flight",
         }
     }
 
@@ -144,7 +153,7 @@ impl Phase {
         match self {
             Phase::Step | Phase::Grad => "coordinator",
             Phase::Compress | Phase::Collective | Phase::Decompress => "compress",
-            Phase::RingSend | Phase::RingRecv | Phase::Rendezvous => "transport",
+            Phase::RingSend | Phase::RingRecv | Phase::Rendezvous | Phase::InFlight => "transport",
             Phase::WireEncode | Phase::WireDecode => "wire",
             Phase::MatmulNn | Phase::MatmulTn | Phase::MatmulNt | Phase::GramSchmidt
             | Phase::PoolChunk => "kernel",

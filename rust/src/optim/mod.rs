@@ -14,7 +14,7 @@ mod schedule;
 pub use schedule::{LrSchedule, ScheduleKind};
 
 use crate::collectives::CommLog;
-use crate::compress::{Compressor, NoCompression};
+use crate::compress::{Compressor, NoCompression, SchemeMeta};
 use crate::tensor::Tensor;
 
 /// A distributed optimizer: consumes per-worker (matricized) gradients,
@@ -58,6 +58,11 @@ pub struct EfSgd {
     m: Vec<Tensor>,
     /// Fig. 7 ablation: disable the feedback (errors stay zero).
     use_error_feedback: bool,
+    /// One-step-delayed aggregation (`--pipeline delayed`): apply step
+    /// `t−1`'s aggregate at step `t`.
+    delayed: bool,
+    /// The aggregate computed last step, not yet applied (delayed mode).
+    pending_mean: Option<Vec<Tensor>>,
 }
 
 impl EfSgd {
@@ -70,6 +75,8 @@ impl EfSgd {
             errors: Vec::new(),
             m: Vec::new(),
             use_error_feedback: true,
+            delayed: false,
+            pending_mean: None,
         }
     }
 
@@ -77,6 +84,25 @@ impl EfSgd {
     pub fn without_error_feedback(mut self) -> EfSgd {
         self.use_error_feedback = false;
         self
+    }
+
+    /// One-step-delayed aggregation (the PyTorch DDP PowerSGD-hook
+    /// trick, `--pipeline delayed`): step `t` applies step `t−1`'s
+    /// aggregate, so the collective can stay in flight across the next
+    /// step's backward pass; step 0 applies nothing. Error feedback
+    /// still uses each round's own reconstruction — only the *applied*
+    /// aggregate is stale. The trajectory therefore differs from the
+    /// synchronous one (by exactly one step of staleness; see the
+    /// shifted-trajectory test) and must be compared against a delayed
+    /// oracle.
+    pub fn with_delayed_aggregate(mut self) -> EfSgd {
+        self.delayed = true;
+        self
+    }
+
+    /// Whether one-step-delayed aggregation is on.
+    pub fn is_delayed(&self) -> bool {
+        self.delayed
     }
 
     /// Name of the wrapped compressor (for logs).
@@ -100,7 +126,8 @@ impl EfSgd {
 impl DistOptimizer for EfSgd {
     fn name(&self) -> String {
         let ef = if self.use_error_feedback { "" } else { " (no EF)" };
-        format!("EF-SGD[{}]{}", self.compressor.name(), ef)
+        let delay = if self.delayed { " (delayed)" } else { "" };
+        format!("EF-SGD[{}]{}{}", self.compressor.name(), ef, delay)
     }
 
     fn lr_at(&self, step: usize) -> f64 {
@@ -144,13 +171,23 @@ impl DistOptimizer for EfSgd {
             }
         }
 
-        // Lines 12–13: m ← λm + Δ';  x ← x − γ(Δ' + m)
+        // Lines 12–13: m ← λm + Δ';  x ← x − γ(Δ' + m). In delayed
+        // mode Δ' is the previous step's aggregate; step 0 has nothing
+        // to apply and leaves the momentum untouched.
+        let applied = if self.delayed {
+            match self.pending_mean.replace(agg.mean) {
+                Some(prev) => prev,
+                None => return grads[0].iter().map(|g| Tensor::zeros(g.shape())).collect(),
+            }
+        } else {
+            agg.mean
+        };
         let gamma = self.schedule.lr_at(step) as f32;
         let mut delta = Vec::with_capacity(nparams);
         for p in 0..nparams {
             self.m[p].scale(self.momentum);
-            self.m[p].axpy(1.0, &agg.mean[p]);
-            let mut d = agg.mean[p].clone();
+            self.m[p].axpy(1.0, &applied[p]);
+            let mut d = applied[p].clone();
             d.axpy(1.0, &self.m[p]);
             d.scale(gamma);
             delta.push(d);
@@ -364,6 +401,65 @@ mod tests {
         }
         // Signum oscillates at ±lr scale but must reduce the norm a lot.
         assert!(x[0].norm() < start * 0.2, "{} -> {}", start, x[0].norm());
+    }
+
+    #[test]
+    fn delayed_aggregation_converges_on_quadratic() {
+        let mut rng = Rng::new(206);
+        let mut x = vec![Tensor::full(&[8, 6], 1.0), Tensor::full(&[4], -2.0)];
+        let mut opt = EfSgd::new(Box::new(PowerSgd::new(2, 7)), const_schedule(0.05), 0.9)
+            .with_delayed_aggregate();
+        let mut log = CommLog::default();
+        for step in 0..300 {
+            let grads = quad_grads(&x, 4, 0.01, &mut rng);
+            let delta = opt.step(&grads, step, &mut log);
+            for (xi, di) in x.iter_mut().zip(delta.iter()) {
+                xi.axpy(-1.0, di);
+            }
+        }
+        let norm: f64 = x.iter().map(|t| t.norm()).sum();
+        assert!(norm < 0.3, "delayed EF-SGD failed to converge: |x| = {norm}");
+    }
+
+    /// On a fixed gradient sequence (identical compression inputs) with
+    /// a constant learning rate, the delayed trajectory is exactly the
+    /// synchronous one shifted by one step: delta'₀ = 0 and
+    /// delta'ₜ ≡ deltaₜ₋₁ bit for bit — the precise meaning of
+    /// "one step of staleness".
+    #[test]
+    fn delayed_is_the_synchronous_trajectory_shifted_one_step() {
+        let make = || EfSgd::new(Box::new(PowerSgd::new(2, 7)), const_schedule(0.05), 0.9);
+        let mut sync = make();
+        let mut delayed = make().with_delayed_aggregate();
+        let mut rng = Rng::new(207);
+        let mut sync_deltas = Vec::new();
+        let mut delayed_deltas = Vec::new();
+        for step in 0..5 {
+            // Gradients independent of the trajectory, so both runs
+            // compress identical inputs.
+            let grads: Vec<Vec<Tensor>> = (0..3)
+                .map(|_| {
+                    [&[6, 5][..], &[3][..]]
+                        .iter()
+                        .map(|s| {
+                            let mut t = Tensor::zeros(s);
+                            rng.fill_normal(t.data_mut(), 1.0);
+                            t
+                        })
+                        .collect()
+                })
+                .collect();
+            sync_deltas.push(sync.step(&grads, step, &mut CommLog::default()));
+            delayed_deltas.push(delayed.step(&grads, step, &mut CommLog::default()));
+        }
+        for t in &delayed_deltas[0] {
+            assert_eq!(t.norm(), 0.0, "step 0 must apply nothing");
+        }
+        for s in 1..5 {
+            for (a, b) in delayed_deltas[s].iter().zip(sync_deltas[s - 1].iter()) {
+                assert_eq!(a.data(), b.data(), "delayed[{s}] != sync[{}]", s - 1);
+            }
+        }
     }
 
     #[test]

@@ -443,6 +443,7 @@ pub fn epoch_speedup_vs_single_sgd(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::SchemeMeta;
     use crate::net::{GLOO, NCCL};
     use crate::profiles::{lstm_wikitext2, resnet18};
 

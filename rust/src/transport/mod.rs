@@ -5,10 +5,12 @@
 //! *priced* network time with the α–β model. This module is a real
 //! execution substrate:
 //!
-//! - [`Transport`] — the point-to-point seam: a worker endpoint that can
-//!   send a message to its ring successor and (blockingly) receive from
-//!   its predecessor. [`InProcRing`] implements it with `std::sync::mpsc`
-//!   channels; [`TcpRing`] implements it over real OS sockets.
+//! - [`Transport`] — the point-to-point seam: a completion queue over a
+//!   worker endpoint's two ring links (post a send to the successor /
+//!   a receive from the predecessor, then poll or wait the ticket).
+//!   [`InProcRing`] implements it with `std::sync::mpsc` channels;
+//!   [`TcpRing`] implements it over real OS sockets with a dedicated
+//!   I/O thread per direction.
 //! - [`ring`] — channel-based ring collectives: each simulated worker
 //!   runs on its own OS thread and moves chunks over its endpoint. The
 //!   arithmetic (chunk boundaries, accumulation order) is identical to
@@ -37,13 +39,29 @@
 //!
 //! # Engine selection
 //!
-//! The engine is process-wide configuration, like a `torch.distributed`
-//! backend: [`set_engine`] flips every collective in the process between
-//! the lockstep reference and the threaded ring. [`crate::coordinator`]
-//! sets it from [`TrainerConfig::engine`](crate::coordinator::TrainerConfig),
-//! and the CLI exposes it as `--engine {lockstep,threaded}`. Both engines
-//! produce identical bytes, so concurrent tests that race on the switch
-//! can differ only in thread schedule, never in results.
+//! The engine is *explicit per-run configuration*, not process-global
+//! state: every collective takes a
+//! [`CommLog`](crate::collectives::CommLog) and dispatches on its
+//! `engine` field ([`CommLog::on`](crate::collectives::CommLog::on)
+//! selects it; `CommLog::default()` is the lockstep oracle).
+//! [`crate::coordinator`] builds its log from
+//! [`TrainerConfig::engine`](crate::coordinator::TrainerConfig), and the
+//! CLI exposes it as `--engine {lockstep,threaded}`. Because nothing is
+//! process-wide, two engines coexist in one process — the comparison
+//! tests run them side by side with no global lock. Both engines
+//! produce identical bytes, so a switch can differ only in thread
+//! schedule, never in results.
+//!
+//! # Posted operations and pipelining
+//!
+//! [`Transport`] is a completion queue: [`Transport::post_send`] /
+//! [`Transport::post_recv`] return [`Ticket`]s resolved by
+//! [`Transport::poll`] / [`Transport::wait`]; the blocking
+//! `send_next`/`recv_prev` calls are default wrappers over post + wait.
+//! [`pipeline`] builds split-phase ring collectives on top
+//! ([`PostedAllReduce`]) and defines the `--pipeline
+//! {off,overlap,delayed}` axis ([`PipelineMode`]); see DESIGN.md §14
+//! for the determinism policy governing in-flight operations.
 //!
 //! # Worked example
 //!
@@ -70,18 +88,18 @@
 
 mod bucket;
 pub mod overlap;
+pub mod pipeline;
 pub mod ring;
 pub mod tcp;
 
 pub use bucket::{bytes_from_mb, Bucket, Bucketer, LayerTiming};
 pub use overlap::{schedule_step, Cluster, ComputePhases, Link, OverlapOutcome};
+pub use pipeline::{pipeline_by_name, PipelineMode, PostedAllReduce};
 pub use ring::{
     ring_all_gather_threaded, ring_all_gather_worker, ring_all_reduce_sum_threaded,
-    ring_all_reduce_worker, InProcDuplex, InProcRing, RingNode, Transport,
+    ring_all_reduce_worker, Completion, InProcDuplex, InProcRing, RingNode, Ticket, Transport,
 };
 pub use tcp::{MeteredTransport, TcpRing, WireCounters};
-
-use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Which execution substrate collectives run on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -99,21 +117,6 @@ pub fn engine_by_name(name: &str) -> Option<EngineKind> {
         "lockstep" | "sequential" => Some(EngineKind::Lockstep),
         "threaded" | "ring" => Some(EngineKind::Threaded),
         _ => None,
-    }
-}
-
-static ENGINE: AtomicU8 = AtomicU8::new(0);
-
-/// Select the process-wide collective engine.
-pub fn set_engine(kind: EngineKind) {
-    ENGINE.store(kind as u8, Ordering::SeqCst);
-}
-
-/// The currently selected collective engine.
-pub fn engine() -> EngineKind {
-    match ENGINE.load(Ordering::SeqCst) {
-        1 => EngineKind::Threaded,
-        _ => EngineKind::Lockstep,
     }
 }
 

@@ -1,0 +1,315 @@
+//! Split-phase ring collectives and the pipeline-mode axis
+//! (DESIGN.md §14).
+//!
+//! The completion-queue [`Transport`] API decouples *posting* traffic
+//! from *waiting* on it; this module packages that into a resumable
+//! ring all-reduce — [`PostedAllReduce`] — that a caller starts, parks
+//! while it computes something else, and drains later. The arithmetic
+//! (chunk boundaries at `c·n/W`, accumulation order, buffer recycling)
+//! is copied exactly from
+//! [`ring_all_reduce_worker`](super::ring_all_reduce_worker), so a
+//! posted reduction is **bitwise identical** to the lockstep oracle no
+//! matter where its waits land.
+//!
+//! # Determinism policy for in-flight operations
+//!
+//! Receive tickets are fulfilled positionally (k-th frame on a link →
+//! k-th posted receive), so correctness with several collectives in
+//! flight requires a *static schedule*: every worker must post sends
+//! and receives at the same program points, in the same order. Posting
+//! must never depend on timing (e.g. "post whichever bucket finished
+//! first") — that would let two workers disagree about which frame is
+//! k-th on a link. All pipelined drivers in this crate follow the
+//! rule; [`PostedAllReduce::advance`] only posts step *k+1* after
+//! folding step *k*, which keeps each machine's traffic in lockstep
+//! program order even when machines interleave.
+//!
+//! # Modes
+//!
+//! [`PipelineMode`] is the CLI-visible axis (`--pipeline
+//! {off,overlap,delayed}`):
+//!
+//! - **Off** — the lockstep reference: compress → collective →
+//!   decompress, fully synchronous.
+//! - **Overlap** — collectives are posted early and drained late, so
+//!   transport I/O (channel buffering in-process, the writer/reader
+//!   threads over TCP) proceeds while compression of later factors
+//!   runs. Synchronous semantics are preserved: results are bitwise
+//!   identical to `Off`.
+//! - **Delayed** — the PyTorch DDP PowerSGD-hook trick: apply step
+//!   *t−1*'s aggregate while step *t*'s collective is in flight. This
+//!   *changes the optimizer trajectory* (by one step of staleness); it
+//!   is compared against its own delayed oracle, not the synchronous
+//!   one.
+
+use super::ring::{Completion, Ticket, Transport};
+use crate::obs::{span, Phase, SpanGuard};
+
+/// How the step driver schedules collectives relative to compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// Fully synchronous (the correctness oracle).
+    #[default]
+    Off,
+    /// Post early / drain late; bitwise identical to `Off`.
+    Overlap,
+    /// One-step-delayed aggregation (different trajectory).
+    Delayed,
+}
+
+impl PipelineMode {
+    /// The CLI spelling (`--pipeline <name>`), round-tripping through
+    /// [`pipeline_by_name`].
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            PipelineMode::Off => "off",
+            PipelineMode::Overlap => "overlap",
+            PipelineMode::Delayed => "delayed",
+        }
+    }
+}
+
+/// Look up a pipeline mode by (case-insensitive) CLI name.
+pub fn pipeline_by_name(name: &str) -> Option<PipelineMode> {
+    match name.to_ascii_lowercase().as_str() {
+        "off" | "lockstep" | "none" => Some(PipelineMode::Off),
+        "overlap" | "pipelined" => Some(PipelineMode::Overlap),
+        "delayed" | "one-step-delayed" => Some(PipelineMode::Delayed),
+        _ => None,
+    }
+}
+
+/// A ring all-reduce (sum) in flight: started with [`start`], driven
+/// one ring step at a time by [`advance`], drained by [`finish`].
+///
+/// The machine owns its buffer for the duration of the collective and
+/// hands it back (fully reduced) from [`finish`]. An [`Phase::InFlight`]
+/// span covers the window from the first post to the last drain, so
+/// traces show how much communication was hidden behind compute.
+///
+/// [`start`]: PostedAllReduce::start
+/// [`advance`]: PostedAllReduce::advance
+/// [`finish`]: PostedAllReduce::finish
+pub struct PostedAllReduce<'t, T: Transport + ?Sized> {
+    t: &'t T,
+    buf: Vec<f32>,
+    starts: Vec<usize>,
+    spare: Option<Vec<f32>>,
+    /// Next ring step to complete, `0..total`.
+    next: usize,
+    /// `2(W−1)` ring steps, or 0 for trivial collectives.
+    total: usize,
+    pending: Option<Ticket>,
+    inflight: Option<SpanGuard>,
+}
+
+impl<'t, T: Transport + ?Sized> PostedAllReduce<'t, T> {
+    /// Post the first ring step's traffic and return the in-flight
+    /// machine. Trivial collectives (`W == 1` or empty buffers) start
+    /// already done.
+    pub fn start(t: &'t T, buf: Vec<f32>) -> PostedAllReduce<'t, T> {
+        let w = t.world();
+        let n = buf.len();
+        let total = if w == 1 || n == 0 { 0 } else { 2 * (w - 1) };
+        let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
+        let mut machine = PostedAllReduce {
+            t,
+            buf,
+            starts,
+            spare: None,
+            next: 0,
+            total,
+            pending: None,
+            inflight: None,
+        };
+        if machine.total > 0 {
+            machine.inflight = Some(span(Phase::InFlight));
+            machine.post_step();
+        }
+        machine
+    }
+
+    /// `(c_send, c_recv)` for ring step `step`, identical to the
+    /// schedule in `ring_all_reduce_worker`: reduce-scatter for the
+    /// first `W−1` steps, all-gather for the rest.
+    fn chunk_indices(&self, step: usize) -> (usize, usize) {
+        let w = self.t.world();
+        let i = self.t.rank();
+        if step < w - 1 {
+            let s = step;
+            ((i + w - s) % w, (i + 2 * w - 1 - s) % w)
+        } else {
+            let s = step - (w - 1);
+            ((i + 1 + w - s) % w, (i + w - s) % w)
+        }
+    }
+
+    /// Post step `self.next`'s send and receive (in that order — the
+    /// static-schedule program points).
+    fn post_step(&mut self) {
+        let (c_send, _) = self.chunk_indices(self.next);
+        let src = &self.buf[self.starts[c_send]..self.starts[c_send + 1]];
+        let msg = match self.spare.take() {
+            Some(mut v) => {
+                v.clear();
+                v.extend_from_slice(src);
+                v
+            }
+            None => src.to_vec(),
+        };
+        let _ = self.t.post_send(msg);
+        self.pending = Some(self.t.post_recv());
+    }
+
+    /// Whether every ring step has completed.
+    pub fn is_done(&self) -> bool {
+        self.next >= self.total
+    }
+
+    /// Drive exactly one ring step: wait on the posted receive, fold
+    /// the chunk into the buffer (accumulate during reduce-scatter,
+    /// overwrite during all-gather), and post the next step's traffic.
+    /// No-op once done.
+    pub fn advance(&mut self) {
+        if self.is_done() {
+            return;
+        }
+        let ticket = self.pending.take().expect("pending receive exists while steps remain");
+        let chunk = match self.t.wait(ticket) {
+            Completion::Received(c) => c,
+            _ => panic!("recv ticket resolved without a message"),
+        };
+        let w = self.t.world();
+        let (_, c_recv) = self.chunk_indices(self.next);
+        let dst = &mut self.buf[self.starts[c_recv]..self.starts[c_recv + 1]];
+        debug_assert_eq!(dst.len(), chunk.len(), "ring chunk size mismatch");
+        if self.next < w - 1 {
+            for (d, v) in dst.iter_mut().zip(chunk.iter()) {
+                *d += v;
+            }
+        } else {
+            dst.copy_from_slice(&chunk);
+        }
+        self.spare = Some(chunk);
+        self.next += 1;
+        if self.is_done() {
+            self.inflight = None;
+        } else {
+            self.post_step();
+        }
+    }
+
+    /// Drain every remaining ring step and hand back the reduced
+    /// buffer.
+    pub fn finish(mut self) -> Vec<f32> {
+        while !self.is_done() {
+            self.advance();
+        }
+        self.inflight = None;
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{ring_all_reduce_sum_threaded, InProcRing};
+    use crate::util::Rng;
+
+    fn random_buffers(world: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..world).map(|_| (0..n).map(|_| rng.normal() as f32).collect()).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Drive one posted machine per worker round-robin on a single
+    /// thread (mpsc sends never block, so no worker thread is needed)
+    /// and compare bitwise against the lockstep threaded reference.
+    #[test]
+    fn posted_all_reduce_matches_lockstep_bitwise() {
+        for &(world, n) in &[(1usize, 8usize), (2, 8), (3, 10), (4, 1003), (5, 7), (4, 0)] {
+            let inputs = random_buffers(world, n, 0xA11CE ^ (world as u64) << 8 ^ n as u64);
+            let mut oracle = inputs.clone();
+            ring_all_reduce_sum_threaded(&mut oracle);
+
+            let nodes = InProcRing::endpoints::<Vec<f32>>(world);
+            let mut machines: Vec<_> = nodes
+                .iter()
+                .zip(inputs.into_iter())
+                .map(|(node, buf)| PostedAllReduce::start(node, buf))
+                .collect();
+            while machines.iter().any(|m| !m.is_done()) {
+                for m in machines.iter_mut() {
+                    m.advance();
+                }
+            }
+            for (rank, (m, want)) in machines.into_iter().zip(oracle.iter()).enumerate() {
+                let got = m.finish();
+                assert_eq!(
+                    bits(&got),
+                    bits(want),
+                    "world={world} n={n} rank={rank}: posted != lockstep"
+                );
+            }
+        }
+    }
+
+    /// Two collectives in flight per endpoint, finished in reverse
+    /// start order. Positional FIFO matching must still route each
+    /// frame to the right machine because every worker posts in the
+    /// same program order (the static-schedule policy).
+    #[test]
+    fn interleaved_posted_reduces_stay_fifo_consistent() {
+        let world = 3;
+        let n = 10;
+        let a_in = random_buffers(world, n, 11);
+        let b_in = random_buffers(world, n, 22);
+        let mut a_oracle = a_in.clone();
+        let mut b_oracle = b_in.clone();
+        ring_all_reduce_sum_threaded(&mut a_oracle);
+        ring_all_reduce_sum_threaded(&mut b_oracle);
+
+        let nodes = InProcRing::endpoints::<Vec<f32>>(world);
+        // Program order on every worker: start A, start B, finish B,
+        // finish A.
+        let mut a: Vec<_> = nodes
+            .iter()
+            .zip(a_in.into_iter())
+            .map(|(node, buf)| PostedAllReduce::start(node, buf))
+            .collect();
+        let mut b: Vec<_> = nodes
+            .iter()
+            .zip(b_in.into_iter())
+            .map(|(node, buf)| PostedAllReduce::start(node, buf))
+            .collect();
+        while b.iter().any(|m| !m.is_done()) {
+            for m in b.iter_mut() {
+                m.advance();
+            }
+        }
+        while a.iter().any(|m| !m.is_done()) {
+            for m in a.iter_mut() {
+                m.advance();
+            }
+        }
+        for (rank, (m, want)) in b.into_iter().zip(b_oracle.iter()).enumerate() {
+            assert_eq!(bits(&m.finish()), bits(want), "B rank={rank}");
+        }
+        for (rank, (m, want)) in a.into_iter().zip(a_oracle.iter()).enumerate() {
+            assert_eq!(bits(&m.finish()), bits(want), "A rank={rank}");
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in [PipelineMode::Off, PipelineMode::Overlap, PipelineMode::Delayed] {
+            assert_eq!(pipeline_by_name(mode.cli_name()), Some(mode));
+        }
+        assert_eq!(pipeline_by_name("OVERLAP"), Some(PipelineMode::Overlap));
+        assert_eq!(pipeline_by_name("eager"), None);
+        assert_eq!(PipelineMode::default(), PipelineMode::Off);
+    }
+}

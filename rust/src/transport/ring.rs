@@ -19,30 +19,142 @@
 //! `tests/integration_transport.rs`.
 
 use crate::obs::{span, Phase};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
-/// A worker's point-to-point endpoint in a directed ring.
+/// Handle for an in-flight posted operation on one [`Transport`]
+/// endpoint. Tickets are endpoint-local and message-type-local: a
+/// ticket from `post_send::<Vec<f32>>` on endpoint A means nothing to
+/// endpoint B or to the `Vec<u8>` half of a duplex endpoint.
+pub type Ticket = u64;
+
+/// Resolution state of a posted operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Completion<M> {
+    /// The operation has not completed yet (only returned by `poll`).
+    Pending,
+    /// A posted send has completed — the transport took responsibility
+    /// for delivery. Sends complete at post time on every backend.
+    Sent,
+    /// A posted receive completed with the delivered message.
+    Received(M),
+}
+
+/// A worker's point-to-point endpoint in a directed ring, as a
+/// completion-queue API: operations are *posted* (never blocking on the
+/// peer) and return a [`Ticket`]; `poll`/`wait` resolve tickets.
 ///
 /// Generic over the message type `M` so the same trait carries f32
 /// chunks (all-reduce), byte-packed sign bitmaps, and whole gathered
 /// messages.
+///
+/// # Contract
+///
+/// - `post_send` **completes at post**: the transport buffers the
+///   message (mpsc channel, or a dedicated writer thread for TCP) and
+///   returns immediately. A delivery failure (dead peer, timeout)
+///   surfaces on a *later* operation on the same endpoint, with the
+///   failing rank named in the panic message.
+/// - `post_recv` registers interest in the next message from the ring
+///   predecessor. Receives fulfill in FIFO post order: the k-th posted
+///   receive gets the k-th message off the link. This positional
+///   matching is what makes pipelined schedules deterministic — every
+///   worker posts operations at the same program points, so the k-th
+///   frame on a link always means the same thing on both sides (see
+///   [`crate::transport::pipeline`]).
+/// - `wait` blocks until the ticket resolves; `poll` never blocks.
+///   Waiting on a recv ticket records a [`Phase::RingRecv`] span
+///   covering the blocked time — the exposed-communication gap the
+///   trace is meant to show.
+///
+/// The blocking `send_next`/`recv_prev` wrappers are provided for
+/// lockstep callers (post + wait in one call); the collective
+/// algorithms below still use them, so pre-redesign code runs
+/// unmodified.
 pub trait Transport<M: Send = Vec<f32>>: Send {
     /// This worker's position in the ring.
     fn rank(&self) -> usize;
     /// Number of workers in the ring.
     fn world(&self) -> usize;
-    /// Send a message to the ring successor (never blocks).
-    fn send_next(&self, msg: M);
+    /// Post a send to the ring successor. Never blocks on the peer;
+    /// completes at post (see the trait-level contract).
+    fn post_send(&self, msg: M) -> Ticket;
+    /// Post a receive from the ring predecessor. Never blocks.
+    /// Receives fulfill in FIFO post order.
+    fn post_recv(&self) -> Ticket;
+    /// Resolve a ticket without blocking.
+    fn poll(&self, ticket: Ticket) -> Completion<M>;
+    /// Block until the ticket resolves. Never returns `Pending`.
+    fn wait(&self, ticket: Ticket) -> Completion<M>;
+
+    /// Send a message to the ring successor. Completes at post — the
+    /// transport takes responsibility for delivery; it does **not**
+    /// wait for the peer (but see the posted-send failure contract).
+    fn send_next(&self, msg: M) {
+        let t = self.post_send(msg);
+        match self.wait(t) {
+            Completion::Sent => {}
+            _ => panic!("send ticket resolved to a non-send completion"),
+        }
+    }
+
     /// Receive the next message from the ring predecessor (blocks).
-    fn recv_prev(&self) -> M;
+    fn recv_prev(&self) -> M {
+        let t = self.post_recv();
+        match self.wait(t) {
+            Completion::Received(m) => m,
+            _ => panic!("recv ticket resolved without a message"),
+        }
+    }
+}
+
+/// Completion-queue bookkeeping shared by channel-backed endpoints:
+/// ticket allocation, the FIFO of outstanding receives, and messages
+/// that arrived before their ticket was waited on.
+struct CqState<M> {
+    next_ticket: Ticket,
+    /// Posted, unfulfilled recv tickets in post order.
+    pending: VecDeque<Ticket>,
+    /// Fulfilled recv tickets whose message has not been claimed yet.
+    ready: HashMap<Ticket, M>,
+}
+
+impl<M> Default for CqState<M> {
+    fn default() -> Self {
+        CqState { next_ticket: 0, pending: VecDeque::new(), ready: HashMap::new() }
+    }
+}
+
+impl<M> CqState<M> {
+    fn fresh(&mut self) -> Ticket {
+        let t = self.next_ticket;
+        self.next_ticket += 1;
+        t
+    }
+
+    fn is_recv(&self, t: Ticket) -> bool {
+        self.ready.contains_key(&t) || self.pending.contains(&t)
+    }
+
+    /// Hand an arrived message to the oldest outstanding recv ticket.
+    fn fulfill(&mut self, msg: M) {
+        let owner = self.pending.pop_front().expect("ring message with no posted receive");
+        self.ready.insert(owner, msg);
+    }
 }
 
 /// [`Transport`] endpoint backed by in-process mpsc channels.
+///
+/// The endpoint is `Send` but not `Sync`: each ring position is owned
+/// and driven by exactly one worker thread, which is what makes the
+/// `RefCell` completion-queue state safe.
 pub struct RingNode<M: Send = Vec<f32>> {
     rank: usize,
     world: usize,
     tx_next: Sender<M>,
     rx_prev: Receiver<M>,
+    cq: RefCell<CqState<M>>,
 }
 
 impl<M: Send> Transport<M> for RingNode<M> {
@@ -54,16 +166,50 @@ impl<M: Send> Transport<M> for RingNode<M> {
         self.world
     }
 
-    fn send_next(&self, msg: M) {
+    fn post_send(&self, msg: M) -> Ticket {
         let _span = span(Phase::RingSend);
         self.tx_next.send(msg).expect("ring successor hung up");
+        self.cq.borrow_mut().fresh()
     }
 
-    fn recv_prev(&self) -> M {
+    fn post_recv(&self) -> Ticket {
+        let mut cq = self.cq.borrow_mut();
+        let t = cq.fresh();
+        cq.pending.push_back(t);
+        t
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<M> {
+        let mut cq = self.cq.borrow_mut();
+        if !cq.is_recv(ticket) {
+            return Completion::Sent;
+        }
+        // Drain whatever already arrived; FIFO assignment to tickets.
+        loop {
+            match self.rx_prev.try_recv() {
+                Ok(msg) => cq.fulfill(msg),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        match cq.ready.remove(&ticket) {
+            Some(m) => Completion::Received(m),
+            None => Completion::Pending,
+        }
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<M> {
+        let mut cq = self.cq.borrow_mut();
+        if !cq.is_recv(ticket) {
+            return Completion::Sent;
+        }
         // The span covers blocked time: recv wait is exactly the
         // exposed-communication gap the trace is meant to show.
         let _span = span(Phase::RingRecv);
-        self.rx_prev.recv().expect("ring predecessor hung up")
+        while !cq.ready.contains_key(&ticket) {
+            let msg = self.rx_prev.recv().expect("ring predecessor hung up");
+            cq.fulfill(msg);
+        }
+        Completion::Received(cq.ready.remove(&ticket).expect("ticket just fulfilled"))
     }
 }
 
@@ -91,6 +237,7 @@ impl InProcRing {
                 rx_prev: rxs[(i + world - 1) % world]
                     .take()
                     .expect("each receiver is handed out exactly once"),
+                cq: RefCell::new(CqState::default()),
             })
             .collect()
     }
@@ -134,12 +281,20 @@ impl Transport<Vec<f32>> for InProcDuplex {
         self.f32s.world()
     }
 
-    fn send_next(&self, msg: Vec<f32>) {
-        self.f32s.send_next(msg);
+    fn post_send(&self, msg: Vec<f32>) -> Ticket {
+        self.f32s.post_send(msg)
     }
 
-    fn recv_prev(&self) -> Vec<f32> {
-        self.f32s.recv_prev()
+    fn post_recv(&self) -> Ticket {
+        Transport::<Vec<f32>>::post_recv(&self.f32s)
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<Vec<f32>> {
+        self.f32s.poll(ticket)
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<Vec<f32>> {
+        self.f32s.wait(ticket)
     }
 }
 
@@ -152,12 +307,20 @@ impl Transport<Vec<u8>> for InProcDuplex {
         Transport::<Vec<u8>>::world(&self.bytes)
     }
 
-    fn send_next(&self, msg: Vec<u8>) {
-        self.bytes.send_next(msg);
+    fn post_send(&self, msg: Vec<u8>) -> Ticket {
+        self.bytes.post_send(msg)
     }
 
-    fn recv_prev(&self) -> Vec<u8> {
-        self.bytes.recv_prev()
+    fn post_recv(&self) -> Ticket {
+        Transport::<Vec<u8>>::post_recv(&self.bytes)
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<Vec<u8>> {
+        self.bytes.poll(ticket)
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<Vec<u8>> {
+        self.bytes.wait(ticket)
     }
 }
 
@@ -366,6 +529,46 @@ mod tests {
         assert_eq!(bufs[0], vec![4.0, -2.0]);
         let view = ring_all_gather_threaded(&[vec![9.0f32]]);
         assert_eq!(view, vec![vec![9.0]]);
+    }
+
+    #[test]
+    fn posted_receives_fulfill_in_fifo_order() {
+        let nodes = InProcRing::endpoints::<Vec<f32>>(2);
+        // Post two receives on node 1 before anything arrives, then
+        // send two messages from node 0: the first ticket must get the
+        // first message even when the second ticket is waited first.
+        let t_a = Transport::<Vec<f32>>::post_recv(&nodes[1]);
+        let t_b = Transport::<Vec<f32>>::post_recv(&nodes[1]);
+        assert_eq!(nodes[1].poll(t_a), Completion::Pending);
+        nodes[0].post_send(vec![1.0]);
+        nodes[0].post_send(vec![2.0]);
+        assert_eq!(nodes[1].wait(t_b), Completion::Received(vec![2.0]));
+        assert_eq!(nodes[1].wait(t_a), Completion::Received(vec![1.0]));
+    }
+
+    #[test]
+    fn send_tickets_complete_at_post() {
+        let nodes = InProcRing::endpoints::<Vec<f32>>(2);
+        let t = nodes[0].post_send(vec![3.0]);
+        assert_eq!(nodes[0].poll(t), Completion::<Vec<f32>>::Sent);
+        assert_eq!(nodes[0].wait(t), Completion::<Vec<f32>>::Sent);
+        // The posted message is still delivered.
+        assert_eq!(nodes[1].recv_prev(), vec![3.0]);
+    }
+
+    #[test]
+    fn poll_resolves_an_arrived_receive_without_blocking() {
+        let nodes = InProcRing::endpoints::<Vec<u8>>(2);
+        nodes[0].post_send(vec![9u8]);
+        let t = Transport::<Vec<u8>>::post_recv(&nodes[1]);
+        // The message is already in the channel; poll must find it.
+        let got = loop {
+            match nodes[1].poll(t) {
+                Completion::Pending => std::thread::yield_now(),
+                other => break other,
+            }
+        };
+        assert_eq!(got, Completion::Received(vec![9u8]));
     }
 
     #[test]

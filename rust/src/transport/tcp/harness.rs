@@ -29,11 +29,11 @@ use super::rendezvous::{join, Rendezvous};
 use super::wire::{read_frame, write_frame, Frame};
 use super::TcpRing;
 use crate::collectives::{ring_wire_bytes, CollOp, CommLog};
-use crate::compress::{oracle_by_name, worker_by_name, EndpointCompressor};
+use crate::compress::{oracle_by_name, worker_by_name, EndpointCompressor, SchemeMeta};
 use crate::grad::ParamRegistry;
 use crate::optim::{DistOptimizer, EfSgd, LrSchedule};
 use crate::tensor::Tensor;
-use crate::transport::Transport;
+use crate::transport::{PipelineMode, Transport};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::time::Duration;
@@ -56,6 +56,11 @@ pub struct HarnessConfig {
     /// Momentum λ (an f32 so coordinator and forwarded worker values
     /// are bit-identical — see `harness_config` in `main.rs`).
     pub momentum: f32,
+    /// Collective scheduling (`--pipeline {off,overlap,delayed}`).
+    /// Overlap reorders traffic only, so it is verified against the
+    /// same lockstep oracle; delayed changes the trajectory and is
+    /// verified against a one-step-delayed oracle.
+    pub pipeline: PipelineMode,
 }
 
 impl Default for HarnessConfig {
@@ -67,6 +72,7 @@ impl Default for HarnessConfig {
             steps: 3,
             lr: 0.05,
             momentum: 0.9,
+            pipeline: PipelineMode::Off,
         }
     }
 }
@@ -129,6 +135,9 @@ pub fn oracle_trajectory(world: usize, cfg: &HarnessConfig) -> Result<(Vec<Tenso
     let comp = oracle_by_name(&cfg.compressor, cfg.rank, cfg.seed)
         .ok_or_else(|| anyhow!("no centralized oracle for compressor {:?}", cfg.compressor))?;
     let mut opt = EfSgd::new(comp, LrSchedule::constant(cfg.lr), cfg.momentum);
+    if cfg.pipeline == PipelineMode::Delayed {
+        opt = opt.with_delayed_aggregate();
+    }
     let mut params = initial_params(cfg.seed);
     let mut log = CommLog::default();
     for step in 0..cfg.steps {
@@ -178,10 +187,13 @@ where
     })?;
     let logical_model = comp.message_bytes(&harness_registry()) * cfg.steps as u64;
     let mut opt = EfSgd::new(
-        Box::new(EndpointCompressor::new(endpoint, comp)),
+        Box::new(EndpointCompressor::new(endpoint, comp).with_pipeline(cfg.pipeline)),
         LrSchedule::constant(cfg.lr),
         cfg.momentum,
     );
+    if cfg.pipeline == PipelineMode::Delayed {
+        opt = opt.with_delayed_aggregate();
+    }
 
     let mut params = initial_params(cfg.seed);
     let mut log = CommLog::default();

@@ -16,8 +16,18 @@
 //! [`crate::transport::InProcRing`] endpoints in unit tests, the real
 //! [`super::TcpRing`] in multi-process runs — so byte accounting is
 //! testable without sockets and identical with them.
+//!
+//! # Accounting under posted sends
+//!
+//! A send is charged when it is *posted* — the moment the transport
+//! takes responsibility for the bytes — not when they drain onto the
+//! socket. A receive is charged when its ticket resolves to
+//! [`Completion::Received`] (via `poll` or `wait`), which is the only
+//! point the payload length is known. The blocking wrappers
+//! `send_next`/`recv_prev` are the trait's defaults over post + wait,
+//! so both call styles meter identically.
 
-use crate::transport::Transport;
+use crate::transport::{Completion, Ticket, Transport};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -97,6 +107,14 @@ impl<T> MeteredTransport<T> {
     pub fn inner(&self) -> &T {
         &self.inner
     }
+
+    /// Charge a resolved receive; called exactly once per ticket since
+    /// a completion queue hands each message out a single time.
+    fn count_received<M: WireSized>(&self, msg: &M) {
+        let n = msg.wire_bytes();
+        self.received.fetch_add(n, Ordering::SeqCst);
+        crate::obs::add_wire_bytes(0, n);
+    }
 }
 
 impl<M, T> Transport<M> for MeteredTransport<T>
@@ -112,19 +130,33 @@ where
         self.inner.world()
     }
 
-    fn send_next(&self, msg: M) {
+    fn post_send(&self, msg: M) -> Ticket {
+        // Charged at post: the transport has taken responsibility for
+        // these bytes even though they may still be in flight.
         let n = msg.wire_bytes();
         self.sent.fetch_add(n, Ordering::SeqCst);
         crate::obs::add_wire_bytes(n, 0);
-        self.inner.send_next(msg);
+        self.inner.post_send(msg)
     }
 
-    fn recv_prev(&self) -> M {
-        let msg = self.inner.recv_prev();
-        let n = msg.wire_bytes();
-        self.received.fetch_add(n, Ordering::SeqCst);
-        crate::obs::add_wire_bytes(0, n);
-        msg
+    fn post_recv(&self) -> Ticket {
+        self.inner.post_recv()
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<M> {
+        let completion = self.inner.poll(ticket);
+        if let Completion::Received(ref msg) = completion {
+            self.count_received(msg);
+        }
+        completion
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<M> {
+        let completion = self.inner.wait(ticket);
+        if let Completion::Received(ref msg) = completion {
+            self.count_received(msg);
+        }
+        completion
     }
 }
 
@@ -209,6 +241,26 @@ mod tests {
         assert_eq!(counters.sent(), 8);
         assert_eq!(counters.received(), 8);
         assert_eq!(moved.bytes_sent(), 8);
+    }
+
+    /// Sends are charged at post (before any wait); receives only when
+    /// the ticket resolves with the payload.
+    #[test]
+    fn posted_ops_meter_at_post_and_resolution() {
+        let nodes = InProcRing::endpoints::<Vec<f32>>(1);
+        let metered = MeteredTransport::new(nodes.into_iter().next().unwrap());
+        let counters = metered.counters();
+        let send = metered.post_send(vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(counters.sent(), 12);
+        assert_eq!(metered.wait(send), Completion::Sent);
+        assert_eq!(counters.sent(), 12);
+        let recv = metered.post_recv();
+        assert_eq!(counters.received(), 0);
+        match metered.wait(recv) {
+            Completion::Received(msg) => assert_eq!(msg, vec![1.0, 2.0, 3.0]),
+            other => panic!("expected a message, got {other:?}"),
+        }
+        assert_eq!(counters.received(), 12);
     }
 
     #[test]

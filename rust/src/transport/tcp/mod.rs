@@ -36,19 +36,31 @@
 //! back into an error with `catch_unwind`, so a worker process that
 //! dies mid-collective surfaces as "rank 0: ring predecessor rank 1
 //! closed the connection mid-collective" instead of a hang — every
-//! blocking read carries a timeout.
+//! blocking wait carries a timeout.
 //!
-//! # Blocking
+//! # Posted sends and the I/O threads
 //!
-//! [`Transport::send_next`] is documented "never blocks" for the mpsc
-//! backend; a TCP send can block once the OS socket buffer fills. The
-//! ring schedule alternates one send and one receive per step on every
-//! worker, so in-flight data is bounded by one chunk per edge and
-//! backpressure clears as soon as the successor reads. For chunks
-//! larger than the socket buffers a fully-blocked ring is still
-//! possible (every rank stuck in `write`), so the successor socket
-//! carries a **write timeout** too — the worst case is a contextual
-//! error naming the stuck peer, never a silent permanent hang.
+//! Early versions documented `Transport::send_next` as "never blocks",
+//! which was only true for the mpsc backend: a TCP write could block
+//! once the OS socket buffer filled. The endpoint now runs a dedicated
+//! **writer thread** (owns the buffered successor stream, fed by an
+//! unbounded channel) and a dedicated **reader thread** (owns the
+//! predecessor stream, decodes frames as they arrive), so the
+//! completion-queue contract holds for real sockets too:
+//!
+//! - `post_send` enqueues the frame and completes at post — the
+//!   endpoint took responsibility for delivery. A write failure
+//!   (dead or backpressure-deadlocked successor, bounded by the write
+//!   timeout) is parked and surfaces on the next operation, with the
+//!   successor's rank named.
+//! - received frames accumulate in the reader thread while the worker
+//!   computes, which is what lets a pipelined schedule hide the wire
+//!   time; `wait` on a recv ticket blocks at most the configured
+//!   timeout before naming the silent predecessor.
+//!
+//! Because sends complete at post, [`MeteredTransport`] counts wire
+//! bytes at post time — the bytes are committed to the wire the moment
+//! the transport accepts them.
 
 pub mod harness;
 mod metered;
@@ -62,16 +74,58 @@ pub use harness::{
 pub use metered::{MeteredTransport, WireCounters, WireSized};
 pub use rendezvous::{join, JoinedRing, Rendezvous};
 
-use super::Transport;
-use anyhow::{anyhow, bail, Context, Result};
+use super::{Completion, Ticket, Transport};
+use anyhow::{anyhow, Result};
 use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Duration;
 use wire::{read_frame, write_frame, Frame, WireError};
 
-/// [`Transport`] endpoint over real OS sockets: one buffered writer to
-/// the ring successor, one buffered reader from the ring predecessor.
+/// Which payload type a posted receive expects. The peer executes the
+/// same deterministic program, so the k-th frame on the link always
+/// matches the k-th posted receive's expectation; a mismatch means a
+/// corrupt or misbehaving peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    F32s,
+    Bytes,
+}
+
+/// Completion-queue state shared by both typed halves of a [`TcpRing`]:
+/// one FIFO of outstanding receives (frames fulfill the oldest first,
+/// regardless of type — the link is a single ordered byte stream) and
+/// per-type ready maps. Errors resolve per ticket so a protocol
+/// mismatch names the offending frame.
+#[derive(Default)]
+struct TcpCq {
+    next_ticket: Ticket,
+    pending: VecDeque<(Ticket, Expect)>,
+    ready_f32: HashMap<Ticket, Result<Vec<f32>>>,
+    ready_bytes: HashMap<Ticket, Result<Vec<u8>>>,
+    /// A terminal stream error (peer died, corrupt frame): every
+    /// outstanding and future receive resolves to this message.
+    dead: Option<String>,
+}
+
+impl TcpCq {
+    fn fresh(&mut self) -> Ticket {
+        let t = self.next_ticket;
+        self.next_ticket += 1;
+        t
+    }
+}
+
+/// [`Transport`] endpoint over real OS sockets: a dedicated writer
+/// thread owns the buffered stream to the ring successor, a dedicated
+/// reader thread owns the stream from the ring predecessor, and the
+/// worker thread talks to both through channels — so posted sends
+/// complete at post and received frames accumulate while the worker
+/// computes (see the module-level posted-send contract).
 ///
 /// Implements both `Transport<Vec<f32>>` and `Transport<Vec<u8>>` over
 /// the same connection pair: frames are tagged, and because every
@@ -83,15 +137,30 @@ use wire::{read_frame, write_frame, Frame, WireError};
 pub struct TcpRing {
     rank: usize,
     world: usize,
-    writer: RefCell<BufWriter<TcpStream>>,
-    reader: RefCell<BufReader<TcpStream>>,
+    timeout: Duration,
+    /// Frames queued to the writer thread; dropped first on `Drop` so
+    /// the writer flushes the queue and exits.
+    to_writer: Option<Sender<Frame>>,
+    /// First write failure the writer thread hit, surfaced on the next
+    /// operation (sends complete at post, so the failing send itself
+    /// has already returned).
+    write_err: Arc<Mutex<Option<WireError>>>,
+    from_reader: Receiver<Result<Frame, WireError>>,
+    /// Raw handles for shutdown on `Drop` (the buffered streams moved
+    /// into the I/O threads).
+    next_sock: TcpStream,
+    prev_sock: TcpStream,
+    writer_thread: Option<JoinHandle<()>>,
+    reader_thread: Option<JoinHandle<()>>,
+    cq: RefCell<TcpCq>,
 }
 
 impl TcpRing {
     /// Wrap an established ring edge pair. `timeout` bounds every
-    /// blocking read from the predecessor *and* every blocking write to
-    /// the successor, so a dead, hung, or deadlocked peer becomes a
-    /// contextual error instead of a hang. Must be non-zero.
+    /// blocking wait on the predecessor *and* every write the writer
+    /// thread makes to the successor, so a dead, hung, or deadlocked
+    /// peer becomes a contextual error instead of a hang. Must be
+    /// non-zero.
     pub fn new(
         rank: usize,
         world: usize,
@@ -99,19 +168,72 @@ impl TcpRing {
         from_prev: TcpStream,
         timeout: Duration,
     ) -> Result<TcpRing> {
+        use anyhow::Context;
         assert!(world > 0 && rank < world, "bad ring identity {rank}/{world}");
-        from_prev
-            .set_read_timeout(Some(timeout))
-            .context("tcp ring: setting predecessor read timeout")?;
         to_next
             .set_write_timeout(Some(timeout))
             .context("tcp ring: setting successor write timeout")?;
         to_next.set_nodelay(true).ok();
+        let next_sock = to_next.try_clone().context("tcp ring: cloning successor handle")?;
+        let prev_sock = from_prev.try_clone().context("tcp ring: cloning predecessor handle")?;
+
+        let (to_writer, writer_rx) = channel::<Frame>();
+        let write_err = Arc::new(Mutex::new(None::<WireError>));
+        let writer_slot = Arc::clone(&write_err);
+        let writer_thread = std::thread::Builder::new()
+            .name(format!("tcp-tx-{rank}"))
+            .spawn(move || {
+                crate::obs::set_track(&format!("wire-tx-{rank}"));
+                let mut writer = BufWriter::new(to_next);
+                while let Ok(frame) = writer_rx.recv() {
+                    let done = write_frame(&mut writer, &frame).and_then(|()| {
+                        writer.flush().map_err(WireError::from)
+                    });
+                    if let Err(e) = done {
+                        *writer_slot.lock().expect("write-error slot poisoned") = Some(e);
+                        // Exiting drops the receiver: the owner's next
+                        // post_send fails fast and reads the slot.
+                        return;
+                    }
+                }
+            })
+            .context("tcp ring: spawning the writer thread")?;
+
+        let (reader_tx, from_reader) = channel::<Result<Frame, WireError>>();
+        let reader_thread = std::thread::Builder::new()
+            .name(format!("tcp-rx-{rank}"))
+            .spawn(move || {
+                crate::obs::set_track(&format!("wire-rx-{rank}"));
+                let mut reader = BufReader::new(from_prev);
+                loop {
+                    match read_frame(&mut reader) {
+                        Ok(frame) => {
+                            if reader_tx.send(Ok(frame)).is_err() {
+                                return; // owner gone
+                            }
+                        }
+                        Err(e) => {
+                            // Terminal: EOF, reset, or a corrupt frame.
+                            let _ = reader_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            })
+            .context("tcp ring: spawning the reader thread")?;
+
         Ok(TcpRing {
             rank,
             world,
-            writer: RefCell::new(BufWriter::new(to_next)),
-            reader: RefCell::new(BufReader::new(from_prev)),
+            timeout,
+            to_writer: Some(to_writer),
+            write_err,
+            from_reader,
+            next_sock,
+            prev_sock,
+            writer_thread: Some(writer_thread),
+            reader_thread: Some(reader_thread),
+            cq: RefCell::new(TcpCq::default()),
         })
     }
 
@@ -130,89 +252,203 @@ impl TcpRing {
         (self.rank + self.world - 1) % self.world
     }
 
-    fn send_frame_checked(&self, frame: &Frame) -> Result<()> {
-        let _span = crate::obs::span(crate::obs::Phase::RingSend);
-        fn write_and_flush(
-            writer: &mut BufWriter<TcpStream>,
-            frame: &Frame,
-        ) -> Result<(), WireError> {
-            write_frame(writer, frame)?;
-            writer.flush()?;
-            Ok(())
-        }
-        let mut writer = self.writer.borrow_mut();
-        write_and_flush(&mut writer, frame).map_err(|e| {
-            let (me, succ) = (self.rank, self.succ());
-            if e.is_timeout() {
-                anyhow!(
-                    "rank {me}: timed out sending to ring successor rank {succ} \
-                     (worker {succ} hung or the ring is backpressure-deadlocked?)"
-                )
-            } else {
-                anyhow!(e).context(format!(
-                    "rank {me}: cannot send to ring successor rank {succ} (worker {succ} died?)"
-                ))
-            }
+    /// The parked writer-thread failure as a contextual error, if any.
+    fn take_write_err(&self) -> Option<anyhow::Error> {
+        let e = self.write_err.lock().expect("write-error slot poisoned").take()?;
+        let (me, succ) = (self.rank, self.succ());
+        Some(if e.is_timeout() {
+            anyhow!(
+                "rank {me}: timed out sending to ring successor rank {succ} \
+                 (worker {succ} hung or the ring is backpressure-deadlocked?)"
+            )
+        } else {
+            anyhow!(e).context(format!(
+                "rank {me}: cannot send to ring successor rank {succ} (worker {succ} died?)"
+            ))
         })
     }
 
-    fn recv_frame_checked(&self) -> Result<Frame> {
+    /// Contextual error for a terminal predecessor-stream failure.
+    fn recv_stream_err(&self, e: WireError) -> anyhow::Error {
+        let (me, pred) = (self.rank, self.pred());
+        if e.is_timeout() {
+            anyhow!(
+                "rank {me}: timed out waiting for ring predecessor rank {pred} \
+                 (worker {pred} dead or hung?)"
+            )
+        } else if matches!(e, WireError::Truncated(_)) {
+            anyhow!(
+                "rank {me}: ring predecessor rank {pred} closed the connection \
+                 mid-collective (worker {pred} died?)"
+            )
+        } else {
+            anyhow!(e).context(format!(
+                "rank {me}: corrupt frame from ring predecessor rank {pred}"
+            ))
+        }
+    }
+
+    /// Post a frame to the writer thread. Completes at post; a parked
+    /// write failure from an earlier send surfaces here.
+    fn post_frame_checked(&self, frame: Frame) -> Result<Ticket> {
+        let _span = crate::obs::span(crate::obs::Phase::RingSend);
+        if let Some(err) = self.take_write_err() {
+            return Err(err);
+        }
+        let tx = self.to_writer.as_ref().expect("writer channel live until Drop");
+        if tx.send(frame).is_err() {
+            // The writer thread exited on a failure; report its cause.
+            return Err(self.take_write_err().unwrap_or_else(|| {
+                anyhow!(
+                    "rank {}: cannot send to ring successor rank {} (worker {} died?)",
+                    self.rank,
+                    self.succ(),
+                    self.succ()
+                )
+            }));
+        }
+        Ok(self.cq.borrow_mut().fresh())
+    }
+
+    /// Hand one incoming event to the oldest outstanding receive.
+    fn fulfill(&self, cq: &mut TcpCq, event: Result<Frame, WireError>) {
+        let (ticket, expect) =
+            cq.pending.pop_front().expect("frame arrived with no posted receive");
+        match event {
+            Err(e) => {
+                let msg = format!("{:#}", self.recv_stream_err(e));
+                // Terminal: every other outstanding receive dies too.
+                cq.dead = Some(msg.clone());
+                match expect {
+                    Expect::F32s => cq.ready_f32.insert(ticket, Err(anyhow!(msg))),
+                    Expect::Bytes => cq.ready_bytes.insert(ticket, Err(anyhow!(msg))),
+                };
+            }
+            Ok(Frame::F32s(vals)) if expect == Expect::F32s => {
+                cq.ready_f32.insert(ticket, Ok(vals));
+            }
+            Ok(Frame::Bytes(bytes)) if expect == Expect::Bytes => {
+                cq.ready_bytes.insert(ticket, Ok(bytes));
+            }
+            Ok(other) => {
+                let (kind, what) = match expect {
+                    Expect::F32s => (other.kind_name(), "an f32 chunk"),
+                    Expect::Bytes => (other.kind_name(), "a byte message"),
+                };
+                let err = anyhow!(
+                    "rank {}: protocol mismatch — expected {what} from rank {}, got {kind}",
+                    self.rank,
+                    self.pred()
+                );
+                match expect {
+                    Expect::F32s => cq.ready_f32.insert(ticket, Err(err)),
+                    Expect::Bytes => cq.ready_bytes.insert(ticket, Err(err)),
+                };
+            }
+        }
+    }
+
+    fn post_recv_expect(&self, expect: Expect) -> Ticket {
+        let mut cq = self.cq.borrow_mut();
+        let t = cq.fresh();
+        if let Some(msg) = cq.dead.clone() {
+            // The stream already failed; resolve immediately.
+            match expect {
+                Expect::F32s => cq.ready_f32.insert(t, Err(anyhow!(msg))),
+                Expect::Bytes => cq.ready_bytes.insert(t, Err(anyhow!(msg))),
+            };
+        } else {
+            cq.pending.push_back((t, expect));
+        }
+        t
+    }
+
+    /// True iff `ticket` belongs to an unresolved or resolved receive
+    /// (anything else is a completed-at-post send).
+    fn is_recv_ticket(cq: &TcpCq, ticket: Ticket) -> bool {
+        cq.ready_f32.contains_key(&ticket)
+            || cq.ready_bytes.contains_key(&ticket)
+            || cq.pending.iter().any(|(t, _)| *t == ticket)
+    }
+
+    /// Drain already-arrived frames without blocking.
+    fn drain_ready(&self, cq: &mut TcpCq) {
+        while !cq.pending.is_empty() {
+            match self.from_reader.try_recv() {
+                Ok(event) => self.fulfill(cq, event),
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Block until `ticket`'s receive resolves, bounded by the timeout.
+    fn wait_recv(&self, cq: &mut TcpCq, ticket: Ticket) -> Result<()> {
         // Covers blocked socket time: the exposed-communication gap.
         let _span = crate::obs::span(crate::obs::Phase::RingRecv);
-        let mut reader = self.reader.borrow_mut();
-        read_frame(&mut *reader).map_err(|e| {
-            let (me, pred) = (self.rank, self.pred());
-            if e.is_timeout() {
-                anyhow!(
-                    "rank {me}: timed out waiting for ring predecessor rank {pred} \
-                     (worker {pred} dead or hung?)"
-                )
-            } else if matches!(e, WireError::Truncated(_)) {
-                anyhow!(
-                    "rank {me}: ring predecessor rank {pred} closed the connection \
-                     mid-collective (worker {pred} died?)"
-                )
-            } else {
-                anyhow!(e).context(format!(
-                    "rank {me}: corrupt frame from ring predecessor rank {pred}"
-                ))
+        while !cq.ready_f32.contains_key(&ticket) && !cq.ready_bytes.contains_key(&ticket) {
+            match self.from_reader.recv_timeout(self.timeout) {
+                Ok(event) => self.fulfill(cq, event),
+                Err(RecvTimeoutError::Timeout) => {
+                    let timed_out = WireError::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "wait timeout",
+                    ));
+                    return Err(self.recv_stream_err(timed_out));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Reader exited and its final event was consumed.
+                    let msg = cq.dead.clone().unwrap_or_else(|| {
+                        format!("{:#}", self.recv_stream_err(WireError::Truncated("stream")))
+                    });
+                    return Err(anyhow!(msg));
+                }
             }
-        })
+        }
+        Ok(())
     }
 
-    /// Fallible send of an f32 chunk to the ring successor.
+    /// Fallible send of an f32 chunk to the ring successor. Completes
+    /// at post (see the module-level contract).
     pub fn send_f32s_checked(&self, msg: Vec<f32>) -> Result<()> {
-        self.send_frame_checked(&Frame::F32s(msg))
+        self.post_frame_checked(Frame::F32s(msg)).map(|_| ())
     }
 
     /// Fallible receive of an f32 chunk from the ring predecessor.
     pub fn recv_f32s_checked(&self) -> Result<Vec<f32>> {
-        match self.recv_frame_checked()? {
-            Frame::F32s(vals) => Ok(vals),
-            other => bail!(
-                "rank {}: protocol mismatch — expected an f32 chunk from rank {}, got {}",
-                self.rank,
-                self.pred(),
-                other.kind_name()
-            ),
-        }
+        let t = self.post_recv_expect(Expect::F32s);
+        let mut cq = self.cq.borrow_mut();
+        self.wait_recv(&mut cq, t)?;
+        cq.ready_f32.remove(&t).expect("f32 ticket just resolved")
     }
 
-    /// Fallible send of a byte message to the ring successor.
+    /// Fallible send of a byte message to the ring successor. Completes
+    /// at post (see the module-level contract).
     pub fn send_bytes_checked(&self, msg: Vec<u8>) -> Result<()> {
-        self.send_frame_checked(&Frame::Bytes(msg))
+        self.post_frame_checked(Frame::Bytes(msg)).map(|_| ())
     }
 
     /// Fallible receive of a byte message from the ring predecessor.
     pub fn recv_bytes_checked(&self) -> Result<Vec<u8>> {
-        match self.recv_frame_checked()? {
-            Frame::Bytes(bytes) => Ok(bytes),
-            other => bail!(
-                "rank {}: protocol mismatch — expected a byte message from rank {}, got {}",
-                self.rank,
-                self.pred(),
-                other.kind_name()
-            ),
+        let t = self.post_recv_expect(Expect::Bytes);
+        let mut cq = self.cq.borrow_mut();
+        self.wait_recv(&mut cq, t)?;
+        cq.ready_bytes.remove(&t).expect("byte ticket just resolved")
+    }
+}
+
+impl Drop for TcpRing {
+    fn drop(&mut self) {
+        // Disconnect the writer channel first: the writer thread drains
+        // every queued frame (posted sends stay good), then exits.
+        self.to_writer.take();
+        if let Some(h) = self.writer_thread.take() {
+            let _ = h.join();
+        }
+        // Shutdown wakes the reader thread out of a blocking read.
+        let _ = self.next_sock.shutdown(Shutdown::Both);
+        let _ = self.prev_sock.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader_thread.take() {
+            let _ = h.join();
         }
     }
 }
@@ -226,15 +462,40 @@ impl Transport<Vec<f32>> for TcpRing {
         self.world
     }
 
-    fn send_next(&self, msg: Vec<f32>) {
-        if let Err(e) = self.send_f32s_checked(msg) {
-            panic!("{e:#}");
+    fn post_send(&self, msg: Vec<f32>) -> Ticket {
+        match self.post_frame_checked(Frame::F32s(msg)) {
+            Ok(t) => t,
+            Err(e) => panic!("{e:#}"),
         }
     }
 
-    fn recv_prev(&self) -> Vec<f32> {
-        match self.recv_f32s_checked() {
-            Ok(vals) => vals,
+    fn post_recv(&self) -> Ticket {
+        self.post_recv_expect(Expect::F32s)
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<Vec<f32>> {
+        let mut cq = self.cq.borrow_mut();
+        if !Self::is_recv_ticket(&cq, ticket) {
+            return Completion::Sent;
+        }
+        self.drain_ready(&mut cq);
+        match cq.ready_f32.remove(&ticket) {
+            Some(Ok(vals)) => Completion::Received(vals),
+            Some(Err(e)) => panic!("{e:#}"),
+            None => Completion::Pending,
+        }
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<Vec<f32>> {
+        let mut cq = self.cq.borrow_mut();
+        if !Self::is_recv_ticket(&cq, ticket) {
+            return Completion::Sent;
+        }
+        if let Err(e) = self.wait_recv(&mut cq, ticket) {
+            panic!("{e:#}");
+        }
+        match cq.ready_f32.remove(&ticket).expect("f32 ticket just resolved") {
+            Ok(vals) => Completion::Received(vals),
             Err(e) => panic!("{e:#}"),
         }
     }
@@ -249,15 +510,40 @@ impl Transport<Vec<u8>> for TcpRing {
         self.world
     }
 
-    fn send_next(&self, msg: Vec<u8>) {
-        if let Err(e) = self.send_bytes_checked(msg) {
-            panic!("{e:#}");
+    fn post_send(&self, msg: Vec<u8>) -> Ticket {
+        match self.post_frame_checked(Frame::Bytes(msg)) {
+            Ok(t) => t,
+            Err(e) => panic!("{e:#}"),
         }
     }
 
-    fn recv_prev(&self) -> Vec<u8> {
-        match self.recv_bytes_checked() {
-            Ok(bytes) => bytes,
+    fn post_recv(&self) -> Ticket {
+        self.post_recv_expect(Expect::Bytes)
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<Vec<u8>> {
+        let mut cq = self.cq.borrow_mut();
+        if !Self::is_recv_ticket(&cq, ticket) {
+            return Completion::Sent;
+        }
+        self.drain_ready(&mut cq);
+        match cq.ready_bytes.remove(&ticket) {
+            Some(Ok(bytes)) => Completion::Received(bytes),
+            Some(Err(e)) => panic!("{e:#}"),
+            None => Completion::Pending,
+        }
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<Vec<u8>> {
+        let mut cq = self.cq.borrow_mut();
+        if !Self::is_recv_ticket(&cq, ticket) {
+            return Completion::Sent;
+        }
+        if let Err(e) = self.wait_recv(&mut cq, ticket) {
+            panic!("{e:#}");
+        }
+        match cq.ready_bytes.remove(&ticket).expect("byte ticket just resolved") {
+            Ok(bytes) => Completion::Received(bytes),
             Err(e) => panic!("{e:#}"),
         }
     }

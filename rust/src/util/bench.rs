@@ -146,6 +146,9 @@ pub struct BenchJson {
     bench: String,
     engine: String,
     transport: String,
+    /// Collective scheduling the measured cases model or drive
+    /// (`off` | `overlap` | `delayed`, the `--pipeline` axis).
+    pipeline: String,
     /// Ambient kernel-pool thread count
     /// ([`crate::runtime::pool::threads`]) at construction; sweeps that
     /// vary the count per case additionally tag each record with a
@@ -161,6 +164,7 @@ impl BenchJson {
             bench: bench.to_string(),
             engine: "lockstep".into(),
             transport: "inproc".into(),
+            pipeline: "off".into(),
             threads: crate::runtime::pool::threads(),
             records: Vec::new(),
         }
@@ -171,6 +175,12 @@ impl BenchJson {
     pub fn set_context(&mut self, engine: &str, transport: &str) {
         self.engine = engine.to_string();
         self.transport = transport.to_string();
+    }
+
+    /// Tag the document with the collective schedule it measured
+    /// (`off` | `overlap` | `delayed` — the CLI `--pipeline` spelling).
+    pub fn set_pipeline(&mut self, pipeline: &str) {
+        self.pipeline = pipeline.to_string();
     }
 
     /// Override the document-level kernel thread count (benches that
@@ -222,6 +232,7 @@ impl BenchJson {
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
         out.push_str(&format!("  \"engine\": \"{}\",\n", json_escape(&self.engine)));
         out.push_str(&format!("  \"transport\": \"{}\",\n", json_escape(&self.transport)));
+        out.push_str(&format!("  \"pipeline\": \"{}\",\n", json_escape(&self.pipeline)));
         out.push_str(&format!("  \"threads\": {},\n", self.threads));
         out.push_str(&format!("  \"quick\": {},\n", quick_mode()));
         out.push_str("  \"records\": [\n");
@@ -306,6 +317,7 @@ mod tests {
         // Context defaults: comparable across engine/transport runs.
         assert!(doc.contains("\"engine\": \"lockstep\""));
         assert!(doc.contains("\"transport\": \"inproc\""));
+        assert!(doc.contains("\"pipeline\": \"off\""));
         // Kernel thread count always lands in the document (ambient
         // value; don't pin it — CI runs the suite at several counts).
         assert!(doc.contains("\"threads\": "));
@@ -340,10 +352,12 @@ mod tests {
     fn context_and_wire_records_land_in_the_document() {
         let mut j = BenchJson::new("wire");
         j.set_context("threaded", "tcp");
+        j.set_pipeline("overlap");
         j.record_wire("all_reduce/w4", 1536, 1024);
         let doc = j.to_json();
         assert!(doc.contains("\"engine\": \"threaded\""));
         assert!(doc.contains("\"transport\": \"tcp\""));
+        assert!(doc.contains("\"pipeline\": \"overlap\""));
         assert!(doc.contains("\"wire_bytes\": 1536"));
         assert!(doc.contains("\"logical_bytes\": 1024"));
     }

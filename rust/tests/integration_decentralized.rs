@@ -9,14 +9,14 @@
 //! regression: the per-worker `ScratchArena` must stop allocating
 //! tensors after step 1 on a shape-stable workload.
 //!
-//! The decentralized path drives the `InProcRing` directly (it does not
-//! consult the process-wide engine switch), so no `set_engine` calls
-//! are needed here and the oracle runs on the default lockstep engine.
+//! The decentralized path drives the `InProcRing` directly (engine
+//! selection is per-`CommLog`, DESIGN.md §14), so the oracle side here
+//! simply runs on `CommLog::default()`'s lockstep engine.
 
 use powersgd::collectives::CommLog;
 use powersgd::compress::{
     decentralized_by_name, Aggregated, Compressor, DecentralizedCompressor, NoCompression,
-    PowerSgd, SignNorm, TopK, UnbiasedRank,
+    PowerSgd, SchemeMeta, SignNorm, TopK, UnbiasedRank,
 };
 use powersgd::optim::{DistOptimizer, EfSgd, LrSchedule};
 use powersgd::tensor::Tensor;

@@ -19,13 +19,14 @@ use powersgd::compress::{Compressor, PowerSgd};
 use powersgd::obs::{self, chrome, Phase};
 use powersgd::runtime::pool::set_threads;
 use powersgd::tensor::Tensor;
-use powersgd::transport::{set_engine, EngineKind};
+use powersgd::transport::EngineKind;
 use powersgd::util::Rng;
 use std::sync::Mutex;
 
 /// Every test here flips process-wide state (obs mode bits, the
-/// transport engine, the kernel-pool width); one lock serializes the
-/// whole binary so no test observes another's configuration.
+/// kernel-pool width); one lock serializes the whole binary so no test
+/// observes another's configuration. (Engine selection is per-run
+/// configuration — `CommLog::on` — and needs no serialization.)
 static OBS_LOCK: Mutex<()> = Mutex::new(());
 
 fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
@@ -51,12 +52,13 @@ fn worker_updates(seed: u64, workers: usize) -> Vec<Vec<Tensor>> {
 }
 
 /// Three full centralized PowerSGD rounds (rank 2, warm-started factor
-/// memory) over 4 workers; returns the final aggregated mean.
-fn powersgd_rounds() -> Vec<Tensor> {
+/// memory) over 4 workers on `engine`; returns the final aggregated
+/// mean.
+fn powersgd_rounds(engine: EngineKind) -> Vec<Tensor> {
     let mut comp = PowerSgd::new(2, 1);
     let mut mean = Vec::new();
     for step in 0..3u64 {
-        let mut log = CommLog::default();
+        let mut log = CommLog::on(engine);
         mean = comp.compress_aggregate(&worker_updates(900 + step, 4), &mut log).mean;
     }
     mean
@@ -74,11 +76,9 @@ fn traced_run_is_bitwise_identical_to_untraced() {
     let mut results: Vec<(String, Vec<Tensor>)> = Vec::new();
     for engine in [EngineKind::Lockstep, EngineKind::Threaded] {
         for threads in [1usize, 4] {
-            set_engine(engine);
             set_threads(threads);
-            let untraced = powersgd_rounds();
-            let (traced, _cap) = obs::capture(powersgd_rounds);
-            set_engine(EngineKind::Lockstep);
+            let untraced = powersgd_rounds(engine);
+            let (traced, _cap) = obs::capture(|| powersgd_rounds(engine));
             set_threads(1);
             assert_eq!(
                 traced, untraced,
@@ -99,14 +99,12 @@ fn traced_run_is_bitwise_identical_to_untraced() {
 #[test]
 fn captured_compression_round_exports_valid_chrome_trace() {
     let _g = obs_guard();
-    set_engine(EngineKind::Threaded);
     let (_, cap) = obs::capture(|| {
         obs::set_track("worker-0");
         let mut comp = PowerSgd::new(2, 1);
-        let mut log = CommLog::default();
+        let mut log = CommLog::on(EngineKind::Threaded);
         std::hint::black_box(comp.compress_aggregate(&worker_updates(17, 4), &mut log));
     });
-    set_engine(EngineKind::Lockstep);
 
     // The round really hit the kernels and the ring.
     let all = cap.summary(&[]);
@@ -136,15 +134,13 @@ fn captured_compression_round_exports_valid_chrome_trace() {
 fn capture_summary_is_deterministic_for_a_fixed_workload() {
     let _g = obs_guard();
     let run = || {
-        set_engine(EngineKind::Threaded);
         set_threads(1);
         let (_, cap) = obs::capture(|| {
             obs::set_track("worker-0");
             let mut comp = PowerSgd::new(2, 1);
-            let mut log = CommLog::default();
+            let mut log = CommLog::on(EngineKind::Threaded);
             std::hint::black_box(comp.compress_aggregate(&worker_updates(23, 4), &mut log));
         });
-        set_engine(EngineKind::Lockstep);
         // `worker-` catches the compressing thread, `ring-` the
         // threaded collective threads; the prefix filter drops any
         // track a concurrent non-workload thread might record.

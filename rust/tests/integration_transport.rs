@@ -11,20 +11,10 @@ use powersgd::profiles::resnet18;
 use powersgd::simulate::{simulate_step_overlapped, Scheme};
 use powersgd::tensor::Tensor;
 use powersgd::transport::{
-    ring_all_gather_threaded, ring_all_reduce_sum_threaded, set_engine, Bucketer, Cluster,
-    EngineKind, LayerTiming,
+    ring_all_gather_threaded, ring_all_reduce_sum_threaded, Bucketer, Cluster, EngineKind,
+    LayerTiming,
 };
 use powersgd::util::Rng;
-use std::sync::Mutex;
-
-/// Serializes tests that flip the process-wide engine: cargo runs tests
-/// in parallel threads, and without this a concurrent `set_engine`
-/// could silently send a "threaded" leg down the lockstep path.
-static ENGINE_LOCK: Mutex<()> = Mutex::new(());
-
-fn engine_guard() -> std::sync::MutexGuard<'static, ()> {
-    ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// Property: threaded ring all-reduce matches the naive sum within
 /// float-associativity tolerance, over random worker counts and buffer
@@ -61,7 +51,6 @@ fn prop_threaded_ring_matches_naive_sum() {
 /// *bitwise* — same chunk schedule, same accumulation order.
 #[test]
 fn prop_threaded_engine_is_bitwise_identical_to_lockstep() {
-    let _guard = engine_guard();
     let mut rng = Rng::new(72);
     for _ in 0..25 {
         let w = 1 + rng.below(12) as usize;
@@ -70,14 +59,11 @@ fn prop_threaded_engine_is_bitwise_identical_to_lockstep() {
             .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
             .collect();
 
-        set_engine(EngineKind::Lockstep);
         let mut lockstep = bufs.clone();
         ring_all_reduce_sum(&mut lockstep);
 
-        set_engine(EngineKind::Threaded);
         let mut threaded = bufs.clone();
-        ring_all_reduce_sum(&mut threaded);
-        set_engine(EngineKind::Lockstep);
+        ring_all_reduce_sum_threaded(&mut threaded);
 
         assert_eq!(threaded, lockstep, "w={w} n={n}");
     }
@@ -85,7 +71,6 @@ fn prop_threaded_engine_is_bitwise_identical_to_lockstep() {
 
 #[test]
 fn threaded_all_gather_matches_lockstep_view() {
-    let _guard = engine_guard();
     let mut rng = Rng::new(73);
     let msgs: Vec<Vec<f32>> = (0..6)
         .map(|_| (0..37).map(|_| rng.normal() as f32).collect())
@@ -93,11 +78,9 @@ fn threaded_all_gather_matches_lockstep_view() {
     let view = ring_all_gather_threaded(&msgs);
     assert_eq!(view, msgs);
 
-    // Through the public collective, on the threaded engine.
-    set_engine(EngineKind::Threaded);
-    let mut log = CommLog::default();
+    // Through the public collective, on a threaded-engine log.
+    let mut log = CommLog::on(EngineKind::Threaded);
     let gathered = all_gather(&msgs, &mut log);
-    set_engine(EngineKind::Lockstep);
     assert_eq!(gathered.len(), 6);
     assert_eq!(*gathered[3], msgs);
     assert_eq!(log.bytes_sent(), 37 * 4);
@@ -108,13 +91,11 @@ fn threaded_all_gather_matches_lockstep_view() {
 /// noisy quadratic — the full optimizer stack minus PJRT).
 #[test]
 fn threaded_training_trajectory_equals_lockstep() {
-    let _guard = engine_guard();
     let run = |engine: EngineKind| -> Vec<Tensor> {
-        set_engine(engine);
         let mut rng = Rng::new(301);
         let mut x = vec![Tensor::full(&[12, 9], 1.0), Tensor::full(&[7], -1.5)];
         let mut opt = EfSgd::new(Box::new(PowerSgd::new(2, 5)), LrSchedule::constant(0.05), 0.9);
-        let mut log = CommLog::default();
+        let mut log = CommLog::on(engine);
         for step in 0..60 {
             // gradient of ||x||²/2 plus per-worker noise
             let grads: Vec<Vec<Tensor>> = (0..4)
@@ -135,7 +116,6 @@ fn threaded_training_trajectory_equals_lockstep() {
                 xi.axpy(-1.0, di);
             }
         }
-        set_engine(EngineKind::Lockstep);
         x
     };
     let lockstep = run(EngineKind::Lockstep);

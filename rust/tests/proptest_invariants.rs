@@ -5,7 +5,9 @@
 //! what proptest would generate, minus shrinking.
 
 use powersgd::collectives::{ring_all_reduce_sum, CommLog};
-use powersgd::compress::{Compressor, Locals, PowerSgd, RandomK, SignNorm, TopK, UnbiasedRank};
+use powersgd::compress::{
+    Compressor, Locals, PowerSgd, RandomK, SchemeMeta, SignNorm, TopK, UnbiasedRank,
+};
 use powersgd::grad::ParamRegistry;
 use powersgd::linalg::{gram_schmidt_in_place, orthonormal_error, svd};
 use powersgd::tensor::{matmul, Tensor};
