@@ -46,14 +46,30 @@
 //! per-rank `TRACE_r<k>.json` parts and merges them into one timeline.
 //! Tracing never changes computed values — traced runs stay bitwise
 //! identical to untraced ones.
+//!
+//! Add `--metrics METRICS.json` to any subcommand to snapshot the
+//! crate-wide run-health registry (DESIGN.md §15): counters, quality
+//! gauges (EF residual, low-rank approximation error, compression
+//! ratio, delayed staleness) and fixed-bucket histograms — one relaxed
+//! atomic load per site when off, and like tracing it never changes
+//! computed values. `launch --metrics` additionally streams per-step
+//! frames from every worker over the control connection, writes
+//! per-rank `METRICS_r<k>.jsonl`, and merges a cluster-health summary
+//! (median/p95 step times, straggler flags, dead-peer tolerant) whose
+//! wire bytes reconcile *exactly* with the metered transport. And
+//! `powersgd bench-diff OLD.json NEW.json` compares two `BENCH_*.json`
+//! documents with tolerance thresholds and a markdown delta table —
+//! the CI bench regression gate.
 
 use anyhow::Result;
 use powersgd::compress::PowerSgd;
 use powersgd::coordinator::{EvalKind, Trainer, TrainerConfig};
 use powersgd::data::Classification;
 use powersgd::experiments::{
-    measured_wire_check, measured_wire_check_pipelined, run_scenario, scenarios_for,
+    measured_metrics_check, measured_wire_check, measured_wire_check_pipelined, run_scenario,
+    scenarios_for,
 };
+use powersgd::obs::metrics::{Counter, Gauge};
 use powersgd::obs::Phase;
 use powersgd::optim::{EfSgd, LrSchedule};
 use powersgd::runtime::Runtime;
@@ -120,6 +136,18 @@ fn main() -> Result<()> {
         "overlap: same {} wire bytes, {} in-flight collectives posted",
         overlapped.per_rank.iter().map(|r| r.measured).sum::<u64>(),
         overlapped.spans.count(Phase::InFlight),
+    );
+    // The same engine with the run-health registry on (DESIGN.md §15):
+    // the wire-byte counter covers the metered traffic and the quality
+    // gauges carry the last compression round. `--metrics METRICS.json`
+    // snapshots this on any CLI run; `launch --metrics` merges per-rank
+    // streams into the cluster-health summary instead.
+    let health = measured_metrics_check(42, /*quick=*/ true)?;
+    println!(
+        "metrics: {} wire bytes counted across {} compress rounds, approx error {:.3}",
+        health.delta.counter(Counter::WireSentBytes),
+        health.delta.counter(Counter::CompressRounds),
+        health.delta.gauge(Gauge::ApproxError),
     );
     println!();
 

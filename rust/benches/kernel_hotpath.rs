@@ -19,7 +19,10 @@
 //! The full step also runs with the span recorder off vs fully on
 //! (`powersgd_step/tracing/{off,on}` plus an `overhead_x` record), so
 //! the trace layer's hot-path cost has a standing trajectory next to
-//! the thread-scaling one.
+//! the thread-scaling one. The metrics registry (DESIGN.md §15) gets
+//! the same treatment: `powersgd_step/metrics/{off,on}` with its own
+//! `overhead_x` — counters and quality gauges are fixed static atomics,
+//! so the pair pins the cost of the one-relaxed-load-when-off design.
 //!
 //! Emits `BENCH_kernel_hotpath.json` for the CI `bench-smoke` artifact
 //! trail. `BENCH_QUICK=1` shrinks shapes and iteration budgets (the SVD
@@ -167,6 +170,36 @@ fn main() {
         traced_means[0], traced_means[1]
     );
     json.record("powersgd_step/tracing/overhead", &[("overhead_x", overhead)]);
+
+    // --- metrics overhead: the same off/on pair for the run-health
+    // registry (DESIGN.md §15). With the bit clear every record site is
+    // one relaxed atomic load; with it set the step additionally pays
+    // the quality-gauge reductions (EF residual / approx-error norms)
+    // and the counter/histogram stores.
+    let mut metric_means: Vec<f64> = Vec::new();
+    for (label, on) in [("off", false), ("on", true)] {
+        powersgd::obs::enable_metrics(on);
+        let mut comp = PowerSgd::new(2, 1);
+        let mut runner = BenchRunner::from_env();
+        let summary =
+            runner.bench(&format!("PowerSGD rank-2 full step [metrics={label}]"), || {
+                let mut log = CommLog::default();
+                black_box(comp.compress_aggregate(&updates, &mut log));
+            });
+        metric_means.push(summary.mean);
+        json.record_runner(&runner);
+        json.record(
+            &format!("powersgd_step/metrics/{label}"),
+            &[("metered", if on { 1.0 } else { 0.0 }), ("mean_ms", summary.mean)],
+        );
+    }
+    powersgd::obs::enable_metrics(false);
+    let m_overhead = metric_means[1] / metric_means[0];
+    println!(
+        "metrics overhead on the full step: {m_overhead:.3}x (off {:.2} ms, on {:.2} ms)",
+        metric_means[0], metric_means[1]
+    );
+    json.record("powersgd_step/metrics/overhead", &[("overhead_x", m_overhead)]);
 
     // --- the Atomo cost: full SVD of the dominant layer (serial; the
     // Jacobi SVD is not pool-parallel) ---

@@ -193,6 +193,26 @@ impl Compressor for PowerSgd {
             let qn = self.scratch.q.at(slot);
             let mut rec = Tensor::zeros(&[phat.rows(), qn.rows()]);
             matmul_nt_into(phat, qn, &mut rec);
+            if crate::obs::metrics::on() {
+                // Telemetry only: relative error of the shared
+                // reconstruction against the cross-worker mean update —
+                // the `M` of ‖M − P̂Q̄ᵀ‖_F / ‖M‖_F on the oracle path.
+                // Gated on the metrics bit so the hot path never pays
+                // for the mean recomputation.
+                let wf = updates.len() as f64;
+                let mut num = 0.0f64;
+                let mut den = 0.0f64;
+                for (i, r) in rec.data().iter().enumerate() {
+                    let m: f64 =
+                        updates.iter().map(|wu| f64::from(wu[p].data()[i])).sum::<f64>() / wf;
+                    let d = m - f64::from(*r);
+                    num += d * d;
+                    den += m * m;
+                }
+                let err = if den > 0.0 { (num / den).sqrt() } else { 0.0 };
+                crate::obs::metrics::set_gauge(crate::obs::metrics::Gauge::ApproxError, err);
+                crate::obs::metrics::observe(crate::obs::metrics::Histogram::ApproxError, err);
+            }
             mean[p] = rec;
             if self.warm_start {
                 self.qs[slot]

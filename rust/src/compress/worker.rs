@@ -70,6 +70,28 @@ use crate::transport::{
 };
 use crate::util::Rng;
 
+/// Record the relative low-rank approximation error
+/// `‖M − rec‖_F / ‖M‖_F` into the metrics registry (gauge + value
+/// histogram). Read-only telemetry: it runs only when metrics mode is
+/// on and never touches the tensors, so metrics-on trajectories stay
+/// bitwise identical to metrics-off ones.
+pub(crate) fn record_approx_error(target: &Tensor, rec: &Tensor) {
+    use crate::obs::metrics::{self, Gauge, Histogram};
+    if !metrics::on() {
+        return;
+    }
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in target.data().iter().zip(rec.data().iter()) {
+        let d = f64::from(*a) - f64::from(*b);
+        num += d * d;
+        den += f64::from(*a) * f64::from(*a);
+    }
+    let err = if den > 0.0 { (num / den).sqrt() } else { 0.0 };
+    metrics::set_gauge(Gauge::ApproxError, err);
+    metrics::observe(Histogram::ApproxError, err);
+}
+
 /// One worker's handle on the collective fabric: a typed [`Transport`]
 /// endpoint per message kind, plus mean/gather conveniences that do the
 /// byte accounting exactly like the centralized [`crate::collectives`].
@@ -412,6 +434,7 @@ impl PowerSgdWorker {
         for (slot, &p) in mat_idx.iter().enumerate() {
             let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
             matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
+            record_approx_error(&update[p], &rec);
             mean[p] = rec;
             if self.warm_start {
                 self.qs[slot].data_mut().copy_from_slice(scratch.q.at(slot).data());
@@ -499,6 +522,7 @@ impl WorkerCompressor for PowerSgdWorker {
         for (slot, &p) in mat_idx.iter().enumerate() {
             let mut rec = Tensor::zeros(&[update[p].rows(), update[p].cols()]);
             matmul_nt_into(scratch.p.at(slot), scratch.q.at(slot), &mut rec);
+            record_approx_error(&update[p], &rec);
             mean[p] = rec;
             if self.warm_start {
                 self.qs[slot].data_mut().copy_from_slice(scratch.q.at(slot).data());
@@ -972,6 +996,7 @@ impl Compressor for DecentralizedCompressor {
                         // tracks keep each worker on one timeline.
                         crate::obs::set_track(&format!("worker-{}", link.rank()));
                         let mut wlog = CommLog::default();
+                        crate::obs::metrics::add(crate::obs::metrics::Counter::CompressRounds, 1);
                         let round = slot.comp.round(update, &link, &mut slot.scratch, &mut wlog);
                         (round, wlog)
                     })
@@ -1134,6 +1159,7 @@ where
              other workers' updates live in other processes"
         );
         let link = WorkerLink { f32s: &self.endpoint, bytes: &self.endpoint };
+        crate::obs::metrics::add(crate::obs::metrics::Counter::CompressRounds, 1);
         let round = self.comp.round(&updates[0], &link, &mut self.scratch, log);
         Aggregated {
             mean: round.mean,

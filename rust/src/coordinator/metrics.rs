@@ -1,6 +1,11 @@
 //! Training metrics: per-step time breakdown, communication volume,
 //! loss/accuracy history — the inputs to the paper-style tables and the
 //! convergence curves (Figures 4/5).
+//!
+//! This is the *per-run training* record keeper (losses, times, bytes
+//! for one `Trainer`); the crate-wide *run-health* registry — counters,
+//! gauges, histograms behind the `--metrics` flag, cluster aggregation,
+//! straggler flags — lives in [`crate::obs::metrics`] (DESIGN.md §15).
 
 use crate::util::stats;
 

@@ -318,6 +318,11 @@ impl Trainer {
             sim_step_s: outcome.total,
             lr: self.opt.lr_at(self.step),
         });
+        crate::obs::metrics::add(crate::obs::metrics::Counter::StepsCompleted, 1);
+        crate::obs::metrics::observe_seconds(
+            crate::obs::metrics::Histogram::StepSeconds,
+            t0.elapsed().as_secs_f64(),
+        );
 
         if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
             // Decentralized compressors report their scratch-arena

@@ -474,6 +474,48 @@ pub fn measured_wire_check_pipelined(
     })
 }
 
+/// Outcome of the report's run-health check: one measured wire-check
+/// re-run with the crate-wide metrics registry (DESIGN.md §15) enabled,
+/// plus the registry delta the run produced.
+pub struct MetricsCheckOutcome {
+    /// The verified measured run (same chain as [`measured_wire_check`]:
+    /// bitwise vs the oracle, measured == analytic wire bytes).
+    pub outcome: WireCheckOutcome,
+    /// Registry delta over the run: counters and histograms are
+    /// [`MetricsSnapshot::delta_since`] differences, gauges and maxes
+    /// the final values.
+    pub delta: crate::obs::metrics::MetricsSnapshot,
+}
+
+/// Re-run the first [`WireConfig`] with the metrics registry enabled
+/// and return the run plus its registry delta — the report's "Run
+/// health" section. The registry is process-global, so the measurement
+/// holds [`crate::obs::metrics::registry_lock`] (no concurrent holder
+/// can flip the bit off mid-run and under-count); concurrent recorders
+/// in a parallel test harness can still inflate the delta, which is why
+/// the report checks that the counters *cover* the metered traffic and
+/// marks the values volatile. In a single-run process (the CLI, the CI
+/// smoke jobs) the counters equal the metered totals exactly — the
+/// per-rank equality is what `powersgd launch --metrics` reconciles and
+/// `tests/integration_metrics.rs` pins.
+pub fn measured_metrics_check(seed: u64, quick: bool) -> Result<MetricsCheckOutcome> {
+    use crate::obs::metrics;
+    let cfg = wire_configs(quick).into_iter().next().expect("wire_configs is never empty");
+    let _guard = metrics::registry_lock();
+    let was_on = metrics::on();
+    obs::enable_metrics(true);
+    let before = metrics::snapshot();
+    let result = measured_wire_check(cfg.compressor, cfg.rank, cfg.workers, cfg.steps, seed);
+    let after = metrics::snapshot();
+    if !was_on {
+        obs::enable_metrics(false);
+    }
+    Ok(MetricsCheckOutcome {
+        outcome: result.context("measured run-health check")?,
+        delta: after.delta_since(&before),
+    })
+}
+
 /// Price one harness run's logged collectives on the α/β cluster model
 /// and return the exposed-communication seconds per step. The
 /// per-worker trajectory is strictly sequential — compress, collective,

@@ -31,6 +31,8 @@
 //! powersgd launch --workers 4 --transport tcp --compressor powersgd --rank 2 --steps 3
 //! powersgd launch --workers 2 --compressor sign-norm --steps 5 --threads 4
 //! powersgd launch --workers 2 --steps 3 --trace TRACE.json
+//! powersgd launch --workers 2 --steps 3 --metrics METRICS.json
+//! powersgd bench-diff bench-trajectory/BENCH_kernel_hotpath.json BENCH_kernel_hotpath.json
 //! powersgd experiment --suite scheme-compare
 //! powersgd experiment --all --out-dir target/experiments
 //! ```
@@ -96,6 +98,13 @@ fn main() -> Result<()> {
         powersgd::obs::enable_timing(true);
         powersgd::obs::enable_trace(true);
     }
+    // `--metrics PATH` turns the run-health registry on (DESIGN.md §15).
+    // Like tracing, metrics only read clocks and counters — computed
+    // values stay bitwise identical with the flag on or off.
+    let metrics = args.get("metrics").map(std::path::PathBuf::from);
+    if metrics.is_some() {
+        powersgd::obs::enable_metrics(true);
+    }
     let sub = args.subcommand();
     let result = match sub {
         Some("train") => cmd_train(&args),
@@ -104,6 +113,7 @@ fn main() -> Result<()> {
         Some("worker") => cmd_worker(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts") => cmd_artifacts(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         _ => {
             print_help();
             Ok(())
@@ -124,6 +134,29 @@ fn main() -> Result<()> {
                  the spans); see the time-attribution section of REPORT.md instead"
             ),
             _ => write_trace(path, 0, &format!("powersgd {}", sub.unwrap_or("")))?,
+        }
+    }
+    // `worker` writes its own rank-suffixed METRICS part and `launch`
+    // writes the merged cluster-health summary itself; every other
+    // subcommand dumps this process's whole-run snapshot here.
+    if let (Some(path), Ok(())) = (&metrics, &result) {
+        match sub {
+            Some("launch") | Some("worker") => {}
+            // The experiment runner scopes the registry around each
+            // measured run and reconciles the deltas into REPORT.md
+            // itself, so a whole-process snapshot here would lump every
+            // suite and config into one undifferentiated blob — refuse
+            // rather than write a misleading file.
+            Some("experiment") => eprintln!(
+                "warning: --metrics is a no-op for `experiment` (the runner scopes the \
+                 registry per measured run); see the \"Run health\" section of REPORT.md instead"
+            ),
+            _ => {
+                let doc = powersgd::obs::metrics::snapshot().to_json();
+                std::fs::write(path, doc)
+                    .with_context(|| format!("writing metrics {}", path.display()))?;
+                eprintln!("wrote metrics {}", path.display());
+            }
         }
     }
     result
@@ -154,6 +187,11 @@ fn print_help() {
          \x20 experiment run a registered suite of the paper's sweeps and\n\
          \x20            generate EXPERIMENTS_<suite>.json + REPORT.md\n\
          \x20            (--suite NAME | --all | --list; --quick; --out-dir D)\n\
+         \x20 bench-diff compare two BENCH_<name>.json artifacts: markdown\n\
+         \x20            delta table; non-zero exit when a *_ms metric slows\n\
+         \x20            beyond --tolerance R (default 0.25) or a *_bytes\n\
+         \x20            metric drifts at all; --report-only warns instead\n\
+         \x20            (for cross-machine baselines)\n\
          \x20 artifacts  list available compiled artifacts\n\
          \n\
          shared options:\n\
@@ -179,6 +217,20 @@ fn print_help() {
          \x20                  per-rank worker parts (PATH -> TRACE_r<k>\n\
          \x20                  naming) into one file. Tracing never changes\n\
          \x20                  computed values (see DESIGN.md).\n\
+         \x20 --metrics PATH   record the run-health registry (DESIGN.md\n\
+         \x20                  §15): counters, compression-quality gauges,\n\
+         \x20                  deterministic histograms. `train`/`simulate`\n\
+         \x20                  write one snapshot to PATH; `launch` forwards\n\
+         \x20                  the flag — each worker writes per-step\n\
+         \x20                  METRICS_r<k>.jsonl and the coordinator writes\n\
+         \x20                  the merged cluster-health summary (median/p95\n\
+         \x20                  step times, straggler flags, wire-byte\n\
+         \x20                  reconciliation) to PATH. Metrics never change\n\
+         \x20                  computed values.\n\
+         \x20 --straggle-rank K / --straggle-ms MS\n\
+         \x20                  (launch/worker) inject a deterministic sleep\n\
+         \x20                  before every step on rank K — exercises the\n\
+         \x20                  straggler detector in tests and CI\n\
          \n\
          see DESIGN.md for the full option list, and\n\
          examples/quickstart.rs for a narrated walkthrough (it runs a\n\
@@ -538,6 +590,9 @@ fn harness_config(args: &Args) -> Result<powersgd::transport::tcp::HarnessConfig
         momentum: args.get_parsed_or("momentum", 0.9f32),
         pipeline: pipeline_by_name(args.get_or("pipeline", "off"))
             .context("unknown pipeline mode (off|overlap|delayed)")?,
+        metrics: args.get("metrics").is_some(),
+        straggle_rank: args.get_parsed_or("straggle-rank", 0usize),
+        straggle_ms: args.get_parsed_or("straggle-ms", 0u64),
     })
 }
 
@@ -603,6 +658,20 @@ fn cmd_launch(args: &Args) -> Result<()> {
         if let Some(trace) = args.get("trace") {
             cmd.arg("--trace").arg(trace);
         }
+        // Same for --metrics: workers write rank-suffixed JSONL parts
+        // next to the merged summary path, and push their per-step
+        // frames back over the control connection for aggregation.
+        if let Some(metrics) = args.get("metrics") {
+            cmd.arg("--metrics").arg(metrics);
+        }
+        // Deterministic straggler injection (integration tests and the
+        // metrics CI smoke): one chosen rank sleeps before every step.
+        if cfg.straggle_ms > 0 {
+            cmd.arg("--straggle-rank")
+                .arg(cfg.straggle_rank.to_string())
+                .arg("--straggle-ms")
+                .arg(cfg.straggle_ms.to_string());
+        }
         let child = cmd.spawn().context("spawning a worker process")?;
         children.push(child);
     }
@@ -647,6 +716,26 @@ fn cmd_launch(args: &Args) -> Result<()> {
     if let Some(base) = args.get("trace") {
         merge_launch_traces(std::path::Path::new(base), workers)?;
     }
+    // The merged cluster-health summary: per-step frames pushed by every
+    // worker over the control connection, aggregated into medians/p95s
+    // and straggler flags, reconciled against the metered transport.
+    if let Some(base) = args.get("metrics") {
+        use powersgd::obs::metrics::{aggregate, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S};
+        let health = aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        let reconciles = outcome.metrics_reconcile();
+        if reconciles == Some(false) {
+            eprintln!("warning: per-step metrics frames do not sum to the metered wire bytes");
+        }
+        let path = std::path::Path::new(base);
+        std::fs::write(path, health.to_json(reconciles))
+            .with_context(|| format!("writing merged metrics {}", path.display()))?;
+        eprintln!(
+            "wrote merged metrics {} ({} steps, stragglers: {:?})",
+            path.display(),
+            health.steps.len(),
+            health.straggler_ranks()
+        );
+    }
     Ok(())
 }
 
@@ -690,7 +779,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let coordinator = args
         .get("coordinator")
         .context("worker needs --coordinator host:port (normally passed by `launch`)")?;
-    let rank = powersgd::transport::tcp::run_worker(
+    let (rank, step_metrics) = powersgd::transport::tcp::run_worker_with_metrics(
         coordinator,
         &harness_config(args)?,
         harness_timeout(args),
@@ -701,6 +790,22 @@ fn cmd_worker(args: &Args) -> Result<()> {
     if let Some(base) = args.get("trace") {
         let path = powersgd::obs::chrome::rank_trace_path(std::path::Path::new(base), rank);
         write_trace(&path, rank as u32, &format!("worker rank {rank}"))?;
+    }
+    // And its own rank-suffixed metrics part (METRICS.json ->
+    // METRICS_r<k>.jsonl, one JSON object per step); the coordinator
+    // aggregates the same frames — received over the control
+    // connection — into the merged summary at the base path.
+    if let Some(base) = args.get("metrics") {
+        let path =
+            powersgd::obs::metrics::rank_metrics_path(std::path::Path::new(base), rank);
+        let mut doc = String::new();
+        for m in &step_metrics {
+            doc.push_str(&m.jsonl_line());
+            doc.push('\n');
+        }
+        std::fs::write(&path, doc)
+            .with_context(|| format!("writing metrics part {}", path.display()))?;
+        eprintln!("wrote metrics part {} ({} steps)", path.display(), step_metrics.len());
     }
     Ok(())
 }
@@ -756,6 +861,39 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     // steps), so re-running beats threading outcomes through the API.
     let report = write_report(&out_dir, seed, quick)?;
     println!("wrote {}", report.display());
+    Ok(())
+}
+
+/// `powersgd bench-diff <old.json> <new.json>`: compare two
+/// `BENCH_<name>.json` artifacts and print the markdown delta table.
+/// `--tolerance R` sets the relative `*_ms` slowdown allowed (default
+/// 0.25 = +25%; `*_bytes` metrics must match exactly); exits non-zero
+/// on any regression. `--report-only` downgrades every failure to a
+/// warning and exits 0 — the CI mode against baselines committed from a
+/// different machine, where absolute timings are not comparable.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use powersgd::util::benchdiff::{diff, parse_bench_json, DEFAULT_TOLERANCE};
+    let [_, old_path, new_path] = args.positional() else {
+        bail!("usage: powersgd bench-diff <old.json> <new.json> [--tolerance R] [--report-only]");
+    };
+    let read = |p: &str| -> Result<_> {
+        let doc = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        parse_bench_json(&doc).with_context(|| format!("parsing {p}"))
+    };
+    let (old, new) = (read(old_path)?, read(new_path)?);
+    let tolerance = args.get_parsed_or("tolerance", DEFAULT_TOLERANCE);
+    let report_only = args.flag("report-only");
+    let report = diff(&old, &new, tolerance, report_only)?;
+    println!("## Bench diff: {} ({old_path} → {new_path})\n", new.bench);
+    print!("{}", report.to_markdown());
+    if report.regressions > 0 {
+        bail!(
+            "{} metric(s) regressed beyond the {:.0}% tolerance",
+            report.regressions,
+            tolerance * 100.0
+        );
+    }
+    println!("\nok: no regressions ({} metrics compared)", report.lines.len());
     Ok(())
 }
 

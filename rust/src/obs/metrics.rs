@@ -1,0 +1,958 @@
+//! Crate-wide numeric metrics: counters, gauges, and fixed-bucket
+//! histograms — the run-health layer next to the span recorder.
+//!
+//! Where spans answer "*where did the time go*" (DESIGN.md §13), the
+//! metrics registry answers "*is the run healthy*": compression quality
+//! (EF residual norm, low-rank approximation error, achieved
+//! compression ratio), pipelining state (delayed-aggregate staleness,
+//! in-flight ticket depth on the completion queues), and per-rank step
+//! timing. On the multi-process path every worker folds one
+//! [`StepMetrics`] frame per step onto the rendezvous control
+//! connection; the coordinator aggregates cluster health with
+//! [`aggregate`] (median/p95 step time, straggler flags, dead-peer
+//! tolerant) and writes `METRICS_r<k>.jsonl` per-rank streams plus a
+//! merged `METRICS.json` (the `--metrics <path>` CLI flag).
+//!
+//! # Discipline (mirrors the span recorder)
+//!
+//! 1. **One relaxed atomic load when off.** Every recording call checks
+//!    [`crate::obs::mode`] for [`MODE_METRICS`] first and returns
+//!    before touching anything else.
+//! 2. **No value perturbation.** Recording only reads values the
+//!    workload already computed (plus clocks for duration histograms);
+//!    metrics-on runs are bitwise identical to metrics-off runs —
+//!    pinned by `tests/integration_metrics.rs`.
+//! 3. **Zero allocation in steady state.** The registry is a fixed
+//!    static table of atomics: counters and gauges are single cells,
+//!    histograms are pre-sized at registration ([`HISTO_BUCKETS`]
+//!    buckets, compile-time). Recording never allocates; only
+//!    [`snapshot`] and the JSON writers do.
+//! 4. **Deterministic projection.** Counter values and *value*-histogram
+//!    bucket counts are functions of the workload and reproduce run to
+//!    run (atomic adds commute); gauges (last-write-wins) and
+//!    *duration* histograms (wall clock) are volatile.
+//!    [`MetricsSnapshot::deterministic_key`] keeps only the stable
+//!    part, mirroring `Summary::deterministic_key`.
+
+use super::{mode, MODE_METRICS};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone event/byte counters — the deterministic core of the
+/// registry. Discriminants index the static cell table; order is part
+/// of the snapshot format and new counters append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Counter {
+    /// Optimizer/trainer steps completed.
+    StepsCompleted,
+    /// Per-worker compression rounds executed.
+    CompressRounds,
+    /// Wire payload bytes charged at `post_send` on metered transports.
+    WireSentBytes,
+    /// Wire payload bytes charged at receive resolution on metered
+    /// transports.
+    WireRecvBytes,
+    /// Receive tickets posted to a transport completion queue.
+    RecvTicketsPosted,
+    /// Per-step metrics frames encoded for the coordinator sideband.
+    MetricsFrames,
+}
+
+/// Number of counters (size of the static cell table).
+pub const COUNTER_COUNT: usize = 6;
+
+/// All counters in discriminant order (the snapshot order).
+pub const COUNTERS: [Counter; COUNTER_COUNT] = [
+    Counter::StepsCompleted,
+    Counter::CompressRounds,
+    Counter::WireSentBytes,
+    Counter::WireRecvBytes,
+    Counter::RecvTicketsPosted,
+    Counter::MetricsFrames,
+];
+
+impl Counter {
+    /// Stable snake_case name (snapshot key, JSON field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::StepsCompleted => "steps_completed",
+            Counter::CompressRounds => "compress_rounds",
+            Counter::WireSentBytes => "wire_sent_bytes",
+            Counter::WireRecvBytes => "wire_recv_bytes",
+            Counter::RecvTicketsPosted => "recv_tickets_posted",
+            Counter::MetricsFrames => "metrics_frames",
+        }
+    }
+}
+
+/// Last-write-wins instantaneous values (f64). Volatile in the
+/// deterministic projection: when several worker threads share the
+/// process the final write order is scheduling-dependent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Gauge {
+    /// Error-feedback residual norm `‖e‖_F` after the latest step
+    /// (summed over layers and workers on the centralized path).
+    EfResidual,
+    /// Low-rank approximation error `‖M − P̂Q̄ᵀ‖_F / ‖M‖_F` of the
+    /// latest reconstruction (`M` = the worker's own update on the
+    /// per-worker path, the cross-worker mean on the oracle path).
+    ApproxError,
+    /// Achieved compression ratio: raw gradient bytes over logical
+    /// bytes transmitted, for the latest step.
+    CompressionRatio,
+    /// Delayed-aggregate staleness of the latest applied update, in
+    /// steps (0 synchronous, 1 under `--pipeline delayed`).
+    StalenessSteps,
+}
+
+/// Number of gauges.
+pub const GAUGE_COUNT: usize = 4;
+
+/// All gauges in discriminant order.
+pub const GAUGES: [Gauge; GAUGE_COUNT] =
+    [Gauge::EfResidual, Gauge::ApproxError, Gauge::CompressionRatio, Gauge::StalenessSteps];
+
+impl Gauge {
+    /// Stable snake_case name (snapshot key, JSON field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::EfResidual => "ef_residual",
+            Gauge::ApproxError => "approx_error",
+            Gauge::CompressionRatio => "compression_ratio",
+            Gauge::StalenessSteps => "staleness_steps",
+        }
+    }
+}
+
+/// High-water marks (u64, `fetch_max`). Volatile like gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum MaxGauge {
+    /// Deepest completion-queue in-flight ticket backlog observed.
+    InflightDepthPeak,
+}
+
+/// Number of max-gauges.
+pub const MAX_COUNT: usize = 1;
+
+/// All max-gauges in discriminant order.
+pub const MAXES: [MaxGauge; MAX_COUNT] = [MaxGauge::InflightDepthPeak];
+
+impl MaxGauge {
+    /// Stable snake_case name (snapshot key, JSON field).
+    pub fn name(self) -> &'static str {
+        match self {
+            MaxGauge::InflightDepthPeak => "inflight_depth_peak",
+        }
+    }
+}
+
+/// Fixed-bucket histograms, pre-sized at registration
+/// ([`HISTO_BUCKETS`] buckets each, so recording never allocates).
+/// Value histograms bucket by fixed decade thresholds (pure
+/// comparisons, no libm) and their bucket counts are deterministic;
+/// duration histograms bucket observed wall-clock and are volatile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Histogram {
+    /// Low-rank approximation errors (value histogram, deterministic).
+    ApproxError,
+    /// EF residual norms (value histogram, deterministic).
+    EfResidual,
+    /// Completion-queue depth at recv-ticket post (value histogram,
+    /// deterministic: posting order is program order per rank).
+    InflightDepth,
+    /// Step wall-clock seconds (duration histogram, volatile).
+    StepSeconds,
+}
+
+/// Number of histograms.
+pub const HISTOGRAM_COUNT: usize = 4;
+
+/// All histograms in discriminant order.
+pub const HISTOGRAMS: [Histogram; HISTOGRAM_COUNT] = [
+    Histogram::ApproxError,
+    Histogram::EfResidual,
+    Histogram::InflightDepth,
+    Histogram::StepSeconds,
+];
+
+impl Histogram {
+    /// Stable snake_case name (snapshot key, JSON field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Histogram::ApproxError => "approx_error",
+            Histogram::EfResidual => "ef_residual",
+            Histogram::InflightDepth => "inflight_depth",
+            Histogram::StepSeconds => "step_seconds",
+        }
+    }
+
+    /// Whether bucket counts are wall-clock-dependent (excluded from
+    /// the deterministic projection).
+    pub fn is_volatile(self) -> bool {
+        matches!(self, Histogram::StepSeconds)
+    }
+}
+
+/// Buckets per histogram: one per decade threshold in
+/// [`BUCKET_THRESHOLDS`], plus the overflow bucket.
+pub const HISTO_BUCKETS: usize = 12;
+
+/// Decade upper bounds: bucket `i` counts observations
+/// `< BUCKET_THRESHOLDS[i]` (and `>=` every earlier threshold); the
+/// last bucket is overflow (`>= 1e1`). Shared by values and durations
+/// (seconds): 1 ns to 10 s covers every duration this crate times,
+/// and 1e-9 to 1e1 covers ratios, norms, and queue depths.
+pub const BUCKET_THRESHOLDS: [f64; HISTO_BUCKETS - 1] =
+    [1e-9, 1e-8, 1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1e0, 1e1];
+
+/// Deterministic threshold bucketing: pure comparisons, no libm.
+fn bucket_of(v: f64) -> usize {
+    for (i, &t) in BUCKET_THRESHOLDS.iter().enumerate() {
+        if v < t {
+            return i;
+        }
+    }
+    HISTO_BUCKETS - 1
+}
+
+// ---------------------------------------------------------------------
+// The static registry.
+// ---------------------------------------------------------------------
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init template
+const CELL_INIT: AtomicU64 = AtomicU64::new(0);
+
+static COUNTER_CELLS: [AtomicU64; COUNTER_COUNT] = [CELL_INIT; COUNTER_COUNT];
+/// Gauge cells hold `f64::to_bits` of the last written value.
+static GAUGE_CELLS: [AtomicU64; GAUGE_COUNT] = [CELL_INIT; GAUGE_COUNT];
+static MAX_CELLS: [AtomicU64; MAX_COUNT] = [CELL_INIT; MAX_COUNT];
+#[allow(clippy::declare_interior_mutable_const)] // array-init template
+const ROW_INIT: [AtomicU64; HISTO_BUCKETS] = [CELL_INIT; HISTO_BUCKETS];
+static HISTO_CELLS: [[AtomicU64; HISTO_BUCKETS]; HISTOGRAM_COUNT] = [ROW_INIT; HISTOGRAM_COUNT];
+
+/// One relaxed load: is metrics recording on?
+#[inline]
+pub fn on() -> bool {
+    mode() & MODE_METRICS != 0
+}
+
+/// Add `n` to a counter (no-op when metrics mode is off).
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if !on() || n == 0 {
+        return;
+    }
+    COUNTER_CELLS[c as usize].fetch_add(n, Ordering::SeqCst);
+}
+
+/// Set a gauge to `v` (last write wins; no-op when off).
+#[inline]
+pub fn set_gauge(g: Gauge, v: f64) {
+    if !on() {
+        return;
+    }
+    GAUGE_CELLS[g as usize].store(v.to_bits(), Ordering::SeqCst);
+}
+
+/// Raise a high-water mark to at least `v` (no-op when off).
+#[inline]
+pub fn raise_max(m: MaxGauge, v: u64) {
+    if !on() {
+        return;
+    }
+    MAX_CELLS[m as usize].fetch_max(v, Ordering::SeqCst);
+}
+
+/// Record one observation into a histogram (no-op when off). The
+/// buckets exist since registration, so this is a compare loop plus one
+/// atomic add — no allocation, ever.
+#[inline]
+pub fn observe(h: Histogram, v: f64) {
+    if !on() {
+        return;
+    }
+    HISTO_CELLS[h as usize][bucket_of(v)].fetch_add(1, Ordering::SeqCst);
+}
+
+/// Record a duration observation, in seconds, into a (volatile)
+/// histogram (no-op when off).
+#[inline]
+pub fn observe_seconds(h: Histogram, seconds: f64) {
+    observe(h, seconds);
+}
+
+/// Current gauge value (0.0 until first write; reads even when the mode
+/// is off — consumers snapshot after a run regardless).
+pub fn gauge_value(g: Gauge) -> f64 {
+    f64::from_bits(GAUGE_CELLS[g as usize].load(Ordering::SeqCst))
+}
+
+/// Current high-water mark.
+pub fn max_value(m: MaxGauge) -> u64 {
+    MAX_CELLS[m as usize].load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------
+// Snapshots.
+// ---------------------------------------------------------------------
+
+/// A point-in-time copy of the whole registry.
+///
+/// `counters` and non-volatile histogram rows are deterministic for a
+/// fixed workload (use [`Self::delta_since`] to scope them to an
+/// interval); `gauges`, `maxes`, and volatile histogram rows are not.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter values, [`COUNTERS`] order.
+    pub counters: [u64; COUNTER_COUNT],
+    /// Gauge values, [`GAUGES`] order (volatile).
+    pub gauges: [f64; GAUGE_COUNT],
+    /// High-water marks, [`MAXES`] order (volatile).
+    pub maxes: [u64; MAX_COUNT],
+    /// Histogram bucket counts, [`HISTOGRAMS`] × bucket order.
+    pub histograms: [[u64; HISTO_BUCKETS]; HISTOGRAM_COUNT],
+}
+
+/// Serialize scoped measurements that toggle the process-global
+/// registry bit (the report's run-health check, unit tests that assert
+/// on-vs-off gating). Holding this lock guarantees no other holder
+/// flips the bit off mid-measurement and under-counts a delta;
+/// concurrent *recorders* that never toggle the bit can still add, so
+/// scoped deltas are an over-approximation under a parallel harness.
+pub fn registry_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Snapshot the registry (works whether or not the mode is on).
+pub fn snapshot() -> MetricsSnapshot {
+    let mut s = MetricsSnapshot {
+        counters: [0; COUNTER_COUNT],
+        gauges: [0.0; GAUGE_COUNT],
+        maxes: [0; MAX_COUNT],
+        histograms: [[0; HISTO_BUCKETS]; HISTOGRAM_COUNT],
+    };
+    for (i, c) in COUNTER_CELLS.iter().enumerate() {
+        s.counters[i] = c.load(Ordering::SeqCst);
+    }
+    for (i, c) in GAUGE_CELLS.iter().enumerate() {
+        s.gauges[i] = f64::from_bits(c.load(Ordering::SeqCst));
+    }
+    for (i, c) in MAX_CELLS.iter().enumerate() {
+        s.maxes[i] = c.load(Ordering::SeqCst);
+    }
+    for (i, row) in HISTO_CELLS.iter().enumerate() {
+        for (j, c) in row.iter().enumerate() {
+            s.histograms[i][j] = c.load(Ordering::SeqCst);
+        }
+    }
+    s
+}
+
+impl MetricsSnapshot {
+    /// Value of one counter.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Value of one gauge.
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+
+    /// One histogram's bucket row.
+    pub fn histogram(&self, h: Histogram) -> &[u64; HISTO_BUCKETS] {
+        &self.histograms[h as usize]
+    }
+
+    /// Monotone parts (`counters`, `histograms`) as the difference
+    /// `self − earlier` (saturating); instantaneous parts (`gauges`,
+    /// `maxes`) keep `self`'s values. The registry is process-global,
+    /// so interval deltas are how tests and the report scope a
+    /// measurement to one workload.
+    pub fn delta_since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut out = *self;
+        for i in 0..COUNTER_COUNT {
+            out.counters[i] = self.counters[i].saturating_sub(earlier.counters[i]);
+        }
+        for i in 0..HISTOGRAM_COUNT {
+            for j in 0..HISTO_BUCKETS {
+                out.histograms[i][j] =
+                    self.histograms[i][j].saturating_sub(earlier.histograms[i][j]);
+            }
+        }
+        out
+    }
+
+    /// The deterministic projection, mirroring
+    /// `Summary::deterministic_key`: named counter values plus the
+    /// bucket rows of every *non-volatile* histogram. Gauges, maxes,
+    /// and duration histograms — everything wall-clock- or
+    /// write-order-dependent — are dropped. Two metrics-enabled runs of
+    /// the same single-process workload must agree on this exactly.
+    pub fn deterministic_key(&self) -> (Vec<(String, u64)>, Vec<(String, Vec<u64>)>) {
+        let counters = COUNTERS
+            .iter()
+            .map(|&c| (c.name().to_string(), self.counters[c as usize]))
+            .collect();
+        let histos = HISTOGRAMS
+            .iter()
+            .filter(|h| !h.is_volatile())
+            .map(|&h| (h.name().to_string(), self.histograms[h as usize].to_vec()))
+            .collect();
+        (counters, histos)
+    }
+
+    /// Render the snapshot as a JSON object (single-process `--metrics`
+    /// output for `train`/`simulate`). Keys are emitted in registry
+    /// order, so the document layout is stable.
+    pub fn to_json(&self) -> String {
+        use crate::util::bench::{json_escape, json_num};
+        let mut out = String::from("{\n  \"schema_version\": 1,\n  \"counters\": {");
+        for (i, c) in COUNTERS.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            out.push_str(&format!(
+                "{sep}\n    \"{}\": {}",
+                json_escape(c.name()),
+                self.counters[*c as usize]
+            ));
+        }
+        out.push_str("\n  },\n  \"gauges\": {");
+        for (i, g) in GAUGES.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            out.push_str(&format!(
+                "{sep}\n    \"{}\": {}",
+                json_escape(g.name()),
+                json_num(self.gauges[*g as usize])
+            ));
+        }
+        out.push_str("\n  },\n  \"maxes\": {");
+        for (i, m) in MAXES.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            out.push_str(&format!(
+                "{sep}\n    \"{}\": {}",
+                json_escape(m.name()),
+                self.maxes[*m as usize]
+            ));
+        }
+        out.push_str("\n  },\n  \"histograms\": {");
+        for (i, h) in HISTOGRAMS.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let row: Vec<String> =
+                self.histograms[*h as usize].iter().map(|n| n.to_string()).collect();
+            out.push_str(&format!(
+                "{sep}\n    \"{}\": {{\"volatile\": {}, \"buckets\": [{}]}}",
+                json_escape(h.name()),
+                h.is_volatile(),
+                row.join(", ")
+            ));
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-step frames (the coordinator sideband).
+// ---------------------------------------------------------------------
+
+/// One worker's per-step health record — the payload of a
+/// `Frame::Metrics` on the rendezvous control connection, and one line
+/// of a `METRICS_r<k>.jsonl` stream.
+///
+/// Fields marked *volatile* vary run to run; the rest are deterministic
+/// for a fixed workload. `ef_residual`/`approx_error` are authoritative
+/// in the one-process-per-rank setting (the registry is process-global;
+/// in-process multi-worker tests see interleaved writes there, but the
+/// locally measured fields are always per-rank exact).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepMetrics {
+    /// Worker rank.
+    pub rank: u64,
+    /// 0-based step index.
+    pub step: u64,
+    /// Measured step wall-clock seconds (*volatile*).
+    pub step_seconds: f64,
+    /// Wire payload bytes sent this step (metered transport delta).
+    pub wire_sent: u64,
+    /// Wire payload bytes received this step (metered transport delta).
+    pub wire_received: u64,
+    /// EF residual norm after this step (gauge read).
+    pub ef_residual: f64,
+    /// Low-rank approximation error of this step's reconstruction
+    /// (gauge read).
+    pub approx_error: f64,
+    /// Raw gradient bytes over logical bytes transmitted this step.
+    pub compression_ratio: f64,
+    /// Staleness of the applied aggregate, in steps.
+    pub staleness: u64,
+    /// Peak completion-queue in-flight ticket depth so far (*volatile*
+    /// ordering, deterministic value per rank on a fixed schedule).
+    pub inflight_peak: u64,
+}
+
+impl StepMetrics {
+    /// One JSON object on one line (the JSONL record format).
+    pub fn jsonl_line(&self) -> String {
+        use crate::util::bench::json_num;
+        format!(
+            "{{\"rank\": {}, \"step\": {}, \"step_seconds\": {}, \"wire_sent\": {}, \
+             \"wire_received\": {}, \"ef_residual\": {}, \"approx_error\": {}, \
+             \"compression_ratio\": {}, \"staleness\": {}, \"inflight_peak\": {}}}",
+            self.rank,
+            self.step,
+            json_num(self.step_seconds),
+            self.wire_sent,
+            self.wire_received,
+            json_num(self.ef_residual),
+            json_num(self.approx_error),
+            json_num(self.compression_ratio),
+            self.staleness,
+            self.inflight_peak,
+        )
+    }
+}
+
+/// Rank-suffixed per-rank metrics path: `METRICS.json` →
+/// `METRICS_r<k>.jsonl` (the stream is line-oriented regardless of the
+/// base extension), mirroring `chrome::rank_trace_path`.
+pub fn rank_metrics_path(base: &std::path::Path, rank: usize) -> std::path::PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("METRICS");
+    base.with_file_name(format!("{stem}_r{rank}.jsonl"))
+}
+
+// ---------------------------------------------------------------------
+// Cluster-health aggregation (coordinator side).
+// ---------------------------------------------------------------------
+
+/// Default straggler multiple: a rank is flagged when its step time
+/// exceeds `STRAGGLER_FACTOR ×` the cluster median for that step.
+pub const STRAGGLER_FACTOR: f64 = 2.0;
+
+/// Default absolute slack added on top of the multiple: ranks within
+/// this many seconds of the median are never flagged, so uniform runs
+/// with microsecond medians don't flag scheduler noise.
+pub const STRAGGLER_MIN_EXCESS_S: f64 = 0.02;
+
+/// Cluster health for one step, over the ranks that reported it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepHealth {
+    /// 0-based step index.
+    pub step: u64,
+    /// Ranks that reported this step (sorted).
+    pub ranks: Vec<u64>,
+    /// Median step seconds (lower median, deterministic pick).
+    pub median_step_s: f64,
+    /// p95 step seconds (nearest-rank on the sorted sample).
+    pub p95_step_s: f64,
+    /// Largest per-rank deviation from the median, seconds.
+    pub max_deviation_s: f64,
+    /// Ranks whose step time exceeded `factor × median` by at least the
+    /// absolute slack.
+    pub stragglers: Vec<u64>,
+}
+
+/// Whole-run cluster health: per-step aggregation over every rank's
+/// frame stream, dead-peer tolerant (a rank with no frames is listed in
+/// `missing_ranks` and excluded from the per-step statistics, like
+/// `merge_chrome_traces` skipping an unreadable part).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterHealth {
+    /// World size the aggregation was asked to cover.
+    pub world: usize,
+    /// Ranks that contributed no frames at all (dead peers).
+    pub missing_ranks: Vec<u64>,
+    /// Per-step health, in step order.
+    pub steps: Vec<StepHealth>,
+    /// Sum of every reporting rank's `wire_sent` deltas.
+    pub wire_sent_total: u64,
+    /// Sum of every reporting rank's `wire_received` deltas.
+    pub wire_received_total: u64,
+    /// The straggler multiple used.
+    pub straggler_factor: f64,
+    /// The absolute slack used, seconds.
+    pub straggler_min_excess_s: f64,
+}
+
+impl ClusterHealth {
+    /// Ranks flagged as stragglers at any step (sorted, deduplicated).
+    pub fn straggler_ranks(&self) -> Vec<u64> {
+        let mut out: Vec<u64> =
+            self.steps.iter().flat_map(|s| s.stragglers.iter().copied()).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Render the merged `METRICS.json` summary document.
+    /// `reconciles_metered` reports whether the summed per-step wire
+    /// deltas matched the `MeteredTransport` totals exactly (`null`
+    /// when the caller had no metered totals to check against).
+    pub fn to_json(&self, reconciles_metered: Option<bool>) -> String {
+        use crate::util::bench::json_num;
+        let mut out = String::from("{\n  \"schema_version\": 1,\n");
+        out.push_str(&format!("  \"world\": {},\n", self.world));
+        let missing: Vec<String> = self.missing_ranks.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!("  \"missing_ranks\": [{}],\n", missing.join(", ")));
+        out.push_str(&format!("  \"wire_sent_total\": {},\n", self.wire_sent_total));
+        out.push_str(&format!("  \"wire_received_total\": {},\n", self.wire_received_total));
+        out.push_str(&format!(
+            "  \"reconciles_metered\": {},\n",
+            match reconciles_metered {
+                Some(b) => b.to_string(),
+                None => "null".to_string(),
+            }
+        ));
+        out.push_str(&format!("  \"straggler_factor\": {},\n", json_num(self.straggler_factor)));
+        out.push_str(&format!(
+            "  \"straggler_min_excess_s\": {},\n",
+            json_num(self.straggler_min_excess_s)
+        ));
+        let stragglers: Vec<String> =
+            self.straggler_ranks().iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!("  \"straggler_ranks\": [{}],\n", stragglers.join(", ")));
+        out.push_str("  \"steps\": [");
+        for (i, s) in self.steps.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let ranks: Vec<String> = s.ranks.iter().map(|r| r.to_string()).collect();
+            let flagged: Vec<String> = s.stragglers.iter().map(|r| r.to_string()).collect();
+            out.push_str(&format!(
+                "{sep}\n    {{\"step\": {}, \"ranks\": [{}], \"median_step_s\": {}, \
+                 \"p95_step_s\": {}, \"max_deviation_s\": {}, \"stragglers\": [{}]}}",
+                s.step,
+                ranks.join(", "),
+                json_num(s.median_step_s),
+                json_num(s.p95_step_s),
+                json_num(s.max_deviation_s),
+                flagged.join(", ")
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+}
+
+/// Aggregate per-rank frame streams into cluster health.
+///
+/// `frames_by_rank[k]` holds rank `k`'s frames in step order; an empty
+/// stream marks rank `k` as a dead peer (tolerated — statistics run
+/// over the survivors). A rank is flagged a straggler at a step when
+/// its step time exceeds `factor × median` *and* `median + min_excess_s`
+/// — the lower median (`sorted[(n−1)/2]`) keeps the threshold
+/// meaningful at `W = 2`, and the absolute slack keeps uniform runs
+/// with tiny medians from flagging scheduler noise.
+pub fn aggregate(
+    frames_by_rank: &[Vec<StepMetrics>],
+    factor: f64,
+    min_excess_s: f64,
+) -> ClusterHealth {
+    let world = frames_by_rank.len();
+    let missing_ranks: Vec<u64> = frames_by_rank
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.is_empty())
+        .map(|(k, _)| k as u64)
+        .collect();
+    let max_step = frames_by_rank
+        .iter()
+        .flat_map(|f| f.iter().map(|m| m.step))
+        .max();
+    let mut steps = Vec::new();
+    if let Some(max_step) = max_step {
+        for step in 0..=max_step {
+            // (rank, step_seconds) for every rank that reported `step`.
+            let mut sample: Vec<(u64, f64)> = frames_by_rank
+                .iter()
+                .flatten()
+                .filter(|m| m.step == step)
+                .map(|m| (m.rank, m.step_seconds))
+                .collect();
+            if sample.is_empty() {
+                continue;
+            }
+            sample.sort_by_key(|&(r, _)| r);
+            let ranks: Vec<u64> = sample.iter().map(|&(r, _)| r).collect();
+            let mut times: Vec<f64> = sample.iter().map(|&(_, t)| t).collect();
+            times.sort_by(f64::total_cmp);
+            let n = times.len();
+            let median = times[(n - 1) / 2];
+            let p95 = times[((n * 95).div_ceil(100)).saturating_sub(1).min(n - 1)];
+            let max_deviation =
+                times.iter().map(|t| (t - median).abs()).fold(0.0f64, f64::max);
+            let threshold = (median * factor).max(median + min_excess_s);
+            let stragglers: Vec<u64> = sample
+                .iter()
+                .filter(|&&(_, t)| t > threshold)
+                .map(|&(r, _)| r)
+                .collect();
+            steps.push(StepHealth {
+                step,
+                ranks,
+                median_step_s: median,
+                p95_step_s: p95,
+                max_deviation_s: max_deviation,
+                stragglers,
+            });
+        }
+    }
+    let wire_sent_total = frames_by_rank.iter().flatten().map(|m| m.wire_sent).sum();
+    let wire_received_total = frames_by_rank.iter().flatten().map(|m| m.wire_received).sum();
+    ClusterHealth {
+        world,
+        missing_ranks,
+        steps,
+        wire_sent_total,
+        wire_received_total,
+        straggler_factor: factor,
+        straggler_min_excess_s: min_excess_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(rank: u64, step: u64, step_seconds: f64) -> StepMetrics {
+        StepMetrics {
+            rank,
+            step,
+            step_seconds,
+            wire_sent: 100,
+            wire_received: 100,
+            ef_residual: 0.5,
+            approx_error: 0.1,
+            compression_ratio: 8.0,
+            staleness: 0,
+            inflight_peak: 2,
+        }
+    }
+
+    #[test]
+    fn bucketing_is_total_and_monotone() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(5e-10), 0);
+        assert_eq!(bucket_of(5e-9), 1);
+        assert_eq!(bucket_of(0.5), 9);
+        assert_eq!(bucket_of(5.0), 10);
+        assert_eq!(bucket_of(50.0), 11);
+        assert_eq!(bucket_of(1e9), 11);
+        let mut prev = 0;
+        for v in [0.0, 1e-9, 1e-6, 1e-3, 1.0, 10.0, 100.0, 1e6] {
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket_of({v}) = {b} < {prev}");
+            prev = b;
+        }
+    }
+
+    /// Recording while the mode is off must leave every cell untouched;
+    /// recording while on must land. The registry is process-global, so
+    /// the on-assertions are `>=` deltas (a concurrent test could add).
+    #[test]
+    fn recording_respects_the_mode_bit() {
+        let _guard = registry_lock();
+        let before = snapshot();
+        // Off by default in the test process (no test leaves it on).
+        if !on() {
+            add(Counter::MetricsFrames, 3);
+            observe(Histogram::ApproxError, 0.25);
+            let mid = snapshot();
+            assert_eq!(
+                mid.counter(Counter::MetricsFrames),
+                before.counter(Counter::MetricsFrames)
+            );
+        }
+        crate::obs::enable_metrics(true);
+        add(Counter::MetricsFrames, 3);
+        observe(Histogram::ApproxError, 0.25);
+        crate::obs::enable_metrics(false);
+        let after = snapshot().delta_since(&before);
+        assert!(after.counter(Counter::MetricsFrames) >= 3);
+        assert!(after.histogram(Histogram::ApproxError)[9] >= 1);
+    }
+
+    #[test]
+    fn deterministic_key_drops_volatile_parts() {
+        let mut a = MetricsSnapshot {
+            counters: [1; COUNTER_COUNT],
+            gauges: [0.5; GAUGE_COUNT],
+            maxes: [7; MAX_COUNT],
+            histograms: [[2; HISTO_BUCKETS]; HISTOGRAM_COUNT],
+        };
+        let mut b = a;
+        // Perturb only volatile parts: the keys must still agree.
+        b.gauges = [9.0; GAUGE_COUNT];
+        b.maxes = [99; MAX_COUNT];
+        b.histograms[Histogram::StepSeconds as usize] = [11; HISTO_BUCKETS];
+        assert_eq!(a.deterministic_key(), b.deterministic_key());
+        // Perturb a deterministic part: the keys must diverge.
+        a.counters[0] += 1;
+        assert_ne!(a.deterministic_key(), b.deterministic_key());
+        let (counters, histos) = a.deterministic_key();
+        assert_eq!(counters.len(), COUNTER_COUNT);
+        assert_eq!(histos.len(), HISTOGRAM_COUNT - 1, "volatile histogram excluded");
+    }
+
+    #[test]
+    fn delta_since_subtracts_monotone_parts_only() {
+        let mut before = MetricsSnapshot {
+            counters: [10; COUNTER_COUNT],
+            gauges: [1.0; GAUGE_COUNT],
+            maxes: [5; MAX_COUNT],
+            histograms: [[4; HISTO_BUCKETS]; HISTOGRAM_COUNT],
+        };
+        let mut after = before;
+        after.counters = [17; COUNTER_COUNT];
+        after.gauges = [3.0; GAUGE_COUNT];
+        after.histograms = [[9; HISTO_BUCKETS]; HISTOGRAM_COUNT];
+        before.maxes = [5; MAX_COUNT];
+        after.maxes = [8; MAX_COUNT];
+        let d = after.delta_since(&before);
+        assert_eq!(d.counters, [7; COUNTER_COUNT]);
+        assert_eq!(d.histograms, [[5; HISTO_BUCKETS]; HISTOGRAM_COUNT]);
+        assert_eq!(d.gauges, [3.0; GAUGE_COUNT], "gauges keep the later value");
+        assert_eq!(d.maxes, [8; MAX_COUNT], "maxes keep the later value");
+    }
+
+    #[test]
+    fn registry_metadata_is_total() {
+        assert_eq!(COUNTERS.len(), COUNTER_COUNT);
+        assert_eq!(GAUGES.len(), GAUGE_COUNT);
+        assert_eq!(MAXES.len(), MAX_COUNT);
+        assert_eq!(HISTOGRAMS.len(), HISTOGRAM_COUNT);
+        for (i, c) in COUNTERS.iter().enumerate() {
+            assert_eq!(*c as usize, i, "{}", c.name());
+            assert!(!c.name().is_empty());
+        }
+        for (i, g) in GAUGES.iter().enumerate() {
+            assert_eq!(*g as usize, i, "{}", g.name());
+        }
+        for (i, h) in HISTOGRAMS.iter().enumerate() {
+            assert_eq!(*h as usize, i, "{}", h.name());
+        }
+    }
+
+    #[test]
+    fn jsonl_line_is_one_parseable_object() {
+        let line = frame(3, 7, 0.0125).jsonl_line();
+        assert!(!line.contains('\n'));
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        for key in [
+            "\"rank\": 3",
+            "\"step\": 7",
+            "\"step_seconds\"",
+            "\"wire_sent\": 100",
+            "\"ef_residual\"",
+            "\"approx_error\"",
+            "\"compression_ratio\"",
+            "\"staleness\": 0",
+            "\"inflight_peak\": 2",
+        ] {
+            assert!(line.contains(key), "{line} missing {key}");
+        }
+    }
+
+    #[test]
+    fn rank_paths_are_suffixed() {
+        use std::path::Path;
+        assert_eq!(
+            rank_metrics_path(Path::new("METRICS.json"), 2),
+            Path::new("METRICS_r2.jsonl")
+        );
+        assert_eq!(
+            rank_metrics_path(Path::new("out/run.metrics"), 0),
+            Path::new("out/run_r0.jsonl")
+        );
+    }
+
+    #[test]
+    fn aggregate_flags_the_straggler_and_only_it() {
+        // 4 ranks × 3 steps; rank 2 is 10× slower than the 10 ms pack.
+        let frames: Vec<Vec<StepMetrics>> = (0..4)
+            .map(|rank| {
+                (0..3)
+                    .map(|step| {
+                        frame(rank, step, if rank == 2 { 0.1 } else { 0.01 })
+                    })
+                    .collect()
+            })
+            .collect();
+        let health = aggregate(&frames, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        assert_eq!(health.world, 4);
+        assert!(health.missing_ranks.is_empty());
+        assert_eq!(health.steps.len(), 3);
+        for s in &health.steps {
+            assert_eq!(s.stragglers, vec![2], "step {}", s.step);
+            assert!((s.median_step_s - 0.01).abs() < 1e-12);
+            assert!((s.p95_step_s - 0.1).abs() < 1e-12);
+            assert!((s.max_deviation_s - 0.09).abs() < 1e-12);
+        }
+        assert_eq!(health.straggler_ranks(), vec![2]);
+        assert_eq!(health.wire_sent_total, 4 * 3 * 100);
+    }
+
+    #[test]
+    fn uniform_run_flags_nobody() {
+        let frames: Vec<Vec<StepMetrics>> = (0..4)
+            .map(|rank| (0..3).map(|step| frame(rank, step, 0.001 + rank as f64 * 1e-5)).collect())
+            .collect();
+        let health = aggregate(&frames, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        assert!(health.straggler_ranks().is_empty(), "{:?}", health.straggler_ranks());
+    }
+
+    /// W = 2 with the lower median: the slow rank's own time never sets
+    /// the threshold, so a genuine 2-rank straggler is still caught.
+    #[test]
+    fn two_rank_straggler_is_flagged() {
+        let frames = vec![
+            (0..3).map(|s| frame(0, s, 0.01)).collect::<Vec<_>>(),
+            (0..3).map(|s| frame(1, s, 0.2)).collect::<Vec<_>>(),
+        ];
+        let health = aggregate(&frames, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        assert_eq!(health.straggler_ranks(), vec![1]);
+    }
+
+    /// Dead peer: an empty frame stream is reported, tolerated, and
+    /// excluded from the statistics — the merge still succeeds.
+    #[test]
+    fn dead_peer_is_tolerated() {
+        let frames = vec![
+            (0..2).map(|s| frame(0, s, 0.01)).collect::<Vec<_>>(),
+            Vec::new(),
+            (0..2).map(|s| frame(2, s, 0.012)).collect::<Vec<_>>(),
+        ];
+        let health = aggregate(&frames, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        assert_eq!(health.missing_ranks, vec![1]);
+        assert_eq!(health.steps.len(), 2);
+        for s in &health.steps {
+            assert_eq!(s.ranks, vec![0, 2]);
+        }
+        let doc = health.to_json(Some(true));
+        assert!(doc.contains("\"missing_ranks\": [1]"));
+        assert!(doc.contains("\"reconciles_metered\": true"));
+    }
+
+    #[test]
+    fn merged_json_layout_is_stable() {
+        let frames = vec![vec![frame(0, 0, 0.01)], vec![frame(1, 0, 0.011)]];
+        let health = aggregate(&frames, 1.5, 0.001);
+        let doc = health.to_json(None);
+        for key in [
+            "\"schema_version\": 1",
+            "\"world\": 2",
+            "\"missing_ranks\": []",
+            "\"wire_sent_total\": 200",
+            "\"wire_received_total\": 200",
+            "\"reconciles_metered\": null",
+            "\"straggler_factor\": 1.5",
+            "\"straggler_ranks\": []",
+            "\"steps\": [",
+            "\"median_step_s\":",
+            "\"p95_step_s\":",
+        ] {
+            assert!(doc.contains(key), "merged doc missing {key}:\n{doc}");
+        }
+    }
+}

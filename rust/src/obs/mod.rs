@@ -44,6 +44,7 @@
 //! concurrent captures cannot interleave.
 
 pub mod chrome;
+pub mod metrics;
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
@@ -54,6 +55,10 @@ use std::time::Instant;
 pub const MODE_TIMING: u8 = 1;
 /// Recording-mode bit: append closed spans to per-thread track buffers.
 pub const MODE_TRACE: u8 = 2;
+/// Recording-mode bit: record numeric metrics (counters / gauges /
+/// histograms in [`metrics`]). Orthogonal to the span modes: metrics-only
+/// runs never read a clock in [`span`].
+pub const MODE_METRICS: u8 = 4;
 
 static MODE: AtomicU8 = AtomicU8::new(0);
 
@@ -173,6 +178,14 @@ pub fn enable_trace(on: bool) {
     set_mode_bit(MODE_TRACE, on);
 }
 
+/// Enable or disable metrics mode (the [`metrics`] registry: counters,
+/// gauges, histograms — the `--metrics <path>` CLI flag). Recording
+/// never touches computed values, so metrics-on runs stay bitwise
+/// identical to metrics-off runs (`tests/integration_metrics.rs`).
+pub fn enable_metrics(on: bool) {
+    set_mode_bit(MODE_METRICS, on);
+}
+
 fn set_mode_bit(bit: u8, on: bool) {
     if on {
         MODE.fetch_or(bit, Ordering::SeqCst);
@@ -181,7 +194,7 @@ fn set_mode_bit(bit: u8, on: bool) {
     }
 }
 
-/// Current mode bits ([`MODE_TIMING`] | [`MODE_TRACE`]).
+/// Current mode bits ([`MODE_TIMING`] | [`MODE_TRACE`] | [`MODE_METRICS`]).
 pub fn mode() -> u8 {
     MODE.load(Ordering::Relaxed)
 }
@@ -414,7 +427,10 @@ impl Drop for SpanGuard {
 /// when no recording mode is enabled this is one relaxed atomic load.
 #[inline]
 pub fn span(phase: Phase) -> SpanGuard {
-    if mode() == 0 {
+    // Only the span modes arm the guard: a metrics-only run
+    // (MODE_METRICS set, both span bits clear) must not read clocks
+    // here either.
+    if mode() & (MODE_TIMING | MODE_TRACE) == 0 {
         return SpanGuard { live: None };
     }
     SpanGuard { live: Some((phase, now_ns())) }
@@ -524,7 +540,9 @@ pub fn capture<T>(f: impl FnOnce() -> T) -> (T, Capture) {
     let before_mode = MODE.load(Ordering::SeqCst);
     drain_tracks(); // discard anything stale from before the capture
     let before = phase_totals();
-    MODE.store(MODE_TIMING | MODE_TRACE, Ordering::SeqCst);
+    // OR onto the previous bits: a capture inside a metrics-enabled
+    // process must not switch metrics recording off for its duration.
+    MODE.store(before_mode | MODE_TIMING | MODE_TRACE, Ordering::SeqCst);
     let out = f();
     MODE.store(before_mode, Ordering::SeqCst);
     let totals = phase_totals().delta_since(&before);

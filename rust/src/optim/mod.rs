@@ -159,7 +159,21 @@ impl DistOptimizer for EfSgd {
             .collect();
 
         // Lines 8, 10, 11: compress, aggregate, decompress.
+        let logical_before = crate::obs::metrics::on().then(|| log.bytes_sent());
         let agg = self.compressor.compress_aggregate(&updates, log);
+        if let Some(before) = logical_before {
+            // Achieved compression ratio: raw per-worker gradient bytes
+            // over the logical bytes this aggregate actually logged.
+            // Telemetry only — reads the log, never the values.
+            let raw: u64 = updates[0].iter().map(|t| t.len() as u64 * crate::grad::ELEM_BYTES).sum();
+            let logical = log.bytes_sent() - before;
+            if logical > 0 {
+                crate::obs::metrics::set_gauge(
+                    crate::obs::metrics::Gauge::CompressionRatio,
+                    raw as f64 / logical as f64,
+                );
+            }
+        }
 
         // Line 9: e_w ← Δ_w − DECOMPRESS(C(Δ_w))
         if self.use_error_feedback {
@@ -169,11 +183,31 @@ impl DistOptimizer for EfSgd {
                     *&mut we[p] = updates[w][p].sub(&local[p]);
                 }
             }
+            if crate::obs::metrics::on() {
+                // EF residual norm ‖e‖_F summed over layers and workers
+                // — the quantity whose boundedness underwrites the EF
+                // convergence argument. Read-only telemetry.
+                let mut sq = 0.0f64;
+                for we in &self.errors {
+                    for e in we {
+                        for v in e.data() {
+                            sq += f64::from(*v) * f64::from(*v);
+                        }
+                    }
+                }
+                let norm = sq.sqrt();
+                crate::obs::metrics::set_gauge(crate::obs::metrics::Gauge::EfResidual, norm);
+                crate::obs::metrics::observe(crate::obs::metrics::Histogram::EfResidual, norm);
+            }
         }
 
         // Lines 12–13: m ← λm + Δ';  x ← x − γ(Δ' + m). In delayed
         // mode Δ' is the previous step's aggregate; step 0 has nothing
         // to apply and leaves the momentum untouched.
+        crate::obs::metrics::set_gauge(
+            crate::obs::metrics::Gauge::StalenessSteps,
+            if self.delayed { 1.0 } else { 0.0 },
+        );
         let applied = if self.delayed {
             match self.pending_mean.replace(agg.mean) {
                 Some(prev) => prev,

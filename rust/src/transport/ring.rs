@@ -176,6 +176,17 @@ impl<M: Send> Transport<M> for RingNode<M> {
         let mut cq = self.cq.borrow_mut();
         let t = cq.fresh();
         cq.pending.push_back(t);
+        // Ticket-depth telemetry: posting order is program order per
+        // endpoint, so the depth-at-post histogram is deterministic.
+        crate::obs::metrics::add(crate::obs::metrics::Counter::RecvTicketsPosted, 1);
+        crate::obs::metrics::observe(
+            crate::obs::metrics::Histogram::InflightDepth,
+            cq.pending.len() as f64,
+        );
+        crate::obs::metrics::raise_max(
+            crate::obs::metrics::MaxGauge::InflightDepthPeak,
+            cq.pending.len() as u64,
+        );
         t
     }
 

@@ -30,13 +30,14 @@ use super::wire::{read_frame, write_frame, Frame};
 use super::TcpRing;
 use crate::collectives::{ring_wire_bytes, CollOp, CommLog};
 use crate::compress::{oracle_by_name, worker_by_name, EndpointCompressor, SchemeMeta};
-use crate::grad::ParamRegistry;
+use crate::grad::{ParamRegistry, ELEM_BYTES};
+use crate::obs::metrics::{self, Counter, Gauge, MaxGauge, StepMetrics};
 use crate::optim::{DistOptimizer, EfSgd, LrSchedule};
 use crate::tensor::Tensor;
 use crate::transport::{PipelineMode, Transport};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// What a launch and its workers agree to run. Every field must be
 /// identical on the coordinator and all workers (the launch subcommand
@@ -61,6 +62,18 @@ pub struct HarnessConfig {
     /// same lockstep oracle; delayed changes the trajectory and is
     /// verified against a one-step-delayed oracle.
     pub pipeline: PipelineMode,
+    /// Collect per-step [`StepMetrics`] and push them to the
+    /// coordinator as `Frame::Metrics` sideband records (`--metrics`).
+    /// Recording never touches computed values, so the trajectory stays
+    /// bitwise-identical either way.
+    pub metrics: bool,
+    /// Rank to slow down artificially (straggler injection for the
+    /// run-health tests and `metrics-smoke`). Ignored unless
+    /// `straggle_ms > 0`.
+    pub straggle_rank: usize,
+    /// Milliseconds the straggling rank sleeps per step (0 = no
+    /// injection). Sleeping perturbs wall-clock only, never values.
+    pub straggle_ms: u64,
 }
 
 impl Default for HarnessConfig {
@@ -73,6 +86,9 @@ impl Default for HarnessConfig {
             lr: 0.05,
             momentum: 0.9,
             pipeline: PipelineMode::Off,
+            metrics: false,
+            straggle_rank: 0,
+            straggle_ms: 0,
         }
     }
 }
@@ -164,6 +180,11 @@ pub struct WorkerRunReport {
     /// to the analytic [`ring_wire_bytes`] expansion (the experiment
     /// report recomputes and publishes it per rank).
     pub ops: Vec<CollOp>,
+    /// Per-step run-health records, one per step when the config asked
+    /// for metrics (`cfg.metrics`), empty otherwise. The wire-byte
+    /// fields are per-step deltas of this worker's own metered
+    /// counters, so their sum equals `wire_bytes` exactly.
+    pub step_metrics: Vec<StepMetrics>,
 }
 
 /// Run this process's half of the EF-SGD trajectory over a connected,
@@ -197,7 +218,15 @@ where
 
     let mut params = initial_params(cfg.seed);
     let mut log = CommLog::default();
+    let mut step_metrics = Vec::with_capacity(if cfg.metrics { cfg.steps } else { 0 });
+    let raw_bytes_per_step = harness_registry().numel() as u64 * ELEM_BYTES;
+    let (mut prev_sent, mut prev_received) = (counters.sent(), counters.received());
+    let mut prev_logical = 0u64;
     for step in 0..cfg.steps {
+        let t0 = cfg.metrics.then(Instant::now);
+        if cfg.straggle_ms > 0 && rank == cfg.straggle_rank {
+            std::thread::sleep(Duration::from_millis(cfg.straggle_ms));
+        }
         let grads = vec![synthetic_grads(world, cfg.seed, step).swap_remove(rank)];
         let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             opt.step(&grads, step, &mut log)
@@ -211,6 +240,33 @@ where
         };
         for (x, d) in params.iter_mut().zip(delta.iter()) {
             x.axpy(-1.0, d);
+        }
+        if let Some(t0) = t0 {
+            // The wire fields are local per-step deltas (exact per
+            // rank); the quality fields read the process-global gauge
+            // registry, which is authoritative in the one-process-
+            // per-rank setting and merely indicative when several
+            // worker threads share a test process.
+            let (sent, received) = (counters.sent(), counters.received());
+            let logical = log.bytes_sent();
+            let logical_delta = logical - prev_logical;
+            step_metrics.push(StepMetrics {
+                rank: rank as u64,
+                step: step as u64,
+                step_seconds: t0.elapsed().as_secs_f64(),
+                wire_sent: sent - prev_sent,
+                wire_received: received - prev_received,
+                ef_residual: metrics::gauge_value(Gauge::EfResidual),
+                approx_error: metrics::gauge_value(Gauge::ApproxError),
+                compression_ratio: if logical_delta == 0 {
+                    0.0
+                } else {
+                    raw_bytes_per_step as f64 / logical_delta as f64
+                },
+                staleness: u64::from(cfg.pipeline == PipelineMode::Delayed),
+                inflight_peak: metrics::max_value(MaxGauge::InflightDepthPeak),
+            });
+            (prev_sent, prev_received, prev_logical) = (sent, received, logical);
         }
     }
 
@@ -233,7 +289,7 @@ where
              logged collectives predicts {expected_wire}"
         );
     }
-    Ok(WorkerRunReport { rank, params, logical_bytes, wire_bytes, ops: log.ops })
+    Ok(WorkerRunReport { rank, params, logical_bytes, wire_bytes, ops: log.ops, step_metrics })
 }
 
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -252,9 +308,31 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// the rendezvous assigned (callers use it for rank-suffixed artifacts
 /// like per-rank trace files).
 pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> Result<usize> {
+    run_worker_with_metrics(coordinator, cfg, timeout).map(|(rank, _)| rank)
+}
+
+/// [`run_worker`], also returning the per-step [`StepMetrics`] the run
+/// collected (empty unless `cfg.metrics`) so callers can write the
+/// rank's `METRICS_r<k>.jsonl` stream. When metrics are on, every
+/// record is additionally pushed to the coordinator as a
+/// `Frame::Metrics` sideband frame on the control connection, ahead of
+/// the final `Report`.
+pub fn run_worker_with_metrics(
+    coordinator: &str,
+    cfg: &HarnessConfig,
+    timeout: Duration,
+) -> Result<(usize, Vec<StepMetrics>)> {
     let joined = join(coordinator, timeout)?;
     let (ring, mut control) = TcpRing::from_joined(joined, timeout)?;
     let report = worker_trajectory(MeteredTransport::new(ring), cfg)?;
+    for m in &report.step_metrics {
+        metrics::add(Counter::MetricsFrames, 1);
+        write_frame(&mut control, &Frame::Metrics(*m))
+            .map_err(|e| anyhow!(e))
+            .with_context(|| {
+                format!("rank {}: pushing step {} metrics to the coordinator", report.rank, m.step)
+            })?;
+    }
     write_frame(
         &mut control,
         &Frame::Report {
@@ -266,7 +344,7 @@ pub fn run_worker(coordinator: &str, cfg: &HarnessConfig, timeout: Duration) -> 
     )
     .map_err(|e| anyhow!(e))
     .with_context(|| format!("rank {}: reporting to the coordinator", report.rank))?;
-    Ok(report.rank)
+    Ok((report.rank, report.step_metrics))
 }
 
 /// One worker's verified outcome, as the coordinator sees it.
@@ -293,6 +371,27 @@ pub struct LaunchOutcome {
     pub logical_bytes: u64,
     /// Closed-form per-worker message bytes per step.
     pub model_bytes_per_step: u64,
+    /// Per-rank sideband metrics frames, rank-indexed; a rank's stream
+    /// is empty when it pushed no frames (metrics off, or a peer that
+    /// died after its `Report` would have — tolerated downstream by
+    /// [`metrics::aggregate`]).
+    pub metrics_by_rank: Vec<Vec<StepMetrics>>,
+}
+
+impl LaunchOutcome {
+    /// Whether every reporting rank's summed per-step wire deltas match
+    /// the wire bytes its metered transport reported — the exact
+    /// reconciliation pinned by the acceptance criteria. `None` when no
+    /// rank pushed metrics frames (metrics off).
+    pub fn metrics_reconcile(&self) -> Option<bool> {
+        if self.metrics_by_rank.iter().all(|f| f.is_empty()) {
+            return None;
+        }
+        Some(self.reports.iter().all(|r| {
+            let frames = &self.metrics_by_rank[r.rank];
+            frames.is_empty() || frames.iter().map(|m| m.wire_sent).sum::<u64>() == r.wire_bytes
+        }))
+    }
 }
 
 /// Coordinator half of a launch: rendezvous `world` workers, run the
@@ -313,16 +412,31 @@ pub fn coordinate(
         .unwrap_or(0);
 
     let mut reports = Vec::with_capacity(world);
+    let mut metrics_by_rank: Vec<Vec<StepMetrics>> = vec![Vec::new(); world];
     for (rank, control) in controls.iter_mut().enumerate() {
-        let frame = read_frame(control).map_err(|e| anyhow!(e)).with_context(|| {
-            format!("launch: worker rank {rank} died before reporting its result")
-        })?;
-        let (got, wire_bytes, logical_bytes, tensors) = match frame {
-            Frame::Report { rank, wire_bytes, logical_bytes, tensors } => {
-                (rank, wire_bytes, logical_bytes, tensors)
-            }
-            other => {
-                bail!("launch: expected a Report from rank {rank}, got {}", other.kind_name())
+        // Drain the metrics sideband (zero or more frames) until the
+        // final Report — workers only push frames when metrics are on,
+        // so the loop is tolerant either way.
+        let (got, wire_bytes, logical_bytes, tensors) = loop {
+            let frame = read_frame(control).map_err(|e| anyhow!(e)).with_context(|| {
+                format!("launch: worker rank {rank} died before reporting its result")
+            })?;
+            match frame {
+                Frame::Metrics(m) => {
+                    if m.rank as usize != rank {
+                        bail!(
+                            "launch: control stream {rank} delivered metrics from rank {}",
+                            m.rank
+                        );
+                    }
+                    metrics_by_rank[rank].push(m);
+                }
+                Frame::Report { rank, wire_bytes, logical_bytes, tensors } => {
+                    break (rank, wire_bytes, logical_bytes, tensors)
+                }
+                other => {
+                    bail!("launch: expected a Report from rank {rank}, got {}", other.kind_name())
+                }
             }
         };
         if got as usize != rank {
@@ -356,6 +470,7 @@ pub fn coordinate(
         reports,
         logical_bytes: oracle_logical,
         model_bytes_per_step,
+        metrics_by_rank,
     })
 }
 

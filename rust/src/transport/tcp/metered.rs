@@ -114,6 +114,9 @@ impl<T> MeteredTransport<T> {
         let n = msg.wire_bytes();
         self.received.fetch_add(n, Ordering::SeqCst);
         crate::obs::add_wire_bytes(0, n);
+        // Same charge point as the span-layer counter, so the metrics
+        // registry reconciles structurally with the metered totals.
+        crate::obs::metrics::add(crate::obs::metrics::Counter::WireRecvBytes, n);
     }
 }
 
@@ -136,6 +139,9 @@ where
         let n = msg.wire_bytes();
         self.sent.fetch_add(n, Ordering::SeqCst);
         crate::obs::add_wire_bytes(n, 0);
+        // Same charge point as the span-layer counter, so the metrics
+        // registry reconciles structurally with the metered totals.
+        crate::obs::metrics::add(crate::obs::metrics::Counter::WireSentBytes, n);
         self.inner.post_send(msg)
     }
 

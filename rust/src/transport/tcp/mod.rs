@@ -69,7 +69,8 @@ pub mod wire;
 
 pub use harness::{
     coordinate, harness_registry, harness_shapes, initial_params, oracle_trajectory, run_worker,
-    synthetic_grads, worker_trajectory, HarnessConfig, LaunchOutcome, WorkerWireReport,
+    run_worker_with_metrics, synthetic_grads, worker_trajectory, HarnessConfig, LaunchOutcome,
+    WorkerRunReport, WorkerWireReport,
 };
 pub use metered::{MeteredTransport, WireCounters, WireSized};
 pub use rendezvous::{join, JoinedRing, Rendezvous};
@@ -359,6 +360,18 @@ impl TcpRing {
             };
         } else {
             cq.pending.push_back((t, expect));
+            // Ticket-depth telemetry: posting order is program order
+            // per endpoint, so the depth-at-post histogram is
+            // deterministic (mirrors `RingNode::post_recv`).
+            crate::obs::metrics::add(crate::obs::metrics::Counter::RecvTicketsPosted, 1);
+            crate::obs::metrics::observe(
+                crate::obs::metrics::Histogram::InflightDepth,
+                cq.pending.len() as f64,
+            );
+            crate::obs::metrics::raise_max(
+                crate::obs::metrics::MaxGauge::InflightDepthPeak,
+                cq.pending.len() as u64,
+            );
         }
         t
     }

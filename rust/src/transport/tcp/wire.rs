@@ -45,6 +45,7 @@ const KIND_CONNECT: u8 = 3;
 const KIND_F32S: u8 = 4;
 const KIND_BYTES: u8 = 5;
 const KIND_REPORT: u8 = 6;
+const KIND_METRICS: u8 = 7;
 
 /// One wire message.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,6 +66,12 @@ pub enum Frame {
     /// Worker → coordinator at end of run: final parameters plus the
     /// measured-bytes accounting for cross-checking.
     Report { rank: u32, wire_bytes: u64, logical_bytes: u64, tensors: Vec<Vec<f32>> },
+    /// Worker → coordinator run-health sideband: one per-step metrics
+    /// record (`--metrics`), sent on the rendezvous control connection
+    /// ahead of the final `Report`. Encoded as ten little-endian u64
+    /// words — f64 fields travel as `f64::to_bits`, so values
+    /// round-trip bit-exactly like the f32 data frames.
+    Metrics(crate::obs::metrics::StepMetrics),
 }
 
 impl Frame {
@@ -76,6 +83,7 @@ impl Frame {
             Frame::F32s(_) => KIND_F32S,
             Frame::Bytes(_) => KIND_BYTES,
             Frame::Report { .. } => KIND_REPORT,
+            Frame::Metrics(_) => KIND_METRICS,
         }
     }
 
@@ -88,6 +96,7 @@ impl Frame {
             Frame::F32s(_) => "F32s",
             Frame::Bytes(_) => "Bytes",
             Frame::Report { .. } => "Report",
+            Frame::Metrics(_) => "Metrics",
         }
     }
 
@@ -120,6 +129,22 @@ impl Frame {
                     for v in t {
                         out.extend_from_slice(&v.to_le_bytes());
                     }
+                }
+            }
+            Frame::Metrics(m) => {
+                for word in [
+                    m.rank,
+                    m.step,
+                    m.step_seconds.to_bits(),
+                    m.wire_sent,
+                    m.wire_received,
+                    m.ef_residual.to_bits(),
+                    m.approx_error.to_bits(),
+                    m.compression_ratio.to_bits(),
+                    m.staleness,
+                    m.inflight_peak,
+                ] {
+                    out.extend_from_slice(&word.to_le_bytes());
                 }
             }
         }
@@ -324,6 +349,30 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
             }
             Frame::Report { rank, wire_bytes, logical_bytes, tensors }
         }
+        KIND_METRICS => {
+            let rank = cur.u64()?;
+            let step = cur.u64()?;
+            let step_seconds = f64::from_bits(cur.u64()?);
+            let wire_sent = cur.u64()?;
+            let wire_received = cur.u64()?;
+            let ef_residual = f64::from_bits(cur.u64()?);
+            let approx_error = f64::from_bits(cur.u64()?);
+            let compression_ratio = f64::from_bits(cur.u64()?);
+            let staleness = cur.u64()?;
+            let inflight_peak = cur.u64()?;
+            Frame::Metrics(crate::obs::metrics::StepMetrics {
+                rank,
+                step,
+                step_seconds,
+                wire_sent,
+                wire_received,
+                ef_residual,
+                approx_error,
+                compression_ratio,
+                staleness,
+                inflight_peak,
+            })
+        }
         other => return Err(WireError::BadKind(other)),
     };
     cur.done()?;
@@ -408,6 +457,18 @@ mod tests {
             logical_bytes: 12345,
             tensors: vec![vec![1.0, -2.5], vec![], vec![f32::MIN_POSITIVE]],
         });
+        roundtrip(&Frame::Metrics(crate::obs::metrics::StepMetrics {
+            rank: 3,
+            step: 17,
+            step_seconds: 0.0123456789,
+            wire_sent: 329_512,
+            wire_received: 329_512,
+            ef_residual: 1.5e-3,
+            approx_error: f64::MIN_POSITIVE,
+            compression_ratio: 243.7,
+            staleness: 1,
+            inflight_peak: 6,
+        }));
     }
 
     /// Proptest-style seeded sweep (no proptest crate offline):
@@ -466,6 +527,18 @@ mod tests {
             Frame::F32s(vec![1.0, 2.0, 3.0]),
             Frame::Bytes(vec![9, 8, 7]),
             Frame::Report { rank: 0, wire_bytes: 1, logical_bytes: 2, tensors: vec![vec![1.0]] },
+            Frame::Metrics(crate::obs::metrics::StepMetrics {
+                rank: 1,
+                step: 0,
+                step_seconds: 0.5,
+                wire_sent: 2,
+                wire_received: 3,
+                ef_residual: 0.25,
+                approx_error: 0.125,
+                compression_ratio: 8.0,
+                staleness: 0,
+                inflight_peak: 4,
+            }),
         ];
         for frame in &frames {
             let bytes = frame.encode();

@@ -227,8 +227,14 @@ impl BenchJson {
     }
 
     /// Serialize the document (stable key order, valid JSON).
+    ///
+    /// `schema_version` history: 1 = original flat-record layout;
+    /// 2 = adds the version field itself so `powersgd bench-diff` and
+    /// the committed `rust/bench-trajectory/` baselines can detect
+    /// layout drift (records and context keys are unchanged).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
+        out.push_str("  \"schema_version\": 2,\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
         out.push_str(&format!("  \"engine\": \"{}\",\n", json_escape(&self.engine)));
         out.push_str(&format!("  \"transport\": \"{}\",\n", json_escape(&self.transport)));
@@ -313,6 +319,7 @@ mod tests {
         j.record("case \"a\"", &[("mean_ms", 1.5), ("n", 3.0)]);
         j.record("case_b", &[("mean_ms", f64::NAN)]);
         let doc = j.to_json();
+        assert!(doc.contains("\"schema_version\": 2"));
         assert!(doc.contains("\"bench\": \"unit\""));
         // Context defaults: comparable across engine/transport runs.
         assert!(doc.contains("\"engine\": \"lockstep\""));

@@ -1,0 +1,482 @@
+//! `powersgd bench-diff` — compare two `BENCH_<name>.json` documents.
+//!
+//! The bench binaries emit flat-record JSON artifacts
+//! ([`crate::util::bench::BenchJson`]); CI uploads them and
+//! `rust/bench-trajectory/` keeps committed baselines. This module
+//! parses two such documents (hand-rolled reader — serde is unavailable
+//! offline, and the writer's layout is fixed), matches records by name,
+//! and renders a markdown delta table:
+//!
+//! - `*_ms` timing metrics compare with a **relative tolerance**
+//!   (default +25%): only a slowdown beyond the threshold is a
+//!   regression — speedups and noise-level drift pass.
+//! - `*_bytes` traffic metrics compare **exactly**: wire and logical
+//!   byte counts are deterministic, so any drift is a regression until
+//!   the baseline is deliberately regenerated.
+//! - Everything else (`n`, `threads` tags, …) is context, not compared.
+//!
+//! Context axes (`bench`, `engine`, `transport`, `pipeline`, `threads`,
+//! `quick`) must match between the documents — diffing a lockstep run
+//! against a threaded one is an error, not a regression. With
+//! `report_only` every failure (context mismatch, removed record,
+//! regression) downgrades to a warning and the diff always "passes":
+//! that's the CI mode for comparing against a baseline committed from a
+//! different machine, where absolute timings are not comparable but the
+//! table is still worth printing.
+
+use anyhow::{bail, Context, Result};
+
+/// Relative slowdown on a `*_ms` metric tolerated before it counts as a
+/// regression (0.25 = +25%).
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// One parsed bench record: a case name plus its named metrics in
+/// document order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Case name (`"powersgd_step/metrics/on"`, …).
+    pub name: String,
+    /// Metric key/value pairs (`mean_ms`, `wire_bytes`, …).
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    /// Look up a metric by key.
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+/// One parsed `BENCH_<name>.json` document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDoc {
+    /// Document layout version; absent in pre-versioning artifacts,
+    /// which parse as version 1.
+    pub schema_version: u64,
+    /// Bench binary name.
+    pub bench: String,
+    /// Collective engine context (`lockstep` | `threaded`).
+    pub engine: String,
+    /// Transport context (`inproc` | `tcp`).
+    pub transport: String,
+    /// Pipeline context (`off` | `overlap` | `delayed`).
+    pub pipeline: String,
+    /// Document-level kernel-pool thread count.
+    pub threads: u64,
+    /// Whether the run used the shrunken `BENCH_QUICK=1` budgets.
+    pub quick: bool,
+    /// Flat records, in document order.
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchDoc {
+    /// Look up a record by case name.
+    pub fn record(&self, name: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.name == name)
+    }
+}
+
+/// Unescape the JSON string starting at `s[0] == '"'`; returns the
+/// string and the rest of the input after the closing quote.
+fn parse_string(s: &str) -> Result<(String, &str)> {
+    let mut chars = s.char_indices();
+    match chars.next() {
+        Some((_, '"')) => {}
+        _ => bail!("expected a JSON string at {s:.40?}"),
+    }
+    let mut out = String::new();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((out, &s[i + 1..])),
+            '\\' => match chars.next() {
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, 'u')) => {
+                    let hex: String = (0..4).filter_map(|_| chars.next().map(|(_, c)| c)).collect();
+                    let code = u32::from_str_radix(&hex, 16)
+                        .with_context(|| format!("bad \\u escape {hex:?}"))?;
+                    out.push(char::from_u32(code).context("bad \\u code point")?);
+                }
+                other => bail!("unsupported escape {other:?}"),
+            },
+            c => out.push(c),
+        }
+    }
+    bail!("unterminated JSON string at {s:.40?}")
+}
+
+/// Parse the number (or `null`, `true`, `false`) at the head of `s`;
+/// returns the value and the rest. `null` maps to NaN (the writer emits
+/// it for non-finite measurements), booleans to 0/1.
+fn parse_number(s: &str) -> Result<(f64, &str)> {
+    for (lit, v) in [("null", f64::NAN), ("true", 1.0), ("false", 0.0)] {
+        if let Some(rest) = s.strip_prefix(lit) {
+            return Ok((v, rest));
+        }
+    }
+    let end = s
+        .char_indices()
+        .find(|&(_, c)| !matches!(c, '0'..='9' | '-' | '+' | '.' | 'e' | 'E'))
+        .map_or(s.len(), |(i, _)| i);
+    let v: f64 = s[..end].parse().with_context(|| format!("bad JSON number at {s:.40?}"))?;
+    Ok((v, &s[end..]))
+}
+
+/// Parse one record line of the writer's layout:
+/// `{"name": "...", "mean_ms": 1.5, ...}` (trailing comma tolerated).
+fn parse_record(line: &str) -> Result<BenchRecord> {
+    let mut rest = line
+        .trim()
+        .trim_end_matches(',')
+        .strip_prefix('{')
+        .with_context(|| format!("record line must start with '{{': {line:.60?}"))?
+        .trim_end_matches('}');
+    let mut name = None;
+    let mut metrics = Vec::new();
+    loop {
+        rest = rest.trim_start().trim_start_matches(',').trim_start();
+        if rest.is_empty() {
+            break;
+        }
+        let (key, after) = parse_string(rest)?;
+        let after = after
+            .trim_start()
+            .strip_prefix(':')
+            .with_context(|| format!("expected ':' after key {key:?}"))?
+            .trim_start();
+        if key == "name" {
+            let (value, after) = parse_string(after)?;
+            name = Some(value);
+            rest = after;
+        } else {
+            let (value, after) = parse_number(after)?;
+            metrics.push((key, value));
+            rest = after;
+        }
+    }
+    Ok(BenchRecord { name: name.context("record without a \"name\" key")?, metrics })
+}
+
+/// Parse a `BENCH_<name>.json` document produced by
+/// [`crate::util::bench::BenchJson::to_json`]. Line-oriented: header
+/// keys and one record per line, exactly as the writer emits them.
+pub fn parse_bench_json(doc: &str) -> Result<BenchDoc> {
+    let mut out = BenchDoc {
+        schema_version: 1,
+        bench: String::new(),
+        engine: String::new(),
+        transport: String::new(),
+        pipeline: String::new(),
+        threads: 0,
+        quick: false,
+        records: Vec::new(),
+    };
+    let mut in_records = false;
+    for line in doc.lines() {
+        let t = line.trim();
+        if t == "{" || t == "}" {
+            continue;
+        }
+        if in_records {
+            if t == "]" || t == "]," {
+                in_records = false;
+            } else {
+                out.records.push(parse_record(t)?);
+            }
+            continue;
+        }
+        if t.starts_with("\"records\"") {
+            in_records = true;
+            continue;
+        }
+        let Some((key, after)) = parse_string(t).ok() else {
+            bail!("unrecognized line {t:.60?}");
+        };
+        let value = after
+            .trim_start()
+            .strip_prefix(':')
+            .with_context(|| format!("expected ':' after header key {key:?}"))?
+            .trim();
+        match key.as_str() {
+            "bench" | "engine" | "transport" | "pipeline" => {
+                let (s, _) = parse_string(value)?;
+                match key.as_str() {
+                    "bench" => out.bench = s,
+                    "engine" => out.engine = s,
+                    "transport" => out.transport = s,
+                    _ => out.pipeline = s,
+                }
+            }
+            "schema_version" | "threads" => {
+                let (v, _) = parse_number(value)?;
+                if key == "threads" {
+                    out.threads = v as u64;
+                } else {
+                    out.schema_version = v as u64;
+                }
+            }
+            "quick" => {
+                let (v, _) = parse_number(value)?;
+                out.quick = v != 0.0;
+            }
+            other => bail!("unknown header key {other:?}"),
+        }
+    }
+    if out.bench.is_empty() {
+        bail!("not a bench document (no \"bench\" header)");
+    }
+    Ok(out)
+}
+
+/// The verdict for one compared metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffLine {
+    /// Case name.
+    pub name: String,
+    /// Metric key.
+    pub metric: String,
+    /// Baseline value.
+    pub old: f64,
+    /// New value.
+    pub new: f64,
+    /// Relative change `(new - old) / old` (NaN when `old == 0`).
+    pub rel: f64,
+    /// True when this line violates its tolerance.
+    pub regressed: bool,
+}
+
+/// The outcome of a bench-diff: the rendered table plus the machine
+/// verdicts CI gates on.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    /// Every compared metric, in document order.
+    pub lines: Vec<DiffLine>,
+    /// Non-fatal notes: records added/removed, context drift under
+    /// `report_only`, skipped metrics.
+    pub warnings: Vec<String>,
+    /// Number of regressed lines (0 = pass).
+    pub regressions: usize,
+}
+
+impl DiffReport {
+    /// Render the markdown delta table (plus the warning list).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("| Case | Metric | Baseline | New | Δ | Verdict |\n");
+        out.push_str("|---|---|---:|---:|---:|---|\n");
+        for l in &self.lines {
+            let delta = if l.rel.is_finite() {
+                format!("{:+.1}%", l.rel * 100.0)
+            } else {
+                "n/a".into()
+            };
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                l.name,
+                l.metric,
+                fmt_value(&l.metric, l.old),
+                fmt_value(&l.metric, l.new),
+                delta,
+                if l.regressed { "**regressed**" } else { "ok" },
+            ));
+        }
+        for w in &self.warnings {
+            out.push_str(&format!("\n> warning: {w}\n"));
+        }
+        out
+    }
+}
+
+fn fmt_value(metric: &str, v: f64) -> String {
+    if metric.ends_with("_bytes") || metric == "n" {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Compare `new` against the `old` baseline.
+///
+/// `tolerance` is the relative slowdown allowed on `*_ms` metrics;
+/// `*_bytes` metrics must match exactly. With `report_only`, context
+/// mismatches and regressions become warnings and `regressions` stays 0
+/// — the caller always exits 0 but still gets the table.
+pub fn diff(old: &BenchDoc, new: &BenchDoc, tolerance: f64, report_only: bool) -> Result<DiffReport> {
+    let mut report = DiffReport::default();
+    for (axis, a, b) in [
+        ("bench", &old.bench, &new.bench),
+        ("engine", &old.engine, &new.engine),
+        ("transport", &old.transport, &new.transport),
+        ("pipeline", &old.pipeline, &new.pipeline),
+    ] {
+        if a != b {
+            let msg = format!("context mismatch on {axis}: baseline {a:?} vs new {b:?}");
+            if report_only {
+                report.warnings.push(msg);
+            } else {
+                bail!("{msg} — these documents are not comparable");
+            }
+        }
+    }
+    for (axis, a, b) in
+        [("threads", old.threads, new.threads), ("quick", old.quick as u64, new.quick as u64)]
+    {
+        if a != b {
+            report.warnings.push(format!("context drift on {axis}: baseline {a} vs new {b}"));
+        }
+    }
+
+    for rec in &old.records {
+        let Some(new_rec) = new.record(&rec.name) else {
+            report.warnings.push(format!("record {:?} missing from the new run", rec.name));
+            continue;
+        };
+        for (key, old_v) in &rec.metrics {
+            let timing = key.ends_with("_ms");
+            let traffic = key.ends_with("_bytes");
+            if !timing && !traffic {
+                continue;
+            }
+            let Some(new_v) = new_rec.metric(key) else {
+                report.warnings.push(format!("metric {key:?} missing from record {:?}", rec.name));
+                continue;
+            };
+            let rel = if *old_v != 0.0 { (new_v - old_v) / old_v } else { f64::NAN };
+            let regressed = if traffic {
+                // Deterministic byte counts: bitwise drift is the bug.
+                new_v != *old_v
+            } else {
+                rel.is_finite() && rel > tolerance
+            };
+            report.lines.push(DiffLine {
+                name: rec.name.clone(),
+                metric: key.clone(),
+                old: *old_v,
+                new: new_v,
+                rel,
+                regressed: regressed && !report_only,
+            });
+            if regressed && report_only {
+                report
+                    .warnings
+                    .push(format!("{} {key}: would regress outside report-only mode", rec.name));
+            }
+        }
+    }
+    for rec in &new.records {
+        if old.record(&rec.name).is_none() {
+            report.warnings.push(format!("record {:?} is new (no baseline)", rec.name));
+        }
+    }
+    report.regressions = report.lines.iter().filter(|l| l.regressed).count();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::BenchJson;
+
+    fn doc(mean: f64, wire: u64) -> String {
+        let mut j = BenchJson::new("unit");
+        j.set_context("threaded", "tcp");
+        j.record("case/a", &[("mean_ms", mean), ("n", 5.0)]);
+        j.record_wire("case/wire", wire, 1024);
+        j.to_json()
+    }
+
+    #[test]
+    fn parses_the_writers_own_output() {
+        let d = parse_bench_json(&doc(1.5, 2048)).unwrap();
+        assert_eq!(d.schema_version, 2);
+        assert_eq!(d.bench, "unit");
+        assert_eq!(d.engine, "threaded");
+        assert_eq!(d.transport, "tcp");
+        assert_eq!(d.pipeline, "off");
+        assert_eq!(d.records.len(), 2);
+        assert_eq!(d.record("case/a").unwrap().metric("mean_ms"), Some(1.5));
+        assert_eq!(d.record("case/wire").unwrap().metric("wire_bytes"), Some(2048.0));
+    }
+
+    #[test]
+    fn parses_escapes_and_null() {
+        let mut j = BenchJson::new("esc");
+        j.record("case \"q\"", &[("mean_ms", f64::NAN)]);
+        let d = parse_bench_json(&j.to_json()).unwrap();
+        let r = d.record("case \"q\"").unwrap();
+        assert!(r.metric("mean_ms").unwrap().is_nan());
+    }
+
+    #[test]
+    fn pre_versioning_documents_parse_as_v1() {
+        let legacy = doc(1.0, 1024).replace("  \"schema_version\": 2,\n", "");
+        let d = parse_bench_json(&legacy).unwrap();
+        assert_eq!(d.schema_version, 1);
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let old = parse_bench_json(&doc(1.0, 2048)).unwrap();
+        let new = parse_bench_json(&doc(1.2, 2048)).unwrap();
+        let r = diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 0, "{:?}", r.lines);
+        assert!(r.to_markdown().contains("| case/a | mean_ms |"));
+    }
+
+    #[test]
+    fn timing_regression_is_flagged() {
+        let old = parse_bench_json(&doc(1.0, 2048)).unwrap();
+        let new = parse_bench_json(&doc(1.6, 2048)).unwrap();
+        let r = diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 1);
+        assert!(r.to_markdown().contains("**regressed**"));
+        // A speedup of the same magnitude is not a regression.
+        let r = diff(&new, &old, DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 0);
+    }
+
+    #[test]
+    fn byte_drift_is_exact() {
+        let old = parse_bench_json(&doc(1.0, 2048)).unwrap();
+        let new = parse_bench_json(&doc(1.0, 2049)).unwrap();
+        let r = diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 1);
+    }
+
+    #[test]
+    fn context_mismatch_is_an_error_unless_report_only() {
+        let old = parse_bench_json(&doc(1.0, 2048)).unwrap();
+        let mut other = BenchJson::new("unit");
+        other.set_context("lockstep", "inproc");
+        other.record("case/a", &[("mean_ms", 1.0)]);
+        let new = parse_bench_json(&other.to_json()).unwrap();
+        assert!(diff(&old, &new, DEFAULT_TOLERANCE, false).is_err());
+        let r = diff(&old, &new, DEFAULT_TOLERANCE, true).unwrap();
+        assert_eq!(r.regressions, 0);
+        assert!(r.warnings.iter().any(|w| w.contains("context mismatch")));
+    }
+
+    #[test]
+    fn report_only_downgrades_regressions() {
+        let old = parse_bench_json(&doc(1.0, 2048)).unwrap();
+        let new = parse_bench_json(&doc(10.0, 4096)).unwrap();
+        let r = diff(&old, &new, DEFAULT_TOLERANCE, true).unwrap();
+        assert_eq!(r.regressions, 0);
+        assert!(r.warnings.iter().any(|w| w.contains("would regress")));
+    }
+
+    #[test]
+    fn removed_and_added_records_warn() {
+        let old = parse_bench_json(&doc(1.0, 2048)).unwrap();
+        let mut j = BenchJson::new("unit");
+        j.set_context("threaded", "tcp");
+        j.record("case/a", &[("mean_ms", 1.0)]);
+        j.record("case/brand-new", &[("mean_ms", 1.0)]);
+        let new = parse_bench_json(&j.to_json()).unwrap();
+        let r = diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap();
+        assert!(r.warnings.iter().any(|w| w.contains("missing from the new run")));
+        assert!(r.warnings.iter().any(|w| w.contains("no baseline")));
+    }
+}

@@ -5,6 +5,7 @@
 //! criterion). See DESIGN.md §2 "Offline-environment deviations".
 
 pub mod bench;
+pub mod benchdiff;
 pub mod cli;
 pub mod rng;
 pub mod stats;

@@ -217,6 +217,40 @@ fn scratch_arena_stops_allocating_after_first_step() {
 }
 
 #[test]
+fn scratch_arena_stays_flat_with_metrics_enabled() {
+    // Run-health satellite (DESIGN.md §15): recording the quality
+    // gauges/histograms must not allocate either — the metrics-enabled
+    // path keeps the zero-alloc-after-step-1 property. The registry is
+    // a fixed static table of atomics, so this holds by construction;
+    // this test keeps it held.
+    let w = 4;
+    powersgd::obs::enable_metrics(true);
+    let mut dec = decentralized_by_name("powersgd", 2, 13).unwrap();
+    let mut log = CommLog::default();
+
+    let updates = rand_updates(w, SHAPES, 850);
+    dec.compress_aggregate(&updates, &mut log);
+    let after_first = dec.scratch_allocations();
+    assert!(after_first > 0, "arena should own the P/Q buffers");
+
+    for step in 0..5 {
+        let updates = rand_updates(w, SHAPES, 851 + step as u64);
+        dec.compress_aggregate(&updates, &mut log);
+        assert_eq!(
+            dec.scratch_allocations(),
+            after_first,
+            "metrics-enabled step {step} allocated new scratch tensors"
+        );
+    }
+
+    // The quality instrumentation really ran on this path: the
+    // reconstruction loop published a finite relative error.
+    let err = powersgd::obs::metrics::gauge_value(powersgd::obs::metrics::Gauge::ApproxError);
+    assert!(err.is_finite() && err >= 0.0, "approx-error gauge not recorded: {err}");
+    powersgd::obs::enable_metrics(false);
+}
+
+#[test]
 fn per_worker_equivalence_holds_with_multithreaded_kernels() {
     // Engine-equivalence with the kernel pool fanned out: the
     // decentralized path must stay bitwise-identical to the oracle when

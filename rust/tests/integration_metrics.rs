@@ -1,0 +1,321 @@
+//! Integration: the crate-wide metrics layer (DESIGN.md §15).
+//!
+//! Four properties are pinned here:
+//!
+//! 1. **Observation is free of observable effect** — running any engine
+//!    with the metrics registry enabled (and the harness emitting
+//!    per-step frames) produces *bitwise identical* final parameters to
+//!    the same run with everything off, across pipeline modes and
+//!    kernel-thread counts.
+//! 2. **Reconciliation is exact** — the per-step `wire_sent` deltas a
+//!    worker pushes over the sideband sum to precisely the
+//!    `MeteredTransport` total the coordinator already audits.
+//! 3. **Straggler detection** — a rank with injected per-step jitter is
+//!    flagged by `aggregate`, and nobody is flagged on a uniform run.
+//! 4. **Dead peers are tolerated** — a rank that pushes no frames shows
+//!    up in `missing_ranks`, and the merged summary still renders.
+//!
+//! The registry mode bit is process-global, so every test that toggles
+//! it holds `metrics::registry_lock()` (shared with the in-crate unit
+//! tests via the harness, though this binary runs alone).
+
+use powersgd::obs::metrics::{
+    aggregate, registry_lock, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S,
+};
+use powersgd::transport::tcp::{
+    coordinate, oracle_trajectory, run_worker_with_metrics, worker_trajectory, HarnessConfig,
+    LaunchOutcome, MeteredTransport, Rendezvous, WorkerRunReport,
+};
+use powersgd::transport::{InProcDuplex, PipelineMode};
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Run a `world`-rank in-process ring over real localhost sockets.
+/// `cfg_for_thread` hands each worker thread its own config (rank
+/// assignment happens at rendezvous, so per-*rank* targeting must go
+/// through `HarnessConfig` fields like `straggle_rank`; per-*thread*
+/// configs are still useful for e.g. one metrics-silent worker).
+fn run_socket_ring_with(
+    world: usize,
+    coord_cfg: &HarnessConfig,
+    cfg_for_thread: impl Fn(usize) -> HarnessConfig,
+) -> LaunchOutcome {
+    let rendezvous = Rendezvous::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = rendezvous.addr().expect("rendezvous addr");
+    let workers: Vec<_> = (0..world)
+        .map(|i| {
+            let addr = addr.clone();
+            let cfg = cfg_for_thread(i);
+            std::thread::spawn(move || run_worker_with_metrics(&addr, &cfg, TIMEOUT))
+        })
+        .collect();
+    let outcome = coordinate(&rendezvous, world, coord_cfg, TIMEOUT);
+    for (idx, handle) in workers.into_iter().enumerate() {
+        handle
+            .join()
+            .expect("worker thread panicked")
+            .unwrap_or_else(|e| panic!("worker #{idx}: {e:#}"));
+    }
+    outcome.unwrap_or_else(|e| panic!("coordinate: {e:#}"))
+}
+
+fn run_socket_ring(world: usize, cfg: &HarnessConfig) -> LaunchOutcome {
+    run_socket_ring_with(world, cfg, |_| cfg.clone())
+}
+
+/// Final parameters of every rank as raw bit patterns, rank-ordered.
+fn param_bits(mut reports: Vec<WorkerRunReport>) -> Vec<Vec<u32>> {
+    reports.sort_by_key(|r| r.rank);
+    reports
+        .iter()
+        .map(|r| r.params.iter().flat_map(|t| t.data().iter().map(|x| x.to_bits())).collect())
+        .collect()
+}
+
+/// Drive `world` worker threads over in-process duplex rings and
+/// return their run reports (the threaded engine, no sockets).
+fn threaded_reports(world: usize, cfg: &HarnessConfig) -> Vec<WorkerRunReport> {
+    let endpoints = InProcDuplex::endpoints(world);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let cfg = cfg.clone();
+                scope.spawn(move || worker_trajectory(MeteredTransport::new(ep), &cfg))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked").expect("worker trajectory"))
+            .collect()
+    })
+}
+
+#[test]
+fn metrics_mode_is_bitwise_invisible_to_the_lockstep_oracle() {
+    let _guard = registry_lock();
+    for pipeline in [PipelineMode::Off, PipelineMode::Delayed] {
+        let cfg = HarnessConfig { pipeline, seed: 31, steps: 3, ..HarnessConfig::default() };
+        powersgd::obs::enable_metrics(false);
+        let (off, logical_off) = oracle_trajectory(4, &cfg).expect("metrics-off oracle");
+        powersgd::obs::enable_metrics(true);
+        let (on, logical_on) = oracle_trajectory(4, &cfg).expect("metrics-on oracle");
+        powersgd::obs::enable_metrics(false);
+        assert_eq!(logical_off, logical_on, "logical bytes drifted ({pipeline:?})");
+        assert_eq!(off.len(), on.len());
+        for (p, (a, b)) in off.iter().zip(on.iter()).enumerate() {
+            assert_eq!(a.data(), b.data(), "param[{p}] bits drifted ({pipeline:?})");
+        }
+    }
+}
+
+#[test]
+fn metrics_mode_is_bitwise_invisible_on_the_threaded_engine() {
+    // The full matrix: pipeline mode × kernel-thread count, metrics-off
+    // vs metrics-on (registry enabled AND per-step frames collected).
+    let _guard = registry_lock();
+    let ambient = powersgd::runtime::pool::threads();
+    for pipeline in [PipelineMode::Off, PipelineMode::Overlap, PipelineMode::Delayed] {
+        for threads in [1usize, 4] {
+            powersgd::runtime::pool::set_threads(threads);
+            let base =
+                HarnessConfig { pipeline, seed: 37, steps: 3, ..HarnessConfig::default() };
+
+            powersgd::obs::enable_metrics(false);
+            let off = param_bits(threaded_reports(4, &base));
+
+            powersgd::obs::enable_metrics(true);
+            let on_cfg = HarnessConfig { metrics: true, ..base.clone() };
+            let on_reports = threaded_reports(4, &on_cfg);
+            powersgd::obs::enable_metrics(false);
+
+            // Reconciliation on the threaded engine: each rank's summed
+            // per-step deltas equal its metered totals exactly.
+            for r in &on_reports {
+                assert_eq!(r.step_metrics.len(), base.steps, "rank {} frame count", r.rank);
+                let sent: u64 = r.step_metrics.iter().map(|m| m.wire_sent).sum();
+                assert_eq!(sent, r.wire_bytes, "rank {} wire_sent deltas", r.rank);
+            }
+
+            let on = param_bits(on_reports);
+            assert_eq!(off, on, "params drifted ({pipeline:?}, {threads} kernel threads)");
+        }
+    }
+    powersgd::runtime::pool::set_threads(ambient);
+}
+
+#[test]
+fn socket_launch_reconciles_metrics_frames_exactly() {
+    let cfg = HarnessConfig { metrics: true, seed: 41, steps: 3, ..HarnessConfig::default() };
+    let outcome = run_socket_ring(3, &cfg);
+    assert!(outcome.reports.iter().all(|r| r.bitwise), "non-bitwise report with metrics on");
+    assert_eq!(outcome.metrics_reconcile(), Some(true), "sideband frames must sum to metered");
+
+    for (rank, frames) in outcome.metrics_by_rank.iter().enumerate() {
+        assert_eq!(frames.len(), cfg.steps, "rank {rank} frame count");
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.rank, rank as u64, "frame rank tag");
+            assert_eq!(f.step, i as u64, "frame step ordering");
+            assert!(f.step_seconds >= 0.0 && f.step_seconds.is_finite());
+            assert!(f.approx_error.is_finite());
+        }
+        let sent: u64 = frames.iter().map(|f| f.wire_sent).sum();
+        assert_eq!(sent, outcome.reports[rank].wire_bytes, "rank {rank} wire_sent total");
+    }
+
+    let health = aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+    assert_eq!(health.world, 3);
+    assert!(health.missing_ranks.is_empty(), "all ranks reported");
+    assert_eq!(health.steps.len(), cfg.steps);
+    let metered_total: u64 = outcome.reports.iter().map(|r| r.wire_bytes).sum();
+    assert_eq!(health.wire_sent_total, metered_total, "merged summary wire total");
+}
+
+#[test]
+fn metrics_off_run_has_an_empty_sideband() {
+    // `metrics: false` workers push nothing; the coordinator sees empty
+    // streams and `metrics_reconcile` abstains rather than reporting a
+    // vacuous success.
+    let cfg = HarnessConfig { seed: 43, steps: 2, ..HarnessConfig::default() };
+    let outcome = run_socket_ring(2, &cfg);
+    assert!(outcome.reports.iter().all(|r| r.bitwise));
+    assert!(outcome.metrics_by_rank.iter().all(|f| f.is_empty()));
+    assert_eq!(outcome.metrics_reconcile(), None);
+}
+
+#[test]
+fn straggler_is_flagged_in_a_jittered_run_and_nobody_in_a_uniform_one() {
+    // Jittered: rank 1 sleeps 600 ms inside every timed step — far past
+    // the default `max(2×median, median + 20 ms)` threshold even on a
+    // heavily loaded CI box, where the fast rank's tiny model step
+    // stays well under 300 ms.
+    let jittered = HarnessConfig {
+        metrics: true,
+        straggle_rank: 1,
+        straggle_ms: 600,
+        seed: 47,
+        steps: 2,
+        ..HarnessConfig::default()
+    };
+    let outcome = run_socket_ring(2, &jittered);
+    assert!(outcome.reports.iter().all(|r| r.bitwise), "jitter must not change the trajectory");
+    assert_eq!(outcome.metrics_reconcile(), Some(true));
+    let health = aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+    assert_eq!(health.straggler_ranks(), vec![1], "only the jittered rank is flagged");
+    for s in &health.steps {
+        assert!(
+            s.median_step_s < 0.6,
+            "median tracked the fast rank, not the straggler: {}",
+            s.median_step_s
+        );
+        assert!(s.p95_step_s >= 0.6, "p95 tracked the straggler: {}", s.p95_step_s);
+    }
+
+    // Uniform: same run without injection. Real timings on a shared
+    // test box can hiccup by tens of milliseconds, so use a generous
+    // absolute slack — the *relative* factor is what a uniform run
+    // must not trip.
+    let uniform = HarnessConfig { metrics: true, seed: 47, steps: 2, ..HarnessConfig::default() };
+    let outcome = run_socket_ring(2, &uniform);
+    let health = aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, 0.25);
+    assert!(
+        health.straggler_ranks().is_empty(),
+        "uniform run flagged {:?}",
+        health.straggler_ranks()
+    );
+}
+
+#[test]
+fn dead_peer_is_tolerated_in_the_merged_summary() {
+    // One worker thread runs metrics-silent (frames are gated on its
+    // *own* config); whichever rank it lands on becomes a dead peer in
+    // the sideband. The merged summary must report it in
+    // `missing_ranks` instead of failing, and the live ranks must still
+    // reconcile exactly.
+    let on = HarnessConfig { metrics: true, seed: 53, steps: 2, ..HarnessConfig::default() };
+    let silent = HarnessConfig { metrics: false, ..on.clone() };
+    let outcome = run_socket_ring_with(3, &on, |i| if i == 1 { silent.clone() } else { on.clone() });
+    assert!(outcome.reports.iter().all(|r| r.bitwise), "mixed metrics configs stay bitwise");
+    // Tolerant reconcile: empty streams are skipped, live ones checked.
+    assert_eq!(outcome.metrics_reconcile(), Some(true));
+
+    let health = aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+    assert_eq!(health.missing_ranks.len(), 1, "exactly one dead peer");
+    let dead = health.missing_ranks[0];
+    for s in &health.steps {
+        assert!(!s.ranks.contains(&dead), "dead peer cannot appear in step health");
+        assert_eq!(s.ranks.len(), 2, "both live ranks reported");
+    }
+    let doc = health.to_json(outcome.metrics_reconcile());
+    assert!(doc.contains(&format!("\"missing_ranks\": [{dead}]")), "summary snapshot:\n{doc}");
+    assert!(doc.contains("\"reconciles_metered\": true"), "summary snapshot:\n{doc}");
+}
+
+/// End-to-end acceptance: a real 2-process `launch --metrics` writes
+/// one JSONL per rank plus the merged summary, and the summary records
+/// exact reconciliation against the metered transport. Rides the same
+/// binary the TCP suite exercises.
+#[test]
+fn multiprocess_launch_writes_metrics_artifacts() {
+    let exe = env!("CARGO_BIN_EXE_powersgd");
+    let dir = std::env::temp_dir().join(format!("powersgd-metrics-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let output = std::process::Command::new(exe)
+        .current_dir(&dir)
+        .args([
+            "launch",
+            "--workers",
+            "2",
+            "--transport",
+            "tcp",
+            "--compressor",
+            "powersgd",
+            "--rank",
+            "2",
+            "--steps",
+            "3",
+            "--seed",
+            "7",
+            "--metrics",
+            "METRICS.json",
+            "--straggle-rank",
+            "1",
+            "--straggle-ms",
+            "300",
+        ])
+        .output()
+        .expect("spawning powersgd launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "launch --metrics failed ({}):\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stdout.contains("bitwise-identical to the lockstep oracle"),
+        "launch --metrics: missing verification line in:\n{stdout}"
+    );
+
+    let merged = std::fs::read_to_string(dir.join("METRICS.json")).expect("merged METRICS.json");
+    assert!(merged.contains("\"world\": 2"), "merged summary:\n{merged}");
+    assert!(merged.contains("\"missing_ranks\": []"), "merged summary:\n{merged}");
+    assert!(merged.contains("\"reconciles_metered\": true"), "merged summary:\n{merged}");
+    assert!(merged.contains("\"straggler_ranks\": [1]"), "merged summary:\n{merged}");
+
+    for rank in 0..2 {
+        let path = dir.join(format!("METRICS_r{rank}.jsonl"));
+        let jsonl = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing {}: {e}", path.display()));
+        assert_eq!(jsonl.lines().count(), 3, "rank {rank}: one record per step");
+        for line in jsonl.lines() {
+            assert!(
+                line.starts_with('{') && line.ends_with('}'),
+                "rank {rank}: malformed JSONL line: {line}"
+            );
+            assert!(line.contains(&format!("\"rank\": {rank}")), "rank tag: {line}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
