@@ -60,6 +60,22 @@
 //! `powersgd bench-diff OLD.json NEW.json` compares two `BENCH_*.json`
 //! documents with tolerance thresholds and a markdown delta table —
 //! the CI bench regression gate.
+//!
+//! Add `--elastic` to `launch` for epoch-based elastic membership
+//! (DESIGN.md §16): workers heartbeat at every step boundary, a
+//! crashed or hung worker is detected (control-socket EOF or
+//! `--heartbeat-ms` timeout), and the survivors re-form the ring at
+//! W−1 and keep training — their own error-feedback residuals intact,
+//! the departed rank's dropped. `--join-at-step K` admits one extra
+//! worker mid-run. A stable-membership elastic run is bitwise
+//! identical to the plain lockstep oracle; churned runs verify against
+//! a composed per-epoch oracle (or member-consistency where replay
+//! does not apply — see the §16 table). Try the whole failure path in
+//! one line with deterministic fault injection:
+//!
+//! ```text
+//! cargo run --release -- launch --workers 4 --elastic --fail-rank 2 --fail-at-step 1
+//! ```
 
 use anyhow::Result;
 use powersgd::compress::PowerSgd;

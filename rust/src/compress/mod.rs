@@ -140,6 +140,15 @@ pub trait Compressor: SchemeMeta + Send {
     fn collective_span_threads(&self) -> usize {
         1
     }
+
+    /// Elastic membership changed (DESIGN.md §16): the run entered
+    /// `epoch` with `new_world` workers. Implementations drop any
+    /// state keyed to the old world size (per-worker scratch sizing,
+    /// staleness) and keep world-independent state (PowerSGD's
+    /// warm-start `Q` factors are shared across workers, so the
+    /// departed rank's copy was identical to every survivor's and
+    /// nothing is lost). Default: no world-sized state, no-op.
+    fn on_reconfigure(&mut self, _epoch: u64, _new_world: usize) {}
 }
 
 /// Indices of matrix-kind (compressed) and vector-kind (uncompressed)

@@ -219,6 +219,15 @@ pub trait WorkerCompressor: SchemeMeta + Send {
     /// to `Off` (the delayed trajectory lives in the optimizer, not
     /// here).
     fn set_pipeline(&mut self, _mode: PipelineMode) {}
+
+    /// Elastic membership changed (DESIGN.md §16): the ring entered
+    /// `epoch` with `new_world` workers. Per-worker state that is
+    /// *shared by construction* (warm-start `Q`, the shared-seed RNG
+    /// stream) survives — every member held identical bits, so the
+    /// departed rank's copy is not lost — while anything sized or
+    /// keyed to the old world must be dropped. Default: no such
+    /// state, no-op.
+    fn on_reconfigure(&mut self, _epoch: u64, _new_world: usize) {}
 }
 
 /// Pack tensors into one flat buffer (reusing its capacity).
@@ -534,6 +543,14 @@ impl WorkerCompressor for PowerSgdWorker {
     fn set_pipeline(&mut self, mode: PipelineMode) {
         self.pipeline = mode;
     }
+
+    /// Warm-start `Q` is per-parameter-slot and identical on every
+    /// member (it is the all-reduced mean each step), so a membership
+    /// change keeps it: survivors and the oracle continue from the
+    /// same factors, and the departed rank's copy was redundant. Only
+    /// the collective *denominator* changes, and that is read live
+    /// from the transport each round.
+    fn on_reconfigure(&mut self, _epoch: u64, _new_world: usize) {}
 }
 
 // ---------------------------------------------------------------------
@@ -1168,6 +1185,14 @@ where
                 Some(own) => Locals::PerWorker(vec![own]),
             },
         }
+    }
+
+    /// Drop the scratch arena (its packed-collective buffers are
+    /// re-sized lazily on the next round) and forward the epoch change
+    /// to the wrapped worker compressor.
+    fn on_reconfigure(&mut self, epoch: u64, new_world: usize) {
+        self.scratch = ScratchArena::new();
+        self.comp.on_reconfigure(epoch, new_world);
     }
 }
 

@@ -231,6 +231,32 @@ fn print_help() {
          \x20                  (launch/worker) inject a deterministic sleep\n\
          \x20                  before every step on rank K — exercises the\n\
          \x20                  straggler detector in tests and CI\n\
+         \x20 --comm-timeout-ms MS\n\
+         \x20                  (launch/worker) ring socket read/write timeout,\n\
+         \x20                  overriding the run timeout (--timeout-s). Must\n\
+         \x20                  exceed --straggle-ms, or the injected sleep\n\
+         \x20                  reads as a dead peer (DESIGN.md §16)\n\
+         \x20 --elastic        (launch/worker) epoch-based elastic membership\n\
+         \x20                  (DESIGN.md §16): a crashed or joining worker\n\
+         \x20                  triggers ring re-formation at the next step\n\
+         \x20                  boundary and the run continues at W-1 / W+1\n\
+         \x20 --heartbeat-ms MS\n\
+         \x20                  elastic step-boundary heartbeat timeout: a\n\
+         \x20                  member silent past MS at a boundary is declared\n\
+         \x20                  dead (default 5000; must exceed --straggle-ms)\n\
+         \x20 --reconnect-retries N\n\
+         \x20                  connect attempts per ring edge with jittered\n\
+         \x20                  exponential backoff (default 4); attempts are\n\
+         \x20                  counted in the reconnect_attempts metric\n\
+         \x20 --join-at-step S (launch, elastic) spawn one extra worker and\n\
+         \x20                  admit it into the ring at step boundary S\n\
+         \x20                  (joins into a churned run are out of scope, so\n\
+         \x20                  this cannot combine with --fail-rank)\n\
+         \x20 --fail-rank R / --fail-at-step S / --fail-midstep\n\
+         \x20                  (launch/worker, elastic) deterministic fault\n\
+         \x20                  injection: rank R crashes at step S — at the\n\
+         \x20                  step boundary, or mid-collective with\n\
+         \x20                  --fail-midstep — and the survivors re-form\n\
          \n\
          see DESIGN.md for the full option list, and\n\
          examples/quickstart.rs for a narrated walkthrough (it runs a\n\
@@ -593,6 +619,24 @@ fn harness_config(args: &Args) -> Result<powersgd::transport::tcp::HarnessConfig
         metrics: args.get("metrics").is_some(),
         straggle_rank: args.get_parsed_or("straggle-rank", 0usize),
         straggle_ms: args.get_parsed_or("straggle-ms", 0u64),
+        elastic: args.flag("elastic"),
+        heartbeat_ms: args.get_parsed_or("heartbeat-ms", 5000u64),
+        reconnect_retries: args.get_parsed_or(
+            "reconnect-retries",
+            powersgd::transport::tcp::DEFAULT_CONNECT_RETRIES,
+        ),
+        comm_timeout_ms: args
+            .get("comm-timeout-ms")
+            .map(|v| v.parse::<u64>())
+            .transpose()
+            .context("--comm-timeout-ms must be an integer (milliseconds)")?,
+        fail_rank: args
+            .get("fail-rank")
+            .map(|v| v.parse::<usize>())
+            .transpose()
+            .context("--fail-rank must be a rank index")?,
+        fail_at_step: args.get_parsed_or("fail-at-step", 0u64),
+        fail_midstep: args.flag("fail-midstep"),
     })
 }
 
@@ -605,7 +649,7 @@ fn harness_timeout(args: &Args) -> std::time::Duration {
 /// oracle (bitwise parameters + exact byte accounting). Exits non-zero
 /// on any mismatch or dead worker.
 fn cmd_launch(args: &Args) -> Result<()> {
-    use powersgd::transport::tcp::{coordinate, Rendezvous};
+    use powersgd::transport::tcp::{coordinate, coordinate_elastic, Rendezvous};
     use std::process::Command;
 
     let workers = args.get_parsed_or("workers", 4usize);
@@ -615,18 +659,51 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
     let cfg = harness_config(args)?;
     let timeout = harness_timeout(args);
+    let join_at_step: Option<u64> = args
+        .get("join-at-step")
+        .map(|v| v.parse::<u64>())
+        .transpose()
+        .context("--join-at-step must be a step index")?;
+    if (join_at_step.is_some() || cfg.fail_rank.is_some()) && !cfg.elastic {
+        bail!("--join-at-step / --fail-rank need --elastic (DESIGN.md §16)");
+    }
+    if join_at_step.is_some() && cfg.fail_rank.is_some() {
+        bail!(
+            "--join-at-step cannot be combined with --fail-rank: a joiner cannot replay a \
+             churned prefix, so joining a churned run is out of scope (DESIGN.md §16)"
+        );
+    }
+    if let Some(k) = join_at_step {
+        if k >= cfg.steps as u64 {
+            bail!(
+                "--join-at-step {k} out of range for --steps {}: the join boundary must be a \
+                 step the run still executes",
+                cfg.steps
+            );
+        }
+    }
+    if let Some(r) = cfg.fail_rank {
+        if r >= workers {
+            bail!("--fail-rank {r} out of range for --workers {workers}");
+        }
+    }
 
     let rendezvous = Rendezvous::bind(args.get_or("bind", "127.0.0.1:0"))?;
     let addr = rendezvous.addr()?;
     let exe = std::env::current_exe().context("cannot locate the powersgd binary")?;
+    // A late joiner is one extra identical worker process: the
+    // coordinator admits exactly `workers` at rendezvous and leaves the
+    // extra Hello in the listener backlog until the join boundary.
+    let spawn_count = workers + usize::from(join_at_step.is_some());
     eprintln!(
-        "launching {workers} worker processes (rendezvous {addr}, {} rank {}, {} steps, \
-         pipeline {})",
+        "launching {spawn_count} worker processes (rendezvous {addr}, {} rank {}, {} steps, \
+         pipeline {}{})",
         cfg.compressor, cfg.rank, cfg.steps,
-        cfg.pipeline.cli_name()
+        cfg.pipeline.cli_name(),
+        if cfg.elastic { ", elastic" } else { "" }
     );
-    let mut children = Vec::with_capacity(workers);
-    for _ in 0..workers {
+    let mut children = Vec::with_capacity(spawn_count);
+    for _ in 0..spawn_count {
         let mut cmd = Command::new(&exe);
         cmd.arg("worker")
             .arg("--coordinator")
@@ -672,29 +749,81 @@ fn cmd_launch(args: &Args) -> Result<()> {
                 .arg("--straggle-ms")
                 .arg(cfg.straggle_ms.to_string());
         }
+        // Elastic-membership options (DESIGN.md §16). Ranks are assigned
+        // by rendezvous arrival order, so every worker gets the same
+        // flags — including the fault injection, which each worker
+        // checks against its own assigned rank.
+        if cfg.elastic {
+            cmd.arg("--heartbeat-ms")
+                .arg(cfg.heartbeat_ms.to_string())
+                .arg("--reconnect-retries")
+                .arg(cfg.reconnect_retries.to_string())
+                .arg("--elastic");
+            if let Some(r) = cfg.fail_rank {
+                cmd.arg("--fail-rank")
+                    .arg(r.to_string())
+                    .arg("--fail-at-step")
+                    .arg(cfg.fail_at_step.to_string());
+                if cfg.fail_midstep {
+                    cmd.arg("--fail-midstep");
+                }
+            }
+        }
+        if let Some(ms) = cfg.comm_timeout_ms {
+            cmd.arg("--comm-timeout-ms").arg(ms.to_string());
+        }
         let child = cmd.spawn().context("spawning a worker process")?;
         children.push(child);
     }
 
-    let outcome = coordinate(&rendezvous, workers, &cfg, timeout);
+    let outcome = if cfg.elastic {
+        coordinate_elastic(&rendezvous, workers, &cfg, timeout, join_at_step)
+    } else {
+        coordinate(&rendezvous, workers, &cfg, timeout)
+    };
     if outcome.is_err() {
         // Don't leave orphan workers behind a failed launch.
         for child in &mut children {
             let _ = child.kill();
         }
     }
+    let mut injected_exit_seen = false;
     for (idx, mut child) in children.into_iter().enumerate() {
         let status = child.wait().context("waiting for a worker process")?;
         if outcome.is_ok() && !status.success() {
+            // The deliberately crashed rank of an elastic fault
+            // injection exits non-zero by design — but only that one:
+            // a second failed process is a genuine bug the injection
+            // must not mask.
+            if cfg.elastic && cfg.fail_rank.is_some() && !injected_exit_seen {
+                injected_exit_seen = true;
+                eprintln!("note: worker process #{idx} exited with {status} (fault injection)");
+                continue;
+            }
             bail!("worker process #{idx} exited with {status}");
         }
     }
     let outcome = outcome?;
 
+    // Elastic runs verify against the composed multi-epoch oracle when
+    // the scheme's worker state survives the membership change bitwise
+    // (DESIGN.md §16); otherwise they verify member-consistency (every
+    // survivor bitwise-equal to every other) plus per-member logical
+    // byte accounting. The coordinator records which check it actually
+    // ran, so the printed verdict cannot drift from the verification.
+    let verdict = if outcome.oracle_verified { "bitwise" } else { "consistent" };
     let mut table = Table::new(
         &format!(
-            "TCP ring — {} workers × {} steps, {} (rank {})",
-            outcome.world, outcome.steps, cfg.compressor, cfg.rank
+            "TCP ring — {} workers × {} steps, {} (rank {}){}",
+            outcome.world,
+            outcome.steps,
+            cfg.compressor,
+            cfg.rank,
+            if cfg.elastic {
+                format!(", elastic ({} epochs)", outcome.epochs.len())
+            } else {
+                String::new()
+            }
         ),
         &["Rank", "Wire bytes", "Logical bytes", "Model bytes/step", "vs oracle"],
     );
@@ -704,24 +833,53 @@ fn cmd_launch(args: &Args) -> Result<()> {
             format!("{}", report.wire_bytes),
             format!("{}", report.logical_bytes),
             format!("{}", outcome.model_bytes_per_step),
-            "bitwise".into(),
+            verdict.into(),
         ]);
     }
     table.print();
-    println!(
-        "ok: {} workers bitwise-identical to the lockstep oracle; measured wire bytes match \
-         the analytic message_bytes model",
-        outcome.world
-    );
+    if cfg.elastic {
+        for e in &outcome.epochs {
+            eprintln!(
+                "epoch {}: world {} from step {} (departed ranks {:?}, joined {})",
+                e.epoch, e.world, e.start_step, e.missing_ranks, e.joined
+            );
+        }
+        println!(
+            "ok: {} members finished ({} epochs, {} reconnect attempts); final parameters {}",
+            outcome.reports.len(),
+            outcome.epochs.len(),
+            outcome.reconnect_attempts_total,
+            if outcome.oracle_verified {
+                "bitwise-identical to the composed elastic oracle"
+            } else {
+                "bitwise-consistent across members (oracle replay not applicable \
+                 to this scheme under this churn — see DESIGN.md §16)"
+            }
+        );
+    } else {
+        println!(
+            "ok: {} workers bitwise-identical to the lockstep oracle; measured wire bytes match \
+             the analytic message_bytes model",
+            outcome.world
+        );
+    }
     if let Some(base) = args.get("trace") {
-        merge_launch_traces(std::path::Path::new(base), workers)?;
+        // Worker parts are named by origin (epoch-0) rank, so a late
+        // joiner writes the part after the initial world's.
+        merge_launch_traces(std::path::Path::new(base), spawn_count)?;
     }
     // The merged cluster-health summary: per-step frames pushed by every
     // worker over the control connection, aggregated into medians/p95s
     // and straggler flags, reconciled against the metered transport.
     if let Some(base) = args.get("metrics") {
         use powersgd::obs::metrics::{aggregate, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S};
-        let health = aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        let mut health =
+            aggregate(&outcome.metrics_by_rank, STRAGGLER_FACTOR, STRAGGLER_MIN_EXCESS_S);
+        // Epoch history and reconnect counts come from the coordinator's
+        // membership log, not the per-step frames, so the aggregate
+        // cannot derive them — fill before rendering (DESIGN.md §16).
+        health.epochs = outcome.epochs.clone();
+        health.reconnect_attempts_total = outcome.reconnect_attempts_total;
         let reconciles = outcome.metrics_reconcile();
         if reconciles == Some(false) {
             eprintln!("warning: per-step metrics frames do not sum to the metered wire bytes");

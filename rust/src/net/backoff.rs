@@ -1,0 +1,185 @@
+//! Bounded exponential backoff with deterministic jitter.
+//!
+//! Every connect path in the TCP transport — rendezvous control
+//! connections, initial ring-edge dials, and elastic re-formation
+//! reconnects (DESIGN.md §16) — retries through one of these policies
+//! instead of making a single timed-out attempt. The delay for attempt
+//! `k` grows as `base · 2^k`, capped at `cap`, with ±50% jitter drawn
+//! from a seeded [`Rng`] so two ranks hammering the same listener
+//! desynchronize without making test runs timing-dependent.
+//!
+//! Each retry (every attempt after the first) bumps the policy's own
+//! [`Backoff::attempts`] tally — workers sum their policies' tallies
+//! into the `reconnect_attempts` field of their end-of-run `Report`,
+//! which the coordinator reconciles cluster-wide — and additionally
+//! increments the process-global
+//! [`Counter::ReconnectAttempts`](crate::obs::metrics::Counter)
+//! metrics counter for `--metrics` snapshots.
+
+use crate::obs::metrics::{self, Counter};
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// A bounded exponential backoff policy. Construct once per connect
+/// site and drive it with [`Backoff::run`].
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    max_retries: u32,
+    rng: Rng,
+    attempts: u64,
+}
+
+impl Backoff {
+    /// Policy with explicit base delay, delay cap, and retry budget.
+    /// `seed` only perturbs the jitter; it never changes the bounds.
+    pub fn new(base: Duration, cap: Duration, max_retries: u32, seed: u64) -> Backoff {
+        Backoff { base, cap, max_retries, rng: Rng::new(seed ^ 0xB0FF), attempts: 0 }
+    }
+
+    /// The standard connect policy: 10 ms base, 500 ms cap.
+    pub fn standard(max_retries: u32, seed: u64) -> Backoff {
+        Backoff::new(Duration::from_millis(10), Duration::from_millis(500), max_retries, seed)
+    }
+
+    /// Retry budget (attempts beyond the first).
+    pub fn max_retries(&self) -> u32 {
+        self.max_retries
+    }
+
+    /// Retries this policy has performed so far, summed across every
+    /// [`Backoff::run`] call (each call's first attempt is free). This
+    /// is the per-worker count that ends up in the `Report` frame — a
+    /// local tally, so concurrent in-process workers never see each
+    /// other's retries.
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    /// Jittered delay before retry number `attempt` (0-based): the
+    /// capped exponential `base · 2^attempt`, scaled into `[50%, 100%]`
+    /// by the seeded jitter draw.
+    pub fn delay(&mut self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16)).min(self.cap);
+        let nanos = exp.as_nanos() as u64;
+        let half = nanos / 2;
+        let jittered = half + self.rng.below(half.max(1));
+        Duration::from_nanos(jittered)
+    }
+
+    /// Run `f` until it succeeds, the retry budget is spent, or the
+    /// next sleep would cross `deadline`. Returns the last error when
+    /// giving up. Every retry bumps [`Backoff::attempts`] and the
+    /// `reconnect_attempts` metrics counter.
+    pub fn run<T, E>(
+        &mut self,
+        deadline: Instant,
+        mut f: impl FnMut() -> Result<T, E>,
+    ) -> Result<T, E> {
+        let mut attempt = 0u32;
+        loop {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let delay = self.delay(attempt);
+                    let now = Instant::now();
+                    if attempt >= self.max_retries || now + delay >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(delay);
+                    self.attempts += 1;
+                    metrics::add(Counter::ReconnectAttempts, 1);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_and_cap() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(80), 8, 1);
+        // Jitter keeps each delay within [50%, 100%] of the exponential.
+        for (attempt, cap_ms) in [(0u32, 10u64), (1, 20), (2, 40), (3, 80), (4, 80), (10, 80)] {
+            let d = b.delay(attempt);
+            assert!(d <= Duration::from_millis(cap_ms), "attempt {attempt}: {d:?}");
+            assert!(d >= Duration::from_millis(cap_ms / 2), "attempt {attempt}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let mut a = Backoff::standard(3, 42);
+        let mut b = Backoff::standard(3, 42);
+        for attempt in 0..5 {
+            assert_eq!(a.delay(attempt), b.delay(attempt));
+        }
+    }
+
+    #[test]
+    fn run_stops_at_retry_budget() {
+        let mut b = Backoff::new(Duration::from_micros(10), Duration::from_micros(10), 2, 7);
+        let mut calls = 0;
+        let r: Result<(), &str> = b.run(Instant::now() + Duration::from_secs(5), || {
+            calls += 1;
+            Err("nope")
+        });
+        assert_eq!(r.unwrap_err(), "nope");
+        assert_eq!(calls, 3); // first attempt + 2 retries
+    }
+
+    #[test]
+    fn run_respects_deadline() {
+        let mut b = Backoff::new(Duration::from_secs(10), Duration::from_secs(10), 100, 7);
+        let mut calls = 0;
+        // Next sleep (≥5 s) would blow the 10 ms deadline: exactly one attempt.
+        let r: Result<(), &str> = b.run(Instant::now() + Duration::from_millis(10), || {
+            calls += 1;
+            Err("down")
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn attempts_tally_accumulates_across_runs() {
+        let mut b = Backoff::new(Duration::from_micros(10), Duration::from_micros(10), 2, 7);
+        assert_eq!(b.attempts(), 0);
+        let r: Result<(), &str> =
+            b.run(Instant::now() + Duration::from_secs(5), || Err("nope"));
+        assert!(r.is_err());
+        assert_eq!(b.attempts(), 2); // budget of 2 retries after the first try
+        let mut calls = 0;
+        let r: Result<(), &str> = b.run(Instant::now() + Duration::from_secs(5), || {
+            calls += 1;
+            if calls < 2 {
+                Err("again")
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_ok());
+        assert_eq!(b.attempts(), 3); // one more retry, summed with the first run's
+    }
+
+    #[test]
+    fn run_returns_first_success() {
+        let mut b = Backoff::new(Duration::from_micros(10), Duration::from_micros(50), 10, 7);
+        let mut calls = 0;
+        let r: Result<u32, &str> = b.run(Instant::now() + Duration::from_secs(5), || {
+            calls += 1;
+            if calls < 3 {
+                Err("not yet")
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(r.unwrap(), 99);
+        assert_eq!(calls, 3);
+    }
+}

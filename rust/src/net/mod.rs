@@ -14,6 +14,8 @@
 //! Decode cost after an all-gather scales with W (each worker unpacks
 //! W messages) — that is modeled in the simulator, not here.
 
+pub mod backoff;
+
 use crate::collectives::{CollKind, CollOp};
 
 /// A communication backend profile.

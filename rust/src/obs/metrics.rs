@@ -56,10 +56,14 @@ pub enum Counter {
     RecvTicketsPosted,
     /// Per-step metrics frames encoded for the coordinator sideband.
     MetricsFrames,
+    /// Connect retries burned by backoff policies (every attempt after
+    /// the first, across rendezvous, ring-edge, and elastic
+    /// re-formation dials).
+    ReconnectAttempts,
 }
 
 /// Number of counters (size of the static cell table).
-pub const COUNTER_COUNT: usize = 6;
+pub const COUNTER_COUNT: usize = 7;
 
 /// All counters in discriminant order (the snapshot order).
 pub const COUNTERS: [Counter; COUNTER_COUNT] = [
@@ -69,6 +73,7 @@ pub const COUNTERS: [Counter; COUNTER_COUNT] = [
     Counter::WireRecvBytes,
     Counter::RecvTicketsPosted,
     Counter::MetricsFrames,
+    Counter::ReconnectAttempts,
 ];
 
 impl Counter {
@@ -81,6 +86,7 @@ impl Counter {
             Counter::WireRecvBytes => "wire_recv_bytes",
             Counter::RecvTicketsPosted => "recv_tickets_posted",
             Counter::MetricsFrames => "metrics_frames",
+            Counter::ReconnectAttempts => "reconnect_attempts",
         }
     }
 }
@@ -555,6 +561,25 @@ pub struct StepHealth {
     pub stragglers: Vec<u64>,
 }
 
+/// One membership epoch in an elastic run (DESIGN.md §16): the world
+/// size it ran at, the step it began, and the previous epoch's ranks
+/// that departed into it. A fixed-membership run has exactly one epoch
+/// with no departures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochInfo {
+    /// Monotone epoch number (0 = initial formation).
+    pub epoch: u64,
+    /// World size during this epoch.
+    pub world: usize,
+    /// First step executed under this epoch.
+    pub start_step: u64,
+    /// Previous-epoch ranks that departed at this transition (their EF
+    /// residual contributions were dropped, per the §16 policy).
+    pub missing_ranks: Vec<u64>,
+    /// Number of workers that joined at this transition.
+    pub joined: usize,
+}
+
 /// Whole-run cluster health: per-step aggregation over every rank's
 /// frame stream, dead-peer tolerant (a rank with no frames is listed in
 /// `missing_ranks` and excluded from the per-step statistics, like
@@ -575,6 +600,13 @@ pub struct ClusterHealth {
     pub straggler_factor: f64,
     /// The absolute slack used, seconds.
     pub straggler_min_excess_s: f64,
+    /// Membership epochs, in epoch order. [`aggregate`] leaves this
+    /// empty (it cannot know the schedule); the elastic coordinator
+    /// fills it in before rendering `METRICS.json`.
+    pub epochs: Vec<EpochInfo>,
+    /// Total connect retries across every reporting rank (each
+    /// worker's own backoff tallies, carried in its `Report`).
+    pub reconnect_attempts_total: u64,
 }
 
 impl ClusterHealth {
@@ -614,6 +646,29 @@ impl ClusterHealth {
         let stragglers: Vec<String> =
             self.straggler_ranks().iter().map(|r| r.to_string()).collect();
         out.push_str(&format!("  \"straggler_ranks\": [{}],\n", stragglers.join(", ")));
+        out.push_str(&format!(
+            "  \"reconnect_attempts_total\": {},\n",
+            self.reconnect_attempts_total
+        ));
+        out.push_str("  \"epochs\": [");
+        for (i, e) in self.epochs.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let missing: Vec<String> = e.missing_ranks.iter().map(|r| r.to_string()).collect();
+            out.push_str(&format!(
+                "{sep}\n    {{\"epoch\": {}, \"world\": {}, \"start_step\": {}, \
+                 \"missing_ranks\": [{}], \"joined\": {}}}",
+                e.epoch,
+                e.world,
+                e.start_step,
+                missing.join(", "),
+                e.joined
+            ));
+        }
+        if self.epochs.is_empty() {
+            out.push_str("],\n");
+        } else {
+            out.push_str("\n  ],\n");
+        }
         out.push_str("  \"steps\": [");
         for (i, s) in self.steps.iter().enumerate() {
             let sep = if i == 0 { "" } else { "," };
@@ -708,6 +763,8 @@ pub fn aggregate(
         wire_received_total,
         straggler_factor: factor,
         straggler_min_excess_s: min_excess_s,
+        epochs: Vec::new(),
+        reconnect_attempts_total: 0,
     }
 }
 

@@ -110,6 +110,55 @@ impl EfSgd {
         self.compressor.name()
     }
 
+    /// Elastic membership changed (DESIGN.md §16): the run entered
+    /// `epoch` with `new_world` workers. Resets the delayed-aggregation
+    /// staleness — a pending aggregate was computed under the old
+    /// membership, and every member (and the oracle) drops it
+    /// identically, so the post-transition trajectory stays shared —
+    /// and forwards the event to the compressor. Error-feedback slots
+    /// are *not* touched here: a worker-side `EfSgd` owns exactly its
+    /// own residual (survivors keep theirs), and the oracle edits its
+    /// slot list explicitly via [`EfSgd::remove_worker`] /
+    /// [`EfSgd::add_worker`].
+    pub fn on_reconfigure(&mut self, epoch: u64, new_world: usize) {
+        self.pending_mean = None;
+        self.compressor.on_reconfigure(epoch, new_world);
+    }
+
+    /// Oracle-side membership edit: drop worker `slot`'s error-feedback
+    /// residual (the departed rank's EF contribution is lost — the
+    /// documented policy; survivors' slots compact and keep their own
+    /// residuals, matching what the distributed survivors hold).
+    pub fn remove_worker(&mut self, slot: usize) {
+        if slot < self.errors.len() {
+            self.errors.remove(slot);
+        }
+    }
+
+    /// Oracle-side membership edit: append a fresh worker slot with a
+    /// zero error-feedback residual (a late joiner starts with empty
+    /// EF state — the documented policy).
+    pub fn add_worker(&mut self) {
+        if let Some(first) = self.errors.first() {
+            let zeros: Vec<Tensor> = first.iter().map(|t| Tensor::zeros(t.shape())).collect();
+            self.errors.push(zeros);
+        }
+    }
+
+    /// The shared momentum buffer `m` (identical on every worker) —
+    /// empty before the first step. A late joiner replays the shared
+    /// trajectory to the join step and seeds its own optimizer from
+    /// this (see `transport::tcp::harness::oracle_state_at`).
+    pub fn momentum_state(&self) -> Vec<Tensor> {
+        self.m.clone()
+    }
+
+    /// Seed the momentum buffer (see [`EfSgd::momentum_state`]).
+    pub fn with_momentum_state(mut self, m: Vec<Tensor>) -> EfSgd {
+        self.m = m;
+        self
+    }
+
     fn ensure_state(&mut self, grads: &[Vec<Tensor>]) {
         if self.errors.len() != grads.len() {
             self.errors = grads

@@ -24,19 +24,24 @@
 //! `tests/integration_tcp.rs` drives this both in-process (threads with
 //! real sockets) and as true multi-process runs of the binary.
 
-use super::metered::MeteredTransport;
-use super::rendezvous::{join, Rendezvous};
-use super::wire::{read_frame, write_frame, Frame};
+use super::metered::{MeteredTransport, WireCounters};
+use super::rendezvous::{
+    form_ring_edges, hello, join_with_retries, Rendezvous, DEFAULT_CONNECT_RETRIES,
+};
+use super::wire::{read_frame, write_frame, Frame, RECONFIGURE_VERSION};
 use super::TcpRing;
 use crate::collectives::{ring_wire_bytes, CollOp, CommLog};
 use crate::compress::{oracle_by_name, worker_by_name, EndpointCompressor, SchemeMeta};
 use crate::grad::{ParamRegistry, ELEM_BYTES};
-use crate::obs::metrics::{self, Counter, Gauge, MaxGauge, StepMetrics};
+use crate::net::backoff::Backoff;
+use crate::obs::metrics::{self, Counter, EpochInfo, Gauge, MaxGauge, StepMetrics};
 use crate::optim::{DistOptimizer, EfSgd, LrSchedule};
 use crate::tensor::Tensor;
-use crate::transport::{PipelineMode, Transport};
+use crate::transport::{Completion, PipelineMode, Ticket, Transport};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// What a launch and its workers agree to run. Every field must be
@@ -73,7 +78,39 @@ pub struct HarnessConfig {
     pub straggle_rank: usize,
     /// Milliseconds the straggling rank sleeps per step (0 = no
     /// injection). Sleeping perturbs wall-clock only, never values.
+    /// In elastic mode the sleep happens *before* the step heartbeat,
+    /// so `heartbeat_ms` must exceed `straggle_ms` (plus step time) or
+    /// the straggler trips the dead-peer detector — see DESIGN.md §16.
     pub straggle_ms: u64,
+    /// Epoch-based elastic membership (`--elastic`, DESIGN.md §16):
+    /// workers heartbeat the coordinator at every step boundary and the
+    /// ring re-forms around crashes, departures, and late joins instead
+    /// of failing the run.
+    pub elastic: bool,
+    /// Coordinator-side step-heartbeat timeout (`--heartbeat-ms`): a
+    /// live member that goes silent for longer than this between step
+    /// boundaries is declared dead and reconfigured away. Must exceed
+    /// the slowest member's per-step time (including `straggle_ms`).
+    pub heartbeat_ms: u64,
+    /// Connect retry budget (`--reconnect-retries`) threaded through
+    /// every rendezvous and ring-edge connect's [`Backoff`].
+    pub reconnect_retries: u32,
+    /// Ring I/O timeout override in milliseconds (`--comm-timeout-ms`);
+    /// `None` falls back to the run timeout (`--timeout-s`). Bounds
+    /// every blocking ring read and write, so it must also exceed
+    /// `straggle_ms` or a straggling peer is indistinguishable from a
+    /// dead one.
+    pub comm_timeout_ms: Option<u64>,
+    /// Fault injection (`--fail-rank`): the worker whose *epoch-0* rank
+    /// matches exits deliberately at `fail_at_step`, exercising the
+    /// re-formation path deterministically in tests and CI.
+    pub fail_rank: Option<usize>,
+    /// Step at which the failing rank exits (`--fail-at-step`).
+    pub fail_at_step: u64,
+    /// When set, the injected crash happens *after* the step barrier
+    /// releases (mid-step, with ring collectives in flight) instead of
+    /// at the boundary, exercising survivor rollback + re-run.
+    pub fail_midstep: bool,
 }
 
 impl Default for HarnessConfig {
@@ -89,7 +126,22 @@ impl Default for HarnessConfig {
             metrics: false,
             straggle_rank: 0,
             straggle_ms: 0,
+            elastic: false,
+            heartbeat_ms: 5000,
+            reconnect_retries: DEFAULT_CONNECT_RETRIES,
+            comm_timeout_ms: None,
+            fail_rank: None,
+            fail_at_step: 0,
+            fail_midstep: false,
         }
+    }
+}
+
+impl HarnessConfig {
+    /// The ring I/O timeout this run uses: the `--comm-timeout-ms`
+    /// override when present, otherwise the overall run timeout.
+    pub fn ring_timeout(&self, run_timeout: Duration) -> Duration {
+        self.comm_timeout_ms.map(Duration::from_millis).unwrap_or(run_timeout)
     }
 }
 
@@ -322,8 +374,12 @@ pub fn run_worker_with_metrics(
     cfg: &HarnessConfig,
     timeout: Duration,
 ) -> Result<(usize, Vec<StepMetrics>)> {
-    let joined = join(coordinator, timeout)?;
-    let (ring, mut control) = TcpRing::from_joined(joined, timeout)?;
+    if cfg.elastic {
+        return run_worker_elastic(coordinator, cfg, timeout);
+    }
+    let joined = join_with_retries(coordinator, timeout, cfg.reconnect_retries)?;
+    let reconnect_attempts = joined.reconnect_attempts;
+    let (ring, mut control) = TcpRing::from_joined(joined, cfg.ring_timeout(timeout))?;
     let report = worker_trajectory(MeteredTransport::new(ring), cfg)?;
     for m in &report.step_metrics {
         metrics::add(Counter::MetricsFrames, 1);
@@ -339,6 +395,7 @@ pub fn run_worker_with_metrics(
             rank: report.rank as u32,
             wire_bytes: report.wire_bytes,
             logical_bytes: report.logical_bytes,
+            reconnect_attempts,
             tensors: report.params.iter().map(|t| t.data().to_vec()).collect(),
         },
     )
@@ -376,6 +433,19 @@ pub struct LaunchOutcome {
     /// died after its `Report` would have — tolerated downstream by
     /// [`metrics::aggregate`]).
     pub metrics_by_rank: Vec<Vec<StepMetrics>>,
+    /// Elastic membership history, one record per epoch (a single
+    /// epoch-0 record for non-elastic or churn-free runs). Rendered
+    /// into the merged `METRICS.json` by `cmd_launch`.
+    pub epochs: Vec<EpochInfo>,
+    /// Total connect retries across every reporting worker (each
+    /// worker's local [`Backoff`] tallies, reconciled cluster-wide).
+    pub reconnect_attempts_total: u64,
+    /// Whether verification ran against a bitwise oracle — the
+    /// lockstep oracle, or the composed elastic oracle where the churn
+    /// kind preserves replay — as opposed to falling back to
+    /// member-consistency (every member bitwise-equal to every other;
+    /// see DESIGN.md §16). Always `true` for non-elastic launches.
+    pub oracle_verified: bool,
 }
 
 impl LaunchOutcome {
@@ -413,6 +483,7 @@ pub fn coordinate(
 
     let mut reports = Vec::with_capacity(world);
     let mut metrics_by_rank: Vec<Vec<StepMetrics>> = vec![Vec::new(); world];
+    let mut reconnect_attempts_total = 0u64;
     for (rank, control) in controls.iter_mut().enumerate() {
         // Drain the metrics sideband (zero or more frames) until the
         // final Report — workers only push frames when metrics are on,
@@ -431,7 +502,8 @@ pub fn coordinate(
                     }
                     metrics_by_rank[rank].push(m);
                 }
-                Frame::Report { rank, wire_bytes, logical_bytes, tensors } => {
+                Frame::Report { rank, wire_bytes, logical_bytes, reconnect_attempts, tensors } => {
+                    reconnect_attempts_total += reconnect_attempts;
                     break (rank, wire_bytes, logical_bytes, tensors)
                 }
                 other => {
@@ -471,7 +543,936 @@ pub fn coordinate(
         logical_bytes: oracle_logical,
         model_bytes_per_step,
         metrics_by_rank,
+        epochs: vec![EpochInfo {
+            epoch: 0,
+            world,
+            start_step: 0,
+            missing_ranks: Vec::new(),
+            joined: 0,
+        }],
+        reconnect_attempts_total,
+        oracle_verified: true,
     })
+}
+
+/// Worker compressors with no cross-step state: a late joiner's fresh
+/// instance is indistinguishable from a survivor's, so join runs stay
+/// bitwise-verifiable against the composed elastic oracle.
+pub fn stateless_worker_scheme(name: &str) -> bool {
+    matches!(name, "sign-norm" | "top-k" | "none" | "sgd" | "identity")
+}
+
+/// Worker compressors whose per-step execution is a pure function of
+/// pre-step state, so an aborted step re-runs bitwise-identically after
+/// a mid-step reconfigure. Warm-start PowerSGD qualifies (its RNG is
+/// consumed only at construction and the warm `Q` commits only after
+/// the final all-reduce); per-step-RNG schemes (`powersgd-cold`,
+/// `unbiased-rank`) do not — an aborted attempt advances their RNG.
+pub fn midstep_replay_safe(name: &str) -> bool {
+    name == "powersgd" || stateless_worker_scheme(name)
+}
+
+/// A swappable ring endpoint: the one [`Transport`] the optimizer holds
+/// for a whole elastic run, delegating every call to the current
+/// epoch's [`MeteredTransport<TcpRing>`]. On `Reconfigure` the driver
+/// takes the old ring out (tearing its sockets down, which cascades EOF
+/// to both neighbours) and installs the re-formed one. The optimizer
+/// never observes the swap: it happens only between steps, or after a
+/// step already aborted.
+#[derive(Clone)]
+pub struct ElasticLink {
+    slot: Arc<Mutex<Option<MeteredTransport<TcpRing>>>>,
+}
+
+impl Default for ElasticLink {
+    fn default() -> ElasticLink {
+        ElasticLink::empty()
+    }
+}
+
+impl ElasticLink {
+    /// A link with no ring installed yet.
+    pub fn empty() -> ElasticLink {
+        ElasticLink { slot: Arc::new(Mutex::new(None)) }
+    }
+
+    // A ring panic mid-collective poisons the mutex; every accessor
+    // bypasses the poison because the inner value is just a socket pair
+    // that the reconfigure replaces wholesale.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Option<MeteredTransport<TcpRing>>> {
+        self.slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Install the current epoch's ring (dropping any previous one).
+    pub fn install(&self, ring: MeteredTransport<TcpRing>) {
+        *self.lock() = Some(ring);
+    }
+
+    /// Take the ring out, leaving the link empty. Dropping the returned
+    /// value closes both ring sockets — the teardown half of an epoch
+    /// transition.
+    pub fn take(&self) -> Option<MeteredTransport<TcpRing>> {
+        self.lock().take()
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&MeteredTransport<TcpRing>) -> R) -> R {
+        let guard = self.lock();
+        f(guard.as_ref().expect("elastic link: no ring installed"))
+    }
+}
+
+impl Transport<Vec<f32>> for ElasticLink {
+    fn rank(&self) -> usize {
+        self.with(|t| Transport::<Vec<f32>>::rank(t))
+    }
+
+    fn world(&self) -> usize {
+        self.with(|t| Transport::<Vec<f32>>::world(t))
+    }
+
+    fn post_send(&self, msg: Vec<f32>) -> Ticket {
+        self.with(|t| Transport::<Vec<f32>>::post_send(t, msg))
+    }
+
+    fn post_recv(&self) -> Ticket {
+        self.with(|t| Transport::<Vec<f32>>::post_recv(t))
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<Vec<f32>> {
+        self.with(|t| Transport::<Vec<f32>>::poll(t, ticket))
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<Vec<f32>> {
+        self.with(|t| Transport::<Vec<f32>>::wait(t, ticket))
+    }
+}
+
+impl Transport<Vec<u8>> for ElasticLink {
+    fn rank(&self) -> usize {
+        self.with(|t| Transport::<Vec<u8>>::rank(t))
+    }
+
+    fn world(&self) -> usize {
+        self.with(|t| Transport::<Vec<u8>>::world(t))
+    }
+
+    fn post_send(&self, msg: Vec<u8>) -> Ticket {
+        self.with(|t| Transport::<Vec<u8>>::post_send(t, msg))
+    }
+
+    fn post_recv(&self) -> Ticket {
+        self.with(|t| Transport::<Vec<u8>>::post_recv(t))
+    }
+
+    fn poll(&self, ticket: Ticket) -> Completion<Vec<u8>> {
+        self.with(|t| Transport::<Vec<u8>>::poll(t, ticket))
+    }
+
+    fn wait(&self, ticket: Ticket) -> Completion<Vec<u8>> {
+        self.with(|t| Transport::<Vec<u8>>::wait(t, ticket))
+    }
+}
+
+/// Replay the centralized oracle for `upto` steps at `world` workers
+/// and return the parameters and shared momentum at that boundary —
+/// the state a late joiner seeds from (its error-feedback residual
+/// starts at zero by policy; see DESIGN.md §16).
+pub fn oracle_state_at(
+    world: usize,
+    cfg: &HarnessConfig,
+    upto: usize,
+) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let comp = oracle_by_name(&cfg.compressor, cfg.rank, cfg.seed)
+        .ok_or_else(|| anyhow!("no centralized oracle for compressor {:?}", cfg.compressor))?;
+    let mut opt = EfSgd::new(comp, LrSchedule::constant(cfg.lr), cfg.momentum);
+    if cfg.pipeline == PipelineMode::Delayed {
+        opt = opt.with_delayed_aggregate();
+    }
+    let mut params = initial_params(cfg.seed);
+    let mut log = CommLog::default();
+    for step in 0..upto {
+        let grads = synthetic_grads(world, cfg.seed, step);
+        let delta = opt.step(&grads, step, &mut log);
+        for (x, d) in params.iter_mut().zip(delta.iter()) {
+            x.axpy(-1.0, d);
+        }
+    }
+    Ok((params, opt.momentum_state()))
+}
+
+/// One epoch of an elastic run's membership schedule, as the composed
+/// oracle replays it: the world size, the step the epoch begins at, and
+/// the membership edit that produced it from the previous epoch.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    /// Number of workers during this epoch.
+    pub world: usize,
+    /// First step executed under this epoch.
+    pub start_step: usize,
+    /// Error-feedback slots (previous epoch's rank order, descending)
+    /// removed at the transition — the departed ranks.
+    pub departed_slots: Vec<usize>,
+    /// Fresh zero-EF slots appended at the transition — late joiners.
+    pub joined: usize,
+}
+
+/// The composed elastic oracle: the centralized lockstep trajectory
+/// driven through the recorded epoch schedule, editing its per-worker
+/// EF slots exactly as the coordinator compacted ranks (survivors keep
+/// relative order and their own residuals; the departed rank's residual
+/// is dropped; joiners append with zero residual). Under stable
+/// membership this degenerates to [`oracle_trajectory`]. Returns the
+/// final parameters and the full-run per-worker logical bytes of an
+/// epoch-0 member.
+pub fn elastic_oracle_trajectory(
+    cfg: &HarnessConfig,
+    plans: &[EpochPlan],
+) -> Result<(Vec<Tensor>, u64)> {
+    let comp = oracle_by_name(&cfg.compressor, cfg.rank, cfg.seed)
+        .ok_or_else(|| anyhow!("no centralized oracle for compressor {:?}", cfg.compressor))?;
+    let mut opt = EfSgd::new(comp, LrSchedule::constant(cfg.lr), cfg.momentum);
+    if cfg.pipeline == PipelineMode::Delayed {
+        opt = opt.with_delayed_aggregate();
+    }
+    let mut params = initial_params(cfg.seed);
+    let mut log = CommLog::default();
+    for (i, plan) in plans.iter().enumerate() {
+        if i > 0 {
+            for &slot in &plan.departed_slots {
+                opt.remove_worker(slot);
+            }
+            for _ in 0..plan.joined {
+                opt.add_worker();
+            }
+            opt.on_reconfigure(i as u64, plan.world);
+        }
+        let end = plans.get(i + 1).map(|next| next.start_step).unwrap_or(cfg.steps);
+        for step in plan.start_step..end {
+            let grads = synthetic_grads(plan.world, cfg.seed, step);
+            let delta = opt.step(&grads, step, &mut log);
+            for (x, d) in params.iter_mut().zip(delta.iter()) {
+                x.axpy(-1.0, d);
+            }
+        }
+    }
+    Ok((params, log.bytes_sent()))
+}
+
+/// Per-epoch wire accounting on the worker side: which metered
+/// counters, ops range, and ring identity the current epoch runs under.
+struct EpochAcct {
+    counters: WireCounters,
+    ops_start: usize,
+    rank: usize,
+    world: usize,
+    /// A ring collective aborted during this epoch: its posted-but-
+    /// undelivered sends pollute the counters, so the per-epoch wire
+    /// self-check is skipped (the logical log was rolled back instead).
+    aborted: bool,
+    prev_sent: u64,
+    prev_received: u64,
+}
+
+impl EpochAcct {
+    /// Close the epoch: cross-check measured wire bytes against the
+    /// ring expansion of the ops logged under it (clean epochs only)
+    /// and return the measured total.
+    fn close(&self, log: &CommLog, orig_rank: usize) -> Result<u64> {
+        let measured = self.counters.sent();
+        if !self.aborted {
+            let expected: u64 = log.ops[self.ops_start..]
+                .iter()
+                .map(|op| ring_wire_bytes(op.kind, op.bytes, self.world, self.rank))
+                .sum();
+            if measured != expected {
+                bail!(
+                    "rank {orig_rank}: epoch measured {measured} wire bytes but the ring \
+                     expansion of its logged collectives predicts {expected}"
+                );
+            }
+        }
+        Ok(measured)
+    }
+}
+
+/// The mutable identity of an elastic worker across epochs.
+struct ElasticWorker<'a> {
+    cfg: &'a HarnessConfig,
+    ring_timeout: Duration,
+    listener: std::net::TcpListener,
+    port_seed: u64,
+    link: ElasticLink,
+    orig_rank: usize,
+    epoch: u64,
+    rank: usize,
+    world: usize,
+    acct: EpochAcct,
+    wire_total: u64,
+    /// Wire bytes accumulated since the last step-metrics record but
+    /// charged to an epoch that has since closed (abort + re-form);
+    /// folded into the next record so per-step deltas still sum to the
+    /// run's wire total.
+    carry_sent: u64,
+    carry_received: u64,
+    /// Connect retries this worker's own dials consumed (`Hello` plus
+    /// every ring formation), reported to the coordinator at end of
+    /// run — a local tally, so concurrent in-process workers never
+    /// inflate each other's counts.
+    reconnects: u64,
+}
+
+impl ElasticWorker<'_> {
+    /// Apply a `Reconfigure`: close the old epoch's accounting, tear
+    /// down the old ring (if the abort path didn't already), re-form
+    /// the edges under the new identity, and reset the optimizer's
+    /// membership-sensitive state.
+    fn reconfigure(&mut self, frame: Frame, opt: &mut EfSgd, log: &CommLog) -> Result<()> {
+        let (epoch, rank, world, peers) = match frame {
+            Frame::Reconfigure { version: _, epoch, step: _, rank, world, departed: _, peers } => {
+                (epoch, rank as usize, world as usize, peers)
+            }
+            other => bail!(
+                "rank {}: expected Reconfigure on the control stream, got {}",
+                self.orig_rank,
+                other.kind_name()
+            ),
+        };
+        if world == 0 || rank >= world || peers.len() != world {
+            bail!(
+                "rank {}: malformed Reconfigure (rank {rank}, world {world}, {} peers)",
+                self.orig_rank,
+                peers.len()
+            );
+        }
+        self.wire_total += self.acct.close(log, self.orig_rank)?;
+        self.carry_sent += self.acct.counters.sent() - self.acct.prev_sent;
+        self.carry_received += self.acct.counters.received() - self.acct.prev_received;
+        drop(self.link.take());
+        let mut backoff =
+            Backoff::standard(self.cfg.reconnect_retries, self.port_seed ^ rank as u64 ^ epoch);
+        let (to_next, from_prev) =
+            form_ring_edges(rank, world, &peers, &self.listener, self.ring_timeout, &mut backoff)
+                .with_context(|| {
+                    format!("rank {}: re-forming the ring for epoch {epoch}", self.orig_rank)
+                })?;
+        self.reconnects += backoff.attempts();
+        let metered = MeteredTransport::new(TcpRing::new(
+            rank,
+            world,
+            to_next,
+            from_prev,
+            self.ring_timeout,
+        )?);
+        self.acct = EpochAcct {
+            counters: metered.counters(),
+            ops_start: log.ops.len(),
+            rank,
+            world,
+            aborted: false,
+            prev_sent: 0,
+            prev_received: 0,
+        };
+        self.link.install(metered);
+        opt.on_reconfigure(epoch, world);
+        (self.epoch, self.rank, self.world) = (epoch, rank, world);
+        Ok(())
+    }
+}
+
+/// Elastic worker process (DESIGN.md §16): `Hello` the coordinator,
+/// receive either a `Welcome` (initial member) or a `Reconfigure` (late
+/// joiner — replay the shared trajectory locally to the join step),
+/// then run the EF-SGD loop under a step-heartbeat barrier. Every step
+/// boundary sends `Heartbeat` and blocks for the coordinator's release:
+/// an echoed heartbeat continues the epoch, a `Reconfigure` tears the
+/// ring down and re-forms it before running the same step under the new
+/// membership. A ring collective failing mid-step rolls the logical log
+/// back to the step boundary, drops the ring (cascading EOF to the
+/// neighbours), re-heartbeats the *same* step, and waits for the
+/// re-formation. Returns the epoch-0 rank and collected step metrics.
+pub fn run_worker_elastic(
+    coordinator: &str,
+    cfg: &HarnessConfig,
+    timeout: Duration,
+) -> Result<(usize, Vec<StepMetrics>)> {
+    let ring_timeout = cfg.ring_timeout(timeout);
+    let (mut control, listener, _my_addr, hello_retries) =
+        hello(coordinator, timeout, cfg.reconnect_retries)?;
+    let port_seed = u64::from(listener.local_addr().map(|a| a.port()).unwrap_or(0));
+
+    let first = read_frame(&mut control)
+        .map_err(|e| anyhow!(e))
+        .context("worker: waiting for Welcome/Reconfigure (coordinator died or timed out?)")?;
+    let (epoch, rank, world, peers, start_step, late_joiner) = match first {
+        Frame::Welcome { rank, world, peers } => {
+            (0u64, rank as usize, world as usize, peers, 0u64, false)
+        }
+        Frame::Reconfigure { version: _, epoch, step, rank, world, departed: _, peers } => {
+            (epoch, rank as usize, world as usize, peers, step, true)
+        }
+        other => bail!("worker: expected Welcome or Reconfigure, got {}", other.kind_name()),
+    };
+    if world == 0 || rank >= world || peers.len() != world {
+        bail!("worker: malformed membership (rank {rank}, world {world}, {} peers)", peers.len());
+    }
+    let orig_rank = rank;
+
+    // A late joiner recovers the shared parameters and momentum by
+    // replaying the centralized oracle at the pre-join world (documented
+    // restriction: joins assume stable membership before the join); its
+    // error-feedback residual starts at zero by policy.
+    let (mut params, replay_momentum) = if start_step > 0 {
+        oracle_state_at(world - 1, cfg, start_step as usize)?
+    } else {
+        (initial_params(cfg.seed), Vec::new())
+    };
+
+    let link = ElasticLink::empty();
+    let mut backoff =
+        Backoff::standard(cfg.reconnect_retries, port_seed ^ rank as u64 ^ epoch);
+    let (to_next, from_prev) =
+        form_ring_edges(rank, world, &peers, &listener, ring_timeout, &mut backoff)?;
+    let metered =
+        MeteredTransport::new(TcpRing::new(rank, world, to_next, from_prev, ring_timeout)?);
+    let acct = EpochAcct {
+        counters: metered.counters(),
+        ops_start: 0,
+        rank,
+        world,
+        aborted: false,
+        prev_sent: 0,
+        prev_received: 0,
+    };
+    link.install(metered);
+
+    let comp = worker_by_name(&cfg.compressor, cfg.rank, cfg.seed).ok_or_else(|| {
+        anyhow!("compressor {:?} has no per-worker implementation", cfg.compressor)
+    })?;
+    let model_bytes_per_step = comp.message_bytes(&harness_registry());
+    let mut opt = EfSgd::new(
+        Box::new(EndpointCompressor::new(link.clone(), comp).with_pipeline(cfg.pipeline)),
+        LrSchedule::constant(cfg.lr),
+        cfg.momentum,
+    );
+    if cfg.pipeline == PipelineMode::Delayed {
+        opt = opt.with_delayed_aggregate();
+    }
+    if !replay_momentum.is_empty() {
+        opt = opt.with_momentum_state(replay_momentum);
+    }
+
+    let mut me = ElasticWorker {
+        cfg,
+        ring_timeout,
+        listener,
+        port_seed,
+        link,
+        orig_rank,
+        epoch,
+        rank,
+        world,
+        acct,
+        wire_total: 0,
+        carry_sent: 0,
+        carry_received: 0,
+        reconnects: hello_retries + backoff.attempts(),
+    };
+
+    let mut log = CommLog::default();
+    let mut step_metrics = Vec::new();
+    let raw_bytes_per_step = harness_registry().numel() as u64 * ELEM_BYTES;
+    let mut prev_logical = 0u64;
+    let mut step = start_step as usize;
+    // A joiner's admission `Reconfigure` already released the barrier
+    // for its first step (whatever step that is — keyed on the frame
+    // kind, not on `start_step`, so a step-0 join doesn't barrier
+    // twice); initial members heartbeat from step 0.
+    let mut need_barrier = !late_joiner;
+    while step < cfg.steps {
+        if need_barrier {
+            if cfg.straggle_ms > 0 && orig_rank == cfg.straggle_rank {
+                std::thread::sleep(Duration::from_millis(cfg.straggle_ms));
+            }
+            if !cfg.fail_midstep
+                && cfg.fail_rank == Some(orig_rank)
+                && step as u64 == cfg.fail_at_step
+            {
+                bail!("fault injection: rank {orig_rank} crashing at the step {step} boundary");
+            }
+            write_frame(
+                &mut control,
+                &Frame::Heartbeat { rank: orig_rank as u32, epoch: me.epoch, step: step as u64 },
+            )
+            .map_err(|e| anyhow!(e))
+            .with_context(|| format!("rank {orig_rank}: heartbeat for step {step}"))?;
+            let reply = read_frame(&mut control).map_err(|e| anyhow!(e)).with_context(|| {
+                format!("rank {orig_rank}: waiting for the step {step} barrier release")
+            })?;
+            match reply {
+                Frame::Heartbeat { .. } => {}
+                reconf @ Frame::Reconfigure { .. } => me.reconfigure(reconf, &mut opt, &log)?,
+                other => bail!(
+                    "rank {orig_rank}: expected a barrier release for step {step}, got {}",
+                    other.kind_name()
+                ),
+            }
+        }
+        need_barrier = true;
+        if cfg.fail_midstep && cfg.fail_rank == Some(orig_rank) && step as u64 == cfg.fail_at_step
+        {
+            bail!("fault injection: rank {orig_rank} crashing mid-step {step}");
+        }
+        let t0 = cfg.metrics.then(Instant::now);
+        let grads = vec![synthetic_grads(me.world, cfg.seed, step).swap_remove(me.rank)];
+        let ops_before = log.ops.len();
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            opt.step(&grads, step, &mut log)
+        }));
+        match stepped {
+            Ok(delta) => {
+                for (x, d) in params.iter_mut().zip(delta.iter()) {
+                    x.axpy(-1.0, d);
+                }
+                if let Some(t0) = t0 {
+                    let (sent, received) =
+                        (me.acct.counters.sent(), me.acct.counters.received());
+                    let logical = log.bytes_sent();
+                    let logical_delta = logical - prev_logical;
+                    step_metrics.push(StepMetrics {
+                        rank: orig_rank as u64,
+                        step: step as u64,
+                        step_seconds: t0.elapsed().as_secs_f64(),
+                        wire_sent: me.carry_sent + sent - me.acct.prev_sent,
+                        wire_received: me.carry_received + received - me.acct.prev_received,
+                        ef_residual: metrics::gauge_value(Gauge::EfResidual),
+                        approx_error: metrics::gauge_value(Gauge::ApproxError),
+                        compression_ratio: if logical_delta == 0 {
+                            0.0
+                        } else {
+                            raw_bytes_per_step as f64 / logical_delta as f64
+                        },
+                        staleness: u64::from(cfg.pipeline == PipelineMode::Delayed),
+                        inflight_peak: metrics::max_value(MaxGauge::InflightDepthPeak),
+                    });
+                    (me.carry_sent, me.carry_received) = (0, 0);
+                    (me.acct.prev_sent, me.acct.prev_received) = (sent, received);
+                    prev_logical = logical;
+                }
+                step += 1;
+            }
+            Err(payload) => {
+                // A peer died mid-collective. Roll the logical log back
+                // to the step boundary (the optimizer's own state only
+                // commits after a successful step), drop the ring so
+                // the failure cascades to the neighbours, and re-sync
+                // with the coordinator by heartbeating the same step.
+                let cause = panic_message(payload);
+                log.ops.truncate(ops_before);
+                me.acct.aborted = true;
+                drop(me.link.take());
+                write_frame(
+                    &mut control,
+                    &Frame::Heartbeat {
+                        rank: orig_rank as u32,
+                        epoch: me.epoch,
+                        step: step as u64,
+                    },
+                )
+                .map_err(|e| anyhow!(e))
+                .with_context(|| {
+                    format!("rank {orig_rank}: reporting the step {step} ring failure")
+                })?;
+                let reply = read_frame(&mut control).map_err(|e| anyhow!(e)).with_context(
+                    || format!("rank {orig_rank}: waiting for re-formation after step {step}"),
+                )?;
+                match reply {
+                    reconf @ Frame::Reconfigure { .. } => {
+                        me.reconfigure(reconf, &mut opt, &log)?;
+                        // The Reconfigure releases the barrier for this
+                        // same step; re-run it under the new epoch.
+                        need_barrier = false;
+                    }
+                    Frame::Heartbeat { .. } => bail!(
+                        "rank {orig_rank}: ring collective failed at step {step} ({cause}) \
+                         but the coordinator reports stable membership"
+                    ),
+                    other => bail!(
+                        "rank {orig_rank}: expected re-formation after step {step}, got {}",
+                        other.kind_name()
+                    ),
+                }
+            }
+        }
+    }
+
+    me.wire_total += me.acct.close(&log, orig_rank)?;
+    let logical_bytes = log.bytes_sent();
+    let executed = cfg.steps as u64 - start_step;
+    let logical_model = model_bytes_per_step * executed;
+    if logical_bytes != logical_model {
+        bail!(
+            "rank {orig_rank}: logged {logical_bytes} logical bytes over {executed} steps but \
+             the closed-form message_bytes model predicts {logical_model}"
+        );
+    }
+    for m in &step_metrics {
+        metrics::add(Counter::MetricsFrames, 1);
+        write_frame(&mut control, &Frame::Metrics(*m)).map_err(|e| anyhow!(e)).with_context(
+            || format!("rank {orig_rank}: pushing step {} metrics to the coordinator", m.step),
+        )?;
+    }
+    write_frame(
+        &mut control,
+        &Frame::Report {
+            rank: orig_rank as u32,
+            wire_bytes: me.wire_total,
+            logical_bytes,
+            reconnect_attempts: me.reconnects,
+            tensors: params.iter().map(|t| t.data().to_vec()).collect(),
+        },
+    )
+    .map_err(|e| anyhow!(e))
+    .with_context(|| format!("rank {orig_rank}: reporting to the coordinator"))?;
+    Ok((orig_rank, step_metrics))
+}
+
+/// One live member of an elastic run, as the coordinator tracks it.
+/// The vec of members is always in *current rank order*; `orig` is the
+/// stable identity (epoch-0 rank, or the next id for joiners) that
+/// reports and metrics are keyed by.
+struct Member {
+    orig: u64,
+    control: TcpStream,
+    addr: String,
+    start_step: u64,
+    report: Option<(u64, u64, Vec<Vec<f32>>)>,
+}
+
+/// Elastic coordinator (DESIGN.md §16): a synchronous round loop over
+/// the members' control streams. Each round reads one frame per live
+/// member — a `Heartbeat` (step barrier), sideband `Metrics`, or the
+/// final `Report` — with a read failure marking the member dead (EOF
+/// for a crash, the `--heartbeat-ms` timeout for a hang). A round with
+/// deaths (or a pending `--join-at-step` admission) becomes an epoch
+/// transition: the coordinator verifies every survivor stopped at the
+/// same step boundary, compacts ranks preserving order, admits the
+/// joiner's held `Hello` if due, and broadcasts `Reconfigure` as the
+/// barrier release; otherwise it echoes the heartbeats. After all
+/// members report, the run is verified against the composed elastic
+/// oracle (or member-consistency where the oracle's bitwise guarantee
+/// does not survive the churn kind — see DESIGN.md §16).
+pub fn coordinate_elastic(
+    rendezvous: &Rendezvous,
+    world: usize,
+    cfg: &HarnessConfig,
+    timeout: Duration,
+    join_at_step: Option<u64>,
+) -> Result<LaunchOutcome> {
+    let heartbeat_timeout = Duration::from_millis(cfg.heartbeat_ms.max(1));
+    let mut members: Vec<Member> = rendezvous
+        .run_collecting(world, timeout)?
+        .into_iter()
+        .enumerate()
+        .map(|(rank, (control, addr))| {
+            control.set_read_timeout(Some(heartbeat_timeout)).ok();
+            Member { orig: rank as u64, control, addr, start_step: 0, report: None }
+        })
+        .collect();
+    let model_bytes_per_step = worker_by_name(&cfg.compressor, cfg.rank, cfg.seed)
+        .map(|w| w.message_bytes(&harness_registry()))
+        .unwrap_or(0);
+
+    let mut metrics_by_rank: Vec<Vec<StepMetrics>> = vec![Vec::new(); world];
+    let mut plans =
+        vec![EpochPlan { world, start_step: 0, departed_slots: Vec::new(), joined: 0 }];
+    let mut infos = vec![EpochInfo {
+        epoch: 0,
+        world,
+        start_step: 0,
+        missing_ranks: Vec::new(),
+        joined: 0,
+    }];
+    let mut epoch = 0u64;
+    let mut next_orig = world as u64;
+    let mut join_at = join_at_step;
+    let mut reconnect_attempts_total = 0u64;
+    // The last step boundary the coordinator released (by heartbeat
+    // echo or Reconfigure). Survivors re-heartbeating an already
+    // released step means a collective aborted *mid-step* and is being
+    // rolled back and re-run — observed behavior, not the injection
+    // flag, decides the verification tier below.
+    let mut last_released: Option<u64> = None;
+    let mut any_midstep_abort = false;
+
+    while members.iter().any(|m| m.report.is_none()) {
+        let mut dead: Vec<usize> = Vec::new();
+        let mut hb: Vec<Option<u64>> = vec![None; members.len()];
+        for (i, m) in members.iter_mut().enumerate() {
+            if m.report.is_some() {
+                continue;
+            }
+            loop {
+                match read_frame(&mut m.control) {
+                    Ok(Frame::Metrics(sm)) => {
+                        if sm.rank != m.orig {
+                            bail!(
+                                "launch: member {} delivered metrics from rank {}",
+                                m.orig,
+                                sm.rank
+                            );
+                        }
+                        metrics_by_rank[m.orig as usize].push(sm);
+                    }
+                    Ok(Frame::Heartbeat { rank, epoch: _, step }) => {
+                        if u64::from(rank) != m.orig {
+                            bail!(
+                                "launch: member {} delivered a heartbeat from rank {rank}",
+                                m.orig
+                            );
+                        }
+                        hb[i] = Some(step);
+                        break;
+                    }
+                    Ok(Frame::Report {
+                        rank,
+                        wire_bytes,
+                        logical_bytes,
+                        reconnect_attempts,
+                        tensors,
+                    }) => {
+                        if u64::from(rank) != m.orig {
+                            bail!(
+                                "launch: member {} delivered a report from rank {rank}",
+                                m.orig
+                            );
+                        }
+                        reconnect_attempts_total += reconnect_attempts;
+                        m.report = Some((wire_bytes, logical_bytes, tensors));
+                        break;
+                    }
+                    Ok(other) => {
+                        bail!("launch: unexpected {} from member {}", other.kind_name(), m.orig)
+                    }
+                    Err(_) => {
+                        // EOF = crash or departure; a read timeout means
+                        // the member outlived --heartbeat-ms silently.
+                        // Either way it leaves the membership.
+                        dead.push(i);
+                        break;
+                    }
+                }
+            }
+        }
+
+        let live_steps: Vec<u64> = (0..members.len())
+            .filter(|i| !dead.contains(i) && members[*i].report.is_none())
+            .filter_map(|i| hb[i])
+            .collect();
+        let barrier_step = live_steps.first().copied();
+        let join_now = join_at.is_some() && barrier_step == join_at && !live_steps.is_empty();
+
+        if !dead.is_empty() || join_now {
+            // Epoch-transition gate: every survivor must have stopped
+            // at the same step boundary; a partially-delivered step
+            // cannot be reconciled deterministically.
+            let survivors_inconsistent = live_steps.windows(2).any(|w| w[0] != w[1])
+                || members
+                    .iter()
+                    .enumerate()
+                    .any(|(i, m)| !dead.contains(&i) && m.report.is_some());
+            if survivors_inconsistent {
+                bail!(
+                    "launch: membership changed but survivors stopped at different step \
+                     boundaries ({live_steps:?}) — a partially delivered step cannot be \
+                     re-formed deterministically"
+                );
+            }
+            let Some(step) = barrier_step else {
+                bail!("launch: every member died; nothing left to re-form");
+            };
+            if last_released == Some(step) {
+                any_midstep_abort = true;
+            }
+            let mut departed_slots = dead.clone();
+            departed_slots.sort_unstable_by_key(|&slot| std::cmp::Reverse(slot));
+            let departed_origs: Vec<u64> =
+                departed_slots.iter().map(|&slot| members[slot].orig).collect();
+            for &slot in &departed_slots {
+                members.remove(slot);
+            }
+            let mut joined = 0usize;
+            if join_now {
+                // The joiner's stable identity is the ring rank its
+                // admission `Reconfigure` carries, which only matches
+                // `next_orig` while no member has ever departed — and
+                // its state replay assumes an unchurned prefix. Reject
+                // the combination here (DESIGN.md §16) instead of
+                // failing the joiner's first heartbeat with a
+                // confusing identity mismatch.
+                if members.len() as u64 != next_orig {
+                    bail!(
+                        "launch: --join-at-step {step} falls after a departure — the joiner \
+                         cannot replay the churned prefix, so joining a churned run is out of \
+                         scope (DESIGN.md §16)"
+                    );
+                }
+                let (control, addr) = rendezvous
+                    .accept_hello(Instant::now() + timeout, timeout)
+                    .context("launch: --join-at-step reached but no extra worker said Hello")?;
+                control.set_read_timeout(Some(heartbeat_timeout)).ok();
+                members.push(Member {
+                    orig: next_orig,
+                    control,
+                    addr,
+                    start_step: step,
+                    report: None,
+                });
+                metrics_by_rank.push(Vec::new());
+                next_orig += 1;
+                joined = 1;
+                join_at = None;
+            }
+            if members.is_empty() {
+                bail!("launch: every member died at step {step}; nothing left to re-form");
+            }
+            epoch += 1;
+            let world_now = members.len();
+            let peers: Vec<String> = members.iter().map(|m| m.addr.clone()).collect();
+            for (new_rank, m) in members.iter_mut().enumerate() {
+                write_frame(
+                    &mut m.control,
+                    &Frame::Reconfigure {
+                        version: RECONFIGURE_VERSION,
+                        epoch,
+                        step,
+                        rank: new_rank as u32,
+                        world: world_now as u32,
+                        departed: departed_origs.iter().map(|&o| o as u32).collect(),
+                        peers: peers.clone(),
+                    },
+                )
+                .map_err(|e| anyhow!(e))
+                .with_context(|| {
+                    format!("launch: sending epoch {epoch} Reconfigure to member {}", m.orig)
+                })?;
+            }
+            plans.push(EpochPlan {
+                world: world_now,
+                start_step: step as usize,
+                departed_slots,
+                joined,
+            });
+            infos.push(EpochInfo {
+                epoch,
+                world: world_now,
+                start_step: step,
+                missing_ranks: departed_origs,
+                joined,
+            });
+            last_released = Some(step);
+        } else {
+            // Stable round: echo every heartbeat (the barrier release).
+            for (i, m) in members.iter_mut().enumerate() {
+                if let Some(step) = hb[i] {
+                    write_frame(
+                        &mut m.control,
+                        &Frame::Heartbeat { rank: m.orig as u32, epoch, step },
+                    )
+                    .map_err(|e| anyhow!(e))
+                    .with_context(|| {
+                        format!("launch: releasing step {step} for member {}", m.orig)
+                    })?;
+                }
+            }
+            if let Some(step) = hb.iter().flatten().next() {
+                last_released = Some(*step);
+            }
+        }
+    }
+
+    // Verification. The composed oracle is bitwise-authoritative except
+    // where churn kind and compressor state interact (DESIGN.md §16):
+    // a joiner's fresh compressor state breaks bitwise for stateful
+    // schemes, and an aborted mid-step attempt (as observed by the
+    // round loop — injected or not) advances per-step-RNG schemes.
+    // Those runs fall back to member-consistency: every member's final
+    // parameters must still be identical to each other.
+    let any_join = plans.iter().any(|p| p.joined > 0);
+    let oracle_applicable = (!any_join || stateless_worker_scheme(&cfg.compressor))
+        && (!any_midstep_abort || midstep_replay_safe(&cfg.compressor));
+    let (oracle_params, oracle_logical) = if oracle_applicable {
+        let (p, l) = elastic_oracle_trajectory(cfg, &plans)?;
+        (Some(p), l)
+    } else {
+        (None, model_bytes_per_step * cfg.steps as u64)
+    };
+    let mut reference_owned: Vec<Vec<f32>> = Vec::new();
+    let mut reports = Vec::with_capacity(members.len());
+    for m in &members {
+        let (wire_bytes, logical_bytes, tensors) =
+            m.report.as_ref().expect("loop exits only when every member reported");
+        let expect_logical = model_bytes_per_step * (cfg.steps as u64 - m.start_step);
+        if *logical_bytes != expect_logical {
+            bail!(
+                "launch: member {} logged {logical_bytes} logical bytes but its {} executed \
+                 steps predict {expect_logical}",
+                m.orig,
+                cfg.steps as u64 - m.start_step
+            );
+        }
+        let bitwise = match &oracle_params {
+            Some(oracle) => bits_equal_tensors(tensors, oracle),
+            None => {
+                if reference_owned.is_empty() {
+                    reference_owned = tensors.clone();
+                    true
+                } else {
+                    bits_equal_raw(tensors, &reference_owned)
+                }
+            }
+        };
+        if !bitwise {
+            bail!(
+                "launch: member {}'s final parameters diverged from the {} \
+                 (elastic runs must stay deterministic within the recorded epoch schedule)",
+                m.orig,
+                if oracle_params.is_some() { "composed elastic oracle" } else { "other members" }
+            );
+        }
+        reports.push(WorkerWireReport {
+            rank: m.orig as usize,
+            wire_bytes: *wire_bytes,
+            logical_bytes: *logical_bytes,
+            bitwise,
+        });
+    }
+    reports.sort_by_key(|r| r.rank);
+    Ok(LaunchOutcome {
+        world,
+        steps: cfg.steps,
+        reports,
+        logical_bytes: oracle_logical,
+        model_bytes_per_step,
+        metrics_by_rank,
+        epochs: infos,
+        reconnect_attempts_total,
+        oracle_verified: oracle_applicable,
+    })
+}
+
+fn bits_equal_tensors(got: &[Vec<f32>], want: &[Tensor]) -> bool {
+    got.len() == want.len()
+        && got.iter().zip(want.iter()).all(|(g, w)| {
+            g.len() == w.len()
+                && g.iter().zip(w.data().iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+        })
+}
+
+fn bits_equal_raw(got: &[Vec<f32>], want: &[Vec<f32>]) -> bool {
+    got.len() == want.len()
+        && got.iter().zip(want.iter()).all(|(g, w)| {
+            g.len() == w.len() && g.iter().zip(w.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+        })
 }
 
 #[cfg(test)]

@@ -38,6 +38,22 @@
 //! closed the connection mid-collective" instead of a hang — every
 //! blocking wait carries a timeout.
 //!
+//! In **elastic** mode (`launch --elastic`, DESIGN.md §16) a dead peer
+//! is no longer fatal: membership is epoch-based, each step boundary
+//! is a heartbeat barrier with the coordinator, and on a detected
+//! departure (control-connection EOF or heartbeat timeout) the
+//! coordinator broadcasts a `Reconfigure` frame; survivors tear this
+//! ring down, re-form the edges over their retained listeners with
+//! backoff reconnects, and continue at `W−1` (or `W+1` on a late
+//! join) under the next epoch. A *crash* needs no tuning — the closed
+//! sockets cascade EOF through the ring immediately. Surviving a
+//! *hang* (peer alive but stuck, sockets open) additionally requires
+//! `--comm-timeout-ms` below `--heartbeat-ms`: blocked survivors must
+//! abort their ring waits and re-heartbeat before the coordinator's
+//! heartbeat timeout declares *them* dead too; with the default ring
+//! timeout (the whole-run `--timeout-s`) a hang stalls the run until
+//! that deadline instead.
+//!
 //! # Posted sends and the I/O threads
 //!
 //! Early versions documented `Transport::send_next` as "never blocks",
@@ -68,12 +84,16 @@ pub mod rendezvous;
 pub mod wire;
 
 pub use harness::{
-    coordinate, harness_registry, harness_shapes, initial_params, oracle_trajectory, run_worker,
-    run_worker_with_metrics, synthetic_grads, worker_trajectory, HarnessConfig, LaunchOutcome,
-    WorkerRunReport, WorkerWireReport,
+    coordinate, coordinate_elastic, elastic_oracle_trajectory, harness_registry, harness_shapes,
+    initial_params, midstep_replay_safe, oracle_state_at, oracle_trajectory, run_worker,
+    run_worker_elastic, run_worker_with_metrics, stateless_worker_scheme, synthetic_grads,
+    worker_trajectory, ElasticLink, EpochPlan, HarnessConfig, LaunchOutcome, WorkerRunReport,
+    WorkerWireReport,
 };
 pub use metered::{MeteredTransport, WireCounters, WireSized};
-pub use rendezvous::{join, JoinedRing, Rendezvous};
+pub use rendezvous::{
+    form_ring_edges, join, join_with_retries, JoinedRing, Rendezvous, DEFAULT_CONNECT_RETRIES,
+};
 
 use super::{Completion, Ticket, Transport};
 use anyhow::{anyhow, Result};
@@ -241,7 +261,7 @@ impl TcpRing {
     /// Build from a completed rendezvous handshake; hands the control
     /// stream back to the caller (it is not part of the ring).
     pub fn from_joined(joined: JoinedRing, timeout: Duration) -> Result<(TcpRing, TcpStream)> {
-        let JoinedRing { rank, world, control, to_next, from_prev } = joined;
+        let JoinedRing { rank, world, control, to_next, from_prev, .. } = joined;
         Ok((TcpRing::new(rank, world, to_next, from_prev, timeout)?, control))
     }
 

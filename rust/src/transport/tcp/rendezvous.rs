@@ -1,5 +1,6 @@
 //! Coordinator-hosted rendezvous: how `W` independent OS processes
-//! become a ring (DESIGN.md §10).
+//! become a ring (DESIGN.md §10), and how survivors re-form it after
+//! churn (DESIGN.md §16).
 //!
 //! The protocol has four steps, all over the [`super::wire`] codec:
 //!
@@ -18,18 +19,33 @@
 //! can never race step 4: the successor's listener already exists (the
 //! OS backlog holds the connection until the accept). The `Hello`
 //! connection stays open as the **control channel** — workers send
-//! their end-of-run `Report` on it.
+//! per-step `Heartbeat`s (elastic mode) and their end-of-run `Report`
+//! on it.
 //!
-//! Every blocking call (accept, connect, handshake read) carries a
-//! timeout, so a worker that never shows up or dies mid-handshake
-//! surfaces as a contextual error naming the missing rank instead of a
-//! hang.
+//! Steps 3–4 are factored into [`form_ring_edges`] because elastic
+//! runs re-execute them on every `Reconfigure`: the ring listener
+//! stays alive for the whole worker lifetime (it is part of
+//! [`JoinedRing`]), so the addresses exchanged at `Hello` time remain
+//! valid across epochs and re-formation needs no second
+//! address-collection round-trip.
+//!
+//! Every connect path retries through a bounded exponential
+//! [`Backoff`] with deterministic jitter instead of making a single
+//! timed-out attempt, and every blocking call (accept, connect,
+//! handshake read) carries a deadline, so a worker that never shows up
+//! or dies mid-handshake surfaces as a contextual error naming the
+//! missing rank instead of a hang.
 
 use super::wire::{read_frame, write_frame, Frame};
+use crate::net::backoff::Backoff;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
+
+/// Default connect retry budget when the caller does not thread an
+/// explicit `--reconnect-retries` through (attempts beyond the first).
+pub const DEFAULT_CONNECT_RETRIES: u32 = 4;
 
 /// The coordinator's half of the handshake.
 pub struct Rendezvous {
@@ -50,36 +66,55 @@ impl Rendezvous {
         Ok(self.listener.local_addr().context("rendezvous: no local addr")?.to_string())
     }
 
+    /// Accept one worker's `Hello` before `deadline`. Returns the
+    /// control stream and the worker's ring-listener address. Elastic
+    /// coordinators call this with a short deadline to poll for late
+    /// joiners between step barriers.
+    pub fn accept_hello(&self, deadline: Instant, timeout: Duration) -> Result<(TcpStream, String)> {
+        let (mut stream, from) = accept_with_deadline(&self.listener, deadline)?;
+        stream.set_read_timeout(Some(timeout)).context("rendezvous: set timeout")?;
+        stream.set_nodelay(true).ok();
+        match read_frame(&mut stream)
+            .map_err(|e| anyhow!(e))
+            .with_context(|| format!("rendezvous: handshake with {from}"))?
+        {
+            Frame::Hello { listen_addr } => Ok((stream, listen_addr)),
+            other => bail!("rendezvous: expected Hello from {from}, got {}", other.kind_name()),
+        }
+    }
+
     /// Accept `world` workers, assign ranks in arrival order, and send
     /// each its `Welcome`. Returns the control streams indexed by rank;
     /// workers send their final `Report` frames on these.
     pub fn run(&self, world: usize, timeout: Duration) -> Result<Vec<TcpStream>> {
+        self.run_collecting(world, timeout).map(|joined| {
+            joined.into_iter().map(|(stream, _)| stream).collect()
+        })
+    }
+
+    /// [`Rendezvous::run`], also returning each worker's ring-listener
+    /// address (rank-indexed). The elastic coordinator keeps the
+    /// addresses: they stay valid across epochs (workers never rebind),
+    /// so every later `Reconfigure` peer map is computed from them.
+    pub fn run_collecting(
+        &self,
+        world: usize,
+        timeout: Duration,
+    ) -> Result<Vec<(TcpStream, String)>> {
         let _span = crate::obs::span(crate::obs::Phase::Rendezvous);
         assert!(world > 0, "rendezvous needs at least one worker");
         let mut joined: Vec<(TcpStream, String)> = Vec::with_capacity(world);
         let deadline = Instant::now() + timeout;
         while joined.len() < world {
             let remaining = world - joined.len();
-            let (mut stream, from) = accept_with_deadline(&self.listener, deadline)
-                .with_context(|| {
+            let (stream, addr) =
+                self.accept_hello(deadline, timeout).with_context(|| {
                     format!(
                         "rendezvous: only {}/{world} workers joined ({remaining} missing)",
                         joined.len()
                     )
                 })?;
-            stream.set_read_timeout(Some(timeout)).context("rendezvous: set timeout")?;
-            stream.set_nodelay(true).ok();
-            let rank = joined.len();
-            match read_frame(&mut stream)
-                .map_err(|e| anyhow!(e))
-                .with_context(|| format!("rendezvous: handshake with {from} (would-be rank {rank})"))?
-            {
-                Frame::Hello { listen_addr } => joined.push((stream, listen_addr)),
-                other => bail!(
-                    "rendezvous: expected Hello from {from}, got {}",
-                    other.kind_name()
-                ),
-            }
+            joined.push((stream, addr));
         }
         let peers: Vec<String> = joined.iter().map(|(_, addr)| addr.clone()).collect();
         for (rank, (stream, _)) in joined.iter_mut().enumerate() {
@@ -90,43 +125,136 @@ impl Rendezvous {
             .map_err(|e| anyhow!(e))
             .with_context(|| format!("rendezvous: sending Welcome to rank {rank}"))?;
         }
-        Ok(joined.into_iter().map(|(stream, _)| stream).collect())
+        Ok(joined)
     }
 }
 
 /// A worker's completed handshake: its identity plus the three live
 /// connections (control to the coordinator, ring edge to the successor,
-/// ring edge from the predecessor).
+/// ring edge from the predecessor) and the ring listener, which stays
+/// alive for the whole worker lifetime so elastic re-formation can
+/// accept the new predecessor without rebinding (the peer addresses
+/// exchanged at `Hello` time stay valid across epochs).
 pub struct JoinedRing {
     /// The rank the coordinator assigned this worker.
     pub rank: usize,
     /// Total number of workers in the ring.
     pub world: usize,
-    /// The original `Hello` connection; carries the final `Report`.
+    /// The original `Hello` connection; carries heartbeats (elastic
+    /// mode) and the final `Report`.
     pub control: TcpStream,
     /// Ring edge this worker writes to (its successor reads it).
     pub to_next: TcpStream,
     /// Ring edge this worker reads from (its predecessor writes it).
     pub from_prev: TcpStream,
+    /// This worker's ring listener (the address it announced in its
+    /// `Hello`); kept open across epochs for re-formation accepts.
+    pub listener: TcpListener,
+    /// Connect retries (attempts beyond each dial's first) the
+    /// handshake consumed — this worker's share of the cluster-wide
+    /// `reconnect_attempts` total it reports at end of run.
+    pub reconnect_attempts: u64,
 }
 
-/// The worker's half of the handshake: join the ring hosted by
-/// `coordinator` (a `host:port` string).
-pub fn join(coordinator: &str, timeout: Duration) -> Result<JoinedRing> {
-    let _span = crate::obs::span(crate::obs::Phase::Rendezvous);
+/// The worker's first contact: bind the ring listener, dial the
+/// coordinator (with backoff), and send `Hello`. Returns the control
+/// stream, the retained ring listener, the announced address, and the
+/// connect retries the dial consumed (the worker folds these into its
+/// reported `reconnect_attempts`). Callers then read either a
+/// `Welcome` (initial formation) or a `Reconfigure` (late join into an
+/// elastic run) on the control stream.
+pub fn hello(
+    coordinator: &str,
+    timeout: Duration,
+    retries: u32,
+) -> Result<(TcpStream, TcpListener, String, u64)> {
     // Bind the ring listener *before* saying Hello, so the predecessor
     // can dial us the moment it learns our address.
     let listener =
         TcpListener::bind("127.0.0.1:0").context("worker: cannot bind ring listener")?;
     let my_addr = listener.local_addr().context("worker: ring listener addr")?.to_string();
+    let seed = u64::from(listener.local_addr().map(|a| a.port()).unwrap_or(0));
 
-    let mut control = connect(coordinator, timeout)
+    let mut backoff = Backoff::standard(retries, seed);
+    let mut control = connect(coordinator, timeout, &mut backoff)
         .with_context(|| format!("worker: coordinator {coordinator} unreachable"))?;
     control.set_read_timeout(Some(timeout)).context("worker: set control timeout")?;
-    write_frame(&mut control, &Frame::Hello { listen_addr: my_addr })
+    write_frame(&mut control, &Frame::Hello { listen_addr: my_addr.clone() })
         .map_err(|e| anyhow!(e))
         .context("worker: sending Hello")?;
+    let retries_used = backoff.attempts();
+    Ok((control, listener, my_addr, retries_used))
+}
 
+/// Steps 3–4 of the handshake, re-executed on every elastic
+/// `Reconfigure`: dial the ring successor (`rank+1 mod world`) through
+/// `backoff`, introduce ourselves with `Connect { rank }`, then accept
+/// the predecessor's connection on the retained `listener` and verify
+/// its `Connect` names the right rank (a stray or stale connection is
+/// dropped and the accept retried until the deadline).
+pub fn form_ring_edges(
+    rank: usize,
+    world: usize,
+    peers: &[String],
+    listener: &TcpListener,
+    timeout: Duration,
+    backoff: &mut Backoff,
+) -> Result<(TcpStream, TcpStream)> {
+    if world == 0 || rank >= world || peers.len() != world {
+        bail!("ring formation: bad identity (rank {rank}, world {world}, {} peers)", peers.len());
+    }
+    let next = (rank + 1) % world;
+    let mut to_next = connect(&peers[next], timeout, backoff).with_context(|| {
+        format!("rank {rank}: ring successor rank {next} at {} unreachable", peers[next])
+    })?;
+    write_frame(&mut to_next, &Frame::Connect { rank: rank as u32 })
+        .map_err(|e| anyhow!(e))
+        .with_context(|| format!("rank {rank}: introducing to successor rank {next}"))?;
+
+    let prev = (rank + world - 1) % world;
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (mut from_prev, _) = accept_with_deadline(listener, deadline).with_context(|| {
+            format!("rank {rank}: ring predecessor rank {prev} never connected")
+        })?;
+        from_prev.set_read_timeout(Some(timeout)).context("worker: set ring timeout")?;
+        match read_frame(&mut from_prev)
+            .map_err(|e| anyhow!(e))
+            .with_context(|| format!("rank {rank}: handshake from predecessor rank {prev}"))?
+        {
+            Frame::Connect { rank: got } if got as usize == prev => {
+                return Ok((to_next, from_prev))
+            }
+            // A stale dial from a previous epoch's topology: drop it and
+            // keep accepting until the real predecessor shows up.
+            Frame::Connect { rank: got } => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "rank {rank}: expected Connect from predecessor rank {prev}, got rank {got}"
+                    );
+                }
+            }
+            other => bail!(
+                "rank {rank}: expected Connect from predecessor rank {prev}, got {}",
+                other.kind_name()
+            ),
+        }
+    }
+}
+
+/// The worker's half of the handshake: join the ring hosted by
+/// `coordinator` (a `host:port` string) with the default connect retry
+/// budget.
+pub fn join(coordinator: &str, timeout: Duration) -> Result<JoinedRing> {
+    join_with_retries(coordinator, timeout, DEFAULT_CONNECT_RETRIES)
+}
+
+/// [`join`] with an explicit connect retry budget
+/// (`--reconnect-retries`): `Hello` the coordinator, wait for the
+/// `Welcome`, and form the ring edges.
+pub fn join_with_retries(coordinator: &str, timeout: Duration, retries: u32) -> Result<JoinedRing> {
+    let _span = crate::obs::span(crate::obs::Phase::Rendezvous);
+    let (mut control, listener, _my_addr, hello_retries) = hello(coordinator, timeout, retries)?;
     let (rank, world, peers) = match read_frame(&mut control)
         .map_err(|e| anyhow!(e))
         .context("worker: waiting for Welcome (coordinator died or timed out?)")?
@@ -137,36 +265,12 @@ pub fn join(coordinator: &str, timeout: Duration) -> Result<JoinedRing> {
     if world == 0 || rank >= world || peers.len() != world {
         bail!("worker: malformed Welcome (rank {rank}, world {world}, {} peers)", peers.len());
     }
-
-    let next = (rank + 1) % world;
-    let mut to_next = connect(&peers[next], timeout).with_context(|| {
-        format!("rank {rank}: ring successor rank {next} at {} unreachable", peers[next])
-    })?;
-    write_frame(&mut to_next, &Frame::Connect { rank: rank as u32 })
-        .map_err(|e| anyhow!(e))
-        .with_context(|| format!("rank {rank}: introducing to successor rank {next}"))?;
-
-    let prev = (rank + world - 1) % world;
-    let deadline = Instant::now() + timeout;
-    let (mut from_prev, _) = accept_with_deadline(&listener, deadline).with_context(|| {
-        format!("rank {rank}: ring predecessor rank {prev} never connected")
-    })?;
-    from_prev.set_read_timeout(Some(timeout)).context("worker: set ring timeout")?;
-    match read_frame(&mut from_prev)
-        .map_err(|e| anyhow!(e))
-        .with_context(|| format!("rank {rank}: handshake from predecessor rank {prev}"))?
-    {
-        Frame::Connect { rank: got } if got as usize == prev => {}
-        Frame::Connect { rank: got } => bail!(
-            "rank {rank}: expected Connect from predecessor rank {prev}, got rank {got}"
-        ),
-        other => bail!(
-            "rank {rank}: expected Connect from predecessor rank {prev}, got {}",
-            other.kind_name()
-        ),
-    }
-
-    Ok(JoinedRing { rank, world, control, to_next, from_prev })
+    let seed = u64::from(listener.local_addr().map(|a| a.port()).unwrap_or(0));
+    let mut backoff = Backoff::standard(retries, seed ^ rank as u64);
+    let (to_next, from_prev) =
+        form_ring_edges(rank, world, &peers, &listener, timeout, &mut backoff)?;
+    let reconnect_attempts = hello_retries + backoff.attempts();
+    Ok(JoinedRing { rank, world, control, to_next, from_prev, listener, reconnect_attempts })
 }
 
 /// `TcpListener::accept` with a deadline: `accept` alone blocks forever
@@ -200,8 +304,25 @@ fn accept_with_deadline(
     out
 }
 
-/// `TcpStream::connect` with a timeout, resolving `host:port` strings.
-fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+/// `TcpStream::connect` through a [`Backoff`] policy, resolving
+/// `host:port` strings. Every attempt is individually bounded by
+/// `timeout`; the whole retry loop is bounded by the same deadline, so
+/// the worst case stays one timeout regardless of the retry budget.
+fn connect(addr: &str, timeout: Duration, backoff: &mut Backoff) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    backoff.run(deadline, || {
+        // Bound each attempt by the time left to the shared deadline
+        // (not the full `timeout`): a retry that starts late must not
+        // stretch the whole loop past one timeout.
+        let left = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        connect_once(addr, left.min(timeout))
+    })
+}
+
+/// A single resolve-and-dial attempt.
+fn connect_once(addr: &str, timeout: Duration) -> Result<TcpStream> {
     let mut last: Option<io::Error> = None;
     for sock_addr in addr
         .to_socket_addrs()
@@ -294,7 +415,85 @@ mod tests {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().port()
         };
+        let t0 = Instant::now();
         let err = join(&format!("127.0.0.1:{port}"), Duration::from_millis(300)).unwrap_err();
         assert!(format!("{err:#}").contains("coordinator"), "{err:#}");
+        // Backoff retries stay bounded by the connect deadline.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    /// A successor that comes up *after* the first dial attempt is
+    /// still reached: the backoff retries the connect instead of
+    /// failing on the first refused attempt.
+    #[test]
+    fn connect_retries_through_backoff() {
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let late = std::thread::spawn({
+            let addr = addr.clone();
+            move || {
+                std::thread::sleep(Duration::from_millis(80));
+                TcpListener::bind(addr).unwrap().accept().unwrap()
+            }
+        });
+        let mut backoff = Backoff::standard(10, 7);
+        let stream = connect(&addr, Duration::from_secs(5), &mut backoff);
+        assert!(stream.is_ok(), "{:?}", stream.err());
+        // The listener only binds 80 ms in, so the first dial was
+        // refused and the success must have consumed retries — which
+        // the policy's local tally records.
+        assert!(backoff.attempts() >= 1, "retries must be tallied");
+        late.join().unwrap();
+    }
+
+    /// Re-formation: two workers form a ring, tear the edges down, and
+    /// re-form them in the opposite orientation over the *same*
+    /// retained listeners — the elastic epoch-transition primitive.
+    #[test]
+    fn edges_reform_on_retained_listeners() {
+        let rv = Rendezvous::bind("127.0.0.1:0").unwrap();
+        let addr = rv.addr().unwrap();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || join(&addr, T).unwrap())
+            })
+            .collect();
+        rv.run(2, T).unwrap();
+        let mut joined: Vec<JoinedRing> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        joined.sort_by_key(|j| j.rank);
+        let peers: Vec<String> = joined
+            .iter()
+            .map(|j| j.listener.local_addr().unwrap().to_string())
+            .collect();
+        // Tear down the old edges, keep the listeners.
+        for j in &mut joined {
+            let _ = j.to_next.shutdown(std::net::Shutdown::Both);
+            let _ = j.from_prev.shutdown(std::net::Shutdown::Both);
+        }
+        // Swap ranks (the compaction a reconfigure performs) and re-form.
+        let reformed: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = joined
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let new_rank = 1 - i;
+                    let peers = vec![peers[1].clone(), peers[0].clone()];
+                    let listener = &j.listener;
+                    scope.spawn(move || {
+                        let mut b = Backoff::standard(4, new_rank as u64);
+                        form_ring_edges(new_rank, 2, &peers, listener, T, &mut b)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for edges in reformed {
+            assert!(edges.is_ok(), "{:?}", edges.err());
+        }
     }
 }

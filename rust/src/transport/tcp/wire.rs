@@ -12,9 +12,10 @@
 //! ```
 //!
 //! Control frames carry the rendezvous handshake (`Hello` / `Welcome` /
-//! `Connect`) and the end-of-run `Report`; data frames carry the ring
-//! collectives' payloads (`F32s` for all-reduce chunks and top-K gather
-//! messages, `Bytes` for packed sign bitmaps). All integers are
+//! `Connect`), the elastic-membership protocol (`Heartbeat` /
+//! `Reconfigure`, DESIGN.md §16) and the end-of-run `Report`; data
+//! frames carry the ring collectives' payloads (`F32s` for all-reduce
+//! chunks and top-K gather messages, `Bytes` for packed sign bitmaps). All integers are
 //! little-endian; f32 payloads round-trip **bit-exactly** (the codec
 //! moves `f32::to_le_bytes` bits, never reformats values), which is
 //! what lets the TCP engine stay bitwise-identical to the in-process
@@ -46,6 +47,13 @@ const KIND_F32S: u8 = 4;
 const KIND_BYTES: u8 = 5;
 const KIND_REPORT: u8 = 6;
 const KIND_METRICS: u8 = 7;
+const KIND_HEARTBEAT: u8 = 8;
+const KIND_RECONFIGURE: u8 = 9;
+
+/// Version tag carried by every [`Frame::Reconfigure`]; a decoder that
+/// sees a higher version rejects the frame with a typed error instead
+/// of misinterpreting fields added later.
+pub const RECONFIGURE_VERSION: u32 = 1;
 
 /// One wire message.
 #[derive(Debug, Clone, PartialEq)]
@@ -64,14 +72,41 @@ pub enum Frame {
     /// A raw byte collective payload (packed sign bitmap).
     Bytes(Vec<u8>),
     /// Worker → coordinator at end of run: final parameters plus the
-    /// measured-bytes accounting for cross-checking.
-    Report { rank: u32, wire_bytes: u64, logical_bytes: u64, tensors: Vec<Vec<f32>> },
+    /// measured-bytes accounting for cross-checking, and the number of
+    /// connect retries this rank burned (reconciled in the cluster
+    /// summary).
+    Report {
+        rank: u32,
+        wire_bytes: u64,
+        logical_bytes: u64,
+        reconnect_attempts: u64,
+        tensors: Vec<Vec<f32>>,
+    },
     /// Worker → coordinator run-health sideband: one per-step metrics
     /// record (`--metrics`), sent on the rendezvous control connection
     /// ahead of the final `Report`. Encoded as ten little-endian u64
     /// words — f64 fields travel as `f64::to_bits`, so values
     /// round-trip bit-exactly like the f32 data frames.
     Metrics(crate::obs::metrics::StepMetrics),
+    /// Worker → coordinator at every step boundary under `--elastic`:
+    /// "I am alive in `epoch` and about to run `step`." The coordinator
+    /// echoes the frame back as the go-ahead, which makes each step
+    /// boundary a membership barrier (DESIGN.md §16).
+    Heartbeat { rank: u32, epoch: u64, step: u64 },
+    /// Coordinator → worker on a membership change: the new epoch, the
+    /// step at which it begins, this worker's new rank, the new world
+    /// size, the old-epoch ranks that departed, and every member's ring
+    /// listener address indexed by new rank. Carries a version field so
+    /// future layouts are rejected, not misread.
+    Reconfigure {
+        version: u32,
+        epoch: u64,
+        step: u64,
+        rank: u32,
+        world: u32,
+        departed: Vec<u32>,
+        peers: Vec<String>,
+    },
 }
 
 impl Frame {
@@ -84,6 +119,8 @@ impl Frame {
             Frame::Bytes(_) => KIND_BYTES,
             Frame::Report { .. } => KIND_REPORT,
             Frame::Metrics(_) => KIND_METRICS,
+            Frame::Heartbeat { .. } => KIND_HEARTBEAT,
+            Frame::Reconfigure { .. } => KIND_RECONFIGURE,
         }
     }
 
@@ -97,6 +134,8 @@ impl Frame {
             Frame::Bytes(_) => "Bytes",
             Frame::Report { .. } => "Report",
             Frame::Metrics(_) => "Metrics",
+            Frame::Heartbeat { .. } => "Heartbeat",
+            Frame::Reconfigure { .. } => "Reconfigure",
         }
     }
 
@@ -119,10 +158,11 @@ impl Frame {
                 }
             }
             Frame::Bytes(b) => out.extend_from_slice(b),
-            Frame::Report { rank, wire_bytes, logical_bytes, tensors } => {
+            Frame::Report { rank, wire_bytes, logical_bytes, reconnect_attempts, tensors } => {
                 out.extend_from_slice(&rank.to_le_bytes());
                 out.extend_from_slice(&wire_bytes.to_le_bytes());
                 out.extend_from_slice(&logical_bytes.to_le_bytes());
+                out.extend_from_slice(&reconnect_attempts.to_le_bytes());
                 out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
                 for t in tensors {
                     out.extend_from_slice(&(t.len() as u32).to_le_bytes());
@@ -145,6 +185,26 @@ impl Frame {
                     m.inflight_peak,
                 ] {
                     out.extend_from_slice(&word.to_le_bytes());
+                }
+            }
+            Frame::Heartbeat { rank, epoch, step } => {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&step.to_le_bytes());
+            }
+            Frame::Reconfigure { version, epoch, step, rank, world, departed, peers } => {
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&step.to_le_bytes());
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&world.to_le_bytes());
+                debug_assert!(departed.len() <= u16::MAX as usize);
+                out.extend_from_slice(&(departed.len() as u16).to_le_bytes());
+                for d in departed {
+                    out.extend_from_slice(&d.to_le_bytes());
+                }
+                for p in peers {
+                    put_str(&mut out, p);
                 }
             }
         }
@@ -333,6 +393,7 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
             let rank = cur.u32()?;
             let wire_bytes = cur.u64()?;
             let logical_bytes = cur.u64()?;
+            let reconnect_attempts = cur.u64()?;
             let count = cur.u32()?;
             let mut tensors = Vec::with_capacity(count.min(1 << 16) as usize);
             for _ in 0..count {
@@ -347,7 +408,7 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
                         .collect(),
                 );
             }
-            Frame::Report { rank, wire_bytes, logical_bytes, tensors }
+            Frame::Report { rank, wire_bytes, logical_bytes, reconnect_attempts, tensors }
         }
         KIND_METRICS => {
             let rank = cur.u64()?;
@@ -372,6 +433,32 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
                 staleness,
                 inflight_peak,
             })
+        }
+        KIND_HEARTBEAT => {
+            let rank = cur.u32()?;
+            let epoch = cur.u64()?;
+            let step = cur.u64()?;
+            Frame::Heartbeat { rank, epoch, step }
+        }
+        KIND_RECONFIGURE => {
+            let version = cur.u32()?;
+            if version != RECONFIGURE_VERSION {
+                return Err(WireError::Malformed("unsupported Reconfigure version"));
+            }
+            let epoch = cur.u64()?;
+            let step = cur.u64()?;
+            let rank = cur.u32()?;
+            let world = cur.u32()?;
+            let n_departed = cur.u16()?;
+            let mut departed = Vec::with_capacity(n_departed as usize);
+            for _ in 0..n_departed {
+                departed.push(cur.u32()?);
+            }
+            let mut peers = Vec::with_capacity(world.min(1 << 16) as usize);
+            for _ in 0..world {
+                peers.push(cur.string()?);
+            }
+            Frame::Reconfigure { version, epoch, step, rank, world, departed, peers }
         }
         other => return Err(WireError::BadKind(other)),
     };
@@ -455,7 +542,27 @@ mod tests {
             rank: 1,
             wire_bytes: u64::MAX - 7,
             logical_bytes: 12345,
+            reconnect_attempts: 3,
             tensors: vec![vec![1.0, -2.5], vec![], vec![f32::MIN_POSITIVE]],
+        });
+        roundtrip(&Frame::Heartbeat { rank: 2, epoch: 5, step: u64::MAX - 1 });
+        roundtrip(&Frame::Reconfigure {
+            version: RECONFIGURE_VERSION,
+            epoch: 3,
+            step: 42,
+            rank: 1,
+            world: 3,
+            departed: vec![2],
+            peers: (0..3).map(|i| format!("127.0.0.1:{}", 41000 + i)).collect(),
+        });
+        roundtrip(&Frame::Reconfigure {
+            version: RECONFIGURE_VERSION,
+            epoch: 1,
+            step: 0,
+            rank: 0,
+            world: 1,
+            departed: vec![],
+            peers: vec!["127.0.0.1:41000".into()],
         });
         roundtrip(&Frame::Metrics(crate::obs::metrics::StepMetrics {
             rank: 3,
@@ -526,7 +633,23 @@ mod tests {
             Frame::Welcome { rank: 0, world: 2, peers: vec!["a:1".into(), "b:2".into()] },
             Frame::F32s(vec![1.0, 2.0, 3.0]),
             Frame::Bytes(vec![9, 8, 7]),
-            Frame::Report { rank: 0, wire_bytes: 1, logical_bytes: 2, tensors: vec![vec![1.0]] },
+            Frame::Report {
+                rank: 0,
+                wire_bytes: 1,
+                logical_bytes: 2,
+                reconnect_attempts: 0,
+                tensors: vec![vec![1.0]],
+            },
+            Frame::Heartbeat { rank: 1, epoch: 2, step: 3 },
+            Frame::Reconfigure {
+                version: RECONFIGURE_VERSION,
+                epoch: 1,
+                step: 7,
+                rank: 0,
+                world: 2,
+                departed: vec![1, 3],
+                peers: vec!["a:1".into(), "b:2".into()],
+            },
             Frame::Metrics(crate::obs::metrics::StepMetrics {
                 rank: 1,
                 step: 0,
@@ -597,6 +720,53 @@ mod tests {
         // peers but the payload carries none).
         let bad = Frame::Welcome { rank: 0, world: 9, peers: vec![] }.encode();
         assert!(matches!(decode(&bad).unwrap_err(), WireError::Malformed(_)));
+
+        // A Reconfigure whose peer list runs past the payload.
+        let bad = Frame::Reconfigure {
+            version: RECONFIGURE_VERSION,
+            epoch: 1,
+            step: 0,
+            rank: 0,
+            world: 9,
+            departed: vec![],
+            peers: vec![],
+        }
+        .encode();
+        assert!(matches!(decode(&bad).unwrap_err(), WireError::Malformed(_)));
+    }
+
+    /// Forward compatibility: every unassigned kind byte is a typed
+    /// [`WireError::BadKind`], never a panic — a newer peer speaking
+    /// frames this build does not know produces a contextual error.
+    #[test]
+    fn unknown_kinds_are_typed_errors_not_panics() {
+        let mut frame = Frame::Connect { rank: 1 }.encode();
+        for kind in [0u8, KIND_RECONFIGURE + 1, 0x42, 0xFF] {
+            frame[2] = kind;
+            match decode(&frame).unwrap_err() {
+                WireError::BadKind(k) => assert_eq!(k, kind),
+                other => panic!("kind {kind}: unexpected {other}"),
+            }
+            // The streaming reader agrees (and consumes cleanly).
+            let mut cursor: &[u8] = &frame;
+            assert!(matches!(read_frame(&mut cursor).unwrap_err(), WireError::BadKind(_)));
+        }
+    }
+
+    /// A Reconfigure from a future protocol version is rejected with a
+    /// typed error instead of silently misreading the new layout.
+    #[test]
+    fn future_reconfigure_version_is_rejected() {
+        let frame = Frame::Reconfigure {
+            version: RECONFIGURE_VERSION + 1,
+            epoch: 1,
+            step: 0,
+            rank: 0,
+            world: 1,
+            departed: vec![],
+            peers: vec!["a:1".into()],
+        };
+        assert!(matches!(decode(&frame.encode()).unwrap_err(), WireError::Malformed(_)));
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Integration: elastic epoch-based ring membership (DESIGN.md §16).
+//!
+//! Every test drives the real elastic harness in-process — worker
+//! threads running [`run_worker_elastic`] over real localhost sockets
+//! against a [`coordinate_elastic`] call — with deterministic fault
+//! injection instead of wall-clock-dependent kills:
+//!
+//! - a worker crashing at a step **boundary** re-forms the ring and the
+//!   run finishes at `W−1`, bitwise-equal to the composed elastic
+//!   oracle;
+//! - a worker crashing **mid-step** (ring collectives in flight) makes
+//!   the survivors roll the step back, re-form, and re-run it;
+//! - a **late joiner** is admitted at a step boundary and the run
+//!   finishes at `W+1`;
+//! - under **stable membership**, `--elastic` is bitwise-identical to
+//!   the non-elastic lockstep oracle (the heartbeat barrier must not
+//!   perturb a single computed bit).
+//!
+//! The multi-process variant of the boundary-crash scenario runs in CI
+//! as the `churn-smoke` job (`launch --elastic --fail-rank …`).
+
+use powersgd::transport::tcp::{
+    coordinate_elastic, elastic_oracle_trajectory, oracle_trajectory, run_worker_elastic,
+    EpochPlan, HarnessConfig, LaunchOutcome, Rendezvous,
+};
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Spawn `spawn` elastic worker threads against a coordinator expecting
+/// `world` initial members (spawn > world leaves the extras as late
+/// joiners), and return the coordinator outcome plus every worker
+/// thread's result.
+fn run_elastic_ring(
+    world: usize,
+    spawn: usize,
+    cfg: &HarnessConfig,
+    join_at_step: Option<u64>,
+) -> (anyhow::Result<LaunchOutcome>, Vec<anyhow::Result<usize>>) {
+    let rendezvous = Rendezvous::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = rendezvous.addr().expect("rendezvous addr");
+    let workers: Vec<_> = (0..spawn)
+        .map(|_| {
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                run_worker_elastic(&addr, &cfg, TIMEOUT).map(|(rank, _)| rank)
+            })
+        })
+        .collect();
+    let outcome = coordinate_elastic(&rendezvous, world, cfg, TIMEOUT, join_at_step);
+    let results = workers
+        .into_iter()
+        .map(|h| h.join().expect("worker thread panicked"))
+        .collect();
+    (outcome, results)
+}
+
+/// Split worker results into (survivor ranks, injected-crash errors),
+/// panicking on any error that is *not* the deliberate fault injection.
+fn split_survivors(results: Vec<anyhow::Result<usize>>) -> (Vec<usize>, usize) {
+    let mut survivors = Vec::new();
+    let mut crashed = 0usize;
+    for (idx, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(rank) => survivors.push(rank),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("fault injection"), "worker #{idx} died unexpectedly: {msg}");
+                crashed += 1;
+            }
+        }
+    }
+    survivors.sort_unstable();
+    (survivors, crashed)
+}
+
+/// Tentpole acceptance: rank 1 of a 3-worker elastic run crashes at the
+/// step-1 boundary; the survivors re-form at `W=2` and finish all 4
+/// steps bitwise-equal to the composed elastic oracle (the coordinator
+/// bails otherwise, so `Ok` is the equivalence assertion). The epoch
+/// history records the transition and the departed rank.
+#[test]
+fn boundary_crash_reforms_and_continues_at_w_minus_1() {
+    let cfg = HarnessConfig {
+        elastic: true,
+        steps: 4,
+        fail_rank: Some(1),
+        fail_at_step: 1,
+        ..HarnessConfig::default()
+    };
+    let (outcome, results) = run_elastic_ring(3, 3, &cfg, None);
+    let (survivors, crashed) = split_survivors(results);
+    assert_eq!(crashed, 1, "exactly the injected rank must crash");
+    assert_eq!(survivors, vec![0, 2], "survivors keep their epoch-0 identities");
+    let outcome = outcome.unwrap_or_else(|e| panic!("coordinate_elastic: {e:#}"));
+    assert_eq!(outcome.reports.len(), 2);
+    assert!(outcome.reports.iter().all(|r| r.bitwise));
+    assert!(outcome.oracle_verified, "boundary crashes verify against the composed oracle");
+    assert_eq!(outcome.epochs.len(), 2, "one re-formation");
+    assert_eq!(outcome.epochs[1].world, 2);
+    assert_eq!(outcome.epochs[1].start_step, 1);
+    assert_eq!(outcome.epochs[1].missing_ranks, vec![1]);
+    assert_eq!(outcome.epochs[1].joined, 0);
+}
+
+/// Mid-step crash: the injected rank dies *after* the barrier releases,
+/// with ring collectives in flight. The survivors' collectives panic,
+/// they roll the logical log back to the step boundary, re-form, and
+/// re-run the same step — still bitwise-equal to the composed oracle
+/// (PowerSGD's per-step execution is replay-safe: warm `Q` commits only
+/// after a successful step).
+#[test]
+fn midstep_crash_rolls_back_and_rerun_stays_bitwise() {
+    let cfg = HarnessConfig {
+        elastic: true,
+        steps: 3,
+        fail_rank: Some(1),
+        fail_at_step: 1,
+        fail_midstep: true,
+        ..HarnessConfig::default()
+    };
+    let (outcome, results) = run_elastic_ring(3, 3, &cfg, None);
+    let (survivors, crashed) = split_survivors(results);
+    assert_eq!(crashed, 1);
+    assert_eq!(survivors, vec![0, 2]);
+    let outcome = outcome.unwrap_or_else(|e| panic!("coordinate_elastic: {e:#}"));
+    assert!(outcome.reports.iter().all(|r| r.bitwise));
+    assert_eq!(outcome.epochs.len(), 2);
+    // The aborted attempt is re-run under the new epoch, so the epoch
+    // still begins at the crashed step, not the one after it.
+    assert_eq!(outcome.epochs[1].start_step, 1);
+    assert_eq!(outcome.epochs[1].world, 2);
+}
+
+/// A 2-worker elastic run degenerating to a single survivor: the
+/// re-formed "ring" of one loops through the worker's own listener and
+/// the run still finishes, verified against the composed oracle at
+/// `W=1`.
+#[test]
+fn crash_to_single_worker_still_finishes() {
+    let cfg = HarnessConfig {
+        elastic: true,
+        steps: 3,
+        fail_rank: Some(1),
+        fail_at_step: 1,
+        ..HarnessConfig::default()
+    };
+    let (outcome, results) = run_elastic_ring(2, 2, &cfg, None);
+    let (survivors, crashed) = split_survivors(results);
+    assert_eq!(crashed, 1);
+    assert_eq!(survivors, vec![0]);
+    let outcome = outcome.unwrap_or_else(|e| panic!("coordinate_elastic: {e:#}"));
+    assert_eq!(outcome.reports.len(), 1);
+    assert!(outcome.reports[0].bitwise);
+    assert_eq!(outcome.epochs[1].world, 1);
+}
+
+/// Late join: a third identical worker is spawned up front, its `Hello`
+/// held in the coordinator's backlog, and it is admitted at the step-1
+/// boundary. With a stateless scheme (sign-norm) the joiner's fresh
+/// compressor equals a survivor's, so the whole `W=2 → W=3` run is
+/// verified bitwise against the composed elastic oracle.
+#[test]
+fn late_joiner_is_admitted_and_run_finishes_at_w_plus_1() {
+    let cfg = HarnessConfig {
+        elastic: true,
+        compressor: "sign-norm".into(),
+        steps: 3,
+        ..HarnessConfig::default()
+    };
+    let (outcome, results) = run_elastic_ring(2, 3, &cfg, Some(1));
+    let (survivors, crashed) = split_survivors(results);
+    assert_eq!(crashed, 0);
+    assert_eq!(survivors, vec![0, 1, 2], "the joiner gets the next origin id");
+    let outcome = outcome.unwrap_or_else(|e| panic!("coordinate_elastic: {e:#}"));
+    assert_eq!(outcome.reports.len(), 3);
+    assert!(outcome.reports.iter().all(|r| r.bitwise));
+    assert!(outcome.oracle_verified, "stateless joins stay oracle-verifiable");
+    assert_eq!(outcome.epochs.len(), 2);
+    assert_eq!(outcome.epochs[1].world, 3);
+    assert_eq!(outcome.epochs[1].start_step, 1);
+    assert_eq!(outcome.epochs[1].joined, 1);
+    assert!(outcome.epochs[1].missing_ranks.is_empty());
+    // The joiner executed two of the three steps; its logical bytes
+    // reflect that, per the member-wise accounting.
+    let joiner = outcome.reports.iter().find(|r| r.rank == 2).unwrap();
+    assert_eq!(joiner.logical_bytes, outcome.model_bytes_per_step * 2);
+}
+
+/// Late join with a *stateful* scheme (PowerSGD): the joiner's fresh
+/// warm-start `Q` differs from the survivors', so bitwise-vs-oracle is
+/// out of reach — but every member must still agree with every other
+/// (the aggregate is shared), which is exactly what the coordinator's
+/// member-consistency fallback verifies.
+#[test]
+fn late_joiner_with_stateful_scheme_is_member_consistent() {
+    let cfg = HarnessConfig { elastic: true, steps: 4, ..HarnessConfig::default() };
+    let (outcome, results) = run_elastic_ring(2, 3, &cfg, Some(2));
+    let (survivors, crashed) = split_survivors(results);
+    assert_eq!(crashed, 0);
+    assert_eq!(survivors, vec![0, 1, 2]);
+    let outcome = outcome.unwrap_or_else(|e| panic!("coordinate_elastic: {e:#}"));
+    assert_eq!(outcome.reports.len(), 3);
+    assert!(outcome.reports.iter().all(|r| r.bitwise), "members diverged from each other");
+    assert!(!outcome.oracle_verified, "a stateful join must fall back to member-consistency");
+    assert_eq!(outcome.epochs[1].joined, 1);
+}
+
+/// Determinism acceptance: under stable membership the elastic machinery
+/// (heartbeat barrier, epoch accounting) must not perturb a single bit —
+/// the coordinator verifies every member against the composed oracle,
+/// which this test additionally pins to the plain non-elastic oracle.
+#[test]
+fn stable_membership_elastic_run_is_bitwise_equal_to_lockstep_oracle() {
+    for world in [2usize, 4] {
+        let cfg = HarnessConfig { elastic: true, steps: 3, seed: 17, ..HarnessConfig::default() };
+        let (outcome, results) = run_elastic_ring(world, world, &cfg, None);
+        let (survivors, crashed) = split_survivors(results);
+        assert_eq!(crashed, 0, "w={world}");
+        assert_eq!(survivors.len(), world, "w={world}");
+        let outcome = outcome.unwrap_or_else(|e| panic!("w={world} coordinate_elastic: {e:#}"));
+        assert_eq!(outcome.reports.len(), world);
+        assert!(outcome.reports.iter().all(|r| r.bitwise), "w={world}");
+        assert_eq!(outcome.epochs.len(), 1, "w={world}: no re-formation may happen");
+        // The composed oracle over a single stable epoch *is* the
+        // non-elastic lockstep oracle, parameters and logical bytes.
+        let plans =
+            [EpochPlan { world, start_step: 0, departed_slots: Vec::new(), joined: 0 }];
+        let (composed, composed_bytes) = elastic_oracle_trajectory(&cfg, &plans).unwrap();
+        let (plain, plain_bytes) = oracle_trajectory(world, &cfg).unwrap();
+        assert_eq!(composed_bytes, plain_bytes, "w={world}");
+        for (a, b) in composed.iter().zip(plain.iter()) {
+            assert_eq!(a.data(), b.data(), "w={world}: composed oracle drifted");
+        }
+        assert_eq!(outcome.logical_bytes, plain_bytes, "w={world}");
+    }
+}
+
+/// The composed elastic oracle applied to a crash schedule differs from
+/// the full-world oracle (the departed worker's gradients stop
+/// contributing) but matches a fresh replay of itself — determinism of
+/// the reference itself, which all crash tests lean on.
+#[test]
+fn composed_elastic_oracle_is_deterministic_and_world_sensitive() {
+    let cfg = HarnessConfig { steps: 4, ..HarnessConfig::default() };
+    let plans = [
+        EpochPlan { world: 3, start_step: 0, departed_slots: Vec::new(), joined: 0 },
+        EpochPlan { world: 2, start_step: 1, departed_slots: vec![1], joined: 0 },
+    ];
+    let (a, bytes_a) = elastic_oracle_trajectory(&cfg, &plans).unwrap();
+    let (b, bytes_b) = elastic_oracle_trajectory(&cfg, &plans).unwrap();
+    assert_eq!(bytes_a, bytes_b);
+    for (ta, tb) in a.iter().zip(b.iter()) {
+        assert_eq!(ta.data(), tb.data());
+    }
+    let (full, _) = oracle_trajectory(3, &cfg).unwrap();
+    let drifted = a.iter().zip(full.iter()).any(|(ta, tb)| ta.data() != tb.data());
+    assert!(drifted, "dropping a worker must change the trajectory");
+}
+
+/// Multi-process churn smoke (the CI `churn-smoke` job runs the same
+/// scenario from the shell): a 4-process `launch --elastic` with a
+/// deterministic boundary crash completes at `W=3` and prints the epoch
+/// transition.
+#[test]
+fn multiprocess_elastic_launch_survives_an_injected_crash() {
+    let exe = env!("CARGO_BIN_EXE_powersgd");
+    let output = std::process::Command::new(exe)
+        .args([
+            "launch",
+            "--workers",
+            "4",
+            "--compressor",
+            "powersgd",
+            "--rank",
+            "2",
+            "--steps",
+            "4",
+            "--seed",
+            "7",
+            "--elastic",
+            "--fail-rank",
+            "2",
+            "--fail-at-step",
+            "1",
+        ])
+        .output()
+        .expect("spawning powersgd launch --elastic");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "elastic launch failed ({}):\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stdout.contains("bitwise-identical to the composed elastic oracle"),
+        "missing elastic verification line in:\n{stdout}"
+    );
+    assert!(
+        stderr.contains("epoch 1: world 3"),
+        "missing epoch transition in:\n{stderr}"
+    );
+}

@@ -18,8 +18,10 @@
 
 use powersgd::simulate::Scheme;
 use powersgd::transport::tcp::{
-    coordinate, harness_registry, run_worker, HarnessConfig, LaunchOutcome, Rendezvous,
+    coordinate, harness_registry, join, run_worker, worker_trajectory, HarnessConfig,
+    LaunchOutcome, MeteredTransport, Rendezvous, TcpRing,
 };
+use powersgd::transport::PipelineMode;
 use std::time::Duration;
 
 const TIMEOUT: Duration = Duration::from_secs(30);
@@ -278,4 +280,85 @@ fn coordinator_reports_death_instead_of_hanging() {
         format!("{coord_err:#}").contains("died before reporting"),
         "unhelpful coordinator error: {coord_err:#}"
     );
+}
+
+/// Killing *each* ring position (first, middle, last rank of a
+/// 3-worker ring) mid-run surfaces an error on every survivor that
+/// names the survivor's **correct** ring neighbor — never a
+/// misattributed rank — including with completion-queue tickets in
+/// flight (`--pipeline overlap` posts collectives early, so the peer
+/// dies with posted-but-unresolved tickets outstanding).
+///
+/// The doomed worker runs one full step (so every survivor's step-0
+/// collective completes) and then drops its sockets; the survivors'
+/// step-1 collectives hit the EOF cascade. A survivor's error may blame
+/// either the dead rank or the neighbor that tore down in response —
+/// both are *its* real neighbors; what must never happen is blaming a
+/// rank that is not adjacent to it.
+#[test]
+fn killed_worker_at_each_ring_position_names_the_right_neighbor() {
+    let world = 3usize;
+    for pipeline in [PipelineMode::Off, PipelineMode::Overlap] {
+        for dead in 0..world {
+            let rendezvous = Rendezvous::bind("127.0.0.1:0").expect("bind");
+            let addr = rendezvous.addr().expect("addr");
+            let survivor_cfg =
+                HarnessConfig { steps: 2, pipeline, ..HarnessConfig::default() };
+            let doomed_cfg = HarnessConfig { steps: 1, ..survivor_cfg.clone() };
+            let short = Duration::from_millis(800);
+
+            let threads: Vec<_> = (0..world)
+                .map(|_| {
+                    let addr = addr.clone();
+                    let survivor_cfg = survivor_cfg.clone();
+                    let doomed_cfg = doomed_cfg.clone();
+                    std::thread::spawn(move || -> (usize, anyhow::Result<()>) {
+                        let joined = join(&addr, TIMEOUT).expect("join");
+                        let rank = joined.rank;
+                        let (ring, _control) =
+                            TcpRing::from_joined(joined, short).expect("ring");
+                        let cfg = if rank == dead { &doomed_cfg } else { &survivor_cfg };
+                        let result =
+                            worker_trajectory(MeteredTransport::new(ring), cfg).map(|_| ());
+                        (rank, result)
+                    })
+                })
+                .collect();
+            // Keep the control streams alive until the workers finish;
+            // no coordinate() here — the trajectories never report.
+            let controls = rendezvous.run(world, TIMEOUT).expect("rendezvous");
+
+            for handle in threads {
+                let (rank, result) = handle.join().expect("worker thread panicked");
+                if rank == dead {
+                    result.unwrap_or_else(|e| {
+                        panic!("doomed rank {rank} must finish its single step: {e:#}")
+                    });
+                    continue;
+                }
+                let err = result
+                    .expect_err(&format!("survivor {rank} must error once rank {dead} is gone"));
+                let msg = format!("{err:#}");
+                let pred = (rank + world - 1) % world;
+                let succ = (rank + 1) % world;
+                assert!(
+                    msg.contains("ring collective failed at step 1"),
+                    "survivor {rank} (dead {dead}, {pipeline:?}): failed outside step 1: {msg}"
+                );
+                assert!(
+                    msg.contains(&format!("predecessor rank {pred}"))
+                        || msg.contains(&format!("successor rank {succ}")),
+                    "survivor {rank} (dead {dead}, {pipeline:?}) does not name a real \
+                     neighbor: {msg}"
+                );
+                assert!(
+                    !msg.contains(&format!("predecessor rank {succ}"))
+                        && !msg.contains(&format!("successor rank {pred}")),
+                    "survivor {rank} (dead {dead}, {pipeline:?}) misattributes the ring \
+                     topology: {msg}"
+                );
+            }
+            drop(controls);
+        }
+    }
 }
