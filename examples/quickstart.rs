@@ -30,6 +30,9 @@
 //! kernel pool (DESIGN.md §11). Results are bitwise identical at every
 //! thread count, so this is purely a wall-clock knob — and it composes
 //! with `--engine threaded` / `launch`: W workers × N kernel threads.
+//! The kernels are the blocked SIMD backend by default; setting
+//! `POWERSGD_KERNEL_BACKEND=reference` swaps in the naive reference
+//! kernels (for differential testing — much slower, same invariance).
 //!
 //! Add `--pipeline overlap` to `train`/`launch` to post the vector
 //! all-reduce early and drain it behind the factor collectives

@@ -24,6 +24,17 @@
 //! `overhead_x` — counters and quality gauges are fixed static atomics,
 //! so the pair pins the cost of the one-relaxed-load-when-off design.
 //!
+//! A **backend duel** section runs every GEMM kernel and the full step
+//! single-threaded on both kernel backends (DESIGN.md §11): the blocked
+//! `kernel/{nn,tn,nt}/blocked/...` rows against their
+//! `kernel/{nn,tn,nt}/naive/...` reference twins, each carrying
+//! `throughput_gflops` plus roofline-style context (arithmetic
+//! intensity in flops/byte and achieved GB/s), and a `speedup_x`
+//! record per kernel×shape. The headline `powersgd_step/kernel/{naive,
+//! blocked}` pair times the whole compress step per backend. The
+//! `*_gflops` metrics are throughput (higher is better); the
+//! `bench-diff` gate compares them direction-reversed.
+//!
 //! Emits `BENCH_kernel_hotpath.json` for the CI `bench-smoke` artifact
 //! trail. `BENCH_QUICK=1` shrinks shapes and iteration budgets (the SVD
 //! drops to a smaller matrix) so the smoke job stays fast.
@@ -31,8 +42,10 @@
 use powersgd::collectives::CommLog;
 use powersgd::compress::{Compressor, PowerSgd};
 use powersgd::linalg::{gram_schmidt_in_place, svd};
-use powersgd::runtime::pool::set_threads;
-use powersgd::tensor::{matmul, matmul_at_b, matmul_nt_into, Tensor};
+use powersgd::runtime::pool::{set_kernel_backend, set_threads, KernelBackend};
+use powersgd::tensor::{
+    matmul, matmul_at_b, matmul_into, matmul_nt_into, matmul_tn_into, Tensor,
+};
 use powersgd::util::{black_box, quick_mode, BenchJson, BenchRunner, Rng};
 
 fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
@@ -136,6 +149,119 @@ fn main() {
             &[("threads", t as f64), ("mean_ms", mean), ("speedup_x", speedup)],
         );
     }
+
+    // --- backend duel: blocked vs naive reference, single thread ---
+    // The reference backend is the differential harness's executable
+    // specification (tensor/reference.rs); timing it next to the
+    // blocked kernels keeps the blocked-vs-naive speedup an honest,
+    // standing record instead of a one-off claim. GFLOP/s uses the
+    // textbook 2·n·m·r GEMM flop count; bytes are the compulsory
+    // traffic (read both operands once, write the output once), so
+    // `ai_flops_per_byte` and `gbytes_per_s` sketch where each shape
+    // sits on the roofline.
+    set_threads(1);
+    let duel_r = 2usize;
+    for &(n, m) in shapes {
+        let mut duel_rng = Rng::new(57);
+        let a = rand_tensor(&[n, m], &mut duel_rng);
+        let b = rand_tensor(&[m, duel_r], &mut duel_rng);
+        let p = rand_tensor(&[n, duel_r], &mut duel_rng);
+        let q = rand_tensor(&[m, duel_r], &mut duel_rng);
+        let mut nn_out = Tensor::zeros(&[n, duel_r]);
+        let mut tn_out = Tensor::zeros(&[m, duel_r]);
+        let mut nt_out = Tensor::zeros(&[n, m]);
+        let flops = (2 * n * m * duel_r) as f64;
+        // (kernel key, compulsory bytes) per GEMM variant; all three
+        // share `flops` above.
+        let cases: [(&str, f64); 3] = [
+            ("nn", 4.0 * (n * m + m * duel_r + n * duel_r) as f64),
+            ("tn", 4.0 * (n * m + n * duel_r + m * duel_r) as f64),
+            ("nt", 4.0 * (n * duel_r + m * duel_r + n * m) as f64),
+        ];
+        let mut gflops_by = std::collections::HashMap::new();
+        for (bname, backend) in
+            [("naive", KernelBackend::Reference), ("blocked", KernelBackend::Blocked)]
+        {
+            set_kernel_backend(backend);
+            let mut runner = BenchRunner::from_env();
+            let means = [
+                runner
+                    .bench(&format!("kernel nn {n}x{m} r={duel_r} [{bname}]"), || {
+                        matmul_into(&a, &b, &mut nn_out);
+                        black_box(nn_out.data()[0]);
+                    })
+                    .mean,
+                runner
+                    .bench(&format!("kernel tn {n}x{m} r={duel_r} [{bname}]"), || {
+                        matmul_tn_into(&a, &p, &mut tn_out);
+                        black_box(tn_out.data()[0]);
+                    })
+                    .mean,
+                runner
+                    .bench(&format!("kernel nt {n}x{m} r={duel_r} [{bname}]"), || {
+                        matmul_nt_into(&p, &q, &mut nt_out);
+                        black_box(nt_out.data()[0]);
+                    })
+                    .mean,
+            ];
+            json.record_runner(&runner);
+            for ((kname, bytes), mean_ms) in cases.iter().zip(means) {
+                let secs = mean_ms / 1e3;
+                let gf = flops / secs / 1e9;
+                gflops_by.insert((*kname, bname), gf);
+                json.record(
+                    &format!("kernel/{kname}/{bname}/{n}x{m}r{duel_r}"),
+                    &[
+                        ("throughput_gflops", gf),
+                        ("mean_ms", mean_ms),
+                        ("ai_flops_per_byte", flops / bytes),
+                        ("gbytes_per_s", bytes / secs / 1e9),
+                    ],
+                );
+            }
+        }
+        for (kname, _) in &cases {
+            let fast = gflops_by[&(*kname, "blocked")];
+            let slow = gflops_by[&(*kname, "naive")];
+            println!(
+                "kernel {kname} {n}x{m} r={duel_r}: blocked {fast:.2} GFLOP/s vs naive {slow:.2} ({:.2}x)",
+                fast / slow
+            );
+            json.record(
+                &format!("kernel/{kname}/speedup/{n}x{m}r{duel_r}"),
+                &[("speedup_x", fast / slow)],
+            );
+        }
+    }
+
+    // The same duel over the whole compress step: GEMM sweeps,
+    // all-reduces, Gram–Schmidt, reconstruction, per backend.
+    let mut step_by_backend: Vec<f64> = Vec::new();
+    for (bname, backend) in
+        [("naive", KernelBackend::Reference), ("blocked", KernelBackend::Blocked)]
+    {
+        set_kernel_backend(backend);
+        let mut comp = PowerSgd::new(2, 1);
+        let mut runner = BenchRunner::from_env();
+        let summary =
+            runner.bench(&format!("PowerSGD rank-2 full step [kernel={bname}]"), || {
+                let mut log = CommLog::default();
+                black_box(comp.compress_aggregate(&updates, &mut log));
+            });
+        step_by_backend.push(summary.mean);
+        json.record_runner(&runner);
+        json.record(
+            &format!("powersgd_step/kernel/{bname}"),
+            &[("mean_ms", summary.mean)],
+        );
+    }
+    set_kernel_backend(KernelBackend::Blocked);
+    let duel_speedup = step_by_backend[0] / step_by_backend[1];
+    println!(
+        "full step: blocked {:.2} ms vs naive {:.2} ms ({duel_speedup:.2}x)",
+        step_by_backend[1], step_by_backend[0]
+    );
+    json.record("powersgd_step/kernel/speedup", &[("speedup_x", duel_speedup)]);
 
     // --- tracing overhead: the identical full step with the span
     // recorder off vs fully on (timing + trace). The disabled path is

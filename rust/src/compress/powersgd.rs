@@ -17,7 +17,9 @@ use crate::util::Rng;
 /// `w·k + slot` (worker-major); the flat per-worker buffers feed the
 /// packed all-reduces. Everything is claimed on the first step of a
 /// shape-stable workload and reused verbatim afterwards
-/// ([`TensorPool::allocations`] is the regression counter).
+/// ([`TensorPool::allocations`] is the regression counter; the blocked
+/// kernels' own panels/tiles amortize the same way under
+/// [`kernel_scratch_grows`](crate::runtime::pool::kernel_scratch_grows)).
 #[derive(Debug, Default)]
 struct OracleScratch {
     /// Left factors `P_w = M_w·Q`; slots `0..k` double as the shared

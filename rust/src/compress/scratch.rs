@@ -12,6 +12,15 @@
 //! [`ScratchArena::allocations`] counts every tensor the arena had to
 //! allocate; after the shapes stabilize (step 1) the count must stop
 //! moving — `tests/integration_decentralized.rs` pins exactly that.
+//!
+//! The arena covers the *compressor-owned* buffers only. The blocked
+//! GEMM / Gram–Schmidt kernels keep their packed panels, accumulator
+//! tiles and reduction partials in per-thread pool scratch with its
+//! own growth counter
+//! ([`kernel_scratch_grows`](crate::runtime::pool::kernel_scratch_grows));
+//! together the two counters make the whole step's zero-alloc steady
+//! state observable, and `tests/proptest_invariants.rs` pins the
+//! kernel side at every thread count.
 
 use crate::tensor::Tensor;
 

@@ -957,7 +957,10 @@ impl DecentralizedCompressor {
 
     /// Total [`ScratchArena`] tensor allocations across all workers —
     /// the zero-alloc regression hook: on a shape-stable workload this
-    /// must not change after the first step.
+    /// must not change after the first step. Kernel-side scratch (the
+    /// blocked kernels' packed panels and tiles) is tracked separately
+    /// by [`kernel_scratch_grows`](crate::runtime::pool::kernel_scratch_grows)
+    /// and must go flat at the same point.
     pub fn scratch_allocations(&self) -> u64 {
         self.workers.iter().map(|s| s.scratch.allocations()).sum()
     }

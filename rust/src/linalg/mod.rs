@@ -10,5 +10,5 @@
 mod gram_schmidt;
 mod svd;
 
-pub use gram_schmidt::{gram_schmidt_in_place, orthonormal_error};
+pub use gram_schmidt::{gram_schmidt_in_place, orthonormal_error, reference_gram_schmidt_in_place};
 pub use svd::{best_rank_r, svd, Svd};

@@ -42,7 +42,11 @@
 //! GEMMs and Gram–Schmidt. Kernel results are **bitwise identical at
 //! every thread count**, so `--threads` only changes wall-clock. It
 //! composes with `--engine threaded`: W worker threads each dispatch
-//! onto the shared pool (W workers × N kernel threads).
+//! onto the shared pool (W workers × N kernel threads). The kernels
+//! themselves are the blocked SIMD implementations;
+//! `POWERSGD_KERNEL_BACKEND=reference` swaps in the naive reference
+//! backend (slow — for differential testing and the blocked-vs-naive
+//! bench duel only; the thread-count invariance holds on both).
 //!
 //! `--trace PATH` records the span timeline (step phases, compression
 //! kernels, ring collectives, wire codec; DESIGN.md §13) and writes
@@ -189,9 +193,10 @@ fn print_help() {
          \x20            (--suite NAME | --all | --list; --quick; --out-dir D)\n\
          \x20 bench-diff compare two BENCH_<name>.json artifacts: markdown\n\
          \x20            delta table; non-zero exit when a *_ms metric slows\n\
-         \x20            beyond --tolerance R (default 0.25) or a *_bytes\n\
-         \x20            metric drifts at all; --report-only warns instead\n\
-         \x20            (for cross-machine baselines)\n\
+         \x20            beyond --tolerance R (default 0.25), a *_gflops\n\
+         \x20            metric drops beyond it, or a *_bytes metric drifts\n\
+         \x20            at all; --report-only warns instead (for\n\
+         \x20            cross-machine baselines)\n\
          \x20 artifacts  list available compiled artifacts\n\
          \n\
          shared options:\n\
@@ -199,7 +204,11 @@ fn print_help() {
          \x20                  and Gram-Schmidt (default: $POWERSGD_THREADS,\n\
          \x20                  else 1). Results are bitwise identical at every\n\
          \x20                  thread count. Composes with --engine threaded:\n\
-         \x20                  W worker threads x N kernel threads.\n\
+         \x20                  W worker threads x N kernel threads. Kernels\n\
+         \x20                  run the blocked SIMD backend; set\n\
+         \x20                  POWERSGD_KERNEL_BACKEND=reference to force the\n\
+         \x20                  naive reference kernels (differential testing\n\
+         \x20                  and bench duels only -- much slower).\n\
          \x20 --engine E       collective engine: lockstep | threaded\n\
          \x20 --pipeline P     collective scheduling: off | overlap | delayed\n\
          \x20                  (default off). overlap posts collectives early\n\

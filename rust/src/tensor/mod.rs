@@ -9,6 +9,7 @@
 //! matrices are rank-2 views over the flat buffer.
 
 mod matmul;
+pub mod reference;
 pub use matmul::{matmul, matmul_at_b, matmul_into, matmul_nt, matmul_nt_into, matmul_tn_into};
 
 /// Contiguous row-major f32 tensor.

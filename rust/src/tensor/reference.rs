@@ -1,0 +1,181 @@
+//! Naive reference GEMM kernels — the executable specification behind
+//! [`KernelBackend::Reference`](crate::runtime::pool::KernelBackend).
+//!
+//! Each kernel here is the textbook triple loop: one serial f32
+//! accumulation chain per output element, no packed panels, no lane
+//! splitting, no skipped terms. Slow on purpose — these exist so that
+//!
+//! - the differential harness (`tests/integration_kernel_equiv.rs`)
+//!   has an obviously-correct implementation to compare the blocked
+//!   kernels against, and
+//! - `benches/kernel_hotpath.rs` can report an honest blocked-vs-naive
+//!   GFLOP/s speedup.
+//!
+//! They still run on the kernel pool (sharded over *disjoint outputs*,
+//! never over accumulation), so each reference kernel is itself
+//! bitwise-identical at every thread count — the harness sweeps
+//! threads on both backends.
+//!
+//! Equivalence to the blocked kernels, per kernel (DESIGN.md §11):
+//!
+//! - [`matmul_tn_into`] and [`matmul_nt_into`]: the blocked kernels
+//!   keep the exact per-element accumulation chain, so outputs are
+//!   equal on finite data (`==` on every element; the blocked nt
+//!   kernel's overwrite-first-term start can flip the sign of an exact
+//!   zero, which `==` treats as equal).
+//! - [`matmul_into`]: the blocked kernel splits the k dimension over
+//!   8 lanes; a documented one-time numerics change, ULP-bounded and
+//!   pinned by the harness.
+
+use super::Tensor;
+use crate::runtime::pool::{parallel_ranges, DisjointSlice};
+
+/// Matches the blocked kernels' fan-out threshold so both backends
+/// shard identically-shaped problems at the same sizes.
+const MIN_PAR_ELEMS: usize = 16 * 1024;
+
+/// out[n×r] = A[n×m] · B[m×r]: serial k-ordered f32 dot per output.
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    let (n, m) = (a.rows(), a.cols());
+    let (mb, r) = (b.rows(), b.cols());
+    assert_eq!(m, mb, "matmul inner-dim mismatch: {m} vs {mb}");
+    assert_eq!(out.shape(), &[n, r], "matmul output shape");
+    let ad = a.data();
+    let bd = b.data();
+    let od = DisjointSlice::new(out.data_mut());
+    let min_rows = (MIN_PAR_ELEMS / m.max(1)).max(1);
+    parallel_ranges(n, min_rows, move |i0, i1| {
+        // SAFETY: row bands are disjoint across tasks.
+        let band = unsafe { od.range_mut(i0 * r, i1 * r) };
+        for i in i0..i1 {
+            for c in 0..r {
+                let mut acc = 0.0f32;
+                for k in 0..m {
+                    acc += ad[i * m + k] * bd[k * r + c];
+                }
+                band[(i - i0) * r + c] = acc;
+            }
+        }
+    });
+}
+
+/// out[m×r] = Aᵀ[m×n] · P[n×r]: serial i-ordered f32 accumulation per
+/// output, reading A column-wise (no transposed scratch).
+pub fn matmul_tn_into(a: &Tensor, p: &Tensor, out: &mut Tensor) {
+    let (n, m) = (a.rows(), a.cols());
+    let (np, r) = (p.rows(), p.cols());
+    assert_eq!(n, np, "matmul_tn inner-dim mismatch: {n} vs {np}");
+    assert_eq!(out.shape(), &[m, r], "matmul_tn output shape");
+    let ad = a.data();
+    let pd = p.data();
+    let od = DisjointSlice::new(out.data_mut());
+    let min_cols = (MIN_PAR_ELEMS / n.max(1)).max(1);
+    parallel_ranges(m, min_cols, move |j0, j1| {
+        // SAFETY: column bands are disjoint across tasks.
+        let band = unsafe { od.range_mut(j0 * r, j1 * r) };
+        for j in j0..j1 {
+            for c in 0..r {
+                let mut acc = 0.0f32;
+                for i in 0..n {
+                    acc += ad[i * m + j] * pd[i * r + c];
+                }
+                band[(j - j0) * r + c] = acc;
+            }
+        }
+    });
+}
+
+/// out[n×m] = P[n×r] · Qᵀ (Q is m×r): serial c-ordered f32 dot per
+/// output element.
+pub fn matmul_nt_into(p: &Tensor, q: &Tensor, out: &mut Tensor) {
+    let (n, r) = (p.rows(), p.cols());
+    let (m, rq) = (q.rows(), q.cols());
+    assert_eq!(r, rq, "matmul_nt rank mismatch: {r} vs {rq}");
+    assert_eq!(out.shape(), &[n, m], "matmul_nt output shape");
+    let pd = p.data();
+    let qd = q.data();
+    let od = DisjointSlice::new(out.data_mut());
+    let min_rows = (MIN_PAR_ELEMS / m.max(1)).max(1);
+    parallel_ranges(n, min_rows, move |i0, i1| {
+        // SAFETY: row bands are disjoint across tasks.
+        let band = unsafe { od.range_mut(i0 * m, i1 * m) };
+        for i in i0..i1 {
+            for j in 0..m {
+                let mut acc = 0.0f32;
+                for c in 0..r {
+                    acc += pd[i * r + c] * qd[j * r + c];
+                }
+                band[(i - i0) * m + j] = acc;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pool::{set_threads, test_guard};
+    use crate::util::Rng;
+
+    fn random(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    /// The reference kernels are themselves thread-count invariant —
+    /// otherwise the differential harness couldn't sweep threads on
+    /// both backends.
+    #[test]
+    fn reference_kernels_bitwise_match_serial() {
+        let _g = test_guard();
+        let mut rng = Rng::new(23);
+        let (n, m, r) = (300, 170, 3);
+        let a = random(&[n, m], &mut rng);
+        let b = random(&[m, r], &mut rng);
+        let p = random(&[n, r], &mut rng);
+        let q = random(&[m, r], &mut rng);
+        set_threads(1);
+        let mut ab = Tensor::zeros(&[n, r]);
+        matmul_into(&a, &b, &mut ab);
+        let mut atp = Tensor::zeros(&[m, r]);
+        matmul_tn_into(&a, &p, &mut atp);
+        let mut pqt = Tensor::zeros(&[n, m]);
+        matmul_nt_into(&p, &q, &mut pqt);
+        for t in [2usize, 4, 8] {
+            set_threads(t);
+            let mut got = Tensor::zeros(&[n, r]);
+            matmul_into(&a, &b, &mut got);
+            assert_eq!(got.data(), ab.data(), "reference nn t={t}");
+            let mut got = Tensor::zeros(&[m, r]);
+            matmul_tn_into(&a, &p, &mut got);
+            assert_eq!(got.data(), atp.data(), "reference tn t={t}");
+            let mut got = Tensor::zeros(&[n, m]);
+            matmul_nt_into(&p, &q, &mut got);
+            assert_eq!(got.data(), pqt.data(), "reference nt t={t}");
+        }
+    }
+
+    /// Against an f64 oracle: the reference kernels are the textbook
+    /// computation, merely rounded per-step to f32.
+    #[test]
+    fn reference_matches_f64_oracle() {
+        let mut rng = Rng::new(24);
+        let (n, m, r) = (37, 53, 4);
+        let a = random(&[n, m], &mut rng);
+        let b = random(&[m, r], &mut rng);
+        let mut oracle = Tensor::zeros(&[n, r]);
+        for i in 0..n {
+            for c in 0..r {
+                let mut acc = 0.0f64;
+                for k in 0..m {
+                    acc += a.at(i, k) as f64 * b.at(k, c) as f64;
+                }
+                oracle.set(i, c, acc as f32);
+            }
+        }
+        let mut got = Tensor::zeros(&[n, r]);
+        matmul_into(&a, &b, &mut got);
+        assert!(got.allclose(&oracle, 1e-4, 1e-4));
+    }
+}

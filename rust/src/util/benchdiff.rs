@@ -13,6 +13,10 @@
 //! - `*_bytes` traffic metrics compare **exactly**: wire and logical
 //!   byte counts are deterministic, so any drift is a regression until
 //!   the baseline is deliberately regenerated.
+//! - `*_gflops` throughput metrics compare with the same relative
+//!   tolerance **direction-reversed**: higher is better, so only a
+//!   *drop* beyond the threshold regresses — the gate that keeps the
+//!   blocked kernels' GFLOP/s records from silently decaying.
 //! - Everything else (`n`, `threads` tags, …) is context, not compared.
 //!
 //! Context axes (`bench`, `engine`, `transport`, `pipeline`, `threads`,
@@ -336,7 +340,8 @@ pub fn diff(old: &BenchDoc, new: &BenchDoc, tolerance: f64, report_only: bool) -
         for (key, old_v) in &rec.metrics {
             let timing = key.ends_with("_ms");
             let traffic = key.ends_with("_bytes");
-            if !timing && !traffic {
+            let throughput = key.ends_with("_gflops");
+            if !timing && !traffic && !throughput {
                 continue;
             }
             let Some(new_v) = new_rec.metric(key) else {
@@ -347,6 +352,9 @@ pub fn diff(old: &BenchDoc, new: &BenchDoc, tolerance: f64, report_only: bool) -
             let regressed = if traffic {
                 // Deterministic byte counts: bitwise drift is the bug.
                 new_v != *old_v
+            } else if throughput {
+                // Higher is better: only a drop beyond tolerance fails.
+                rel.is_finite() && rel < -tolerance
             } else {
                 rel.is_finite() && rel > tolerance
             };
@@ -435,6 +443,27 @@ mod tests {
         // A speedup of the same magnitude is not a regression.
         let r = diff(&new, &old, DEFAULT_TOLERANCE, false).unwrap();
         assert_eq!(r.regressions, 0);
+    }
+
+    #[test]
+    fn gflops_compare_direction_reversed() {
+        let mk = |gf: f64| {
+            let mut j = BenchJson::new("unit");
+            j.set_context("threaded", "tcp");
+            j.record("kernel/nn/blocked", &[("throughput_gflops", gf), ("speedup_x", 2.0)]);
+            parse_bench_json(&j.to_json()).unwrap()
+        };
+        // A throughput drop beyond tolerance regresses…
+        let r = diff(&mk(10.0), &mk(6.0), DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 1, "{:?}", r.lines);
+        // …an equal-magnitude improvement passes…
+        let r = diff(&mk(6.0), &mk(10.0), DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 0, "{:?}", r.lines);
+        // …noise-level drift passes…
+        let r = diff(&mk(10.0), &mk(9.0), DEFAULT_TOLERANCE, false).unwrap();
+        assert_eq!(r.regressions, 0, "{:?}", r.lines);
+        // …and the unsuffixed ratio metric is context, never compared.
+        assert!(r.lines.iter().all(|l| l.metric != "speedup_x"));
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Differential kernel-equivalence harness (DESIGN.md §11).
+//!
+//! The blocked, register-tiled GEMM kernels and the fused Gram–Schmidt
+//! sweep are compared against the naive reference backend
+//! (`KernelBackend::Reference`) over degenerate, odd, prime and
+//! chunk-boundary shapes, at thread counts {1, 2, 4, 8}, through the
+//! *public dispatch path* (the process backend is flipped, not the
+//! internals called directly). The contract, per kernel:
+//!
+//! - `matmul_tn_into` / `matmul_nt_into`: the blocked kernels keep the
+//!   reference per-element accumulation chain — outputs must be equal
+//!   on every element (`==`; the only representational slack is the
+//!   sign of an exact zero).
+//! - `matmul_into`: the blocked kernel splits the k dimension over 8
+//!   lanes — the one documented GEMM numerics change. Bounded here in
+//!   ULPs (with an absolute floor for cancellation-collapsed outputs);
+//!   the exact accumulation order is pinned by the executable lane
+//!   spec in `tensor/matmul.rs`.
+//! - `gram_schmidt_in_place`: fused right-looking sweep vs textbook
+//!   serial left-looking loop — equal (`==`) for `n ≤ REDUCE_CHUNK`
+//!   where the chunked reductions degenerate to one serial stream,
+//!   ULP-bounded above it (the documented reduction-chunking change).
+//! - Full PowerSGD steps: bitwise thread-count invariant *within*
+//!   each backend; agreeing to working precision *across* backends.
+//!
+//! Both the thread count and the backend are process globals, so every
+//! test here serializes on one lock and restores the ambient values.
+
+use powersgd::collectives::CommLog;
+use powersgd::compress::{Compressor, PowerSgd};
+use powersgd::linalg::gram_schmidt_in_place;
+use powersgd::runtime::pool::{
+    kernel_backend, set_kernel_backend, set_threads, threads, KernelBackend, REDUCE_CHUNK,
+};
+use powersgd::tensor::{matmul_into, matmul_nt_into, matmul_tn_into, Tensor};
+use powersgd::util::Rng;
+use std::sync::{Mutex, MutexGuard};
+
+static GLOBALS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serializes every test in this binary (all of them flip the
+/// process-global backend and/or thread count) and restores the
+/// ambient values on drop, so a `POWERSGD_THREADS=4` CI pass keeps its
+/// configuration across tests.
+struct GlobalsGuard {
+    _guard: MutexGuard<'static, ()>,
+    ambient_threads: usize,
+    ambient_backend: KernelBackend,
+}
+
+impl Drop for GlobalsGuard {
+    fn drop(&mut self) {
+        set_threads(self.ambient_threads);
+        set_kernel_backend(self.ambient_backend);
+    }
+}
+
+fn lock() -> GlobalsGuard {
+    let guard = GLOBALS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    GlobalsGuard {
+        _guard: guard,
+        ambient_threads: threads(),
+        ambient_backend: kernel_backend(),
+    }
+}
+
+const SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Degenerate, odd, prime, and chunk-boundary shapes: (n, m, r).
+/// 509 and 1031 are prime; 4096/4097 straddle REDUCE_CHUNK.
+const SHAPES: [(usize, usize, usize); 7] = [
+    (1, 1, 1),
+    (7, 13, 3),
+    (63, 63, 5),
+    (509, 127, 7),
+    (4096, 300, 2),
+    (4097, 96, 8),
+    (40, 1031, 4),
+];
+
+fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// Distance in units-in-the-last-place between two finite f32s, via
+/// the monotone integer mapping (±0.0 are 0 apart).
+fn ulp_dist(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let i = x.to_bits() as i32;
+        (if i < 0 { i32::MIN - i } else { i }) as i64
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Every element within `max_ulp` ULPs, with an absolute floor for
+/// outputs that cancellation collapsed toward zero (where ULP distance
+/// is meaningless but the absolute error is still tiny).
+fn assert_ulp_close(got: &Tensor, want: &Tensor, max_ulp: u64, abs_floor: f32, ctx: &str) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape");
+    for (i, (&a, &b)) in got.data().iter().zip(want.data().iter()).enumerate() {
+        assert!(a.is_finite() && b.is_finite(), "{ctx}: non-finite at {i}: {a} vs {b}");
+        let d = ulp_dist(a, b);
+        assert!(
+            d <= max_ulp || (a - b).abs() <= abs_floor,
+            "{ctx}: element {i} differs by {d} ULPs ({a} vs {b})"
+        );
+    }
+}
+
+#[test]
+fn ulp_dist_is_sane() {
+    let _g = lock();
+    assert_eq!(ulp_dist(1.0, 1.0), 0);
+    assert_eq!(ulp_dist(0.0, -0.0), 0);
+    assert_eq!(ulp_dist(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+    assert!(ulp_dist(-1.0, 1.0) > 1 << 24);
+}
+
+/// tn and nt keep the reference accumulation chain: `==`-equal output
+/// at every shape and thread count, through the dispatch path.
+#[test]
+fn tn_nt_blocked_equal_reference_across_threads() {
+    let _g = lock();
+    let mut rng = Rng::new(401);
+    for &(n, m, r) in &SHAPES {
+        let a = rand_tensor(&[n, m], &mut rng);
+        let p = rand_tensor(&[n, r], &mut rng);
+        let q = rand_tensor(&[m, r], &mut rng);
+        set_kernel_backend(KernelBackend::Reference);
+        set_threads(1);
+        let mut tn_ref = Tensor::zeros(&[m, r]);
+        matmul_tn_into(&a, &p, &mut tn_ref);
+        let mut nt_ref = Tensor::zeros(&[n, m]);
+        matmul_nt_into(&p, &q, &mut nt_ref);
+        for &t in &SWEEP {
+            set_threads(t);
+            set_kernel_backend(KernelBackend::Blocked);
+            let mut got = Tensor::zeros(&[m, r]);
+            matmul_tn_into(&a, &p, &mut got);
+            assert_eq!(got.data(), tn_ref.data(), "tn n={n} m={m} r={r} t={t}");
+            let mut got = Tensor::zeros(&[n, m]);
+            matmul_nt_into(&p, &q, &mut got);
+            assert_eq!(got.data(), nt_ref.data(), "nt n={n} m={m} r={r} t={t}");
+            // The reference backend is itself thread-count invariant —
+            // the premise that lets one serial reference serve the
+            // whole sweep.
+            set_kernel_backend(KernelBackend::Reference);
+            let mut got = Tensor::zeros(&[m, r]);
+            matmul_tn_into(&a, &p, &mut got);
+            assert_eq!(got.data(), tn_ref.data(), "ref tn n={n} m={m} r={r} t={t}");
+            let mut got = Tensor::zeros(&[n, m]);
+            matmul_nt_into(&p, &q, &mut got);
+            assert_eq!(got.data(), nt_ref.data(), "ref nt n={n} m={m} r={r} t={t}");
+        }
+    }
+}
+
+/// nn is the documented numerics change (8-lane k split): ULP-bounded
+/// against the reference at every shape and thread count, and bitwise
+/// thread-count invariant within the blocked backend.
+#[test]
+fn nn_blocked_vs_reference_ulp_bounded_across_threads() {
+    let _g = lock();
+    // Lane-split vs serial sums of ~N(0,1) products drift by
+    // O(sqrt(m)) ULPs; 1024 covers m ≤ 1031 with an order of margin
+    // while still catching any dropped/duplicated term (which shows up
+    // as an O(1) = millions-of-ULPs error). The absolute floor covers
+    // outputs cancellation pushed toward zero.
+    const MAX_ULP: u64 = 1024;
+    const ABS_FLOOR: f32 = 1e-3;
+    let mut rng = Rng::new(402);
+    for &(n, m, r) in &SHAPES {
+        let a = rand_tensor(&[n, m], &mut rng);
+        let b = rand_tensor(&[m, r], &mut rng);
+        set_kernel_backend(KernelBackend::Reference);
+        set_threads(1);
+        let mut nn_ref = Tensor::zeros(&[n, r]);
+        matmul_into(&a, &b, &mut nn_ref);
+        set_kernel_backend(KernelBackend::Blocked);
+        let mut serial = Tensor::zeros(&[n, r]);
+        matmul_into(&a, &b, &mut serial);
+        assert_ulp_close(&serial, &nn_ref, MAX_ULP, ABS_FLOOR, &format!("nn n={n} m={m} r={r}"));
+        for &t in &SWEEP[1..] {
+            set_threads(t);
+            let mut got = Tensor::zeros(&[n, r]);
+            matmul_into(&a, &b, &mut got);
+            assert_eq!(got.data(), serial.data(), "blocked nn invariance n={n} m={m} r={r} t={t}");
+        }
+    }
+}
+
+/// Fused Gram–Schmidt vs the textbook serial reference: `==`-equal up
+/// to the reduction chunk, ULP-bounded above it, at every thread
+/// count; rank-deficient and all-zero edges take identical paths.
+#[test]
+fn gram_schmidt_fused_vs_reference_across_threads() {
+    let _g = lock();
+    let mut rng = Rng::new(403);
+    // (n, r): below/at the chunk boundary → exact; above → ULP-bounded.
+    let shapes: [(usize, usize); 7] =
+        [(1, 1), (7, 3), (63, 5), (509, 8), (REDUCE_CHUNK, 4), (REDUCE_CHUNK + 1, 3), (9000, 4)];
+    for &(n, r) in &shapes {
+        let p0 = rand_tensor(&[n, r], &mut rng);
+        set_kernel_backend(KernelBackend::Reference);
+        set_threads(1);
+        let mut want = p0.clone();
+        gram_schmidt_in_place(&mut want);
+        for &t in &SWEEP {
+            set_threads(t);
+            set_kernel_backend(KernelBackend::Blocked);
+            let mut got = p0.clone();
+            gram_schmidt_in_place(&mut got);
+            if n <= REDUCE_CHUNK {
+                assert_eq!(got.data(), want.data(), "gs n={n} r={r} t={t}");
+            } else {
+                assert_ulp_close(&got, &want, 64, 1e-5, &format!("gs n={n} r={r} t={t}"));
+            }
+            set_kernel_backend(KernelBackend::Reference);
+            let mut got = p0.clone();
+            gram_schmidt_in_place(&mut got);
+            assert_eq!(got.data(), want.data(), "ref gs invariance n={n} r={r} t={t}");
+        }
+    }
+}
+
+#[test]
+fn gram_schmidt_edges_identical_on_both_backends() {
+    let _g = lock();
+    let n = REDUCE_CHUNK - 37; // below the chunk: contract promises ==
+    let mut rng = Rng::new(404);
+    // Middle column duplicates column 0: it must be zeroed (not
+    // normalized noise) by BOTH backends, and the later column's
+    // result must agree exactly.
+    let mut dup = Tensor::zeros(&[n, 3]);
+    rng.fill_normal(dup.data_mut(), 1.0);
+    for i in 0..n {
+        let v = dup.at(i, 0);
+        dup.set(i, 1, v);
+    }
+    let zero = Tensor::zeros(&[n, 2]);
+    for &t in &SWEEP {
+        set_threads(t);
+        set_kernel_backend(KernelBackend::Reference);
+        let mut want_dup = dup.clone();
+        gram_schmidt_in_place(&mut want_dup);
+        let mut want_zero = zero.clone();
+        gram_schmidt_in_place(&mut want_zero);
+        set_kernel_backend(KernelBackend::Blocked);
+        let mut got_dup = dup.clone();
+        gram_schmidt_in_place(&mut got_dup);
+        let mut got_zero = zero.clone();
+        gram_schmidt_in_place(&mut got_zero);
+        assert_eq!(got_dup.data(), want_dup.data(), "rank-deficient t={t}");
+        let dep: f64 = (0..n).map(|i| (got_dup.at(i, 1) as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(dep == 0.0, "dependent column must be exactly zero, norm {dep} t={t}");
+        assert_eq!(got_zero.data(), want_zero.data(), "all-zero t={t}");
+        assert!(got_zero.data().iter().all(|&v| v == 0.0), "all-zero stays zero t={t}");
+    }
+}
+
+/// Full warm-started PowerSGD steps: bitwise thread-count invariant
+/// within each backend, and agreeing to working precision across
+/// backends (the nn lane split propagates through the step).
+#[test]
+fn powersgd_step_cross_backend() {
+    let _g = lock();
+    let shapes: [&[usize]; 4] = [&[4500, 64], &[12, 8], &[5], &[64, 80]];
+    let steps = 3;
+    let workers = 2;
+    let updates_for = |step: usize| -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(950 + step as u64);
+        (0..workers)
+            .map(|_| shapes.iter().map(|s| rand_tensor(s, &mut rng)).collect())
+            .collect()
+    };
+    let run = |backend: KernelBackend, t: usize| -> Vec<Vec<Tensor>> {
+        set_kernel_backend(backend);
+        set_threads(t);
+        let mut comp = PowerSgd::new(2, 17);
+        let mut means = Vec::new();
+        for step in 0..steps {
+            let mut log = CommLog::default();
+            means.push(comp.compress_aggregate(&updates_for(step), &mut log).mean);
+        }
+        means
+    };
+
+    let blocked = run(KernelBackend::Blocked, 1);
+    let reference = run(KernelBackend::Reference, 1);
+    // Within-backend invariance (the blocked sweep at {2,4,8} is
+    // already pinned by integration_kernels; cover reference here).
+    for &t in &[4usize, 8] {
+        let again = run(KernelBackend::Reference, t);
+        for (step, (a, b)) in again.iter().zip(reference.iter()).enumerate() {
+            for (p, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.data(), y.data(), "reference step {step} mean[{p}] t={t}");
+            }
+        }
+    }
+    // Cross-backend: same math, ULP-level divergence amplified through
+    // three warm-started steps — working-precision agreement.
+    for (step, (a, b)) in blocked.iter().zip(reference.iter()).enumerate() {
+        for (p, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.shape(), y.shape(), "step {step} mean[{p}] shape");
+            assert!(
+                x.allclose(y, 1e-3, 1e-3),
+                "step {step} mean[{p}] cross-backend, max diff {}",
+                x.max_abs_diff(y)
+            );
+        }
+    }
+}

@@ -3,6 +3,12 @@
 //! No proptest crate offline — properties are checked over seeded random
 //! sweeps (many shapes × worker counts × ranks per property), which is
 //! what proptest would generate, minus shrinking.
+//!
+//! Every test serializes on one lock: the kernel-scratch growth counter
+//! pinned by `prop_kernel_scratch_zero_alloc_after_first_step` is
+//! process-global, and each concurrently running test executes on a
+//! fresh harness thread whose thread-local kernel scratch would grow on
+//! first use — right in the middle of the measurement window.
 
 use powersgd::collectives::{ring_all_reduce_sum, CommLog};
 use powersgd::compress::{
@@ -10,8 +16,16 @@ use powersgd::compress::{
 };
 use powersgd::grad::ParamRegistry;
 use powersgd::linalg::{gram_schmidt_in_place, orthonormal_error, svd};
+use powersgd::runtime::pool::{kernel_scratch_grows, set_threads, threads};
 use powersgd::tensor::{matmul, Tensor};
 use powersgd::util::Rng;
+use std::sync::{Mutex, MutexGuard};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
     let mut t = Tensor::zeros(shape);
@@ -30,6 +44,7 @@ fn rand_dims(rng: &mut Rng) -> (usize, usize, usize) {
 /// workers equals compressing the mean update, for random shapes/W.
 #[test]
 fn prop_powersgd_linearity() {
+    let _g = lock();
     let mut rng = Rng::new(101);
     for case in 0..25 {
         let (n, m, r) = rand_dims(&mut rng);
@@ -56,6 +71,7 @@ fn prop_powersgd_linearity() {
 /// Property: unbiased rank-r is linear too.
 #[test]
 fn prop_unbiased_linearity() {
+    let _g = lock();
     let mut rng = Rng::new(102);
     for case in 0..15 {
         let (n, m, r) = rand_dims(&mut rng);
@@ -79,6 +95,7 @@ fn prop_unbiased_linearity() {
 /// including lengths smaller than W.
 #[test]
 fn prop_ring_allreduce_equals_naive() {
+    let _g = lock();
     let mut rng = Rng::new(103);
     for _ in 0..40 {
         let w = 1 + rng.below(12) as usize;
@@ -107,6 +124,7 @@ fn prop_ring_allreduce_equals_naive() {
 /// exactly.
 #[test]
 fn prop_error_feedback_identity() {
+    let _g = lock();
     let mut rng = Rng::new(104);
     for case in 0..15 {
         let (n, m, r) = rand_dims(&mut rng);
@@ -141,6 +159,7 @@ fn prop_error_feedback_identity() {
 /// Property: Gram–Schmidt output is orthonormal and spans the input.
 #[test]
 fn prop_gram_schmidt_orthonormal() {
+    let _g = lock();
     let mut rng = Rng::new(105);
     for _ in 0..30 {
         let n = 2 + rng.below(200) as usize;
@@ -163,6 +182,7 @@ fn prop_gram_schmidt_orthonormal() {
 /// Property: SVD reconstructs and is ordered, on random rectangles.
 #[test]
 fn prop_svd_reconstruction() {
+    let _g = lock();
     let mut rng = Rng::new(106);
     for _ in 0..20 {
         let n = 2 + rng.below(24) as usize;
@@ -185,6 +205,7 @@ fn prop_svd_reconstruction() {
 /// every compressor on random registries.
 #[test]
 fn prop_bytes_match_closed_form() {
+    let _g = lock();
     let mut rng = Rng::new(107);
     for case in 0..10 {
         let (n, m, r) = rand_dims(&mut rng);
@@ -217,6 +238,7 @@ fn prop_bytes_match_closed_form() {
 /// Property: PowerSGD output rank never exceeds r.
 #[test]
 fn prop_powersgd_output_rank_bounded() {
+    let _g = lock();
     let mut rng = Rng::new(108);
     for case in 0..10 {
         let (n, m, r) = rand_dims(&mut rng);
@@ -235,4 +257,46 @@ fn prop_powersgd_output_rank_bounded() {
             d.s[0]
         );
     }
+}
+
+/// Property: the blocked kernels' per-thread scratch — packed GEMM
+/// panels, accumulator tiles, Gram–Schmidt reduction partials — reaches
+/// steady state on the first step. `kernel_scratch_grows()` must not
+/// move across steps 2+ of a shape-stable PowerSGD workload, at every
+/// thread count (DESIGN.md §11 zero-alloc leg).
+///
+/// Sound because (a) this binary's tests are serialized on [`lock`], so
+/// nothing else touches kernels during the window, and (b) the pool's
+/// chunk→helper assignment is a pure function of (chunks, threads), so
+/// the warm step exercises exactly the threads (with exactly the
+/// per-thread scratch lengths) the measured steps will.
+#[test]
+fn prop_kernel_scratch_zero_alloc_after_first_step() {
+    let _g = lock();
+    let ambient = threads();
+    // Tall matrix (multi-chunk GS reductions), square-ish, and tiny —
+    // same mix as the bitwise-invariance workload.
+    let shapes: [&[usize]; 3] = [&[4500, 64], &[64, 80], &[12, 8]];
+    let updates_for = |seed: u64| -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..2).map(|_| shapes.iter().map(|s| rand_tensor(s, &mut rng)).collect()).collect()
+    };
+    for &t in &[1usize, 2, 4, 8] {
+        set_threads(t);
+        let mut comp = PowerSgd::new(2, 77);
+        let mut log = CommLog::default();
+        // Step 1 may grow: first touch of this test thread's slots and
+        // of any pool helper newly participating at this count.
+        comp.compress_aggregate(&updates_for(5000), &mut log);
+        let warmed = kernel_scratch_grows();
+        for step in 0..3u64 {
+            comp.compress_aggregate(&updates_for(5001 + step), &mut log);
+            assert_eq!(
+                kernel_scratch_grows(),
+                warmed,
+                "kernel scratch grew after warm-up at t={t}, step {step}"
+            );
+        }
+    }
+    set_threads(ambient);
 }
